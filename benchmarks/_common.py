@@ -1,0 +1,60 @@
+"""Shared benchmark helpers: timing + standard corpora (paper-scaled-down).
+
+The paper's corpora (NYTimes/PubMed/UMBC) are not available offline; every
+benchmark uses synthetic corpora with the published statistics' *shape*
+(Zipf word frequencies, doc-length mix) scaled to CPU-tractable sizes, plus
+analytic byte models evaluated at the TRUE published sizes (Table I).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.lda.corpus import (relabel_by_frequency, synthetic_lda_corpus,
+                              zipf_corpus)
+
+# published dataset statistics (paper §VI)
+DATASETS = {
+    "NYTimes": {"docs": 299_752, "words": 101_636, "tokens": 100e6},
+    "PubMed": {"docs": 8_200_000, "words": 141_043, "tokens": 738e6},
+    "UMBC": {"docs": 40_000_000, "words": 200_000, "tokens": 1.33e9},
+}
+
+
+def bench_corpus(seed=0, n_docs=400, n_words=1200, mean_doc_len=120,
+                 exponent=1.25):
+    c = zipf_corpus(seed, n_docs=n_docs, n_words=n_words, exponent=exponent,
+                    mean_doc_len=mean_doc_len)
+    c, _ = relabel_by_frequency(c)
+    return c
+
+
+def planted_corpus(seed=0, n_docs=300, n_words=500, n_topics=16,
+                   mean_doc_len=80):
+    c = synthetic_lda_corpus(seed, n_docs=n_docs, n_words=n_words,
+                             n_topics=n_topics, mean_doc_len=mean_doc_len)
+    c, _ = relabel_by_frequency(c)
+    return c
+
+
+def zipf_counts(n_words: int, n_tokens: float, exponent=1.1) -> np.ndarray:
+    """Analytic Zipf token-per-word counts summing to n_tokens (Fig 8)."""
+    ranks = np.arange(1, n_words + 1, dtype=np.float64)
+    p = ranks ** (-exponent)
+    p /= p.sum()
+    return np.maximum((p * n_tokens).astype(np.int64), 1)
+
+
+def time_fn(fn, *args, iters=3, warmup=1) -> float:
+    """Median wall µs per call (block_until_ready on pytree outputs)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))

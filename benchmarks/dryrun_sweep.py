@@ -1,0 +1,102 @@
+"""Drive the full dry-run sweep: 10 archs × 4 shapes × {single, multi} mesh
+(+ the LDA cells), one subprocess per cell, results under results/dryrun/.
+
+Resumable: existing result files are skipped, so a crashed sweep continues
+where it left off (same contract as the trainers).
+
+Usage: PYTHONPATH=src python -m benchmarks.dryrun_sweep [--mesh single|multi|both]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+sys.path.insert(0, "src")
+from repro.configs import REGISTRY, SHAPES  # noqa: E402
+
+OUT_DIR = "results/dryrun"
+
+
+def run_cell(arch: str, shape: str, mesh: str, timeout: int = 1800) -> dict:
+    out = os.path.join(OUT_DIR, f"{arch}__{shape}__{mesh}.json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+           "--shape", shape, "--mesh", mesh, "--out", out]
+    env = dict(os.environ, PYTHONPATH="src")
+    t0 = time.time()
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env)
+    if proc.returncode != 0 or not os.path.exists(out):
+        err = {"arch": arch, "shape": shape, "mesh": mesh,
+               "status": "error", "stderr": proc.stderr[-2000:],
+               "wall_s": round(time.time() - t0, 1)}
+        with open(out, "w") as f:
+            json.dump(err, f, indent=2)
+        return err
+    with open(out) as f:
+        return json.load(f)
+
+
+def run_lda(mesh: str, topics: int = 1024, timeout: int = 1800) -> dict:
+    out = os.path.join(OUT_DIR, f"lda-K{topics}__step__{mesh}.json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    cmd = [sys.executable, "-m", "repro.launch.dryrun", "--lda",
+           "--topics", str(topics), "--mesh", mesh, "--out", out]
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(cmd, capture_output=True, text=True,
+                          timeout=timeout, env=env)
+    if proc.returncode != 0 or not os.path.exists(out):
+        err = {"arch": f"lda-K{topics}", "mesh": mesh, "status": "error",
+               "stderr": proc.stderr[-2000:]}
+        with open(out, "w") as f:
+            json.dump(err, f, indent=2)
+        return err
+    with open(out) as f:
+        return json.load(f)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="both")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    n_ok = n_skip = n_err = 0
+    t0 = time.time()
+    for mesh in meshes:
+        for arch in REGISTRY:
+            for shape in SHAPES:
+                r = run_cell(arch, shape, mesh)
+                tag = r.get("status")
+                n_ok += tag == "ok"
+                n_skip += tag == "skipped"
+                n_err += tag == "error"
+                extra = ""
+                if tag == "ok":
+                    extra = (f"compile={r.get('compile_seconds')}s "
+                             f"fits={r.get('fits_hbm')} "
+                             f"dom={r['roofline']['dominant']}")
+                elif tag == "error":
+                    extra = r.get("stderr", "")[:160].replace("\n", " ")
+                print(f"[{time.time()-t0:7.0f}s] {arch:24s} {shape:12s} "
+                      f"{mesh:6s} {tag:8s} {extra}", flush=True)
+        for topics in (1024, 32768):
+            r = run_lda(mesh, topics)
+            print(f"[{time.time()-t0:7.0f}s] lda-K{topics:<18d} step"
+                  f"         {mesh:6s} {r.get('status'):8s}", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,40 @@
+"""Fig 12(b): fraction of tokens skipped by three-branch sampling vs
+iteration and vs g (Eq 10's accuracy/cost knob), plus Fig 3's convergence
+heterogeneity instrumentation (frac unchanged / frac at max topic)."""
+
+from __future__ import annotations
+
+import jax
+
+from benchmarks._common import planted_corpus
+from repro.core import three_branch
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+
+
+def run():
+    corpus = planted_corpus(n_docs=250, n_words=400, n_topics=12,
+                            mean_doc_len=60)
+    cfg = LDAConfig(n_topics=32, tile_size=2048, seed=5)
+    tr = LDATrainer(corpus, cfg)
+    state = tr.init_state()
+    rows = []
+    marks = {5, 20, 50}
+    for i in range(1, 51):
+        state, stats = tr.step(state)
+        if i in marks:
+            rows.append((f"fig12/skip_frac_iter{i}", 0.0,
+                         round(float(stats["frac_skipped"]), 4)))
+            rows.append((f"fig3/unchanged_frac_iter{i}", 0.0,
+                         round(float(stats["frac_unchanged"]), 4)))
+            rows.append((f"fig3/at_max_topic_frac_iter{i}", 0.0,
+                         round(float(stats["frac_at_max"]), 4)))
+    # g sweep at the converged state (skip rises with g; paper §III-B)
+    key = jax.random.PRNGKey(0)
+    for g in (1, 2, 4):
+        plan = three_branch.Plan(g=g, tile_size=2048, capacity=None)
+        _, st = three_branch.sample(key, plan, tr.word_ids, tr.doc_ids,
+                                    state.topics, state.D, state.W, cfg)
+        rows.append((f"fig12/skip_frac_g{g}", 0.0,
+                     round(float(st.frac_skipped), 4)))
+    return rows

@@ -1,0 +1,21 @@
+"""Fig 15: hierarchical workload balancing — max/mean load imbalance of the
+scheduling schemes on a power-law corpus (paper: 1.1-1.7× throughput from
+balancing; here the structural metric those speedups came from)."""
+
+from __future__ import annotations
+
+from benchmarks._common import bench_corpus
+from repro.core import balance
+
+
+def run():
+    c = bench_corpus(n_docs=600, n_words=3000, mean_doc_len=150,
+                     exponent=1.5)
+    rows = []
+    for scheme in ("block_per_word", "dynamic", "dynamic+dissect",
+                   "token_tiles"):
+        r = balance.load_imbalance(c, scheme, n_units=80, tile_size=1024,
+                                   dissect_threshold=10_000)
+        rows.append((f"fig15/imbalance_{scheme}", 0.0,
+                     round(r["imbalance"], 3)))
+    return rows

@@ -1,0 +1,66 @@
+"""Fig 17: three-branch kernel-time breakdown + instruction-count analogue.
+
+(a) wall-time split of one EZLDA iteration into the paper's phases:
+    Ŵ/per-word stats (steps 1/3's amortized part), skip phase (2/3),
+    exact sampling (4-6), count update.
+(b) the paper's inst_executed counter → HLO FLOPs of the phase-2 work with
+    and without three-branch skipping (compute avoided = skip fraction).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks._common import planted_corpus, time_fn
+from repro.core import esca, three_branch
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+
+
+def run():
+    corpus = planted_corpus(n_docs=250, n_words=400, n_topics=12,
+                            mean_doc_len=60)
+    cfg = LDAConfig(n_topics=32, tile_size=2048, seed=7)
+    tr = LDATrainer(corpus, cfg)
+    state = tr.init_state()
+    for _ in range(15):
+        state, stats = tr.step(state)
+    key = jax.random.PRNGKey(1)
+    alpha = cfg.alpha_
+    W_hat = esca.compute_w_hat(state.W, cfg.beta)
+    u = jax.random.uniform(key, tr.word_ids.shape, dtype=jnp.float32)
+
+    us_what = time_fn(lambda: esca.compute_w_hat(state.W, cfg.beta))
+    sw = three_branch.word_stats(W_hat, g=2, alpha=alpha)
+    us_word = time_fn(
+        lambda: three_branch.word_stats(W_hat, g=2, alpha=alpha))
+    us_skip = time_fn(lambda: three_branch.skip_phase(
+        u, tr.word_ids, tr.doc_ids, state.D, sw, g=2, alpha=alpha))
+    us_exact = time_fn(lambda: three_branch.exact_three_branch(
+        u, tr.word_ids, tr.doc_ids, sw.k[:, 0], state.D, W_hat,
+        alpha=alpha, tile_size=cfg.tile_size))
+    us_update = time_fn(lambda: esca.update_counts(
+        tr.word_ids, tr.doc_ids, state.topics, tr.mask,
+        n_docs=tr.n_docs, n_words=tr.n_words, n_topics=cfg.n_topics))
+    total = us_what + us_word + us_skip + us_exact + us_update
+    rows = [
+        ("fig17/phase_what_frac", round(us_what, 1),
+         round(us_what / total, 3)),
+        ("fig17/phase_wordstats_frac", round(us_word, 1),
+         round(us_word / total, 3)),
+        ("fig17/phase_skiptest_frac", round(us_skip, 1),
+         round(us_skip / total, 3)),
+        ("fig17/phase_exact_frac", round(us_exact, 1),
+         round(us_exact / total, 3)),
+        ("fig17/phase_update_frac", round(us_update, 1),
+         round(us_update / total, 3)),
+    ]
+    # (b) compute avoided: survivors-only phase 2 vs all tokens (the paper's
+    # 49% inst_executed reduction analogue, via the compacted path)
+    dec = three_branch.skip_phase(u, tr.word_ids, tr.doc_ids, state.D, sw,
+                                  g=2, alpha=alpha)
+    skip_frac = float(jnp.mean(dec.skip.astype(jnp.float32)))
+    rows.append(("fig17/phase2_work_avoided_frac", 0.0,
+                 round(skip_frac, 4)))
+    return rows

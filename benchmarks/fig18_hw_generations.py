@@ -1,0 +1,55 @@
+"""Figs 18/19: hardware-generation impact.
+
+The paper shows EZLDA's throughput scales with memory bandwidth across GPU
+generations (Titan 1080 320 GB/s → V100 900 GB/s ⇒ ~3× tokens/s, §VI-D),
+BECAUSE LDA is memory-bound. Our §Roofline reproduces the premise (the LDA
+cell is memory-dominant); this benchmark reproduces the conclusion: the
+roofline step time across TPU generations scales by the HBM-bandwidth
+ratio, not the FLOPs ratio.
+
+TPU hardware models (public specs): v5e 197 TF / 819 GB/s; v4 275 TF /
+1228 GB/s; v5p 459 TF / 2765 GB/s.
+"""
+
+from __future__ import annotations
+
+import json
+
+from repro.roofline.analysis import HW
+
+GENS = {
+    "v5e": HW(peak_flops=197e12, hbm_bw=819e9, link_bw=50e9),
+    "v4": HW(peak_flops=275e12, hbm_bw=1228e9, link_bw=50e9),
+    "v5p": HW(peak_flops=459e12, hbm_bw=2765e9, link_bw=90e9),
+}
+
+
+def run():
+    with open("results/dryrun/lda-K32768__step__single.json") as f:
+        cell = json.load(f)
+    r = cell["roofline"]
+    flops, hbm, wire = (r["hlo_flops"], r["hlo_bytes"],
+                        r["collective_bytes"])
+    rows = []
+    base_t = None
+    for name, hw in GENS.items():
+        t = max(flops / hw.peak_flops, hbm / hw.hbm_bw, wire / hw.link_bw)
+        if base_t is None:
+            base_t = t
+        rows.append((f"fig18/lda_step_time_{name}_ms", 0.0,
+                     round(t * 1e3, 3)))
+        rows.append((f"fig18/lda_speedup_{name}_vs_v5e", 0.0,
+                     round(base_t / t, 3)))
+    # the paper's claim: speedup tracks the bandwidth ratio (memory-bound)
+    bw_ratio = GENS["v5p"].hbm_bw / GENS["v5e"].hbm_bw
+    fl_ratio = GENS["v5p"].peak_flops / GENS["v5e"].peak_flops
+    t_e = max(flops / GENS["v5e"].peak_flops, hbm / GENS["v5e"].hbm_bw,
+              wire / GENS["v5e"].link_bw)
+    t_p = max(flops / GENS["v5p"].peak_flops, hbm / GENS["v5p"].hbm_bw,
+              wire / GENS["v5p"].link_bw)
+    rows.append(("fig18/speedup_tracks_bandwidth_not_flops", 0.0,
+                 round(abs((t_e / t_p) - bw_ratio)
+                       < abs((t_e / t_p) - fl_ratio), 0)))
+    rows.append(("fig18/hbm_bandwidth_ratio_v5p_v5e", 0.0,
+                 round(bw_ratio, 3)))
+    return rows

@@ -1,0 +1,84 @@
+"""Generate EXPERIMENTS.md §Dry-run/§Roofline tables from results/dryrun/.
+
+Usage: PYTHONPATH=src python -m benchmarks.report > results/roofline_tables.md
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import sys
+
+
+def fmt_s(x):
+    if x == 0:
+        return "0"
+    if x < 1e-4:
+        return f"{x:.1e}"
+    return f"{x:.4f}" if x < 10 else f"{x:.1f}"
+
+
+def load(mesh: str):
+    rows = []
+    for f in sorted(glob.glob(f"results/dryrun/*__{mesh}.json")):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def dryrun_table(mesh: str) -> str:
+    out = [f"### Mesh: {mesh} "
+           f"({'2×16×16 = 512 chips' if mesh == 'multi' else '16×16 = 256 chips'})",
+           "",
+           "| arch | shape | status | compile s | peak GiB | fits | "
+           "HLO GFLOP/dev | coll. MB/dev (HLO) | n_coll |",
+           "|---|---|---|---|---|---|---|---|---|"]
+    for d in load(mesh):
+        if d.get("status") == "skipped":
+            out.append(f"| {d['arch']} | {d['shape']} | SKIP — "
+                       f"{d['reason'][:60]}… | | | | | | |")
+            continue
+        if d.get("status") != "ok":
+            out.append(f"| {d['arch']} | {d.get('shape','')} | ERROR | | | | | | |")
+            continue
+        m = d["memory"]
+        raw = d.get("roofline_hlo_raw") or d["roofline"]  # lda cells: raw only
+        out.append(
+            f"| {d['arch']} | {d['shape']} | ok | {d['compile_seconds']} | "
+            f"{m['peak_bytes_estimate']/2**30:.2f} | "
+            f"{'✓' if d['fits_hbm'] else '✗'} | "
+            f"{raw.get('hlo_flops', 0)/1e9:.1f} | "
+            f"{raw.get('collective_bytes', 0)/1e6:.1f} | "
+            f"{raw.get('collectives', {}).get('count', 0)} |")
+    return "\n".join(out)
+
+
+def roofline_table() -> str:
+    out = ["| arch | shape | compute s | memory s | collective s | dominant |"
+           " useful ratio | MFU bound |",
+           "|---|---|---|---|---|---|---|---|"]
+    for d in load("single"):
+        if d.get("status") != "ok" or "roofline" not in d:
+            continue
+        r = d["roofline"]
+        if "compute_s" not in r:
+            continue
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {fmt_s(r['compute_s'])} | "
+            f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+            f"{r['dominant'].replace('_s','')} | "
+            f"{r.get('useful_compute_ratio', 0):.2f} | "
+            f"{r.get('mfu_bound_overlap', 0):.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    print("## §Dry-run\n")
+    print(dryrun_table("single"))
+    print()
+    print(dryrun_table("multi"))
+    print("\n## §Roofline (single-pod, analytic model; see methodology)\n")
+    print(roofline_table())
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,57 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Usage:
+    PYTHONPATH=src python -m benchmarks.run [--only fig12,fig15] [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+MODULES = [
+    "table1_memory",
+    "fig10_convergence",
+    "fig12_skip",
+    "fig13_hybrid_format",
+    "fig14_pairstorage",
+    "fig15_balance",
+    "fig16_scaling",
+    "fig17_breakdown",
+    "fig18_hw_generations",
+]
+
+QUICK_SKIP = {"fig16_scaling"}          # subprocess-heavy
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module prefixes")
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+    mods = MODULES
+    if args.only:
+        keys = args.only.split(",")
+        mods = [m for m in MODULES if any(m.startswith(k) for k in keys)]
+    if args.quick:
+        mods = [m for m in mods if m not in QUICK_SKIP]
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in mods:
+        t0 = time.time()
+        try:
+            mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+            for row in mod.run():
+                print(",".join(str(x) for x in row), flush=True)
+        except Exception as e:                      # keep the sweep going
+            failures += 1
+            print(f"{name}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+        print(f"# {name} took {time.time()-t0:.1f}s", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,80 @@
+"""Multi-device EZLDA: data+model parallel training with checkpoint/restart
+and elastic rescale — the paper's §V-B scaled out, on 8 forged devices.
+
+Demonstrates:
+  * document-chunk data parallelism + topic-axis model parallelism,
+  * the ΔW psum (the paper's sum+broadcast) inside shard_map,
+  * a mid-run "node failure" → restore from checkpoint onto a DIFFERENT
+    mesh shape (elastic), training continuing seamlessly.
+
+Run:  python examples/multi_device_lda.py        (sets XLA_FLAGS itself)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import llpt as llpt_mod
+from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
+from repro.lda.distributed import DistLDATrainer
+from repro.lda.model import LDAConfig
+
+
+def global_llpt(tr, state, corpus, cfg):
+    D, W = tr.gather_global(state)
+    return float(llpt_mod.llpt(
+        jnp.asarray(corpus.word_ids), jnp.asarray(corpus.doc_ids),
+        jnp.ones(corpus.n_tokens, jnp.int32),
+        jnp.asarray(D.astype(np.int32)), jnp.asarray(W.astype(np.int32)),
+        alpha=cfg.alpha_, beta=cfg.beta))
+
+
+def main():
+    print(f"devices: {jax.device_count()}")
+    corpus = synthetic_lda_corpus(0, n_docs=240, n_words=300, n_topics=8,
+                                  mean_doc_len=60)
+    corpus, _ = relabel_by_frequency(corpus)
+    cfg = LDAConfig(n_topics=16, seed=0)
+    mgr = CheckpointManager("/tmp/ezlda_example_ckpt", keep_n=2)
+
+    mesh4x2 = jax.make_mesh((4, 2), ("data", "model"),
+                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tr = DistLDATrainer(corpus, cfg, mesh4x2, pad_multiple=256)
+    state = tr.init_state()
+    print(f"mesh (4 data × 2 model): chunks hold "
+          f"{tr.sc.tokens_per_shard.tolist()} tokens "
+          f"(max/mean = {tr.sc.tokens_per_shard.max() / tr.sc.tokens_per_shard.mean():.3f}"
+          f" — paper observes ≤1.05)")
+    for i in range(10):
+        state, stats = tr.step(state)
+    print(f"iter 10: llpt={global_llpt(tr, state, corpus, cfg):+.4f} "
+          f"skip={float(stats.frac_skipped):.2%}")
+    mgr.save(10, tr.host_payload(state))
+    print("checkpoint saved; simulating pod loss → restart on a 2×4 mesh")
+
+    mesh2x4 = jax.make_mesh((2, 4), ("data", "model"),
+                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    tr2 = DistLDATrainer(corpus, cfg, mesh2x4, pad_multiple=256)
+    state2 = tr2.state_from_payload(mgr.restore_latest())
+    D, W = tr2.gather_global(state2)
+    assert D.sum() == corpus.n_tokens == W.sum(), "elastic restore broke counts"
+    print(f"restored at iter {int(state2.iteration)} on 2 data × 4 model; "
+          f"counts conserved ({int(D.sum())} tokens)")
+    for i in range(10):
+        state2, stats = tr2.step(state2)
+    print(f"iter 20: llpt={global_llpt(tr2, state2, corpus, cfg):+.4f} "
+          f"skip={float(stats.frac_skipped):.2%}")
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

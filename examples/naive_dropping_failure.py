@@ -1,0 +1,90 @@
+"""Fig 6 reproduction: why the *naive* dropping strategy fails — and why
+EZLDA's three-branch skip does not.
+
+The naive strategy freezes any token whose topic was unchanged for a few
+iterations. That betrays the Bayesian semantics (paper §III-D): frozen
+tokens stop exploring, the counts drift to a biased fixed point, and when
+the frozen tokens are re-included the perplexity *drops below* its value at
+freeze time. Three-branch skipping keeps drawing u every iteration and only
+skips work whose outcome is already decided by u — distribution-identical.
+
+Run:  PYTHONPATH=src python examples/naive_dropping_failure.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import esca
+from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+
+DROP_START, REINCLUDE, TOTAL = 15, 35, 45
+PATIENCE = 3
+
+
+def main():
+    corpus = synthetic_lda_corpus(0, n_docs=300, n_words=500, n_topics=8,
+                                  mean_doc_len=80)
+    corpus, _ = relabel_by_frequency(corpus)
+    cfg = LDAConfig(n_topics=16, sampler="two_branch", tile_size=2048,
+                    seed=0)
+    tr = LDATrainer(corpus, cfg)
+
+    # --- naive dropping run -------------------------------------------------
+    state = tr.init_state()
+    unchanged = jnp.zeros(tr.word_ids.shape[0], jnp.int32)
+    frozen = jnp.zeros(tr.word_ids.shape[0], jnp.bool_)
+    naive = []
+    for i in range(TOTAL):
+        key, sub = jax.random.split(state.key)
+        W_hat = esca.compute_w_hat(state.W, cfg.beta)
+        new_topics, _ = esca.sample_two_branch(
+            sub, tr.word_ids, tr.doc_ids, state.topics, state.D, W_hat,
+            alpha=cfg.alpha_, tile_size=cfg.tile_size)
+        if DROP_START <= i < REINCLUDE:
+            new_topics = jnp.where(frozen, state.topics, new_topics)
+        unchanged = jnp.where(new_topics == state.topics, unchanged + 1, 0)
+        if i >= DROP_START and i < REINCLUDE:
+            frozen = frozen | (unchanged >= PATIENCE)
+        else:
+            frozen = jnp.zeros_like(frozen)
+        D, W = esca.update_counts(tr.word_ids, tr.doc_ids, new_topics,
+                                  tr.mask, n_docs=tr.n_docs,
+                                  n_words=tr.n_words, n_topics=cfg.n_topics)
+        state = state._replace(topics=new_topics, D=D, W=W, key=key,
+                               iteration=state.iteration + 1)
+        naive.append(tr.evaluate(state))
+
+    # --- EZLDA three-branch run (same budget) --------------------------------
+    cfg3 = LDAConfig(n_topics=16, sampler="three_branch", tile_size=2048,
+                     seed=0)
+    tr3 = LDATrainer(corpus, cfg3)
+    s3 = tr3.init_state()
+    ezlda = []
+    for i in range(TOTAL):
+        s3, _ = tr3.step(s3)
+        ezlda.append(tr3.evaluate(s3))
+
+    print("iter   naive-dropping   three-branch")
+    for i in range(0, TOTAL, 5):
+        tag = (" <- dropping on" if DROP_START <= i < REINCLUDE else
+               (" <- re-included" if i >= REINCLUDE else ""))
+        print(f"{i:4d}   {naive[i]:+.4f}        {ezlda[i]:+.4f}{tag}")
+
+    drop_peak = max(naive[DROP_START:REINCLUDE])
+    after = naive[REINCLUDE + 1]
+    print(f"\nnaive: LLPT after re-inclusion ({after:.4f}) vs frozen-phase "
+          f"peak ({drop_peak:.4f}) — the frozen phase's apparent progress "
+          f"was biased (paper Fig 6)" )
+    print(f"three-branch final {ezlda[-1]:.4f} ≥ naive final {naive[-1]:.4f}"
+          f": {ezlda[-1] >= naive[-1] - 1e-6}")
+
+
+if __name__ == "__main__":
+    main()

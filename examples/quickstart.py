@@ -1,0 +1,51 @@
+"""Quickstart: EZLDA topic modeling end-to-end on a synthetic corpus.
+
+Builds a planted-topic corpus, trains with the paper's three-branch
+sampler, prints the LLPT trajectory + skip fractions, and shows the top
+words per topic (demonstrating actual topic recovery).
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import numpy as np
+
+from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+
+
+def main():
+    true_k = 8
+    corpus, truth = synthetic_lda_corpus(
+        seed=0, n_docs=300, n_words=500, n_topics=true_k, mean_doc_len=80,
+        return_truth=True)
+    corpus, old_to_new = relabel_by_frequency(corpus)
+    print(f"corpus: {corpus.n_docs} docs, {corpus.n_words} words, "
+          f"{corpus.n_tokens} tokens (planted topics: {true_k})")
+
+    cfg = LDAConfig(n_topics=16, sampler="three_branch", tile_size=2048,
+                    eval_every=5, seed=0)
+    trainer = LDATrainer(corpus, cfg)
+    state, history = trainer.run(
+        n_iters=40, log_fn=lambda s: print("  " + s))
+
+    print("\ntop words of the 4 heaviest topics:")
+    W = np.asarray(state.W)
+    heavy = np.argsort(-W.sum(axis=0))[:4]
+    for k in heavy:
+        top = np.argsort(-W[:, k])[:8]
+        print(f"  topic {k:2d}: words {top.tolist()} "
+              f"({W[:, k].sum()} tokens)")
+    assert history["llpt"][-1] > history["llpt"][0], "LLPT must rise"
+    print("\nOK: LLPT rose from "
+          f"{history['llpt'][0]:.3f} to {history['llpt'][-1]:.3f}; "
+          f"final skip fraction "
+          f"{history['stats'][-1]['frac_skipped']:.2%}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Batched serving demo: greedy decode with the production serve_step
+(KV cache, batched requests) on a small dense model — the inference-side
+end-to-end driver.
+
+Run:  PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import sys
+
+sys.path.insert(0, "src")
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import REGISTRY
+from repro.models.registry import get_model, reduced_config
+from repro.train.serve_step import make_serve_step
+
+
+def main():
+    cfg = reduced_config(REGISTRY["qwen1.5-0.5b"], n_layers=4, d_model=128,
+                         vocab_size=512, vocab_pad_multiple=128)
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0))
+    mesh = jax.make_mesh((1, 1), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    serve = jax.jit(make_serve_step(api, mesh), donate_argnums=(1,))
+
+    batch, max_len, gen_len = 8, 64, 24
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (batch, 1)),
+                          jnp.int32)
+    cache = api.make_cache(batch, max_len)
+
+    toks = prompts
+    out = [np.asarray(toks)[:, 0]]
+    t0 = time.perf_counter()
+    for step in range(gen_len):
+        logits, cache = serve(params, cache, toks)
+        toks = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
+        out.append(np.asarray(toks)[:, 0])
+    jax.block_until_ready(toks)
+    dt = time.perf_counter() - t0
+    seqs = np.stack(out, axis=1)
+    print(f"generated {gen_len} tokens for {batch} sequences in {dt:.2f}s "
+          f"({batch * gen_len / dt:.0f} tok/s on CPU)")
+    for i in range(3):
+        print(f"  seq {i}: {seqs[i].tolist()}")
+    assert int(cache['length']) == gen_len
+    print("OK: cache length advanced to", int(cache["length"]))
+
+
+if __name__ == "__main__":
+    main()

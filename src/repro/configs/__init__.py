@@ -1,0 +1,20 @@
+"""Assigned architecture configs (one module per arch) + LDA corpora configs.
+
+Every module exports CONFIG (ModelConfig) with the exact published shape
+from the assignment table; REGISTRY maps --arch ids to them.
+"""
+
+from repro.configs import (deepseek_coder_33b, deepseek_moe_16b,
+                           granite_moe_3b_a800m, internlm2_20b, mamba2_370m,
+                           minicpm3_4b, pixtral_12b, qwen1_5_0_5b,
+                           whisper_base, zamba2_1_2b)
+from repro.configs.shapes import SHAPES, Shape, cells, shape_applicable
+
+REGISTRY = {
+    m.CONFIG.name: m.CONFIG
+    for m in (mamba2_370m, deepseek_moe_16b, granite_moe_3b_a800m,
+              zamba2_1_2b, qwen1_5_0_5b, deepseek_coder_33b, minicpm3_4b,
+              internlm2_20b, pixtral_12b, whisper_base)
+}
+
+__all__ = ["REGISTRY", "SHAPES", "Shape", "cells", "shape_applicable"]

@@ -1,0 +1,11 @@
+"""EZLDA core: the paper's primary contribution in JAX.
+
+- esca:          two-branch ESCA sampler (Eq 1-4), dense reference
+- three_branch:  EZLDA three-branch sampling (Eq 6-10)
+- sparse:        pair packing + bucketed sparse D + hybrid W formats
+- inverted_index: CSR-by-document index over the word-sorted token list
+- balance:       token tiling (hierarchical workload balancing analogue)
+- llpt:          Eq 5 convergence metric
+"""
+
+from repro.core import esca, llpt, three_branch  # noqa: F401

@@ -1,0 +1,99 @@
+"""Hierarchical workload balancing, TPU-native (paper SS V-A).
+
+The paper balances GPU blocks with (a) atomic dynamic word->block assignment
+for small words and (b) dissection of >10k-token words across blocks, glued by
+a two-level (word, region) index guarded by an atomics-built critical section.
+
+TPU grids are static, so the same objective -- *equal tokens per schedulable
+unit* -- is reached at preprocessing time: the word-sorted token list is cut
+into fixed tiles of TILE tokens. A tile packs many small words (dynamic
+assignment analogue) and a large word spans many tiles (dissection analogue).
+The per-tile word-run metadata below is the two-level index analogue; it is
+what the Pallas sampling kernels consume. No runtime coordination remains --
+the scheduling moved to compile time (DESIGN.md SS2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.lda.corpus import Corpus
+
+__all__ = ["TilePlan", "build_tiles", "load_imbalance"]
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    tile_size: int
+    n_tiles: int
+    # Per tile: ids of the first/last word whose tokens appear in the tile.
+    tile_first_word: np.ndarray    # (n_tiles,) int32
+    tile_last_word: np.ndarray     # (n_tiles,) int32
+    # Max distinct words any tile spans (static bound for kernel scratch).
+    max_words_per_tile: int
+    # Max tiles any single word spans (dissection depth).
+    max_tiles_per_word: int
+
+
+def build_tiles(corpus: Corpus, tile_size: int) -> TilePlan:
+    n = corpus.n_tokens
+    n_tiles = (n + tile_size - 1) // tile_size
+    starts = np.arange(n_tiles, dtype=np.int64) * tile_size
+    ends = np.minimum(starts + tile_size, n) - 1
+    first = corpus.word_ids[starts].astype(np.int32)
+    last = corpus.word_ids[ends].astype(np.int32)
+    words_per_tile = (last - first + 1)
+    tiles_per_word = np.maximum(
+        1, np.ceil(corpus.word_token_counts / tile_size).astype(np.int64) + 1)
+    return TilePlan(
+        tile_size=tile_size,
+        n_tiles=int(n_tiles),
+        tile_first_word=first,
+        tile_last_word=last,
+        max_words_per_tile=int(words_per_tile.max(initial=1)),
+        max_tiles_per_word=int(tiles_per_word.max(initial=1)),
+    )
+
+
+def load_imbalance(corpus: Corpus, scheme: str, n_units: int,
+                   tile_size: int = 4096,
+                   dissect_threshold: int = 10_000) -> dict:
+    """Max/mean load ratio for a scheduling scheme (benchmarks/fig15).
+
+    Schemes:
+      block_per_word    -- SaberLDA-style: unit u processes words u, u+P, ...
+      dynamic           -- paper's atomic small-word balancing: greedy
+                           longest-processing-time word->unit packing.
+      dynamic+dissect   -- + large-word dissection at ``dissect_threshold``.
+      token_tiles       -- this work: equal-token tiles round-robined.
+    """
+    counts = corpus.word_token_counts.astype(np.int64)
+    loads = np.zeros(n_units, dtype=np.int64)
+    if scheme == "block_per_word":
+        for v, c in enumerate(counts):
+            loads[v % n_units] += c
+    elif scheme in ("dynamic", "dynamic+dissect"):
+        work = list(counts)
+        if scheme == "dynamic+dissect":
+            pieces: list[int] = []
+            for c in work:
+                while c > dissect_threshold:
+                    pieces.append(dissect_threshold)
+                    c -= dissect_threshold
+                if c:
+                    pieces.append(c)
+            work = pieces
+        for c in sorted(work, reverse=True):
+            loads[int(np.argmin(loads))] += c
+    elif scheme == "token_tiles":
+        n_tiles = (corpus.n_tokens + tile_size - 1) // tile_size
+        for t in range(n_tiles):
+            sz = min(tile_size, corpus.n_tokens - t * tile_size)
+            loads[t % n_units] += sz
+    else:
+        raise ValueError(scheme)
+    mean = loads.mean() if loads.mean() > 0 else 1.0
+    return {"scheme": scheme, "max": int(loads.max()), "mean": float(mean),
+            "imbalance": float(loads.max() / mean)}

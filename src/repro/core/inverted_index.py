@@ -1,0 +1,60 @@
+"""Inverted index: CSR-by-document over the word-sorted token list (Fig 5).
+
+``T`` is sorted by word (for per-word Q/top-topic amortization); per-document
+passes (D reconstruction, the C1/C2 gathers of three-branch sampling, the
+distributed D update) need the *document* view. The inverted index stores, per
+document, the positions in T of its tokens -- built once per corpus.
+
+On GPU the paper scans this index with one block per document; on TPU the
+same arrays drive doc-major gathers/segment ops (the reorder makes the D-row
+accesses contiguous, which is what coalescing bought on GPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.lda.corpus import Corpus
+
+__all__ = ["doc_major_order", "to_doc_major", "from_doc_major",
+           "doc_segment_ids", "reconstruct_d_rows"]
+
+
+def doc_major_order(corpus: Corpus) -> np.ndarray:
+    """Positions in T grouped by document (the index of Fig 5(b))."""
+    return corpus.inv_token_idx
+
+
+def to_doc_major(values_by_token: jax.Array, inv_token_idx: jax.Array) -> jax.Array:
+    """Reorder a token-major array into document-major order."""
+    return values_by_token[inv_token_idx]
+
+
+def from_doc_major(values_doc_major: jax.Array, inv_token_idx: jax.Array,
+                   n_tokens: int) -> jax.Array:
+    """Scatter a document-major array back to token-major positions."""
+    out = jnp.zeros((n_tokens,) + values_doc_major.shape[1:],
+                    values_doc_major.dtype)
+    return out.at[inv_token_idx].set(values_doc_major)
+
+
+def doc_segment_ids(corpus: Corpus) -> np.ndarray:
+    """(N,) doc id per doc-major slot -- segment ids for segment_sum."""
+    return np.repeat(np.arange(corpus.n_docs, dtype=np.int32),
+                     corpus.doc_lengths)
+
+
+def reconstruct_d_rows(topics: jax.Array, inv_token_idx: jax.Array,
+                       segment_ids: jax.Array, n_docs: int,
+                       n_topics: int) -> jax.Array:
+    """Rebuild D by scanning the inverted index (paper SS IV-C).
+
+    Equivalent to the scatter in esca.update_counts but expressed as a
+    doc-major segment histogram -- the form the distributed/kernel paths use
+    (each document's tokens are contiguous after the reorder).
+    """
+    doc_major_topics = topics[inv_token_idx]
+    one_hot = jax.nn.one_hot(doc_major_topics, n_topics, dtype=jnp.int32)
+    return jax.ops.segment_sum(one_hot, segment_ids, num_segments=n_docs)

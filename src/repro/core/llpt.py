@@ -1,0 +1,41 @@
+"""Log-likelihood per token (paper Eq 5) -- the convergence metric.
+
+    LLPT = 1/N * sum_n log2( sum_k theta[d][k] * phi[v][k] )
+    theta[d][k] = (D[d][k] + alpha) / (len(d) + K*alpha)
+    phi[v][k]   = (W[v][k] + beta) / (colsum_W[k] + V*beta)   (= W_hat)
+
+LLPT must increase and plateau as training proceeds (paper SS II-B).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["llpt"]
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "beta", "tile_size"))
+def llpt(word_ids: jax.Array, doc_ids: jax.Array, mask: jax.Array,
+         D: jax.Array, W: jax.Array, *, alpha: float, beta: float,
+         tile_size: int = 8192) -> jax.Array:
+    M, K = D.shape
+    V = W.shape[0]
+    doc_len = jnp.sum(D, axis=-1, dtype=jnp.float32)                 # (M,)
+    theta = (D.astype(jnp.float32) + alpha) / (doc_len[:, None] + K * alpha)
+    colsum = jnp.sum(W, axis=0, dtype=jnp.float32)                   # (K,)
+    phi = (W.astype(jnp.float32) + beta) / (colsum + V * beta)       # (V,K)
+
+    n = word_ids.shape[0]
+
+    def tile_fn(args):
+        v_t, d_t = args
+        p = jnp.sum(theta[d_t] * phi[v_t], axis=-1)                  # (t,)
+        return jnp.log2(jnp.maximum(p, 1e-30))
+
+    ll = jax.lax.map(tile_fn, (word_ids, doc_ids),
+                     batch_size=min(tile_size, n) if n else None)
+    m = mask.astype(jnp.float32)
+    return jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)

@@ -1,0 +1,217 @@
+"""Sparsity-aware storage formats (paper SS IV).
+
+Three pieces, each a TPU-shape-static adaptation of the paper's format:
+
+1. **16/16 pair packing** -- column index in the high 16 bits, count in the low
+   16 bits of one int32 (paper SS IV-B: "maximum number of topics are seldom
+   larger than 65,536"). Ports verbatim; int32 ops are native on TPU.
+
+2. **Bucketed ELL sparse rows** -- the paper uses per-row CSR (exact nnz). XLA
+   needs static shapes, so rows are grouped into buckets of geometrically
+   decaying capacity. Because words are re-labeled by descending token count
+   (corpus.relabel_by_frequency), row nnz upper bounds decay with row id and
+   the buckets are contiguous id ranges -- the padding waste is bounded by 2x
+   within a bucket (capacities halve) instead of K-x for naive ELL.
+
+3. **Hybrid W** -- rows of words with >= threshold tokens (threshold = K, the
+   paper's heuristic: a word with >= K tokens may touch every topic) stay
+   dense; the long tail is bucketed-sparse. ``T`` splits into a dense prefix /
+   sparse suffix by one id compare, exactly as in the paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "pack_pairs", "unpack_pairs",
+    "build_sparse_rows", "densify_rows", "sparse_lookup",
+    "BucketedSparse", "bucket_plan", "build_bucketed",
+    "HybridW", "build_hybrid_w",
+    "bytes_dense", "bytes_pair_csr", "bytes_bucketed", "bytes_hybrid",
+]
+
+_VAL_MASK = jnp.int32(0xFFFF)
+
+
+# ---------------------------------------------------------------------------
+# pair packing
+# ---------------------------------------------------------------------------
+
+def pack_pairs(idx: jax.Array, val: jax.Array) -> jax.Array:
+    """(idx,val) -> int32 with idx in high 16 bits (paper's pair storage)."""
+    return (idx.astype(jnp.int32) << 16) | (val.astype(jnp.int32) & _VAL_MASK)
+
+
+def unpack_pairs(packed: jax.Array) -> tuple[jax.Array, jax.Array]:
+    # Logical shift: packed is non-negative for idx < 32768; use unsigned view
+    # to stay correct for the full 16-bit index range.
+    u = packed.view(jnp.uint32) if packed.dtype == jnp.int32 else packed
+    idx = (u >> 16).astype(jnp.int32)
+    val = (u & jnp.uint32(0xFFFF)).astype(jnp.int32)
+    return idx, val
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity (ELL) sparse rows
+# ---------------------------------------------------------------------------
+
+def build_sparse_rows(dense: jax.Array, capacity: int) -> jax.Array:
+    """Dense (R,K) int32 counts -> packed (R,capacity) ELL rows.
+
+    top_k by count keeps the nonzeros (zeros pack as val=0 and contribute
+    nothing downstream). Requires capacity >= max row nnz for exactness;
+    callers pick capacity from corpus statistics (nnz(row) <= token count).
+    """
+    vals, idxs = jax.lax.top_k(dense, capacity)            # (R, L) each
+    return pack_pairs(idxs, vals)
+
+
+def densify_rows(packed: jax.Array, n_cols: int) -> jax.Array:
+    """Packed ELL rows -> dense (R,K) int32 (VMEM densification analogue)."""
+    idx, val = unpack_pairs(packed)                        # (R, L)
+    r = packed.shape[0]
+    out = jnp.zeros((r, n_cols), jnp.int32)
+    rows = jnp.broadcast_to(jnp.arange(r)[:, None], idx.shape)
+    return out.at[rows, idx].add(val)                      # duplicate-safe
+
+
+def sparse_lookup(packed_row: jax.Array, col: jax.Array) -> jax.Array:
+    """Count at ``col`` in one packed row: sum of vals whose idx matches."""
+    idx, val = unpack_pairs(packed_row)
+    return jnp.sum(jnp.where(idx == col, val, 0))
+
+
+# ---------------------------------------------------------------------------
+# bucketed sparse (static-shape CSR analogue)
+# ---------------------------------------------------------------------------
+
+class BucketedSparse(NamedTuple):
+    """Rows grouped into contiguous-id buckets of decaying capacity."""
+    buckets: tuple[jax.Array, ...]    # each (rows_b, cap_b) packed int32
+    row_starts: tuple[int, ...]       # first row id of each bucket
+    capacities: tuple[int, ...]
+
+    @property
+    def n_rows(self) -> int:
+        return sum(b.shape[0] for b in self.buckets)
+
+    def nbytes(self) -> int:
+        return sum(int(b.shape[0]) * int(b.shape[1]) * 4 for b in self.buckets)
+
+
+def bucket_plan(row_nnz_upper: np.ndarray, max_capacity: int,
+                min_capacity: int = 8) -> list[tuple[int, int, int]]:
+    """[(row_start, row_end, capacity)] with capacities halving.
+
+    ``row_nnz_upper`` must be non-increasing (guaranteed after frequency
+    relabeling since nnz(row) <= token_count(word)).
+    """
+    assert np.all(np.diff(row_nnz_upper) <= 0), "rows must be sorted by count"
+    plans: list[tuple[int, int, int]] = []
+    start = 0
+    n = len(row_nnz_upper)
+    cap = max_capacity
+    while start < n:
+        cap = max(min_capacity, cap)
+        nxt = cap // 2
+        if nxt >= min_capacity:
+            # rows whose upper bound still exceeds nxt stay in this bucket
+            end = int(np.searchsorted(-row_nnz_upper, -nxt, side="left"))
+            end = max(end, start + 1)
+        else:
+            end = n
+        plans.append((start, min(end, n), cap))
+        start = min(end, n)
+        cap = nxt
+    return plans
+
+
+def build_bucketed(dense: jax.Array, row_nnz_upper: np.ndarray,
+                   max_capacity: int, min_capacity: int = 8) -> BucketedSparse:
+    plans = bucket_plan(row_nnz_upper, max_capacity, min_capacity)
+    buckets, starts, caps = [], [], []
+    for (s, e, cap) in plans:
+        cap = min(cap, dense.shape[1])
+        buckets.append(build_sparse_rows(dense[s:e], cap))
+        starts.append(s)
+        caps.append(cap)
+    return BucketedSparse(tuple(buckets), tuple(starts), tuple(caps))
+
+
+# ---------------------------------------------------------------------------
+# hybrid W
+# ---------------------------------------------------------------------------
+
+class HybridW(NamedTuple):
+    dense: jax.Array                 # (V_dense, K) int32
+    sparse: BucketedSparse           # tail words
+    v_dense: int
+
+    def nbytes(self) -> int:
+        return int(self.dense.size) * 4 + self.sparse.nbytes()
+
+    def densify(self, n_topics: int) -> jax.Array:
+        parts = [self.dense]
+        for b in self.sparse.buckets:
+            parts.append(densify_rows(b, n_topics))
+        return jnp.concatenate(parts, axis=0)
+
+
+def build_hybrid_w(W: jax.Array, word_token_counts: np.ndarray,
+                   threshold: int) -> HybridW:
+    """Split W by the paper's heuristic: #tokens >= threshold (=K) => dense.
+
+    Assumes frequency-relabeled ids (counts non-increasing), so the split is
+    a single row index.
+    """
+    counts = np.asarray(word_token_counts)
+    assert np.all(np.diff(counts) <= 0), "relabel_by_frequency first"
+    v_dense = int(np.searchsorted(-counts, -threshold, side="right"))
+    K = W.shape[1]
+    tail_upper = np.minimum(counts[v_dense:], K)
+    if len(tail_upper):
+        sparse = build_bucketed(W[v_dense:], tail_upper,
+                                max_capacity=int(min(threshold, K)))
+    else:
+        sparse = BucketedSparse((), (), ())
+    return HybridW(dense=W[:v_dense], sparse=sparse, v_dense=v_dense)
+
+
+# ---------------------------------------------------------------------------
+# memory models (Table I)
+# ---------------------------------------------------------------------------
+
+def bytes_dense(n_rows: int, n_cols: int, itemsize: int = 4) -> int:
+    return n_rows * n_cols * itemsize
+
+
+def bytes_pair_csr(row_nnz: np.ndarray, itemsize: int = 4) -> int:
+    """Paper's compressed CSR: one packed int32 per nonzero + row offsets."""
+    return int(row_nnz.sum()) * itemsize + (len(row_nnz) + 1) * 8
+
+
+def bytes_bucketed(row_nnz_upper: np.ndarray, max_capacity: int,
+                   min_capacity: int = 8, itemsize: int = 4) -> int:
+    total = 0
+    for (s, e, cap) in bucket_plan(row_nnz_upper, max_capacity, min_capacity):
+        total += (e - s) * cap * itemsize
+    return total
+
+
+def bytes_hybrid(word_token_counts: np.ndarray, n_topics: int,
+                 threshold: int | None = None, itemsize: int = 4) -> dict:
+    counts = -np.sort(-np.asarray(word_token_counts))
+    thr = n_topics if threshold is None else threshold
+    v_dense = int(np.searchsorted(-counts, -thr, side="right"))
+    dense_b = bytes_dense(v_dense, n_topics, itemsize)
+    tail = np.minimum(counts[v_dense:], n_topics)
+    sparse_b = bytes_bucketed(tail, int(min(thr, n_topics)),
+                              itemsize=itemsize) if len(tail) else 0
+    return {"v_dense": v_dense, "dense_bytes": dense_b,
+            "sparse_bytes": sparse_b, "total": dense_b + sparse_b}

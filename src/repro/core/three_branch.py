@@ -1,0 +1,278 @@
+r"""EZLDA three-branch sampling (paper §III, Eq 6-10) — the core contribution.
+
+The two-branch ESCA decomposition ``p ∝ D[d]∘Ŵ[v] + α∘Ŵ[v]`` is extended by
+singling out each word's most popular topic K1 (value a1 = max_k Ŵ[v][k]):
+
+    p ∝ D[d]∘Ŵ'[v]  +  α∘Ŵ'[v]  +  (D[d]+α)∘Ŵ[v]^m          (Eq 6)
+        \_ S' ____/     \_ Q' __/     \_ M branch _________/
+
+where Ŵ' zeroes the K1 entry and Ŵ^m keeps only it. The M branch has a single
+entry ``M = a1·(b1+α)`` (Eq 8, b1 = D[d][K1]).
+
+The skip test (paper Fig 4b step 3): before constructing the expensive S'
+term, bound it from above with the g-term tail estimate (Eq 9-10)
+
+    S_est = Σ_{2≤i≤g} a_i·b_i + a_{g+1}·(len(d) − Σ_{1≤i≤g} b_i)  ≥  S'
+
+(a_i = i-th largest entry of Ŵ[v], b_i = D[d] at that entry's topic; we use
+len(d) = Σ_k D[d][k], which on TPU is one row-sum instead of the paper's extra
+pass). Drawing u ~ U[0,1]:
+
+    u < M/(M+S_est+Q')  ⇒  u·(M+S'+Q') < M  ⇒  the exact sampler would land
+    in the M branch anyway  ⇒  assign K1 and skip S' entirely.
+
+The same u is reused for the exact branch when the test fails (paper §III-B),
+so skipping never changes the sampled distribution — that is the theorem this
+module's property tests pin down.
+
+Implementation notes (TPU adaptation, DESIGN.md §2):
+  * per-word quantities (top-(g+1) values/indices of Ŵ[v], Q', ΣŴ) are
+    computed once per word as V-vectors and gathered per token — the paper's
+    "once per word" amortization without warp cooperation;
+  * K1/K2 are pair-packed into one int32 exactly as the paper stores them;
+  * the exact (un-skipped) branch is O(K) per token here (dense reference);
+    the compacted path (``capacity=...``) gathers survivors into fixed-size
+    chunks so the saved work is real, mirroring the paper's shrinking
+    workload; kernels/ carries the fused Pallas version.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import esca
+from repro.core.sparse import pack_pairs, unpack_pairs
+
+__all__ = [
+    "WordStats", "word_stats", "SkipDecision", "skip_phase",
+    "exact_three_branch", "ThreeBranchStats", "sample",
+    "build_plan", "Plan",
+]
+
+
+# ---------------------------------------------------------------------------
+# per-word phase (amortized over the word's tokens, paper Fig 4b steps 1/3)
+# ---------------------------------------------------------------------------
+
+class WordStats(NamedTuple):
+    """Per-word quantities shared by every token of the word."""
+    a: jax.Array          # (V, g+1) top-(g+1) values of Ŵ[v], descending
+    k: jax.Array          # (V, g)   topic ids of the top-g values (k[:,0]=K1)
+    k12_packed: jax.Array # (V,) int32 — K1/K2 pair-packed (paper §III-C)
+    q_prime: jax.Array    # (V,)  Q' = α·(ΣŴ[v] − a1)
+    wsum: jax.Array       # (V,)  ΣŴ[v]
+
+
+@functools.partial(jax.jit, static_argnames=("g", "alpha"))
+def word_stats(W_hat: jax.Array, *, g: int, alpha: float) -> WordStats:
+    vals, idxs = jax.lax.top_k(W_hat, g + 1)               # (V, g+1)
+    wsum = jnp.sum(W_hat, axis=-1)                          # (V,)
+    q_prime = alpha * (wsum - vals[:, 0])
+    k = idxs[:, :g].astype(jnp.int32)
+    k2 = k[:, 1] if g >= 2 else jnp.zeros_like(k[:, 0])
+    return WordStats(a=vals, k=k,
+                     k12_packed=pack_pairs(k[:, 0], k2),
+                     q_prime=q_prime, wsum=wsum)
+
+
+# ---------------------------------------------------------------------------
+# phase 1: the skip test (cheap, all tokens)
+# ---------------------------------------------------------------------------
+
+class SkipDecision(NamedTuple):
+    skip: jax.Array       # (N,) bool — u proven to land in the M branch
+    m: jax.Array          # (N,) f32 — M = a1·(b1+α)  (Eq 8)
+    s_est: jax.Array      # (N,) f32 — Eq 10 upper bound on S'
+    k1: jax.Array         # (N,) int32 — the word's most popular topic
+
+
+@functools.partial(jax.jit, static_argnames=("g", "alpha"))
+def skip_phase(u: jax.Array, word_ids: jax.Array, doc_ids: jax.Array,
+               D: jax.Array, stats: WordStats, *, g: int,
+               alpha: float) -> SkipDecision:
+    """Eq 8-10 + the skip test. O(g) gathers per token, no O(K) work."""
+    a = stats.a[word_ids]                                   # (N, g+1)
+    ktop = stats.k[word_ids]                                # (N, g)
+    q_prime = stats.q_prime[word_ids]                       # (N,)
+    len_d = jnp.sum(D, axis=-1, dtype=jnp.float32)[doc_ids] # (N,)
+    # b_i = D[d][K_i], i = 1..g (g gathers per token)
+    b = D[doc_ids[:, None], ktop].astype(jnp.float32)       # (N, g)
+    m = a[:, 0] * (b[:, 0] + alpha)                         # Eq 8
+    # Eq 10: exact head terms (i = 2..g) + tail bound with a_{g+1}.
+    head = jnp.sum(a[:, 1:g] * b[:, 1:g], axis=-1)          # empty sum if g=1
+    tail = a[:, g] * (len_d - jnp.sum(b, axis=-1))
+    s_est = head + tail
+    skip = u * (m + s_est + q_prime) < m
+    return SkipDecision(skip=skip, m=m, s_est=s_est, k1=ktop[:, 0])
+
+
+# ---------------------------------------------------------------------------
+# phase 2: exact three-branch sampling (only needed for un-skipped tokens)
+# ---------------------------------------------------------------------------
+
+def _exact_token(u, d_row, w_hat_row, k1, alpha):
+    """Exact Eq 6 sampling for one token (vmapped over a tile).
+
+    Uses the *combined* sweep (same transport as kernels/sample_fused.py):
+    per-topic mass (D[k]+α)·Ŵ[k] for k≠K1 partitions S'+Q' exactly, so ONE
+    cumsum + ONE searchsorted replaces the paper's two tree descents —
+    identical distribution (S'+Q' = Σ_{k≠K1}(D+α)Ŵ, per-topic mass equal),
+    ~2× cheaper per un-skipped token (EXPERIMENTS.md §Perf L5).
+
+    Returns (topic, in_m) where in_m flags tokens that still landed in the M
+    branch after the exact S' was known ("skipped final sampling", Fig 12b).
+    """
+    d_f = d_row.astype(jnp.float32)
+    k_iota = jnp.arange(w_hat_row.shape[-1])
+    mass = jnp.where(k_iota == k1, 0.0, (d_f + alpha) * w_hat_row)
+    m = w_hat_row[k1] * (d_f[k1] + alpha)                   # M branch
+    cum = jnp.cumsum(mass)
+    x = u * (m + cum[-1])                                   # m+S'+Q'
+    in_m = x < m
+    k_c = jnp.minimum(jnp.searchsorted(cum, x - m, side="right"),
+                      cum.shape[-1] - 1).astype(jnp.int32)
+    topic = jnp.where(in_m, k1, k_c)
+    return topic, in_m
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "tile_size"))
+def exact_three_branch(u: jax.Array, word_ids: jax.Array, doc_ids: jax.Array,
+                       k1_per_word: jax.Array, D: jax.Array, W_hat: jax.Array,
+                       *, alpha: float, tile_size: int = 8192):
+    """Dense-reference exact branch over a token batch (tiled lax.map)."""
+    n = word_ids.shape[0]
+
+    def token_fn(args):
+        u_t, v_t, d_t = args
+        return _exact_token(u_t, D[d_t], W_hat[v_t], k1_per_word[v_t],
+                            jnp.float32(alpha))
+
+    return jax.lax.map(token_fn, (u, word_ids, doc_ids),
+                       batch_size=min(tile_size, n) if n else None)
+
+
+# ---------------------------------------------------------------------------
+# full sampler: phase 1 + (compacted) phase 2
+# ---------------------------------------------------------------------------
+
+class ThreeBranchStats(NamedTuple):
+    frac_skipped: jax.Array       # skipped S' construction (phase-1 skip)
+    frac_m_final: jax.Array       # landed in M branch (skipped final sampling)
+    frac_unchanged: jax.Array
+    frac_at_max: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class Plan:
+    """Static sampling plan (built once per corpus/config)."""
+    g: int
+    tile_size: int
+    capacity: int | None          # survivor-chunk capacity; None = reference
+
+
+def build_plan(corpus, config) -> Plan:
+    cap = None
+    if getattr(config, "survivor_capacity", None):
+        cap = int(config.survivor_capacity)
+    return Plan(g=config.g, tile_size=config.tile_size, capacity=cap)
+
+
+@functools.partial(jax.jit, static_argnames=("g", "alpha", "tile_size"))
+def _sample_reference(key, word_ids, doc_ids, old_topics, D, W_hat,
+                      *, g, alpha, tile_size):
+    """Reference path: phase 1 for stats + exact phase 2 for *all* tokens.
+
+    Identical output distribution to the compacted path (same u per token);
+    used as the oracle and for small problems.
+    """
+    stats_w = word_stats(W_hat, g=g, alpha=alpha)
+    n = word_ids.shape[0]
+    u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    dec = skip_phase(u, word_ids, doc_ids, D, stats_w, g=g, alpha=alpha)
+    topics_exact, in_m = exact_three_branch(
+        u, word_ids, doc_ids, stats_w.k[:, 0], D, W_hat,
+        alpha=alpha, tile_size=tile_size)
+    # Skip ⇒ K1; theorem guarantees topics_exact == K1 there (tested).
+    new_topics = jnp.where(dec.skip, dec.k1, topics_exact)
+    st = ThreeBranchStats(
+        frac_skipped=jnp.mean(dec.skip.astype(jnp.float32)),
+        frac_m_final=jnp.mean(in_m.astype(jnp.float32)),
+        frac_unchanged=jnp.mean((new_topics == old_topics).astype(jnp.float32)),
+        frac_at_max=jnp.mean((new_topics == dec.k1).astype(jnp.float32)),
+    )
+    return new_topics, st
+
+
+@functools.partial(jax.jit, static_argnames=("g", "alpha", "capacity"))
+def _phase1_and_rank(key, word_ids, doc_ids, D, W_hat, *, g, alpha, capacity):
+    stats_w = word_stats(W_hat, g=g, alpha=alpha)
+    n = word_ids.shape[0]
+    u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    dec = skip_phase(u, word_ids, doc_ids, D, stats_w, g=g, alpha=alpha)
+    rank = jnp.cumsum(~dec.skip) - 1                       # survivor rank
+    n_surv = rank[-1] + 1 if n else jnp.int32(0)
+    return u, dec, stats_w, rank, n_surv
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "capacity", "tile_size"))
+def _phase2_chunk(chunk_idx, u, word_ids, doc_ids, k1_per_word, D, W_hat,
+                  rank, skip, *, alpha, capacity, tile_size):
+    """Process survivor ranks [chunk_idx·cap, (chunk_idx+1)·cap)."""
+    n = word_ids.shape[0]
+    lo = chunk_idx * capacity
+    sel = (~skip) & (rank >= lo) & (rank < lo + capacity)
+    # Scatter token indices into a fixed-size buffer by rank − lo.
+    slot = jnp.where(sel, rank - lo, capacity)              # cap = dump slot
+    buf = jnp.full((capacity + 1,), 0, jnp.int32)
+    buf = buf.at[slot].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    idx = buf[:capacity]
+    valid = jnp.zeros((capacity + 1,), jnp.bool_).at[slot].set(
+        True, mode="drop")[:capacity]
+    topics_c, in_m_c = exact_three_branch(
+        u[idx], word_ids[idx], doc_ids[idx], k1_per_word, D, W_hat,
+        alpha=alpha, tile_size=tile_size)
+    return idx, valid, topics_c, in_m_c
+
+
+def sample(key, plan: Plan, word_ids, doc_ids, old_topics, D, W, config):
+    """Full EZLDA sampler: Ŵ, phase 1, (compacted) phase 2, stats.
+
+    With ``plan.capacity`` set, only ceil(survivors/capacity) chunks of exact
+    sampling run — the paper's workload reduction made shape-static. The
+    python chunk loop re-uses one jit cache entry (chunk_idx is traced).
+    """
+    alpha, beta = config.alpha_, config.beta
+    W_hat = esca.compute_w_hat(W, beta)
+    if plan.capacity is None:
+        return _sample_reference(key, word_ids, doc_ids, old_topics, D, W_hat,
+                                 g=plan.g, alpha=alpha,
+                                 tile_size=plan.tile_size)
+
+    u, dec, stats_w, rank, n_surv = _phase1_and_rank(
+        key, word_ids, doc_ids, D, W_hat, g=plan.g, alpha=alpha,
+        capacity=plan.capacity)
+    n_surv = int(n_surv)                                    # one host sync
+    new_topics = dec.k1                                     # skipped ⇒ K1
+    in_m_acc = jnp.zeros(word_ids.shape[0], jnp.bool_)
+    n_chunks = -(-n_surv // plan.capacity) if n_surv else 0
+    for c in range(n_chunks):
+        idx, valid, topics_c, in_m_c = _phase2_chunk(
+            jnp.int32(c), u, word_ids, doc_ids, stats_w.k[:, 0], D, W_hat,
+            rank, dec.skip, alpha=alpha, capacity=plan.capacity,
+            tile_size=plan.tile_size)
+        new_topics = new_topics.at[idx].set(
+            jnp.where(valid, topics_c, new_topics[idx]))
+        in_m_acc = in_m_acc.at[idx].set(in_m_c & valid | in_m_acc[idx])
+    st = ThreeBranchStats(
+        frac_skipped=jnp.mean(dec.skip.astype(jnp.float32)),
+        frac_m_final=jnp.mean((dec.skip | in_m_acc).astype(jnp.float32)),
+        frac_unchanged=jnp.mean((new_topics == old_topics).astype(jnp.float32)),
+        frac_at_max=jnp.mean((new_topics == dec.k1).astype(jnp.float32)),
+    )
+    return new_topics, st

@@ -1,0 +1,127 @@
+"""MXU histogram kernel: count-matrix rebuild from the token list (§IV-C).
+
+The update task rebuilds W (V×K) and D (M×K) from T after sampling. A
+scatter-add is gather/serial on TPU; the MXU-native form is a double-one-hot
+matmul per token tile:
+
+    partial[r, k] = Σ_tokens 1[row_id − row_base == r] · 1[topic == k]
+                  = onehot_rows(T×R)ᵀ @ onehot_topics(T×K_blk)
+
+T is sorted by word (and doc-major via the inverted index for D), so each
+tile touches a *contiguous, usually tiny* row range [row_base, row_base+R).
+The kernel emits per-tile (R × K) partials; a cheap XLA segment-add folds
+them into the full matrix. Tokens whose row falls outside the tile's R-row
+window (rare: only ultra-ragged tail tiles) are masked out here and handled
+by the caller's scatter fallback — mirroring the paper's W_dense-fast /
+W_sparse-rebuild split.
+
+MXU shape note: the matmul contracts over the token axis (TILE_T multiple of
+128); R and K_blk are lane-aligned multiples of 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["histogram_partials", "histogram"]
+
+DEFAULT_TILE_T = 512
+DEFAULT_ROWS = 128
+
+
+def _kernel(row_ref, topic_ref, weight_ref, base_ref, out_ref, covered_ref,
+            *, rows_per_tile: int, block_k: int):
+    rows = row_ref[...]                                    # (T,) int32
+    topics = topic_ref[...]                                # (T,) int32
+    w = weight_ref[...]                                    # (T,) int32 mask
+    base = base_ref[0]
+    rel = rows - base
+    in_win = jnp.logical_and(rel >= 0, rel < rows_per_tile)
+    kb = pl.program_id(1)
+    t_rel = topics - kb * block_k
+    in_kb = jnp.logical_and(t_rel >= 0, t_rel < block_k)
+    use = jnp.logical_and(in_win, jnp.logical_and(in_kb, w > 0))
+    # double one-hot (f32 for the MXU; counts are exact in f32 ≪ 2^24)
+    oh_r = (rel[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (rows.shape[0], rows_per_tile), 1))
+    oh_k = (t_rel[:, None] == jax.lax.broadcasted_iota(
+        jnp.int32, (topics.shape[0], block_k), 1))
+    oh_r = jnp.where(use[:, None], oh_r, False).astype(jnp.float32)
+    out_ref[0] = jax.lax.dot_general(
+        oh_r, oh_k.astype(jnp.float32),
+        (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(jnp.int32)
+    # tokens this tile could NOT cover (row outside window): per-k-block the
+    # same set, so emit once (kb 0) for the caller's fallback scatter.
+    covered_ref[...] = jnp.logical_and(in_win, w > 0)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_topics", "tile_t", "rows_per_tile", "block_k", "interpret"))
+def histogram_partials(row_ids: jax.Array, topics: jax.Array,
+                       weights: jax.Array, tile_bases: jax.Array, *,
+                       n_topics: int, tile_t: int = DEFAULT_TILE_T,
+                       rows_per_tile: int = DEFAULT_ROWS,
+                       block_k: int = 512, interpret: bool = True):
+    """Per-tile (R×K) one-hot MXU partial histograms + coverage mask."""
+    n = row_ids.shape[0]
+    assert n % tile_t == 0, "pad tokens to a tile multiple first"
+    n_tiles = n // tile_t
+    block_k = min(block_k, n_topics)
+    k_pad = (-n_topics) % block_k
+    n_kblocks = (n_topics + k_pad) // block_k
+    tok = pl.BlockSpec((tile_t,), lambda t, kb: (t,))
+    base_spec = pl.BlockSpec((1,), lambda t, kb: (t,))
+    out_spec = pl.BlockSpec((1, rows_per_tile, block_k),
+                            lambda t, kb: (t, 0, kb))
+    cov_spec = pl.BlockSpec((tile_t,), lambda t, kb: (t,))
+    partials, covered = pl.pallas_call(
+        functools.partial(_kernel, rows_per_tile=rows_per_tile,
+                          block_k=block_k),
+        grid=(n_tiles, n_kblocks),
+        in_specs=[tok, tok, tok, base_spec],
+        out_specs=(out_spec, cov_spec),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_tiles, rows_per_tile,
+                                  n_kblocks * block_k), jnp.int32),
+            jax.ShapeDtypeStruct((n,), jnp.bool_),
+        ),
+        interpret=interpret,
+    )(row_ids, topics, weights, tile_bases)
+    return partials[:, :, :n_topics], covered
+
+
+def histogram(row_ids: jax.Array, topics: jax.Array, weights: jax.Array, *,
+              n_rows: int, n_topics: int, tile_t: int = DEFAULT_TILE_T,
+              rows_per_tile: int = DEFAULT_ROWS, interpret: bool = True):
+    """Full count rebuild: MXU partials + segment-add + scatter fallback.
+
+    ``row_ids`` should be sorted (word-sorted T for W; doc-major order via
+    the inverted index for D) so tiles have narrow row windows.
+    """
+    n = row_ids.shape[0]
+    n_pad = (-n) % tile_t
+    if n_pad:
+        row_ids = jnp.pad(row_ids, (0, n_pad))
+        topics = jnp.pad(topics, (0, n_pad))
+        weights = jnp.pad(weights, (0, n_pad))
+    n_tiles = row_ids.shape[0] // tile_t
+    tile_bases = row_ids[::tile_t]                        # first row per tile
+    partials, covered = histogram_partials(
+        row_ids, topics, weights, tile_bases, n_topics=n_topics,
+        tile_t=tile_t, rows_per_tile=rows_per_tile, interpret=interpret)
+    # Fold partials: out[base_t + r] += partial[t, r]  (n_tiles·R rows)
+    out = jnp.zeros((n_rows + rows_per_tile, n_topics), jnp.int32)
+    scatter_rows = (tile_bases[:, None]
+                    + jnp.arange(rows_per_tile)[None, :]).reshape(-1)
+    out = out.at[scatter_rows].add(
+        partials.reshape(-1, n_topics), mode="drop")
+    # Fallback scatter for the (rare) tokens outside their tile's window.
+    left = jnp.logical_and(jnp.logical_not(covered), weights > 0)
+    out = out.at[row_ids, topics].add(
+        jnp.where(left, weights, 0).astype(jnp.int32), mode="drop")
+    return out[:n_rows]

@@ -1,0 +1,141 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These are what the trainer / distributed paths call when
+``LDAConfig.impl == "pallas"``. On CPU (this container) the kernels run in
+interpret mode; on a real TPU backend the same code compiles to Mosaic.
+
+The division of labor (DESIGN.md §2): XLA does the gathers (inverted-index
+driven, irregular), Pallas does the O(T·K) / O(T·L) blocked arithmetic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import esca, three_branch
+from repro.kernels import histogram as _hist
+from repro.kernels import sample_fused as _fused
+from repro.kernels import sample_sparse as _sparse
+
+__all__ = ["interpret_default", "sample_tokens", "update_counts",
+           "sample_tokens_sparse_d"]
+
+
+def interpret_default() -> bool:
+    """Interpret on anything that is not a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "tile_size", "interpret"))
+def sample_tokens(key, word_ids, doc_ids, old_topics, D, W_hat, *,
+                  alpha: float, tile_size: int = 4096,
+                  interpret: bool | None = None):
+    """Dense-path EZLDA sampling via the fused kernel.
+
+    Gathers (tiled to bound live memory at O(tile·K)), then sample_fused.
+    Returns (topics, stats) shaped like three_branch.sample's output.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n = word_ids.shape[0]
+    u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    tile = min(tile_size, n)
+    n_pad = (-n) % tile
+    u_p = jnp.pad(u, (0, n_pad))
+    v_p = jnp.pad(word_ids, (0, n_pad))
+    d_p = jnp.pad(doc_ids, (0, n_pad))
+    shape = (-1, tile)
+
+    def tile_fn(_, args):
+        u_t, v_t, d_t = args
+        out = _fused.sample_fused(u_t, D[d_t], W_hat[v_t], alpha=alpha,
+                                  interpret=interpret)
+        return None, out
+
+    _, (topics, m, s, q) = jax.lax.scan(
+        tile_fn, None,
+        (u_p.reshape(shape), v_p.reshape(shape), d_p.reshape(shape)))
+    topics, m, s, q = (x.reshape(-1)[:n] for x in (topics, m, s, q))
+    in_m = u * (m + s + q) < m
+    k1 = jnp.argmax(W_hat, axis=-1).astype(jnp.int32)[word_ids]
+    stats = three_branch.ThreeBranchStats(
+        frac_skipped=jnp.mean(in_m.astype(jnp.float32)),  # kernel = exact path
+        frac_m_final=jnp.mean(in_m.astype(jnp.float32)),
+        frac_unchanged=jnp.mean((topics == old_topics).astype(jnp.float32)),
+        frac_at_max=jnp.mean((topics == k1).astype(jnp.float32)),
+    )
+    return topics, stats
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "alpha", "g", "interpret"))
+def sample_tokens_sparse_d(key, word_ids, doc_ids, old_topics,
+                           packed_d_rows, D, W_hat, *, alpha: float,
+                           g: int = 2, interpret: bool | None = None):
+    """Sparse-D path: O(L) S' kernel + per-word Q' fallback (§IV-C).
+
+    ``packed_d_rows``: (M, L) int32 ELL rows of D (16/16 packed). The Q'
+    branch (rare) falls back to the dense CDF on just those tokens — here via
+    the exact reference; a converged corpus sends <1% of tokens there.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    n = word_ids.shape[0]
+    u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+    stats_w = three_branch.word_stats(W_hat, g=g, alpha=alpha)
+    k1 = stats_w.k[:, 0][word_ids]
+    a1 = stats_w.a[:, 0][word_ids]
+    b1 = D[doc_ids, k1].astype(jnp.float32)
+    q_prime = stats_w.q_prime[word_ids]
+    rows = packed_d_rows[doc_ids]                          # (N, L)
+    idx = (rows.view(jnp.uint32) >> 16).astype(jnp.int32)
+    w_at = jnp.take_along_axis(W_hat[word_ids], idx, axis=1)
+    topics, needs_q, _ = _sparse.sample_sparse(
+        u, rows, w_at, k1, a1, b1, q_prime, alpha=alpha, interpret=interpret)
+    # Q'-branch fallback: inverse-CDF over α·Ŵ' for flagged tokens only.
+    w_rows = W_hat[word_ids]
+    w_prime = jnp.where(
+        jnp.arange(W_hat.shape[1])[None, :] == k1[:, None], 0.0, w_rows)
+    m = a1 * (b1 + alpha)
+    s_p = jnp.sum(rows_sp := (jnp.where(idx == k1[:, None], 0.0, w_at)
+                              * (rows.view(jnp.uint32)
+                                 & jnp.uint32(0xFFFF)).astype(jnp.float32)),
+                  axis=1)
+    xq = u * (m + s_p + q_prime) - m - s_p
+    cq = jnp.cumsum(alpha * w_prime, axis=1)
+    topic_q = jnp.minimum(
+        jax.vmap(lambda c, x: jnp.searchsorted(c, x, side="right"))(cq, xq),
+        W_hat.shape[1] - 1).astype(jnp.int32)
+    topics = jnp.where(needs_q, topic_q, topics)
+    stats = three_branch.ThreeBranchStats(
+        frac_skipped=jnp.mean((topics == k1).astype(jnp.float32)),
+        frac_m_final=jnp.mean((topics == k1).astype(jnp.float32)),
+        frac_unchanged=jnp.mean((topics == old_topics).astype(jnp.float32)),
+        frac_at_max=jnp.mean((topics == k1).astype(jnp.float32)),
+    )
+    return topics, stats
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "n_docs", "n_words", "n_topics", "interpret"))
+def update_counts(word_ids, doc_ids, topics, mask, inv_token_idx,
+                  doc_segment_ids, *, n_docs: int, n_words: int,
+                  n_topics: int, interpret: bool | None = None):
+    """Count rebuild via the MXU histogram kernel (W word-sorted, D doc-major).
+
+    Drop-in for esca.update_counts (the oracle); the doc-major reorder is the
+    inverted-index scan of §IV-C.
+    """
+    if interpret is None:
+        interpret = interpret_default()
+    w = jnp.where(mask > 0, 1, 0).astype(jnp.int32)
+    W = _hist.histogram(word_ids, topics, w, n_rows=n_words,
+                        n_topics=n_topics, interpret=interpret)
+    topics_dm = topics[inv_token_idx]
+    w_dm = w[inv_token_idx]
+    D = _hist.histogram(doc_segment_ids, topics_dm, w_dm, n_rows=n_docs,
+                        n_topics=n_topics, interpret=interpret)
+    return D, W

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts).
+
+Each function mirrors its kernel's math with straight jnp ops; kernel tests
+sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["sample_fused_ref", "sample_sparse_ref", "histogram_ref"]
+
+
+def sample_fused_ref(u: jax.Array, d_rows: jax.Array, w_rows: jax.Array, *,
+                     alpha: float):
+    """Oracle for kernels/sample_fused.py (exact three-branch, combined CDF)."""
+    d = d_rows.astype(jnp.float32)
+    w = w_rows
+    k1 = jnp.argmax(w, axis=1).astype(jnp.int32)              # (N,)
+    a1 = jnp.max(w, axis=1)
+    b1 = jnp.take_along_axis(d, k1[:, None], axis=1)[:, 0]
+    m = a1 * (b1 + alpha)
+    s_p = jnp.sum(d * w, axis=1) - a1 * b1
+    q_p = alpha * (jnp.sum(w, axis=1) - a1)
+    x = u * (m + s_p + q_p)
+    in_m = x < m
+    k_iota = jnp.arange(w.shape[1])[None, :]
+    mass = jnp.where(k_iota != k1[:, None], (d + alpha) * w, 0.0)
+    cdf = jnp.cumsum(mass, axis=1)
+    hit = cdf > (x - m)[:, None]
+    found = jnp.any(hit, axis=1)
+    first = jnp.argmax(hit, axis=1).astype(jnp.int32)
+    topic = jnp.where(in_m, k1,
+                      jnp.where(found, first, w.shape[1] - 1))
+    return topic, m, s_p, q_p
+
+
+def sample_sparse_ref(u: jax.Array, idx: jax.Array, val: jax.Array,
+                      w_at_idx: jax.Array, k1: jax.Array, a1: jax.Array,
+                      b1: jax.Array, q_prime: jax.Array, *, alpha: float):
+    """Oracle for kernels/sample_sparse.py (sparse-S' path, O(L) per token).
+
+    Args mirror the kernel: per-token packed-D-row expansion
+    idx/val (N, L) with Ŵ[v] gathered at idx (w_at_idx), plus per-token
+    scalars (k1, a1, b1 from the word/doc stats, Q' from the word stats).
+    Returns (topic, needs_q) — needs_q flags tokens that fell into the Q'
+    branch (sparse rows carry no α mass; the caller finishes those).
+    """
+    m = a1 * (b1 + alpha)
+    w_eff = jnp.where(idx == k1[:, None], 0.0, w_at_idx)      # Ŵ' gather
+    p_s = val.astype(jnp.float32) * w_eff
+    s_p = jnp.sum(p_s, axis=1)
+    x = u * (m + s_p + q_prime)
+    in_m = x < m
+    cdf = jnp.cumsum(p_s, axis=1)
+    hit = cdf > (x - m)[:, None]
+    found = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1)
+    topic_s = jnp.take_along_axis(idx, slot[:, None], axis=1)[:, 0]
+    in_s = (~in_m) & found & (x < m + s_p)
+    needs_q = (~in_m) & (~in_s)
+    topic = jnp.where(in_m, k1, jnp.where(in_s, topic_s, -1))
+    return topic.astype(jnp.int32), needs_q, s_p
+
+
+def histogram_ref(row_ids: jax.Array, topics: jax.Array, weights: jax.Array,
+                  *, n_rows: int, n_topics: int):
+    """Oracle for kernels/histogram.py (count-matrix rebuild)."""
+    out = jnp.zeros((n_rows, n_topics), jnp.int32)
+    return out.at[row_ids, topics].add(weights.astype(jnp.int32))

@@ -1,0 +1,173 @@
+"""Fused three-branch sampling kernel (dense-word hot path).
+
+The paper's sampling kernel builds S/Q max-trees per token and descends them
+(warp-parallel, §II-B Fig 2). The TPU adaptation (DESIGN.md §2) streams the
+K axis through VMEM in blocks and replaces tree descent with a two-phase
+sweep over a fused pallas grid ``(token_tiles, phase, k_blocks)``:
+
+  phase 0 — branch masses: running (a1, K1, b1) max-carry + ΣD∘Ŵ + ΣŴ
+            accumulated in VMEM scratch. At the end of the sweep we have,
+            per token: M = a1·(b1+α), S' = ΣD∘Ŵ − a1·b1,
+            Q' = α·(ΣŴ − a1)  (Eq 6/8, exact — no estimate needed here).
+  phase 1 — inverse-CDF: x = u·(M+S'+Q'); if x < M the token lands in the M
+            branch (topic K1, "skipped final sampling"). Otherwise one
+            *combined* sweep over k≠K1 with per-topic mass (D[k]+α)·Ŵ[k]
+            accumulates a running cumsum until it crosses x−M.
+
+The combined sweep is a TPU-native simplification: the paper keeps S' and Q'
+as two separate trees because S' is sparse on GPU; per-topic the combined
+mass is (D+α)∘Ŵ' = p_s' + p_q' exactly, so one pass draws from the identical
+distribution (tests pin this against ref.three_branch_masses/ref oracles).
+
+The (D rows, Ŵ rows) inputs arrive pre-gathered per token tile — the gather
+is the inverted-index-driven part that XLA does well; the O(T·K) arithmetic
++ reduction is the part that wants MXU/VPU block residency.
+
+VMEM budget per grid step: 2 · TILE_T · BLOCK_K · 4 B (D and Ŵ blocks)
++ O(TILE_T) scratch. Defaults (128 × 512) use 512 KB — well under 16 MB,
+leaving room for double buffering.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sample_fused", "DEFAULT_TILE_T", "DEFAULT_BLOCK_K"]
+
+DEFAULT_TILE_T = 128
+DEFAULT_BLOCK_K = 512
+_NEG_INF = -1e30  # python float: jnp module-level consts can't be captured
+
+
+def _kernel(u_ref, d_ref, w_ref,                       # inputs
+            topic_ref, m_ref, s_ref, q_ref,            # outputs
+            amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
+            *, block_k: int, n_kblocks: int, k_total: int, alpha: float):
+    phase = pl.program_id(1)
+    kb = pl.program_id(2)
+    d = d_ref[...].astype(jnp.float32)                 # (T, BK)
+    w = w_ref[...]                                     # (T, BK)
+    k_global = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, d.shape, dimension=1)               # (T, BK)
+    valid = k_global < k_total                         # tail-block mask
+
+    @pl.when((phase == 0) & (kb == 0))
+    def _init():
+        amax[...] = jnp.full_like(amax[...], _NEG_INF)
+        bmax[...] = jnp.zeros_like(bmax[...])
+        kmax[...] = jnp.zeros_like(kmax[...])
+        sum_s[...] = jnp.zeros_like(sum_s[...])
+        sum_q[...] = jnp.zeros_like(sum_q[...])
+
+    @pl.when(phase == 0)
+    def _masses():
+        wv = jnp.where(valid, w, _NEG_INF)
+        blk_max = jnp.max(wv, axis=1)                  # (T,)
+        blk_arg = jnp.argmax(wv, axis=1).astype(jnp.int32)
+        rows = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0)
+        sel = blk_arg[:, None] == jax.lax.broadcasted_iota(
+            jnp.int32, d.shape, 1)
+        blk_d = jnp.sum(jnp.where(sel, d, 0.0), axis=1)
+        better = blk_max > amax[...]
+        amax[...] = jnp.where(better, blk_max, amax[...])
+        kmax[...] = jnp.where(better, kb * block_k + blk_arg, kmax[...])
+        bmax[...] = jnp.where(better, blk_d, bmax[...])
+        wz = jnp.where(valid, w, 0.0)
+        sum_s[...] += jnp.sum(d * wz, axis=1)
+        sum_q[...] += jnp.sum(wz, axis=1)
+
+    @pl.when((phase == 1) & (kb == 0))
+    def _finalize_masses():
+        a1 = amax[...]
+        b1 = bmax[...]
+        m = a1 * (b1 + alpha)                          # Eq 8
+        s_p = sum_s[...] - a1 * b1                     # exact S'
+        q_p = alpha * (sum_q[...] - a1)                # exact Q'
+        m_ref[...] = m
+        s_ref[...] = s_p
+        q_ref[...] = q_p
+        x = u_ref[...] * (m + s_p + q_p)
+        target[...] = x - m                            # combined-CDF target
+        found[...] = x < m                             # M branch ⇒ K1
+        cand[...] = kmax[...]
+        cum[...] = jnp.zeros_like(cum[...])
+
+    @pl.when(phase == 1)
+    def _cdf():
+        mass = (d + alpha) * w
+        mass = jnp.where(valid & (k_global != kmax[...][:, None]), mass, 0.0)
+        c = cum[...][:, None] + jnp.cumsum(mass, axis=1)   # (T, BK)
+        hit = c > target[...][:, None]
+        any_hit = jnp.any(hit, axis=1)
+        # first hit: cumsum is monotone per row, so argmax finds it
+        first = jnp.argmax(hit, axis=1).astype(jnp.int32)
+        take = jnp.logical_and(jnp.logical_not(found[...]), any_hit)
+        cand[...] = jnp.where(take, kb * block_k + first, cand[...])
+        found[...] = jnp.logical_or(found[...], any_hit)
+        cum[...] = c[:, -1]
+
+        @pl.when(kb == n_kblocks - 1)
+        def _emit():
+            # numerical tail guard: u ≈ 1 with float cumsum undershoot —
+            # clamp to the last valid topic (measure-zero event)
+            topic_ref[...] = jnp.where(found[...], cand[...], k_total - 1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "tile_t", "block_k", "interpret"))
+def sample_fused(u: jax.Array, d_rows: jax.Array, w_rows: jax.Array, *,
+                 alpha: float, tile_t: int = DEFAULT_TILE_T,
+                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+    """Sample topics for a token batch from pre-gathered (D, Ŵ) rows.
+
+    Args:
+      u: (N,) uniforms in [0,1).
+      d_rows: (N, K) int32 — D[doc_ids] gathered rows.
+      w_rows: (N, K) f32 — Ŵ[word_ids] gathered rows.
+    Returns:
+      topics (N,) int32 and the exact branch masses (M, S', Q') per token.
+    """
+    n, k_total = d_rows.shape
+    n_pad = (-n) % tile_t
+    k_pad = (-k_total) % block_k
+    if n_pad or k_pad:
+        u = jnp.pad(u, (0, n_pad))
+        d_rows = jnp.pad(d_rows, ((0, n_pad), (0, k_pad)))
+        w_rows = jnp.pad(w_rows, ((0, n_pad), (0, k_pad)))
+    n_tiles = u.shape[0] // tile_t
+    n_kblocks = w_rows.shape[1] // block_k
+
+    grid = (n_tiles, 2, n_kblocks)
+    kernel = functools.partial(
+        _kernel, block_k=block_k, n_kblocks=n_kblocks, k_total=k_total,
+        alpha=float(alpha))
+    out_shapes = (
+        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.int32),   # topic
+        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32), # M
+        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32), # S'
+        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32), # Q'
+    )
+    tok_spec = pl.BlockSpec((tile_t,), lambda t, p, kb: (t,))
+    mat_spec = pl.BlockSpec((tile_t, block_k), lambda t, p, kb: (t, kb))
+    scratch = [pltpu.VMEM((tile_t,), jnp.float32)] * 2 \
+        + [pltpu.VMEM((tile_t,), jnp.int32)] \
+        + [pltpu.VMEM((tile_t,), jnp.float32)] * 4 \
+        + [pltpu.VMEM((tile_t,), jnp.bool_)] \
+        + [pltpu.VMEM((tile_t,), jnp.int32)]
+    topics, m, s, q = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tok_spec, mat_spec, mat_spec],
+        out_specs=(tok_spec, tok_spec, tok_spec, tok_spec),
+        out_shape=out_shapes,
+        scratch_shapes=scratch,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(u, d_rows, w_rows)
+    return topics[:n], m[:n], s[:n], q[:n]

@@ -1,0 +1,103 @@
+"""Sparse-S' sampling kernel (tail-word path, paper §IV-C).
+
+For tail words the D rows are bucketed-ELL sparse (L slots ≪ K). The paper
+densifies Ŵ[v] into shared memory and scans the sparse D row; here the roles
+are TPU-arranged: the (idx, val) slots and the Ŵ values *gathered at those
+slots* live in VMEM for a token tile, so S' construction + the S'-branch
+inverse-CDF cost O(L) per token instead of O(K) — that is the entire point
+of the paper's sparse format.
+
+Pair-unpacking happens inside the kernel: the packed int32 ELL row
+(idx<<16 | val, §IV-B) is the wire/HBM format; the kernel splits it with the
+same shift/mask arithmetic the paper's CUDA kernel uses.
+
+Tokens whose draw lands in the Q' branch (mass α·ΣŴ', no dependence on D)
+are flagged via ``needs_q`` and finished by the caller against the per-word
+Q table — they are rare once training converges (S' ≫ Q' for converged
+tokens) and batchable per word.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["sample_sparse"]
+
+DEFAULT_TILE_T = 256
+
+
+def _kernel(u_ref, packed_ref, w_ref, k1_ref, a1_ref, b1_ref, qp_ref,
+            topic_ref, needs_q_ref, s_ref, *, alpha: float):
+    packed = packed_ref[...]                              # (T, L) int32
+    # 16/16 pair unpack (paper §IV-B) — unsigned shift via uint32 view
+    up = pltpu.bitcast(packed, jnp.uint32)
+    idx = (up >> 16).astype(jnp.int32)
+    val = (up & 0xFFFF).astype(jnp.float32)
+    w_at = w_ref[...]                                     # (T, L) f32
+    k1 = k1_ref[...]
+    m = a1_ref[...] * (b1_ref[...] + alpha)               # Eq 8
+    w_eff = jnp.where(idx == k1[:, None], 0.0, w_at)      # zero the K1 slot
+    p_s = val * w_eff
+    cdf = jnp.cumsum(p_s, axis=1)
+    s_p = cdf[:, -1]
+    x = u_ref[...] * (m + s_p + qp_ref[...])
+    in_m = x < m
+    hit = cdf > (x - m)[:, None]
+    found = jnp.any(hit, axis=1)
+    slot = jnp.argmax(hit, axis=1)[:, None]
+    rows_sel = jnp.sum(jnp.where(
+        jax.lax.broadcasted_iota(jnp.int32, idx.shape, 1) == slot, idx, 0),
+        axis=1)
+    in_s = jnp.logical_and(jnp.logical_not(in_m),
+                           jnp.logical_and(found, x < m + s_p))
+    needs_q = jnp.logical_and(jnp.logical_not(in_m), jnp.logical_not(in_s))
+    topic_ref[...] = jnp.where(in_m, k1, jnp.where(in_s, rows_sel, -1))
+    needs_q_ref[...] = needs_q
+    s_ref[...] = s_p
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "tile_t", "interpret"))
+def sample_sparse(u: jax.Array, packed_rows: jax.Array, w_at_idx: jax.Array,
+                  k1: jax.Array, a1: jax.Array, b1: jax.Array,
+                  q_prime: jax.Array, *, alpha: float,
+                  tile_t: int = DEFAULT_TILE_T, interpret: bool = True):
+    """O(L)-per-token three-branch sampling over packed ELL D rows.
+
+    Args:
+      u: (N,) uniforms; packed_rows: (N, L) int32 ELL (idx<<16|val);
+      w_at_idx: (N, L) Ŵ[v] gathered at the row's idx slots;
+      k1/a1/b1/q_prime: per-token word/doc stats (gathered by the caller).
+    Returns:
+      (topics, needs_q, s_prime); topics = -1 where needs_q.
+    """
+    n, L = packed_rows.shape
+    n_pad = (-n) % tile_t
+    if n_pad:
+        u = jnp.pad(u, (0, n_pad))
+        packed_rows = jnp.pad(packed_rows, ((0, n_pad), (0, 0)))
+        w_at_idx = jnp.pad(w_at_idx, ((0, n_pad), (0, 0)))
+        k1 = jnp.pad(k1, (0, n_pad))
+        a1 = jnp.pad(a1, (0, n_pad), constant_values=1.0)
+        b1 = jnp.pad(b1, (0, n_pad))
+        q_prime = jnp.pad(q_prime, (0, n_pad))
+    n_tiles = u.shape[0] // tile_t
+    tok = pl.BlockSpec((tile_t,), lambda t: (t,))
+    mat = pl.BlockSpec((tile_t, L), lambda t: (t, 0))
+    topics, needs_q, s_p = pl.pallas_call(
+        functools.partial(_kernel, alpha=float(alpha)),
+        grid=(n_tiles,),
+        in_specs=[tok, mat, mat, tok, tok, tok, tok],
+        out_specs=(tok, tok, tok),
+        out_shape=(
+            jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.int32),
+            jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.bool_),
+            jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32),
+        ),
+        interpret=interpret,
+    )(u, packed_rows, w_at_idx, k1, a1, b1, q_prime)
+    return topics[:n], needs_q[:n], s_p[:n]

@@ -1,0 +1,41 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module constant: importing this module never touches jax
+device state (the dry-run forges 512 host devices *before* first jax init;
+tests and benches must keep seeing the single real device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_lda_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 single pod (256 chips) or 2×16×16 multi-pod (512 chips).
+
+    The dry-run forges 512 host devices; the single-pod mesh takes the
+    first 256 of them.
+    """
+    import numpy as np
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) != need:
+        devs = devs[:need]
+    return jax.make_mesh(
+        shape, axes, devices=devs,
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_lda_mesh(n_data: int, n_model: int, *, n_pod: int | None = None):
+    """Small meshes for multi-device LDA tests/examples."""
+    if n_pod:
+        return jax.make_mesh(
+            (n_pod, n_data, n_model), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (n_data, n_model), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

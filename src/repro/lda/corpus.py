@@ -1,0 +1,205 @@
+"""Corpus representation & preprocessing for EZLDA.
+
+Implements the paper's data pipeline (Fig 1, SS IV-B/C, SS V-B):
+
+  raw documents -> numerical corpus -> token list ``T`` sorted by wordId
+  -> word re-labeling by token count (dense words get small ids)
+  -> document chunking (greedy token-balanced, the multi-GPU partition)
+  -> inverted index (CSR by document) over the word-sorted token list.
+
+All preprocessing is host-side numpy (it happens once per corpus); the
+trainer moves the resulting arrays onto devices.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+__all__ = [
+    "Corpus",
+    "from_documents",
+    "relabel_by_frequency",
+    "synthetic_lda_corpus",
+    "zipf_corpus",
+    "chunk_documents",
+    "pad_corpus",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Corpus:
+    """A numerical corpus in EZLDA layout.
+
+    ``word_ids``/``doc_ids`` form the token list ``T`` (topic assignments live
+    in the trainer state, not here). Tokens are sorted by ``word_ids`` (stable,
+    so tokens of one word keep document order) -- the paper's ``T`` layout.
+    """
+
+    word_ids: np.ndarray          # (N,) int32, sorted ascending
+    doc_ids: np.ndarray           # (N,) int32
+    n_words: int                  # V
+    n_docs: int                   # M
+
+    # Derived indexes (built by ``from_documents``).
+    word_offsets: np.ndarray      # (V+1,) int64 CSR over T by word
+    word_token_counts: np.ndarray # (V,)   int64
+    doc_lengths: np.ndarray       # (M,)   int64
+    inv_doc_offsets: np.ndarray   # (M+1,) int64 -- inverted index (Fig 5b)
+    inv_token_idx: np.ndarray     # (N,)   int64 -- positions in T per document
+
+    @property
+    def n_tokens(self) -> int:
+        return int(self.word_ids.shape[0])
+
+    def validate(self) -> None:
+        assert self.word_ids.shape == self.doc_ids.shape
+        assert np.all(np.diff(self.word_ids) >= 0), "T must be sorted by wordId"
+        assert self.word_ids.min(initial=0) >= 0
+        assert self.word_ids.max(initial=-1) < self.n_words
+        assert self.doc_ids.min(initial=0) >= 0
+        assert self.doc_ids.max(initial=-1) < self.n_docs
+        assert self.inv_doc_offsets[-1] == self.n_tokens
+        assert self.word_offsets[-1] == self.n_tokens
+        # The inverted index must cover every token exactly once.
+        assert np.array_equal(np.sort(self.inv_token_idx), np.arange(self.n_tokens))
+
+
+def _build_indexes(word_ids: np.ndarray, doc_ids: np.ndarray, n_words: int,
+                   n_docs: int) -> Corpus:
+    n = word_ids.shape[0]
+    word_token_counts = np.bincount(word_ids, minlength=n_words).astype(np.int64)
+    word_offsets = np.zeros(n_words + 1, dtype=np.int64)
+    np.cumsum(word_token_counts, out=word_offsets[1:])
+
+    doc_lengths = np.bincount(doc_ids, minlength=n_docs).astype(np.int64)
+    inv_doc_offsets = np.zeros(n_docs + 1, dtype=np.int64)
+    np.cumsum(doc_lengths, out=inv_doc_offsets[1:])
+    # Stable argsort by doc id gives, per document, its token positions in T.
+    inv_token_idx = np.argsort(doc_ids, kind="stable").astype(np.int64)
+
+    return Corpus(
+        word_ids=word_ids.astype(np.int32),
+        doc_ids=doc_ids.astype(np.int32),
+        n_words=int(n_words),
+        n_docs=int(n_docs),
+        word_offsets=word_offsets,
+        word_token_counts=word_token_counts,
+        doc_lengths=doc_lengths,
+        inv_doc_offsets=inv_doc_offsets,
+        inv_token_idx=inv_token_idx,
+    )
+
+
+def from_documents(docs: Sequence[Sequence[int]], n_words: int) -> Corpus:
+    """Build a Corpus from per-document word-id lists (Fig 1's numerical corpus)."""
+    doc_ids = np.concatenate([
+        np.full(len(d), i, dtype=np.int64) for i, d in enumerate(docs)
+    ]) if docs else np.zeros(0, dtype=np.int64)
+    word_ids = np.concatenate([np.asarray(d, dtype=np.int64) for d in docs]) \
+        if docs else np.zeros(0, dtype=np.int64)
+    order = np.argsort(word_ids, kind="stable")
+    c = _build_indexes(word_ids[order], doc_ids[order], n_words, len(docs))
+    c.validate()
+    return c
+
+
+def relabel_by_frequency(corpus: Corpus) -> tuple[Corpus, np.ndarray]:
+    """Relabel words so higher-token-count words get smaller ids (SS IV-B).
+
+    This groups the future dense rows of W at the top of the matrix and lets
+    ``T`` split into a dense prefix / sparse suffix by a single threshold id.
+    Returns (new_corpus, old_to_new) mapping.
+    """
+    order = np.argsort(-corpus.word_token_counts, kind="stable")
+    old_to_new = np.empty_like(order)
+    old_to_new[order] = np.arange(corpus.n_words)
+    new_word_ids = old_to_new[corpus.word_ids]
+    sort = np.argsort(new_word_ids, kind="stable")
+    c = _build_indexes(new_word_ids[sort], corpus.doc_ids[sort],
+                       corpus.n_words, corpus.n_docs)
+    c.validate()
+    return c, old_to_new
+
+
+def synthetic_lda_corpus(seed: int, n_docs: int, n_words: int, n_topics: int,
+                         mean_doc_len: int = 64,
+                         topic_word_conc: float = 0.05,
+                         doc_topic_conc: float = 0.2,
+                         return_truth: bool = False):
+    """Planted-topic corpus: generated exactly from the LDA graphical model.
+
+    Used to validate convergence (LLPT must rise toward the entropy of the
+    generating model) and topic recovery. ``topic_word_conc`` < 1 makes topics
+    sparse over words, matching real corpora.
+    """
+    rng = np.random.default_rng(seed)
+    phi = rng.dirichlet(np.full(n_words, topic_word_conc), size=n_topics)  # (Kt,V)
+    theta = rng.dirichlet(np.full(n_topics, doc_topic_conc), size=n_docs)  # (M,Kt)
+    doc_lens = np.maximum(1, rng.poisson(mean_doc_len, size=n_docs))
+    docs = []
+    true_topics = []
+    for d in range(n_docs):
+        zs = rng.choice(n_topics, size=doc_lens[d], p=theta[d])
+        ws = np.array([rng.choice(n_words, p=phi[z]) for z in zs], dtype=np.int64)
+        docs.append(ws)
+        true_topics.append(zs)
+    corpus = from_documents(docs, n_words)
+    if return_truth:
+        return corpus, {"phi": phi, "theta": theta}
+    return corpus
+
+
+def zipf_corpus(seed: int, n_docs: int, n_words: int, exponent: float = 1.1,
+                mean_doc_len: int = 64) -> Corpus:
+    """Power-law word-frequency corpus (paper Fig 8's token distribution).
+
+    Drives the workload-balancing benchmarks: a few words own most tokens.
+    """
+    rng = np.random.default_rng(seed)
+    ranks = np.arange(1, n_words + 1, dtype=np.float64)
+    p = ranks ** (-exponent)
+    p /= p.sum()
+    doc_lens = np.maximum(1, rng.poisson(mean_doc_len, size=n_docs))
+    docs = [rng.choice(n_words, size=doc_lens[d], p=p) for d in range(n_docs)]
+    return from_documents(docs, n_words)
+
+
+def chunk_documents(corpus: Corpus, n_chunks: int) -> np.ndarray:
+    """Greedy token-balanced document->chunk assignment (SS V-B).
+
+    The paper observes <=5% max/min token imbalance from round-robin; greedy
+    longest-processing-time packing does at least as well deterministically.
+    Returns (M,) int32 chunk id per document.
+    """
+    order = np.argsort(-corpus.doc_lengths, kind="stable")
+    loads = np.zeros(n_chunks, dtype=np.int64)
+    assign = np.zeros(corpus.n_docs, dtype=np.int32)
+    for d in order:
+        c = int(np.argmin(loads))
+        assign[d] = c
+        loads[c] += corpus.doc_lengths[d]
+    return assign
+
+
+def pad_corpus(corpus: Corpus, multiple: int) -> tuple[Corpus, np.ndarray]:
+    """Pad T to a multiple of ``multiple`` tokens (static tiling requirement).
+
+    Pad tokens use word 0 / doc 0 and a zero weight mask; they never touch the
+    count matrices. Returns (padded corpus, mask) where mask is 1 for real
+    tokens. The derived indexes describe only the real tokens.
+    """
+    n = corpus.n_tokens
+    n_pad = (-n) % multiple
+    if n_pad == 0:
+        return corpus, np.ones(n, dtype=np.int32)
+    # Pad with the *last* (max) word id so T stays sorted by word.
+    pad_word = corpus.word_ids[-1] if n else np.int32(0)
+    word_ids = np.concatenate([corpus.word_ids,
+                               np.full(n_pad, pad_word, np.int32)])
+    doc_ids = np.concatenate([corpus.doc_ids, np.zeros(n_pad, np.int32)])
+    mask = np.concatenate([np.ones(n, np.int32), np.zeros(n_pad, np.int32)])
+    padded = dataclasses.replace(corpus, word_ids=word_ids, doc_ids=doc_ids)
+    return padded, mask

@@ -1,0 +1,369 @@
+"""Multi-device EZLDA (paper §V-B) + beyond-paper topic-axis model parallelism.
+
+Paper-faithful mapping (DESIGN.md §6):
+  * documents → chunks (greedy token-balanced; §V-B observes ≤5% imbalance);
+    each (pod, data) shard owns one chunk: its T slice and its D rows.
+  * W is replicated over (pod, data) — each shard keeps a canonical copy —
+    and rebuilt each iteration by **summing the per-shard histograms and
+    broadcasting** the result (= one ``psum``), exactly the paper's multi-GPU
+    update.
+
+Beyond-paper (what the paper says GPU LDA could not do — §I-A: LightLDA-style
+model parallelism needs hash tables): shard the **topic axis** of W/Ŵ/D over
+the ``model`` mesh axis and sample with a *two-level inverse-CDF*:
+
+  1. every model shard computes its local mass over its topic block
+     (K1 excluded): ``L_s = Σ_{k∈block, k≠K1} (D[d][k]+α)·Ŵ[v][k]``;
+  2. shard masses are all-gathered (one f32 per token per shard);
+  3. the winning shard = inverse-CDF over shard masses; within it the local
+     CDF picks the topic; a one-hot psum publishes the winner.
+
+The three-branch skip distributes too: per-word tops are local-top-(g+1)
+→ all_gather → global re-top; b_i = psum of a masked local D lookup. The ΔW
+all-reduce then moves K/P_model columns per shard — collective bytes drop by
+the model-parallel degree versus the paper's full-W sum+broadcast (measured
+in EXPERIMENTS.md §Perf).
+
+All collectives are jax.lax primitives inside one shard_map, so the multi-pod
+dry-run lowers this exact code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import three_branch
+from repro.lda.corpus import Corpus, chunk_documents
+from repro.lda.model import LDAConfig
+from repro.runtime.sharding import batch_axes
+
+__all__ = ["ShardedCorpus", "shard_corpus", "DistLDAState", "DistLDATrainer"]
+
+
+# ---------------------------------------------------------------------------
+# host-side partitioning (the paper's chunking, §IV-A/§V-B)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCorpus:
+    """Chunked corpus, padded to uniform per-shard length.
+
+    Arrays carry a leading shard axis S = n_data_shards; doc ids are LOCAL
+    row indices into the shard's D block (plus a global doc map for eval).
+    """
+    word_ids: np.ndarray      # (S, N_loc) int32 — word-sorted within shard
+    doc_ids: np.ndarray       # (S, N_loc) int32 — local doc rows
+    mask: np.ndarray          # (S, N_loc) int32
+    doc_map: np.ndarray       # (S, M_loc) int64 — local row → global doc id
+    docs_per_shard: np.ndarray  # (S,) int64
+    global_pos: np.ndarray    # (S, N_loc) int64 — slot → global token index
+                              # (pads point at token 0 with mask 0); makes
+                              # checkpoints shard-layout independent (elastic)
+    n_words: int
+    m_local: int              # D rows per shard (padded)
+    n_shards: int
+
+    @property
+    def tokens_per_shard(self) -> np.ndarray:
+        return self.mask.sum(axis=1)
+
+
+def shard_corpus(corpus: Corpus, n_shards: int,
+                 pad_multiple: int = 1024) -> ShardedCorpus:
+    assign = chunk_documents(corpus, n_shards)            # (M,) chunk per doc
+    tok_chunk = assign[corpus.doc_ids]                    # (N,)
+    n_loc, m_loc = 1, 1
+    per_shard: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
+    doc_maps = []
+    for s in range(n_shards):
+        sel = np.nonzero(tok_chunk == s)[0]
+        w = corpus.word_ids[sel]
+        d = corpus.doc_ids[sel]
+        docs = np.unique(d)
+        local = np.searchsorted(docs, d)
+        order = np.argsort(w, kind="stable")              # keep word-sorted T
+        per_shard.append((w[order], local[order].astype(np.int32),
+                          sel[order]))
+        doc_maps.append(docs)
+        n_loc = max(n_loc, len(w))
+        m_loc = max(m_loc, len(docs))
+    n_loc = -(-n_loc // pad_multiple) * pad_multiple
+    W = np.zeros((n_shards, n_loc), np.int32)
+    Dv = np.zeros((n_shards, n_loc), np.int32)
+    Mk = np.zeros((n_shards, n_loc), np.int32)
+    DM = np.zeros((n_shards, m_loc), np.int64)
+    GP = np.zeros((n_shards, n_loc), np.int64)
+    nd = np.zeros(n_shards, np.int64)
+    for s, (w, d, gp) in enumerate(per_shard):
+        W[s, :len(w)] = w
+        W[s, len(w):] = corpus.n_words - 1                # keep sorted
+        Dv[s, :len(d)] = d
+        Mk[s, :len(w)] = 1
+        DM[s, :len(doc_maps[s])] = doc_maps[s]
+        GP[s, :len(gp)] = gp
+        nd[s] = len(doc_maps[s])
+    return ShardedCorpus(word_ids=W, doc_ids=Dv, mask=Mk, doc_map=DM,
+                         docs_per_shard=nd, global_pos=GP,
+                         n_words=corpus.n_words,
+                         m_local=m_loc, n_shards=n_shards)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["topics", "D", "W", "key", "iteration"],
+                   meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class DistLDAState:
+    topics: jax.Array     # (S, N_loc) int32, sharded over data axes
+    D: jax.Array          # (S, M_loc, K) int32, sharded (data, ·, model)
+    W: jax.Array          # (V, K) int32, replicated over data, model-sharded
+    key: jax.Array
+    iteration: jax.Array
+
+
+# ---------------------------------------------------------------------------
+# the per-shard step (runs inside shard_map)
+# ---------------------------------------------------------------------------
+
+def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
+               cfg: LDAConfig, data_axes: tuple[str, ...], model_axis: str,
+               n_words: int, m_local: int, g: int):
+    """One EZLDA iteration for one (data, model) shard.
+
+    Inputs arrive with the shard axes stripped: word_ids (1, N_loc),
+    D (1, M_loc, K_loc), W (V, K_loc) where K_loc = K / P_model.
+    """
+    word_ids, doc_ids, mask = word_ids[0], doc_ids[0], mask[0]
+    topics = state.topics[0]
+    D = state.D[0]
+    W = state.W
+    k_local = W.shape[1]
+    pm = jax.lax.axis_size(model_axis)
+    my = jax.lax.axis_index(model_axis)
+    kb0 = my * k_local
+    alpha = cfg.alpha_
+    n = word_ids.shape[0]
+
+    key = jax.random.fold_in(state.key, state.iteration)
+    # identical u across the model axis of one data shard; distinct per data
+    for ax in data_axes:
+        key = jax.random.fold_in(key, jax.lax.axis_index(ax))
+    u = jax.random.uniform(key, (n,), dtype=jnp.float32)
+
+    # --- Ŵ: colsum is per-topic → local to the column block (no comm)
+    colsum = jnp.sum(W, axis=0, dtype=jnp.float32)
+    W_hat = (W.astype(jnp.float32) + cfg.beta) / (colsum + n_words * cfg.beta)
+
+    # --- per-word tops: local top-(g+1) → all_gather over model → re-top
+    loc_vals, loc_idx = jax.lax.top_k(W_hat, min(g + 1, k_local))
+    loc_idx = loc_idx + kb0
+    all_vals = jax.lax.all_gather(loc_vals, model_axis)   # (Pm, V, g+1)
+    all_idx = jax.lax.all_gather(loc_idx, model_axis)
+    cat_vals = jnp.moveaxis(all_vals, 0, 1).reshape(W.shape[0], -1)
+    cat_idx = jnp.moveaxis(all_idx, 0, 1).reshape(W.shape[0], -1)
+    g_vals, g_pos = jax.lax.top_k(cat_vals, g + 1)        # (V, g+1) global
+    g_idx = jnp.take_along_axis(cat_idx, g_pos, axis=1).astype(jnp.int32)
+    wsum = jax.lax.psum(jnp.sum(W_hat, axis=-1), model_axis)
+    q_prime_w = alpha * (wsum - g_vals[:, 0])             # (V,)
+
+    # --- per-token skip phase (Eq 8-10); b_i via masked-lookup psum
+    a = g_vals[word_ids]                                  # (N, g+1)
+    ktop = g_idx[word_ids][:, :g]                         # (N, g)
+    rel = ktop - kb0
+    in_blk = (rel >= 0) & (rel < k_local)
+    b_loc = jnp.where(
+        in_blk,
+        jnp.take_along_axis(D[doc_ids], jnp.clip(rel, 0, k_local - 1),
+                            axis=1), 0).astype(jnp.float32)
+    b = jax.lax.psum(b_loc, model_axis)                   # (N, g)
+    len_d = jax.lax.psum(
+        jnp.sum(D, axis=-1, dtype=jnp.float32), model_axis)[doc_ids]
+    m_mass = a[:, 0] * (b[:, 0] + alpha)                  # Eq 8
+    head = jnp.sum(a[:, 1:g] * b[:, 1:g], axis=-1)
+    s_est = head + a[:, g] * (len_d - jnp.sum(b, axis=-1))
+    q_tok = q_prime_w[word_ids]
+    skip = u * (m_mass + s_est + q_tok) < m_mass
+    k1 = g_idx[word_ids][:, 0]
+
+    # --- phase 2: two-level inverse-CDF over model shards (combined sweep)
+    d_rows = D[doc_ids].astype(jnp.float32)               # (N, K_loc)
+    w_rows = W_hat[word_ids]                              # (N, K_loc)
+    k_global = kb0 + jnp.arange(k_local)[None, :]
+    mass = jnp.where(k_global == k1[:, None], 0.0,
+                     (d_rows + alpha) * w_rows)           # k ≠ K1
+    l_mine = jnp.sum(mass, axis=1)                        # (N,) local mass
+    l_all = jax.lax.all_gather(l_mine, model_axis)        # (Pm, N)
+    cum_before = jnp.sum(
+        jnp.where(jnp.arange(pm)[:, None] < my, l_all, 0.0), axis=0)
+    total = m_mass + jnp.sum(l_all, axis=0)
+    x = u * total
+    tgt = x - m_mass - cum_before                         # local CDF target
+    cdf = jnp.cumsum(mass, axis=1)
+    hit = cdf > tgt[:, None]
+    found = jnp.any(hit, axis=1) & (tgt >= 0) & (x >= m_mass) \
+        & (tgt < l_mine)
+    pick = kb0 + jnp.argmax(hit, axis=1).astype(jnp.int32)
+    claimed = jax.lax.psum(found.astype(jnp.int32), model_axis)
+    topic_win = jax.lax.psum(jnp.where(found, pick, 0), model_axis)
+    # fp-edge: zero or multiple claims → fall back to K1 (measure-zero)
+    topic_exact = jnp.where(claimed == 1, topic_win, k1)
+    in_m = x < m_mass
+    new_topics = jnp.where(skip | in_m, k1, topic_exact).astype(jnp.int32)
+
+    # --- update: local D rebuild; W = psum of per-shard histograms (§V-B)
+    wgt = mask.astype(jnp.int32)
+    t_rel = new_topics - kb0
+    t_in = (t_rel >= 0) & (t_rel < k_local)
+    wgt_blk = jnp.where(t_in, wgt, 0)
+    t_rel = jnp.clip(t_rel, 0, k_local - 1)
+    D_new = jnp.zeros((m_local, k_local), jnp.int32
+                      ).at[doc_ids, t_rel].add(wgt_blk)
+    W_local = jnp.zeros((n_words, k_local), jnp.int32
+                        ).at[word_ids, t_rel].add(wgt_blk)
+    W_new = jax.lax.psum(W_local, data_axes)              # sum + broadcast
+
+    fmask = mask.astype(jnp.float32)
+    denom = jax.lax.psum(jnp.sum(fmask), data_axes)
+    def _avg(v):
+        return jax.lax.psum(jnp.sum(v * fmask), data_axes) / denom
+    stats = three_branch.ThreeBranchStats(
+        frac_skipped=_avg(skip.astype(jnp.float32)),
+        frac_m_final=_avg((skip | in_m).astype(jnp.float32)),
+        frac_unchanged=_avg((new_topics == topics).astype(jnp.float32)),
+        frac_at_max=_avg((new_topics == k1).astype(jnp.float32)),
+    )
+    new_state = DistLDAState(
+        topics=new_topics[None], D=D_new[None], W=W_new,
+        key=state.key, iteration=state.iteration + 1)
+    return new_state, stats
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+class DistLDATrainer:
+    """shard_map-based multi-device EZLDA trainer.
+
+    mesh must carry a 'model' axis (size 1 reproduces the paper's pure
+    data-parallel scheme) plus 'data' (and optionally 'pod') axes.
+    K must divide the model-axis size; data shards = data-axis extent.
+    """
+
+    def __init__(self, corpus: Corpus, config: LDAConfig, mesh: Mesh,
+                 pad_multiple: int = 1024):
+        assert "model" in mesh.shape, "mesh needs a model axis (size 1 ok)"
+        self.cfg = config
+        self.mesh = mesh
+        self.data_axes = batch_axes(mesh)
+        self.pm = mesh.shape["model"]
+        assert config.n_topics % self.pm == 0
+        n_data = int(np.prod([mesh.shape[a] for a in self.data_axes]))
+        self.sc = shard_corpus(corpus, n_data, pad_multiple)
+        self.corpus = corpus
+
+        daxes = self.data_axes
+        tok_spec = P(daxes)
+        self.state_specs = DistLDAState(
+            topics=tok_spec,
+            D=P(daxes, None, "model"),
+            W=P(None, "model"),
+            key=P(), iteration=P())
+        stats_spec = three_branch.ThreeBranchStats(P(), P(), P(), P())
+        step = functools.partial(
+            _dist_step, cfg=config, data_axes=daxes, model_axis="model",
+            n_words=corpus.n_words, m_local=self.sc.m_local, g=config.g)
+        self._step = jax.jit(jax.shard_map(
+            step, mesh=mesh,
+            in_specs=(tok_spec, tok_spec, tok_spec, self.state_specs),
+            out_specs=(self.state_specs, stats_spec),
+            check_vma=False))
+
+        dev = NamedSharding(mesh, tok_spec)
+        self.word_ids = jax.device_put(jnp.asarray(self.sc.word_ids), dev)
+        self.doc_ids = jax.device_put(jnp.asarray(self.sc.doc_ids), dev)
+        self.mask = jax.device_put(jnp.asarray(self.sc.mask), dev)
+
+    def init_state(self) -> DistLDAState:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        topics = jax.random.randint(
+            jax.random.fold_in(key, 7), self.sc.word_ids.shape, 0,
+            cfg.n_topics, dtype=jnp.int32)
+        S, K = self.sc.n_shards, cfg.n_topics
+        t_np = np.asarray(topics)
+        D = np.zeros((S, self.sc.m_local, K), np.int32)
+        W = np.zeros((self.corpus.n_words, K), np.int32)
+        for s in range(S):
+            sel = self.sc.mask[s] > 0
+            np.add.at(D[s], (self.sc.doc_ids[s][sel], t_np[s][sel]), 1)
+            np.add.at(W, (self.sc.word_ids[s][sel], t_np[s][sel]), 1)
+        put = lambda x, spec: jax.device_put(
+            jnp.asarray(x), NamedSharding(self.mesh, spec))
+        return DistLDAState(
+            topics=put(topics, P(self.data_axes)),
+            D=put(D, P(self.data_axes, None, "model")),
+            W=put(W, P(None, "model")),
+            key=key, iteration=jnp.int32(0))
+
+    def step(self, state: DistLDAState):
+        return self._step(self.word_ids, self.doc_ids, self.mask, state)
+
+    # -- elastic checkpointing ---------------------------------------------
+    # Checkpoints store topics in GLOBAL token order (+ rng + iteration), so
+    # a restore can target a mesh with a different data extent: counts are
+    # derived state and get rebuilt for whatever chunking the new trainer
+    # uses (DESIGN.md §6 "elastic restore").
+
+    def host_payload(self, state: DistLDAState) -> dict:
+        t = np.asarray(state.topics)
+        out = np.zeros(self.corpus.n_tokens, np.int32)
+        for s in range(self.sc.n_shards):
+            sel = self.sc.mask[s] > 0
+            out[self.sc.global_pos[s][sel]] = t[s][sel]
+        return {"topics_global": out,
+                "key": np.asarray(jax.random.key_data(state.key)),
+                "iteration": int(state.iteration)}
+
+    def state_from_payload(self, payload: dict) -> DistLDAState:
+        tg = np.asarray(payload["topics_global"], np.int32)
+        assert tg.shape[0] == self.corpus.n_tokens
+        S, K = self.sc.n_shards, self.cfg.n_topics
+        topics = np.zeros_like(self.sc.word_ids)
+        for s in range(S):
+            sel = self.sc.mask[s] > 0
+            topics[s][sel] = tg[self.sc.global_pos[s][sel]]
+        D = np.zeros((S, self.sc.m_local, K), np.int32)
+        W = np.zeros((self.corpus.n_words, K), np.int32)
+        for s in range(S):
+            sel = self.sc.mask[s] > 0
+            np.add.at(D[s], (self.sc.doc_ids[s][sel], topics[s][sel]), 1)
+            np.add.at(W, (self.sc.word_ids[s][sel], topics[s][sel]), 1)
+        put = lambda x, spec: jax.device_put(
+            jnp.asarray(x), NamedSharding(self.mesh, spec))
+        key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
+        return DistLDAState(
+            topics=put(topics, P(self.data_axes)),
+            D=put(D, P(self.data_axes, None, "model")),
+            W=put(W, P(None, "model")),
+            key=key, iteration=jnp.int32(payload["iteration"]))
+
+    def gather_global(self, state: DistLDAState):
+        """Global (D, W) count matrices for eval/parity checks."""
+        W = np.asarray(state.W)
+        D_sh = np.asarray(state.D)
+        K = W.shape[1]
+        D = np.zeros((self.corpus.n_docs, K), np.int64)
+        for s in range(self.sc.n_shards):
+            nd = int(self.sc.docs_per_shard[s])
+            D[self.sc.doc_map[s][:nd]] += D_sh[s][:nd]
+        return D, W

@@ -1,0 +1,58 @@
+"""LDA configuration and training state."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import numpy as np
+
+__all__ = ["LDAConfig", "LDAState"]
+
+
+@dataclasses.dataclass(frozen=True)
+class LDAConfig:
+    n_topics: int
+    alpha: float | None = None       # paper: 50/K when None
+    beta: float = 0.01               # paper SS II-B
+    sampler: str = "three_branch"    # "two_branch" | "three_branch"
+    impl: str = "xla"                # "xla" | "pallas"
+    g: int = 2                       # Eq 10 tail-bound terms (paper uses 2)
+    tile_size: int = 8192            # token tile (balance.py); pow2
+    d_capacity: int | None = None    # bucketed-sparse D row capacity; None=auto
+    survivor_capacity: int | None = None  # phase-2 chunk size; None=reference
+    dense_word_threshold: int | None = None  # tokens>=thr => dense W row; None=K (paper)
+    seed: int = 0
+    eval_every: int = 10
+
+    @property
+    def alpha_(self) -> float:
+        return 50.0 / self.n_topics if self.alpha is None else self.alpha
+
+    @property
+    def dense_threshold_(self) -> int:
+        # Paper heuristic (SS IV-B): a word with >= K tokens may touch every
+        # topic, so sparse storage cannot beat dense for it.
+        return self.n_topics if self.dense_word_threshold is None else \
+            self.dense_word_threshold
+
+
+class LDAState(NamedTuple):
+    """Device-resident training state.
+
+    D and W are *derived* from (corpus, topics); checkpoints persist only
+    topics + rng + iteration, which makes restore elastic (DESIGN.md SS6).
+    """
+    topics: jax.Array      # (N,) int32
+    D: jax.Array           # (M, K) int32
+    W: jax.Array           # (V, K) int32
+    key: jax.Array         # PRNG key
+    iteration: jax.Array   # () int32
+
+    def host_payload(self) -> dict[str, Any]:
+        return {
+            "topics": np.asarray(self.topics),
+            "key": np.asarray(jax.random.key_data(self.key)),
+            "iteration": int(self.iteration),
+        }

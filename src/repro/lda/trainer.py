@@ -1,0 +1,150 @@
+"""Single-host LDA trainer: sample -> update -> eval loop.
+
+Drives either the two-branch (ESCA baseline) or the three-branch (EZLDA)
+sampler over a corpus. Multi-device training lives in lda/distributed.py and
+reuses the same per-shard step functions.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import esca, llpt as llpt_mod
+from repro.lda.corpus import Corpus, pad_corpus
+from repro.lda.model import LDAConfig, LDAState
+
+__all__ = ["LDATrainer"]
+
+
+class LDATrainer:
+    """Owns device arrays for one corpus and jit-compiled step functions."""
+
+    def __init__(self, corpus: Corpus, config: LDAConfig,
+                 checkpoint_manager: Any | None = None):
+        corpus.validate()
+        self.config = config
+        self.corpus = corpus
+        padded, mask = pad_corpus(corpus, config.tile_size)
+        self.word_ids = jnp.asarray(padded.word_ids)
+        self.doc_ids = jnp.asarray(padded.doc_ids)
+        self.mask = jnp.asarray(mask)
+        self.n_docs = corpus.n_docs
+        self.n_words = corpus.n_words
+        self.checkpoint_manager = checkpoint_manager
+        self._sampler = self._make_sampler()
+
+    # -- state ------------------------------------------------------------
+
+    def init_state(self) -> LDAState:
+        key = jax.random.PRNGKey(self.config.seed)
+        key, sub = jax.random.split(key)
+        topics, D, W = esca.init_counts(
+            sub, self.word_ids, self.doc_ids, self.mask,
+            n_docs=self.n_docs, n_words=self.n_words,
+            n_topics=self.config.n_topics)
+        return LDAState(topics=topics, D=D, W=W, key=key,
+                        iteration=jnp.int32(0))
+
+    def restore_or_init(self) -> LDAState:
+        if self.checkpoint_manager is not None:
+            payload = self.checkpoint_manager.restore_latest()
+            if payload is not None:
+                return self.state_from_payload(payload)
+        return self.init_state()
+
+    def host_payload(self, state: LDAState) -> dict[str, Any]:
+        return state.host_payload()
+
+    def state_from_payload(self, payload: dict[str, Any]) -> LDAState:
+        topics = jnp.asarray(payload["topics"], jnp.int32)
+        assert topics.shape == self.word_ids.shape, \
+            "checkpoint topics do not match corpus padding"
+        D, W = esca.update_counts(
+            self.word_ids, self.doc_ids, topics, self.mask,
+            n_docs=self.n_docs, n_words=self.n_words,
+            n_topics=self.config.n_topics)
+        key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
+        return LDAState(topics=topics, D=D, W=W, key=key,
+                        iteration=jnp.int32(payload["iteration"]))
+
+    # -- steps ------------------------------------------------------------
+
+    def _make_sampler(self) -> Callable:
+        cfg = self.config
+        if cfg.impl == "pallas":
+            from repro.kernels import ops as kops
+            def sampler(key, state):
+                W_hat = esca.compute_w_hat(state.W, cfg.beta)
+                return kops.sample_tokens(
+                    key, self.word_ids, self.doc_ids, state.topics,
+                    state.D, W_hat, alpha=cfg.alpha_, tile_size=cfg.tile_size)
+        elif cfg.sampler == "two_branch":
+            def sampler(key, state):
+                W_hat = esca.compute_w_hat(state.W, cfg.beta)
+                return esca.sample_two_branch(
+                    key, self.word_ids, self.doc_ids, state.topics,
+                    state.D, W_hat, alpha=cfg.alpha_, tile_size=cfg.tile_size)
+        elif cfg.sampler == "three_branch":
+            from repro.core import three_branch
+            plan = three_branch.build_plan(self.corpus, cfg)
+            self.plan = plan
+            def sampler(key, state):
+                return three_branch.sample(
+                    key, plan, self.word_ids, self.doc_ids, state.topics,
+                    state.D, state.W, cfg)
+        else:
+            raise ValueError(f"unknown sampler {cfg.sampler!r}")
+        return sampler
+
+    def step(self, state: LDAState) -> tuple[LDAState, dict[str, Any]]:
+        cfg = self.config
+        key, sub = jax.random.split(state.key)
+        new_topics, stats = self._sampler(sub, state)
+        D, W = esca.update_counts(
+            self.word_ids, self.doc_ids, new_topics, self.mask,
+            n_docs=self.n_docs, n_words=self.n_words, n_topics=cfg.n_topics)
+        new_state = LDAState(topics=new_topics, D=D, W=W, key=key,
+                             iteration=state.iteration + 1)
+        return new_state, dict(stats._asdict())
+
+    def evaluate(self, state: LDAState) -> float:
+        return float(llpt_mod.llpt(
+            self.word_ids, self.doc_ids, self.mask, state.D, state.W,
+            alpha=self.config.alpha_, beta=self.config.beta,
+            tile_size=self.config.tile_size))
+
+    # -- loop -------------------------------------------------------------
+
+    def run(self, n_iters: int, state: LDAState | None = None,
+            log_fn: Callable[[str], None] | None = None,
+            checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
+        state = self.restore_or_init() if state is None else state
+        history: dict[str, list] = {"iteration": [], "llpt": [],
+                                    "tokens_per_sec": [], "stats": []}
+        start_iter = int(state.iteration)
+        for i in range(start_iter, start_iter + n_iters):
+            t0 = time.perf_counter()
+            state, stats = self.step(state)
+            jax.block_until_ready(state.topics)
+            dt = time.perf_counter() - t0
+            if (i + 1) % self.config.eval_every == 0 or i == start_iter:
+                score = self.evaluate(state)
+                history["iteration"].append(i + 1)
+                history["llpt"].append(score)
+                history["tokens_per_sec"].append(self.corpus.n_tokens / dt)
+                history["stats"].append(
+                    {k: float(np.asarray(v)) for k, v in stats.items()})
+                if log_fn:
+                    log_fn(f"iter={i+1:4d} llpt={score:+.4f} "
+                           f"tok/s={self.corpus.n_tokens/dt:,.0f} "
+                           f"unchanged={history['stats'][-1].get('frac_unchanged', 0):.3f}")
+            if (checkpoint_every and self.checkpoint_manager is not None
+                    and (i + 1) % checkpoint_every == 0):
+                self.checkpoint_manager.save(int(state.iteration),
+                                             state.host_payload())
+        return state, history

@@ -1,0 +1,11 @@
+"""Assigned LM architecture zoo (pure JAX; scan-over-layers; mesh-shardable).
+
+The EZLDA technique itself is a discrete-state Gibbs system and does not
+apply to these architectures (DESIGN.md §7 Arch-applicability); they are
+first-class framework citizens sharing the config/launch/dry-run/roofline
+machinery, and the paper's *systems* ideas (static equal-work tiling,
+capacity-based dissection of power-law workloads) inform the MoE dispatch
+and decode paths.
+"""
+
+from repro.models.config import ModelConfig  # noqa: F401

@@ -1,0 +1,311 @@
+"""Attention: GQA (blockwise-flash prefill/train) + MLA + KV-cache decode.
+
+Memory discipline is the whole design here:
+  * train/prefill run a **blockwise streaming-softmax** (flash-style) scan:
+    outer scan over query blocks, inner scan over KV blocks with running
+    (max, denominator) — never materializes (S × S) scores. This is the
+    XLA path used by the dry-run; a Pallas fusion is a further §Perf lever.
+  * GQA never materializes repeated KV heads: scores are computed in grouped
+    (B, Hkv, G, Sq, Skv) form.
+  * decode attends one query against a static-shape cache with a length
+    mask; the cache's seq axis carries the 'kv_seq' logical axis so long
+    contexts shard over the model axis (distributed flash-decode — XLA
+    inserts the partial-softmax reduction).
+  * MLA (minicpm3) caches the *compressed* c_kv + shared k_rope — the
+    low-rank cache that is the technique's point — and reconstructs K/V per
+    step.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.runtime.sharding import constrain, constrain_alt
+
+__all__ = ["init_attn", "attn_train", "init_attn_cache", "attn_decode",
+           "init_mla", "mla_train", "init_mla_cache", "mla_decode",
+           "flash_attention"]
+
+_NEG = -1e30
+
+
+# ---------------------------------------------------------------------------
+# blockwise flash attention (grouped heads, causal or full)
+# ---------------------------------------------------------------------------
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool, q_block: int = 512, kv_block: int = 1024,
+                    q_offset: int = 0, unroll: bool = False) -> jax.Array:
+    """Streaming-softmax attention.
+
+    q: (B, Sq, Hkv, G, Dk); k: (B, Skv, Hkv, Dk); v: (B, Skv, Hkv, Dv)
+    (Dv may differ — MLA). Returns (B, Sq, Hkv, G, Dv).
+    ``q_offset`` shifts query positions for cross-chunk causal decode.
+    """
+    b, sq, hkv, g, d = q.shape
+    dv = v.shape[-1]
+    skv = k.shape[1]
+    q_block = min(q_block, sq)
+    kv_block = min(kv_block, skv)
+    nq = -(-sq // q_block)
+    nkv = -(-skv // kv_block)
+    qp = nq * q_block - sq
+    kp = nkv * kv_block - skv
+    if qp:
+        q = jnp.pad(q, ((0, 0), (0, qp), (0, 0), (0, 0), (0, 0)))
+    if kp:
+        k = jnp.pad(k, ((0, 0), (0, kp), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kp), (0, 0), (0, 0)))
+    scale = d ** -0.5
+    q_blocks = q.reshape(b, nq, q_block, hkv, g, d).swapaxes(0, 1)
+    k_blocks = k.reshape(b, nkv, kv_block, hkv, d).swapaxes(0, 1)
+    v_blocks = v.reshape(b, nkv, kv_block, hkv, dv).swapaxes(0, 1)
+
+    def q_step(_, qb_idx_and_block):
+        qi, qb = qb_idx_and_block
+        q_pos = q_offset + qi * q_block + jnp.arange(q_block)
+
+        def kv_step(carry, kv):
+            ki, kb, vb = kv
+            acc, m_run, l_run = carry
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qb.astype(jnp.float32),
+                           kb.astype(jnp.float32),
+                           preferred_element_type=jnp.float32) * scale
+            k_pos = ki * kv_block + jnp.arange(kv_block)
+            mask = k_pos[None, :] < skv                    # kv padding
+            if causal:
+                mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            s = jnp.where(mask[None, None, None], s, _NEG)
+            m_new = jnp.maximum(m_run, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p,
+                            vb.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((b, hkv, g, q_block, dv), jnp.float32)
+        m0 = jnp.full((b, hkv, g, q_block), _NEG, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        (acc, _, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nkv), k_blocks, v_blocks), unroll=unroll)
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.transpose(0, 3, 1, 2, 4)          # (B,q,hkv,g,d)
+
+    _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), q_blocks),
+                           unroll=unroll)
+    out = outs.swapaxes(0, 1).reshape(b, nq * q_block, hkv, g, dv)
+    return out[:, :sq].astype(v.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA
+# ---------------------------------------------------------------------------
+
+def init_attn(key, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim_
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    return {
+        "wq": layers.init_linear(ks[0], d, h * hd, dt, bias=cfg.qkv_bias),
+        "wk": layers.init_linear(ks[1], d, hkv * hd, dt, bias=cfg.qkv_bias),
+        "wv": layers.init_linear(ks[2], d, hkv * hd, dt, bias=cfg.qkv_bias),
+        "wo": layers.init_linear(ks[3], h * hd, d, dt),
+    }
+
+
+def _split_heads(x, n_heads, hd):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, hd)
+
+
+def attn_train(p: dict, x: jax.Array, cfg: ModelConfig,
+               positions: jax.Array | None = None,
+               causal: bool = True) -> jax.Array:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hkv
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q = _split_heads(layers.linear(p["wq"], x), h, hd)
+    k = _split_heads(layers.linear(p["wk"], x), hkv, hd)
+    v = _split_heads(layers.linear(p["wv"], x), hkv, hd)
+    q = layers.rope(q, positions, cfg.rope_theta)
+    k = layers.rope(k, positions, cfg.rope_theta)
+    # prefer head-sharded TP; fall back to sequence-parallel attention when
+    # the head count does not divide the model axis (56-head / 40-head archs)
+    q = constrain_alt(q, ("batch", "seq", "heads", None),
+                      ("batch", "seq_tp", "heads", None))
+    k = constrain_alt(k, ("batch", "seq", "kv_heads", None),
+                      ("batch", "seq_tp", "kv_heads", None))
+    v = constrain_alt(v, ("batch", "seq", "kv_heads", None),
+                      ("batch", "seq_tp", "kv_heads", None))
+    qg = q.reshape(b, s, hkv, g, hd)
+    out = flash_attention(qg, k, v, causal=causal, unroll=cfg.scan_unroll)
+    out = out.reshape(b, s, h * hd)
+    out = constrain_alt(out, ("batch", "seq", "heads"),
+                        ("batch", "seq_tp", "heads"))
+    return layers.linear(p["wo"], out)
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    n_layers: int | None = None) -> dict:
+    """KV cache: (L, B, S, Hkv, D). seq carries 'kv_seq' (model-sharded)."""
+    L = cfg.n_layers if n_layers is None else n_layers
+    shape = (L, batch, max_len, cfg.n_kv_heads, cfg.head_dim_)
+    return {"k": jnp.zeros(shape, cfg.dtype),
+            "v": jnp.zeros(shape, cfg.dtype),
+            "length": jnp.zeros((), jnp.int32)}
+
+
+def attn_decode(p: dict, x: jax.Array, k_cache, v_cache, length,
+                cfg: ModelConfig):
+    """One-token decode. x: (B, 1, d). Returns (out, k_new, v_new)."""
+    b = x.shape[0]
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hkv
+    pos = jnp.full((b, 1), length, jnp.int32)
+    q = _split_heads(layers.linear(p["wq"], x), h, hd)
+    k = _split_heads(layers.linear(p["wk"], x), hkv, hd)
+    v = _split_heads(layers.linear(p["wv"], x), hkv, hd)
+    q = layers.rope(q, pos, cfg.rope_theta)
+    k = layers.rope(k, pos, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                           (0, length, 0, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                           (0, length, 0, 0))
+    k_cache = constrain(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = constrain(v_cache, "batch", "kv_seq", "kv_heads", None)
+    s_max = k_cache.shape[1]
+    qg = q.reshape(b, 1, hkv, g, hd).astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg,
+                        k_cache.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) * (hd ** -0.5)
+    mask = jnp.arange(s_max)[None, :] <= length            # inclusive of self
+    scores = jnp.where(mask[None, None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs,
+                     v_cache.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * hd).astype(x.dtype)
+    return layers.linear(p["wo"], out), k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (minicpm3 / deepseek-style multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    qn, qr, vdim = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    dt = cfg.dtype
+    return {
+        "w_dq": layers.init_linear(ks[0], d, cfg.q_lora_rank, dt),
+        "q_norm": layers.init_norm(cfg.q_lora_rank, dt),
+        "w_uq": layers.init_linear(ks[1], cfg.q_lora_rank,
+                                   h * (qn + qr), dt),
+        "w_dkv": layers.init_linear(ks[2], d, cfg.kv_lora_rank, dt),
+        "kv_norm": layers.init_norm(cfg.kv_lora_rank, dt),
+        "w_kr": layers.init_linear(ks[3], d, qr, dt),
+        "w_uk": layers.init_linear(ks[4], cfg.kv_lora_rank, h * qn, dt),
+        "w_uv": layers.init_linear(ks[5], cfg.kv_lora_rank, h * vdim, dt),
+        "wo": layers.init_linear(ks[6], h * vdim, d, dt),
+    }
+
+
+def _mla_qkv(p, x, cfg, positions):
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qn, qr, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    cq = layers.rms_norm(p["q_norm"], layers.linear(p["w_dq"], x),
+                         cfg.norm_eps)
+    q = layers.linear(p["w_uq"], cq).reshape(b, s, h, qn + qr)
+    q_nope, q_rope = q[..., :qn], q[..., qn:]
+    q_rope = layers.rope(q_rope, positions, cfg.rope_theta)
+    c_kv = layers.rms_norm(p["kv_norm"], layers.linear(p["w_dkv"], x),
+                           cfg.norm_eps)
+    k_rope = layers.rope(layers.linear(p["w_kr"], x)[:, :, None, :],
+                         positions, cfg.rope_theta)       # (B,S,1,qr) shared
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_expand_kv(p, c_kv, k_rope, cfg, n_heads):
+    b, s, _ = c_kv.shape
+    qn, vd = cfg.qk_nope_dim, cfg.v_head_dim
+    k_nope = layers.linear(p["w_uk"], c_kv).reshape(b, s, n_heads, qn)
+    v = layers.linear(p["w_uv"], c_kv).reshape(b, s, n_heads, vd)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope, (b, s, n_heads, k_rope.shape[-1]))],
+        axis=-1)
+    return k, v
+
+
+def mla_train(p: dict, x: jax.Array, cfg: ModelConfig,
+              positions: jax.Array | None = None) -> jax.Array:
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    if positions is None:
+        positions = jnp.arange(s)[None, :]
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, positions)
+    k, v = _mla_expand_kv(p, c_kv, k_rope, cfg, h)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q = constrain_alt(q, ("batch", "seq", "heads", None),
+                      ("batch", "seq_tp", "heads", None))
+    k = constrain_alt(k, ("batch", "seq", "heads", None),
+                      ("batch", "seq_tp", "heads", None))
+    v = constrain_alt(v, ("batch", "seq", "heads", None),
+                      ("batch", "seq_tp", "heads", None))
+    out = flash_attention(q[:, :, :, None, :].reshape(
+        b, s, h, 1, q.shape[-1]), k, v, causal=True,
+        unroll=cfg.scan_unroll)
+    out = out.reshape(b, s, h * cfg.v_head_dim)
+    return layers.linear(p["wo"], out)
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Compressed cache: c_kv (L,B,S,r_kv) + shared k_rope (L,B,S,qr)."""
+    L = cfg.n_layers
+    return {
+        "c_kv": jnp.zeros((L, batch, max_len, cfg.kv_lora_rank), cfg.dtype),
+        "k_rope": jnp.zeros((L, batch, max_len, cfg.qk_rope_dim), cfg.dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def mla_decode(p: dict, x: jax.Array, ckv_cache, krope_cache, length,
+               cfg: ModelConfig):
+    b = x.shape[0]
+    h = cfg.n_heads
+    pos = jnp.full((b, 1), length, jnp.int32)
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, x, cfg, pos)
+    ckv_cache = jax.lax.dynamic_update_slice(
+        ckv_cache, c_kv.astype(ckv_cache.dtype), (0, length, 0))
+    krope_cache = jax.lax.dynamic_update_slice(
+        krope_cache, k_rope[:, :, 0].astype(krope_cache.dtype),
+        (0, length, 0))
+    ckv_cache = constrain(ckv_cache, "batch", "kv_seq", None)
+    krope_cache = constrain(krope_cache, "batch", "kv_seq", None)
+    k, v = _mla_expand_kv(p, ckv_cache, krope_cache[:, :, None, :], cfg, h)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1).astype(jnp.float32)
+    s_max = k.shape[1]
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.reshape(b, 1, h, -1),
+                        k.astype(jnp.float32),
+                        preferred_element_type=jnp.float32) \
+        * (q.shape[-1] ** -0.5)
+    mask = jnp.arange(s_max)[None, :] <= length
+    scores = jnp.where(mask[None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(b, 1, h * cfg.v_head_dim).astype(x.dtype)
+    return layers.linear(p["wo"], out), ckv_cache, krope_cache

@@ -1,0 +1,189 @@
+"""Encoder-decoder (whisper-base backbone; conv/audio frontend stubbed).
+
+Per the assignment spec the modality frontend is a STUB: inputs arrive as
+precomputed frame embeddings (B, S_enc, d) from input_specs(). The backbone
+is faithful to whisper's shape: pre-LN transformer encoder (bidirectional),
+decoder with causal self-attn + cross-attn, GELU MLPs, LayerNorm.
+
+Decode caches self-attn KV per decoder layer plus the cross-attn K/V
+computed once from the encoder output at prefill (static thereafter).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers
+from repro.models.config import ModelConfig
+from repro.runtime.sharding import constrain
+
+__all__ = ["init_encdec", "encdec_loss", "encode", "init_encdec_cache",
+           "encdec_decode_step"]
+
+
+def _init_xattn(key, cfg: ModelConfig) -> dict:
+    return attention.init_attn(key, cfg)      # same shapes; kv from encoder
+
+
+def _init_enc_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 2)
+    dt = cfg.dtype
+    return {"ln1": layers.init_norm(cfg.d_model, dt),
+            "attn": attention.init_attn(ks[0], cfg),
+            "ln2": layers.init_norm(cfg.d_model, dt),
+            "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt,
+                                   act="gelu")}
+
+
+def _init_dec_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 3)
+    dt = cfg.dtype
+    return {"ln1": layers.init_norm(cfg.d_model, dt),
+            "attn": attention.init_attn(ks[0], cfg),
+            "ln_x": layers.init_norm(cfg.d_model, dt),
+            "xattn": _init_xattn(ks[1], cfg),
+            "ln2": layers.init_norm(cfg.d_model, dt),
+            "mlp": layers.init_mlp(ks[2], cfg.d_model, cfg.d_ff, dt,
+                                   act="gelu")}
+
+
+def init_encdec(key, cfg: ModelConfig) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": layers.init_embed(k3, cfg.padded_vocab, cfg.d_model,
+                                   cfg.dtype),
+        "enc_blocks": jax.vmap(
+            functools.partial(_init_enc_block, cfg=cfg))(enc_keys),
+        "dec_blocks": jax.vmap(
+            functools.partial(_init_dec_block, cfg=cfg))(dec_keys),
+        "enc_norm": layers.init_norm(cfg.d_model, cfg.dtype),
+        "final_norm": layers.init_norm(cfg.d_model, cfg.dtype),
+        "head": layers.init_linear(k4, cfg.d_model, cfg.padded_vocab,
+                                   cfg.dtype),
+    }
+
+
+def _cross_attn(p, x, enc_h, cfg):
+    """Query from decoder x; K/V from encoder hidden."""
+    b, s, _ = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = h // hkv
+    q = layers.linear(p["wq"], x).reshape(b, s, h, hd)
+    k = layers.linear(p["wk"], enc_h).reshape(b, -1, hkv, hd)
+    v = layers.linear(p["wv"], enc_h).reshape(b, -1, hkv, hd)
+    out = attention.flash_attention(q.reshape(b, s, hkv, g, hd), k, v,
+                                    causal=False, unroll=cfg.scan_unroll)
+    return layers.linear(p["wo"], out.reshape(b, s, h * hd))
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames: (B, S_enc, d) precomputed embeddings (stub frontend)."""
+    h = frames.astype(cfg.dtype)
+    h = constrain(h, "batch", "seq", "embed")
+
+    def block(hh, p):
+        x = layers.layer_norm(p["ln1"], hh, cfg.norm_eps)
+        hh = hh + attention.attn_train(p["attn"], x, cfg, causal=False)
+        x = layers.layer_norm(p["ln2"], hh, cfg.norm_eps)
+        hh = hh + layers.mlp(p["mlp"], x, act="gelu")
+        return hh, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(block), h, params["enc_blocks"],
+                        unroll=cfg.scan_unroll)
+    return layers.layer_norm(params["enc_norm"], h, cfg.norm_eps)
+
+
+def _decode_blocks(params, h, enc_h, cfg):
+    def block(hh, p):
+        x = layers.layer_norm(p["ln1"], hh, cfg.norm_eps)
+        hh = hh + attention.attn_train(p["attn"], x, cfg, causal=True)
+        x = layers.layer_norm(p["ln_x"], hh, cfg.norm_eps)
+        hh = hh + _cross_attn(p["xattn"], x, enc_h, cfg)
+        x = layers.layer_norm(p["ln2"], hh, cfg.norm_eps)
+        hh = hh + layers.mlp(p["mlp"], x, act="gelu")
+        return hh, None
+
+    h, _ = jax.lax.scan(jax.checkpoint(block), h, params["dec_blocks"],
+                        unroll=cfg.scan_unroll)
+    return layers.layer_norm(params["final_norm"], h, cfg.norm_eps)
+
+
+def encdec_loss(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """batch: {"frames" (B,S_enc,d), "tokens" (B,S_dec), "labels", "mask"}."""
+    enc_h = encode(params, batch["frames"], cfg)
+    h = layers.embed(params["embed"], batch["tokens"])
+    h = _decode_blocks(params, h, enc_h, cfg)
+    return layers.cross_entropy_chunked(
+        h, params["head"]["w"], batch["labels"], batch["mask"],
+        chunk=min(256, h.shape[1]), unroll=cfg.scan_unroll)
+
+
+# -- serving -------------------------------------------------------------------
+
+def init_encdec_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int) -> dict:
+    c = attention.init_attn_cache(cfg, batch, max_len)     # self-attn KV
+    hkv, hd = cfg.n_kv_heads, cfg.head_dim_
+    c["x_k"] = jnp.zeros((cfg.n_layers, batch, enc_len, hkv, hd), cfg.dtype)
+    c["x_v"] = jnp.zeros((cfg.n_layers, batch, enc_len, hkv, hd), cfg.dtype)
+    return c
+
+
+def encdec_decode_step(params: dict, cache: dict, tokens: jax.Array,
+                       cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One decoder token against cached self KV + cached cross K/V."""
+    h = layers.embed(params["embed"], tokens)
+    length = cache["length"]
+    hh, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    g = hh // hkv
+
+    def block(h2, ys):
+        p, kc, vc, xk, xv = ys
+        x = layers.layer_norm(p["ln1"], h2, cfg.norm_eps)
+        out, kc, vc = attention.attn_decode(p["attn"], x, kc, vc, length,
+                                            cfg)
+        h2 = h2 + out
+        x = layers.layer_norm(p["ln_x"], h2, cfg.norm_eps)
+        b = x.shape[0]
+        q = layers.linear(p["xattn"]["wq"], x).reshape(b, 1, hkv, g, hd)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", q.astype(jnp.float32),
+                       xk.astype(jnp.float32)) * (hd ** -0.5)
+        probs = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, xv.astype(jnp.float32))
+        out = layers.linear(p["xattn"]["wo"],
+                            out.reshape(b, 1, hh * hd).astype(x.dtype))
+        h2 = h2 + out
+        x = layers.layer_norm(p["ln2"], h2, cfg.norm_eps)
+        h2 = h2 + layers.mlp(p["mlp"], x, act="gelu")
+        return h2, (kc, vc)
+
+    def _sl(a, i):
+        return jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False)
+
+    def step(carry, i):
+        h2, kf, vf = carry
+        ys = (jax.tree.map(lambda a: _sl(a, i), params["dec_blocks"]),
+              _sl(kf, i), _sl(vf, i), _sl(cache["x_k"], i),
+              _sl(cache["x_v"], i))
+        h2, (kc, vc) = block(h2, ys)
+        kf = jax.lax.dynamic_update_index_in_dim(kf, kc.astype(kf.dtype),
+                                                 i, 0)
+        vf = jax.lax.dynamic_update_index_in_dim(vf, vc.astype(vf.dtype),
+                                                 i, 0)
+        return (h2, kf, vf), None
+
+    # cache in the carry → in-place while-loop aliasing (no double buffer)
+    (h, k_new, v_new), _ = jax.lax.scan(
+        step, (h, cache["k"], cache["v"]), jnp.arange(cfg.n_layers))
+    h = layers.layer_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ params["head"]["w"]).astype(jnp.float32)
+    logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                       logits, -1e30)
+    new_cache = dict(cache)
+    new_cache.update({"k": k_new, "v": v_new, "length": length + 1})
+    return logits, new_cache

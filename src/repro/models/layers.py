@@ -1,0 +1,140 @@
+"""Shared building blocks: norms, RoPE, MLPs, embeddings.
+
+Params are plain dict pytrees (no framework); init functions mirror the
+standard truncated-normal/zeros schemes. All matmuls run in the config
+compute dtype (bf16) with f32 norm/softmax accumulations.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["rms_norm", "layer_norm", "rope", "init_linear", "linear",
+           "init_norm", "init_mlp", "mlp", "init_embed", "embed",
+           "cross_entropy_chunked"]
+
+
+# -- norms -------------------------------------------------------------------
+
+def init_norm(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    h = x.astype(jnp.float32)
+    h = h * jax.lax.rsqrt(jnp.mean(h * h, axis=-1, keepdims=True) + eps)
+    return (h * p["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layer_norm(p: dict, x: jax.Array, eps: float) -> jax.Array:
+    h = x.astype(jnp.float32)
+    mu = jnp.mean(h, axis=-1, keepdims=True)
+    var = jnp.mean((h - mu) ** 2, axis=-1, keepdims=True)
+    h = (h - mu) * jax.lax.rsqrt(var + eps)
+    out = h * p["scale"].astype(jnp.float32)
+    if "bias" in p:
+        out = out + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# -- linear ------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype, bias: bool = False) -> dict:
+    w = jax.random.truncated_normal(key, -2, 2, (d_in, d_out),
+                                    jnp.float32) * (d_in ** -0.5)
+    p = {"w": w.astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+# -- rotary ------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- mlp ---------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, dtype, act: str = "silu") -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if act == "silu":                                  # SwiGLU (llama family)
+        return {"w_gate": init_linear(k1, d, d_ff, dtype)["w"],
+                "w_up": init_linear(k2, d, d_ff, dtype)["w"],
+                "w_down": init_linear(k3, d_ff, d, dtype)["w"]}
+    return {"w_up": init_linear(k1, d, d_ff, dtype, bias=True),
+            "w_down": init_linear(k2, d_ff, d, dtype, bias=True)}
+
+
+def mlp(p: dict, x: jax.Array, act: str = "silu") -> jax.Array:
+    if act == "silu":
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+        return h @ p["w_down"]
+    h = jax.nn.gelu(linear(p["w_up"], x))
+    return linear(p["w_down"], h)
+
+
+# -- embedding / head ----------------------------------------------------------
+
+def init_embed(key, vocab: int, d: int, dtype) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d), jnp.float32)
+                      * 0.02).astype(dtype)}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return jnp.take(p["table"], tokens, axis=0)
+
+
+# -- loss ----------------------------------------------------------------------
+
+def cross_entropy_chunked(hidden: jax.Array, head_w: jax.Array,
+                          labels: jax.Array, mask: jax.Array,
+                          chunk: int = 256, unroll: bool = False
+                          ) -> jax.Array:
+    """Mean CE without materializing full (B,S,V) logits.
+
+    Scans seq chunks; per chunk logits are (B, chunk, V) in f32 — with V
+    sharded over 'model' and B over data axes this stays small per device.
+    """
+    b, s, d = hidden.shape
+    n_chunks = -(-s // chunk)
+    pad = n_chunks * chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hidden = hidden.reshape(b, n_chunks, chunk, d).swapaxes(0, 1)
+    labels = labels.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+    mask = mask.reshape(b, n_chunks, chunk).swapaxes(0, 1)
+
+    def chunk_fn(carry, args):
+        h, y, m = args
+        logits = (h @ head_w).astype(jnp.float32)          # (B, c, V)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * m.astype(jnp.float32)
+        tot, cnt = carry
+        return (tot + jnp.sum(nll), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk_fn, (jnp.float32(0), jnp.float32(0)), (hidden, labels, mask),
+        unroll=unroll)
+    return tot / jnp.maximum(cnt, 1.0)

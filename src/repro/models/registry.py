@@ -1,0 +1,125 @@
+"""Model registry: uniform entry points over the zoo families.
+
+Gives train/serve/launch code four family-agnostic callables per arch:
+  init(key)                 → params
+  loss(params, batch)       → scalar CE
+  make_cache(batch, max_len)→ decode cache pytree
+  decode(params, cache, tok)→ (logits, cache)
+plus input_specs() — the ShapeDtypeStruct stand-ins the dry-run lowers with
+(weak-type-correct, shardable, zero allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import encdec, transformer
+from repro.models.config import ModelConfig
+
+__all__ = ["ModelApi", "get_model", "input_specs", "reduced_config"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ModelConfig
+    init: Callable
+    loss: Callable                   # (params, batch) → scalar
+    make_cache: Callable             # (batch, max_len) → cache
+    decode: Callable                 # (params, cache, tokens) → (logits, c)
+    prefill: Callable                # (params, tokens) → last logits
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    if cfg.is_encoder_decoder:
+        return ModelApi(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec(key, cfg),
+            loss=lambda p, b: encdec.encdec_loss(p, b, cfg),
+            make_cache=lambda batch, max_len, enc_len=None:
+                encdec.init_encdec_cache(cfg, batch, max_len,
+                                         enc_len or max_len),
+            decode=lambda p, c, t: encdec.encdec_decode_step(p, c, t, cfg),
+            prefill=lambda p, b: encdec.encode(p, b, cfg),
+        )
+    return ModelApi(
+        cfg=cfg,
+        init=lambda key: transformer.init_lm(key, cfg),
+        loss=lambda p, b: transformer.loss_fn(p, b, cfg),
+        make_cache=lambda batch, max_len: transformer.init_cache(
+            cfg, batch, max_len),
+        decode=lambda p, c, t: transformer.decode_step(p, c, t, cfg),
+        prefill=lambda p, t: transformer.prefill(p, t, cfg),
+    )
+
+
+# ---------------------------------------------------------------------------
+# input specs (dry-run stand-ins; also the data-pipeline contract)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, seq_len: int, global_batch: int,
+                kind: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for one step's batch.
+
+    train: {"inputs", "labels", "mask"} (+frames/tokens split for enc-dec);
+    prefill: {"inputs"}; decode: {"tokens"} — the KV cache is state, built
+    separately by cache_specs().
+    """
+    f = jax.ShapeDtypeStruct
+    b, s = global_batch, seq_len
+    tok = jnp.int32
+    if cfg.is_encoder_decoder:
+        sd = min(cfg.dec_len, s)
+        if kind == "train":
+            return {"frames": f((b, s, cfg.d_model), jnp.bfloat16),
+                    "tokens": f((b, sd), tok),
+                    "labels": f((b, sd), tok),
+                    "mask": f((b, sd), tok)}
+        if kind == "prefill":
+            return {"frames": f((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": f((b, 1), tok)}
+    if cfg.input_is_embeddings:                      # vlm stub frontend
+        if kind == "train":
+            return {"inputs": f((b, s, cfg.d_model), jnp.bfloat16),
+                    "labels": f((b, s), tok),
+                    "mask": f((b, s), tok)}
+        if kind == "prefill":
+            return {"inputs": f((b, s, cfg.d_model), jnp.bfloat16)}
+        return {"tokens": f((b, 1), tok)}
+    if kind == "train":
+        return {"inputs": f((b, s), tok), "labels": f((b, s), tok),
+                "mask": f((b, s), tok)}
+    if kind == "prefill":
+        return {"inputs": f((b, s), tok)}
+    return {"tokens": f((b, 1), tok)}
+
+
+def reduced_config(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """Tiny same-family config for CPU smoke tests (per-arch shape checks)."""
+    small = dict(
+        n_layers=max(2, (cfg.attn_every or 0) + 1 if cfg.family == "hybrid"
+                     else 2),
+        d_model=64, d_ff=128, vocab_size=256, vocab_pad_multiple=64)
+    if cfg.family == "hybrid":
+        small["attn_every"] = 2
+        small["n_layers"] = 5      # 2 groups of 2 + remainder 1
+    if cfg.attn_kind == "mla":
+        small.update(q_lora_rank=32, kv_lora_rank=16, qk_nope_dim=16,
+                     qk_rope_dim=8, v_head_dim=16)
+    heads = dict(n_heads=4, n_kv_heads=max(1, 4 * cfg.n_kv_heads
+                                           // max(cfg.n_heads, 1)),
+                 head_dim=16)
+    small.update(heads)
+    if cfg.n_experts:
+        small.update(n_experts=8, moe_top_k=2, moe_d_ff=32,
+                     n_shared_experts=min(cfg.n_shared_experts, 1),
+                     expert_pad_multiple=4)
+    if cfg.family in ("ssm", "hybrid"):
+        small.update(ssm_state=16, ssm_head_dim=16)
+    if cfg.is_encoder_decoder:
+        small.update(n_enc_layers=2, dec_len=32)
+    small.update(overrides)
+    return dataclasses.replace(cfg, **small)

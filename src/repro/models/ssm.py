@@ -1,0 +1,191 @@
+"""Mamba2 (SSD — state-space duality) blocks, chunk-parallel and recurrent.
+
+Training/prefill uses the SSD chunked algorithm [arXiv:2405.21060]: the
+sequence splits into chunks of Q tokens; within a chunk the output is a
+(masked, decay-weighted) attention-like quadratic form on the MXU, and
+across chunks a recurrent state (B_state ⊗ x outer products, decayed) is
+carried by a lax.scan — O(L·Q) total work, O(L) memory. Decode is the O(1)
+per-token recurrence on the same state. These two paths are the reason the
+ssm/hybrid archs run the long_500k shape (DESIGN.md §7).
+
+The chunk size is the EZLDA balance analogue: equal-token chunks are the
+static schedulable unit (balance.py's tiles), sized for VMEM residency.
+
+Layout notes: heads H = d_inner / head_dim P; groups G share (B, C)
+projections across H/G heads (configs here use G=1); A is scalar-per-head
+(the SSD simplification); a causal depthwise conv (width 4) fronts the SSM.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+from repro.models.config import ModelConfig
+from repro.runtime.sharding import constrain
+
+__all__ = ["init_ssm", "ssm_train", "init_ssm_cache", "ssm_decode"]
+
+
+def init_ssm(key, cfg: ModelConfig) -> dict:
+    d, di = cfg.d_model, cfg.d_inner
+    h, n, g = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    conv_dim = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    return {
+        # fused in_proj → [z, x_conv(B,C within), dt]
+        "w_in": layers.init_linear(ks[0], d, 2 * di + 2 * g * n + h, dt),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_dim),
+                                     jnp.float32) * 0.1).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "a_log": jnp.zeros((h,), jnp.float32),            # A = -exp(a_log)
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.full((h,), 0.01, jnp.float32))),          # softplus⁻¹(0.01)
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "norm": layers.init_norm(di, dt),
+        "w_out": layers.init_linear(ks[2], di, d, dt),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array | None = None):
+    """Depthwise causal conv. x: (B, L, C); w: (W, C). state: (B, W-1, C)."""
+    width = w.shape[0]
+    if state is None:
+        x_pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        x_pad = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    L = x.shape[1]
+    for i in range(width):                                 # width=4: unrolled
+        out = out + x_pad[:, i:i + L].astype(jnp.float32) \
+            * w[i].astype(jnp.float32)
+    new_state = x_pad[:, -(width - 1):] if width > 1 else None
+    return (jax.nn.silu(out + b.astype(jnp.float32)).astype(x.dtype),
+            new_state)
+
+
+def _ssm_inputs(p, x, cfg):
+    di = cfg.d_inner
+    h, n, g = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    proj = layers.linear(p["w_in"], x)
+    z = proj[..., :di]
+    x_conv = proj[..., di:di + di + 2 * g * n]
+    dt_raw = proj[..., -h:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return z, x_conv, dt
+
+
+def ssm_train(p: dict, x: jax.Array, cfg: ModelConfig,
+              chunk: int = 256) -> jax.Array:
+    """Chunked SSD forward. x: (B, L, d_model) → (B, L, d_model)."""
+    bsz, L, _ = x.shape
+    di = cfg.d_inner
+    h, n, g = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    pdim = cfg.ssm_head_dim
+    z, x_conv, dt = _ssm_inputs(p, x, cfg)
+    xc, _ = _causal_conv(x_conv, p["conv_w"], p["conv_b"])
+    xs = xc[..., :di].reshape(bsz, L, h, pdim)
+    Bm = xc[..., di:di + g * n].reshape(bsz, L, g, n)
+    Cm = xc[..., di + g * n:].reshape(bsz, L, g, n)
+    xs = constrain(xs, "batch", "seq", "heads", None)
+    a = -jnp.exp(p["a_log"])                               # (H,)
+    dA = dt * a                                            # (B, L, H) ≤ 0
+
+    Q = min(chunk, L)
+    n_chunks = -(-L // Q)
+    pad = n_chunks * Q - L
+    if pad:
+        xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+    rep = h // g                                           # heads per group
+
+    def to_chunks(t):
+        return t.reshape((bsz, n_chunks, Q) + t.shape[2:]).swapaxes(0, 1)
+
+    xs_c, b_c, c_c, da_c, dt_c = map(to_chunks, (xs, Bm, Cm, dA, dt))
+
+    def chunk_step(state, args):
+        # state: (B, H, N, P) running SSM state (f32)
+        xq, bq, cq, daq, dtq = args                        # (B,Q,...) slices
+        cum = jnp.cumsum(daq, axis=1)                      # (B,Q,H)
+        total = cum[:, -1]                                 # (B,H)
+        # ---- inter-chunk: y_inter[i] = exp(cum_i) · C_i · state
+        bq_h = jnp.repeat(bq, rep, axis=2)                 # (B,Q,H,N)
+        cq_h = jnp.repeat(cq, rep, axis=2)
+        y_inter = jnp.einsum("bqhn,bhnp->bqhp", cq_h.astype(jnp.float32),
+                             state, preferred_element_type=jnp.float32) \
+            * jnp.exp(cum)[..., None]
+        # ---- intra-chunk quadratic (flash-like masked decay attention)
+        scores = jnp.einsum("bqhn,bkhn->bhqk", cq_h.astype(jnp.float32),
+                            bq_h.astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+        decay = cum[:, :, None, :] - cum[:, None, :, :]    # (B,Q,K,H) i−j
+        decay = jnp.exp(jnp.minimum(decay, 0.0)).transpose(0, 3, 1, 2)
+        iq = jnp.arange(Q)
+        causal = (iq[:, None] >= iq[None, :])[None, None]
+        w_ij = jnp.where(causal, scores * decay, 0.0) \
+            * dtq.transpose(0, 2, 1)[:, :, None, :]        # ·dt_j
+        y_intra = jnp.einsum("bhqk,bkhp->bqhp", w_ij,
+                             xq.astype(jnp.float32),
+                             preferred_element_type=jnp.float32)
+        # ---- state update: S' = exp(total)·S + Σ_j exp(total−cum_j)·dt_j·B_j⊗x_j
+        wj = jnp.exp(total[:, None] - cum) * dtq           # (B,Q,H)
+        s_new = state * jnp.exp(total)[..., None, None] + jnp.einsum(
+            "bqhn,bqhp->bhnp", bq_h.astype(jnp.float32) * wj[..., None],
+            xq.astype(jnp.float32), preferred_element_type=jnp.float32)
+        return s_new, (y_inter + y_intra)
+
+    s0 = jnp.zeros((bsz, h, n, pdim), jnp.float32)
+    _, ys = jax.lax.scan(chunk_step, s0, (xs_c, b_c, c_c, da_c, dt_c),
+                         unroll=getattr(cfg, "scan_unroll", False))
+    y = ys.swapaxes(0, 1).reshape(bsz, n_chunks * Q, h, pdim)[:, :L]
+    y = y + xs[:, :L].astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(bsz, L, di).astype(x.dtype)
+    y = layers.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return layers.linear(p["w_out"], y)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int,
+                   n_layers: int | None = None) -> dict:
+    L = cfg.n_layers if n_layers is None else n_layers
+    h, n, pdim = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return {
+        "state": jnp.zeros((L, batch, h, n, pdim), jnp.float32),
+        "conv": jnp.zeros((L, batch, cfg.conv_width - 1, conv_dim),
+                          cfg.dtype),
+        "length": jnp.zeros((), jnp.int32),
+    }
+
+
+def ssm_decode(p: dict, x: jax.Array, state: jax.Array, conv_state: jax.Array,
+               cfg: ModelConfig):
+    """One-token recurrence. x: (B, 1, d). state: (B,H,N,P)."""
+    bsz = x.shape[0]
+    di = cfg.d_inner
+    h, n, g = cfg.n_ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    pdim = cfg.ssm_head_dim
+    rep = h // g
+    z, x_conv, dt = _ssm_inputs(p, x, cfg)
+    xc, conv_new = _causal_conv(x_conv, p["conv_w"], p["conv_b"], conv_state)
+    xs = xc[..., :di].reshape(bsz, h, pdim)
+    Bm = jnp.repeat(xc[..., di:di + g * n].reshape(bsz, g, n), rep, axis=1)
+    Cm = jnp.repeat(xc[..., di + g * n:].reshape(bsz, g, n), rep, axis=1)
+    a = -jnp.exp(p["a_log"])
+    dA = jnp.exp(dt[:, 0] * a)                             # (B,H)
+    s_new = state * dA[..., None, None] + jnp.einsum(
+        "bhn,bhp->bhnp", Bm.astype(jnp.float32) * dt[:, 0][..., None],
+        xs.astype(jnp.float32), preferred_element_type=jnp.float32)
+    y = jnp.einsum("bhn,bhnp->bhp", Cm.astype(jnp.float32), s_new,
+                   preferred_element_type=jnp.float32)
+    y = y + xs.astype(jnp.float32) * p["d_skip"][None, :, None]
+    y = y.reshape(bsz, 1, di).astype(x.dtype)
+    y = layers.rms_norm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    return layers.linear(p["w_out"], y), s_new, conv_new

@@ -1,0 +1,335 @@
+"""Decoder-only LM assembly: dense / MoE / SSM / hybrid families.
+
+Structure decisions that matter at scale:
+  * **scan over layers** with stacked params — HLO stays O(1) in depth, so
+    the 62-layer 33B config compiles as fast as the 6-layer one;
+  * **remat** around each block (configurable policy) — activations at layer
+    boundaries only, which is what lets train_4k microbatches fit;
+  * hybrid (zamba2) runs an outer scan over groups of ``attn_every`` mamba
+    layers with ONE shared attention block applied between groups (its
+    params are reused — the zamba trick), remainder layers after;
+  * logits never materialize (B, S, V): the loss is seq-chunked with the
+    vocab axis model-sharded (layers.cross_entropy_chunked).
+
+The functional API (init_lm / forward_train / loss_fn / init_cache /
+decode_step) is what train_step.py and serve_step.py close over.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention, layers, moe, ssm
+from repro.models.config import ModelConfig
+from repro.runtime.sharding import constrain
+
+__all__ = ["init_lm", "forward_train", "loss_fn", "init_cache",
+           "decode_step", "prefill"]
+
+
+# ---------------------------------------------------------------------------
+# blocks
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    dt = cfg.dtype
+    p = {"ln1": layers.init_norm(cfg.d_model, dt)}
+    if cfg.family in ("ssm", "hybrid"):
+        p["ssm"] = ssm.init_ssm(ks[0], cfg)
+        return p
+    if cfg.attn_kind == "mla":
+        p["attn"] = attention.init_mla(ks[0], cfg)
+    else:
+        p["attn"] = attention.init_attn(ks[0], cfg)
+    p["ln2"] = layers.init_norm(cfg.d_model, dt)
+    if cfg.n_experts:
+        p["moe"] = moe.init_moe(ks[1], cfg)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt,
+                                   act=cfg.act)
+    return p
+
+
+def _init_shared_attn(key, cfg: ModelConfig) -> dict:
+    """zamba2's shared transformer block (attn + mlp, params reused)."""
+    ks = jax.random.split(key, 2)
+    dt = cfg.dtype
+    return {"ln1": layers.init_norm(cfg.d_model, dt),
+            "attn": attention.init_attn(ks[0], cfg),
+            "ln2": layers.init_norm(cfg.d_model, dt),
+            "mlp": layers.init_mlp(ks[1], cfg.d_model, cfg.d_ff, dt,
+                                   act=cfg.act)}
+
+
+def _block_train(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = layers.rms_norm(p["ln1"], h, cfg.norm_eps)
+    if cfg.family in ("ssm", "hybrid"):
+        return h + ssm.ssm_train(p["ssm"], x, cfg)
+    if cfg.attn_kind == "mla":
+        h = h + attention.mla_train(p["attn"], x, cfg)
+    else:
+        h = h + attention.attn_train(p["attn"], x, cfg)
+    x = layers.rms_norm(p["ln2"], h, cfg.norm_eps)
+    if cfg.n_experts:
+        return h + moe.moe_ffn(p["moe"], x, cfg)
+    return h + layers.mlp(p["mlp"], x, act=cfg.act)
+
+
+def _shared_attn_train(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = layers.rms_norm(p["ln1"], h, cfg.norm_eps)
+    h = h + attention.attn_train(p["attn"], x, cfg)
+    x = layers.rms_norm(p["ln2"], h, cfg.norm_eps)
+    return h + layers.mlp(p["mlp"], x, act=cfg.act)
+
+
+def _hybrid_split(cfg: ModelConfig) -> tuple[int, int]:
+    groups = cfg.n_layers // cfg.attn_every
+    rem = cfg.n_layers - groups * cfg.attn_every
+    return groups, rem
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_lm(key, cfg: ModelConfig) -> dict:
+    k_emb, k_blocks, k_head, k_shared = jax.random.split(key, 4)
+    params: dict = {}
+    # vlm stubs consume patch embeddings for train but still embed text
+    # tokens at decode time, so the table always exists
+    params["embed"] = layers.init_embed(k_emb, cfg.padded_vocab,
+                                        cfg.d_model, cfg.dtype)
+    block_keys = jax.random.split(k_blocks, cfg.n_layers)
+    params["blocks"] = jax.vmap(
+        functools.partial(_init_block, cfg=cfg))(block_keys)
+    if cfg.family == "hybrid" and cfg.attn_every:
+        params["shared_attn"] = _init_shared_attn(k_shared, cfg)
+    params["final_norm"] = layers.init_norm(cfg.d_model, cfg.dtype)
+    if not cfg.tie_embeddings or cfg.input_is_embeddings:
+        params["head"] = layers.init_linear(
+            k_head, cfg.d_model, cfg.padded_vocab, cfg.dtype)
+    return params
+
+
+def _head_w(params: dict, cfg: ModelConfig) -> jax.Array:
+    if "head" in params:
+        return params["head"]["w"]
+    return params["embed"]["table"].T
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    policy = getattr(cfg, "remat", "full")
+    if policy == "none":
+        return fn
+    return jax.checkpoint(fn,
+                          policy=jax.checkpoint_policies.nothing_saveable)
+
+
+def forward_train(params: dict, inputs: jax.Array,
+                  cfg: ModelConfig) -> jax.Array:
+    """Token ids (B, S) int32 — or embeddings (B, S, d) for stub frontends —
+    → final hidden states (B, S, d)."""
+    if cfg.input_is_embeddings:
+        h = inputs.astype(cfg.dtype)
+    else:
+        h = layers.embed(params["embed"], inputs)
+    # sequence-parallel residual stream (Megatron-SP): the hidden state
+    # between blocks shards seq over 'model', cutting per-device activation
+    # memory by the TP degree; GSPMD turns the per-layer sync into AG/RS
+    # pairs (1× wire bytes) instead of all-reduces (2×) — §Perf iteration 2
+    seq_ax = "seq_tp" if cfg.seq_parallel else "seq"
+    h = constrain(h, "batch", seq_ax, "embed")
+
+    def block_sp(p, x):
+        out = _block_train(p, x, cfg)
+        from repro.runtime.sharding import constrain as _c
+        return _c(out, "batch", seq_ax, "embed")
+
+    block = _remat(block_sp, cfg)
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        groups, rem = _hybrid_split(cfg)
+        stacked = params["blocks"]
+        grouped = jax.tree.map(
+            lambda x: x[:groups * cfg.attn_every].reshape(
+                (groups, cfg.attn_every) + x.shape[1:]), stacked)
+        tail = jax.tree.map(lambda x: x[groups * cfg.attn_every:], stacked)
+        shared = _remat(
+            lambda p, x: _shared_attn_train(p, x, cfg), cfg)
+
+        unroll = cfg.scan_unroll
+
+        def group_step(hh, gp):
+            hh, _ = jax.lax.scan(lambda h2, bp: (block(bp, h2), None),
+                                 hh, gp, unroll=unroll)
+            hh = shared(params["shared_attn"], hh)
+            return hh, None
+
+        h, _ = jax.lax.scan(group_step, h, grouped, unroll=unroll)
+        if rem:
+            h, _ = jax.lax.scan(lambda h2, bp: (block(bp, h2), None),
+                                h, tail, unroll=unroll)
+    else:
+        h, _ = jax.lax.scan(lambda h2, bp: (block(bp, h2), None),
+                            h, params["blocks"], unroll=cfg.scan_unroll)
+    return layers.rms_norm(params["final_norm"], h, cfg.norm_eps)
+
+
+def loss_fn(params: dict, batch: dict, cfg: ModelConfig) -> jax.Array:
+    """Next-token CE. batch: {"inputs", "labels", "mask"}."""
+    h = forward_train(params, batch["inputs"], cfg)
+    head = _head_w(params, cfg)
+    return layers.cross_entropy_chunked(
+        h, head, batch["labels"], batch["mask"],
+        chunk=min(256, h.shape[1]), unroll=cfg.scan_unroll)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    if cfg.family == "ssm":
+        return ssm.init_ssm_cache(cfg, batch)
+    if cfg.family == "hybrid":
+        groups, _ = _hybrid_split(cfg)
+        c = ssm.init_ssm_cache(cfg, batch)
+        c.update(attention.init_attn_cache(cfg, batch, max_len,
+                                           n_layers=groups))
+        return c
+    if cfg.attn_kind == "mla":
+        return attention.init_mla_cache(cfg, batch, max_len)
+    return attention.init_attn_cache(cfg, batch, max_len)
+
+
+def _block_decode(p, h, cache_slice, cfg, length):
+    """One block, one token. Returns (h, new_cache_slice)."""
+    x = layers.rms_norm(p["ln1"], h, cfg.norm_eps)
+    if cfg.family in ("ssm", "hybrid"):
+        out, s_new, conv_new = ssm.ssm_decode(
+            p["ssm"], x, cache_slice["state"], cache_slice["conv"], cfg)
+        return h + out, {"state": s_new, "conv": conv_new}
+    if cfg.attn_kind == "mla":
+        out, ckv, krope = attention.mla_decode(
+            p["attn"], x, cache_slice["c_kv"], cache_slice["k_rope"],
+            length, cfg)
+        h = h + out
+        new_c = {"c_kv": ckv, "k_rope": krope}
+    else:
+        out, kc, vc = attention.attn_decode(
+            p["attn"], x, cache_slice["k"], cache_slice["v"], length, cfg)
+        h = h + out
+        new_c = {"k": kc, "v": vc}
+    x = layers.rms_norm(p["ln2"], h, cfg.norm_eps)
+    if cfg.n_experts:
+        h = h + moe.moe_ffn(p["moe"], x, cfg)
+    else:
+        h = h + layers.mlp(p["mlp"], x, act=cfg.act)
+    return h, new_c
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array,
+                cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """One new token for every sequence. tokens: (B, 1) int32 (or (B, 1, d)
+    embeddings for stub frontends). Returns (logits (B, V), new cache)."""
+    if cfg.input_is_embeddings and tokens.ndim == 3:
+        h = tokens.astype(cfg.dtype)
+    else:
+        h = layers.embed(params["embed"], tokens)
+    h = constrain(h, "batch", None, "embed")
+    length = cache.get("length", jnp.zeros((), jnp.int32))
+
+    # Caches ride in the scan CARRY and are written back per layer with
+    # dynamic_update_index: XLA aliases while-loop carries in place, so the
+    # multi-GiB KV cache stays single-buffered (stacking it as scan `ys`
+    # double-buffers it — measured as the decode cells' HBM overflow).
+    def _slice(tree_full, i):
+        return jax.tree.map(
+            lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            tree_full)
+
+    def _write(tree_full, tree_slice, i):
+        return jax.tree.map(
+            lambda full, ns: jax.lax.dynamic_update_index_in_dim(
+                full, ns.astype(full.dtype), i, 0), tree_full, tree_slice)
+
+    cache_stacked = {k: v for k, v in cache.items() if k != "length"}
+
+    if cfg.family == "hybrid" and cfg.attn_every:
+        groups, rem = _hybrid_split(cfg)
+        stacked = params["blocks"]
+        ssm_part = {"state": cache_stacked["state"],
+                    "conv": cache_stacked["conv"]}
+        attn_part = {"k": cache_stacked["k"], "v": cache_stacked["v"]}
+
+        def layer_body(carry, i):
+            hh, ssm_c = carry
+            bp = _slice(stacked, i)
+            cs = _slice(ssm_c, i)
+            hh, nc = _block_decode(bp, hh, cs, cfg, length)
+            return (hh, _write(ssm_c, nc, i)), None
+
+        def group_step(carry, g_idx):
+            hh, ssm_c, attn_c = carry
+            (hh, ssm_c), _ = jax.lax.scan(
+                layer_body, (hh, ssm_c),
+                g_idx * cfg.attn_every + jnp.arange(cfg.attn_every))
+            kc = _slice(attn_c, g_idx)   # this group's shared-attn KV slot
+            x = layers.rms_norm(params["shared_attn"]["ln1"], hh,
+                                cfg.norm_eps)
+            out, k2, v2 = attention.attn_decode(
+                params["shared_attn"]["attn"], x, kc["k"], kc["v"],
+                length, cfg)
+            hh = hh + out
+            x = layers.rms_norm(params["shared_attn"]["ln2"], hh,
+                                cfg.norm_eps)
+            hh = hh + layers.mlp(params["shared_attn"]["mlp"], x,
+                                 act=cfg.act)
+            attn_c = _write(attn_c, {"k": k2, "v": v2}, g_idx)
+            return (hh, ssm_c, attn_c), None
+
+        (h, ssm_part, attn_part), _ = jax.lax.scan(
+            group_step, (h, ssm_part, attn_part), jnp.arange(groups))
+        if rem:
+            (h, ssm_part), _ = jax.lax.scan(
+                layer_body, (h, ssm_part),
+                groups * cfg.attn_every + jnp.arange(rem))
+        new_cache = {**ssm_part, **attn_part}
+    else:
+        def step(carry, i):
+            hh, cache_c = carry
+            bp = _slice(params["blocks"], i)
+            cs = _slice(cache_c, i)
+            hh, nc = _block_decode(bp, hh, cs, cfg, length)
+            return (hh, _write(cache_c, nc, i)), None
+
+        (h, new_cache), _ = jax.lax.scan(
+            step, (h, cache_stacked), jnp.arange(cfg.n_layers))
+
+    h = layers.rms_norm(params["final_norm"], h, cfg.norm_eps)
+    logits = (h[:, 0] @ _head_w(params, cfg)).astype(jnp.float32)
+    # mask vocab padding
+    logits = jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                       logits, -1e30)
+    new_cache["length"] = length + 1
+    return logits, new_cache
+
+
+def prefill(params: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Inference prefill: full forward, returns last-position logits.
+
+    (For simplicity the dry-run prefill measures the forward compute — the
+    dominant cost; cache writes add O(S·kv) bytes on top.)
+    """
+    h = forward_train(params, tokens, cfg)
+    logits = (h[:, -1] @ _head_w(params, cfg)).astype(jnp.float32)
+    return jnp.where(jnp.arange(cfg.padded_vocab) < cfg.vocab_size,
+                     logits, -1e30)

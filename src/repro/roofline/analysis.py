@@ -1,0 +1,164 @@
+"""Three-term roofline from a compiled dry-run artifact (EXPERIMENTS.md §Roofline).
+
+    compute    = HLO_FLOPs        / peak_FLOP/s      (per chip)
+    memory     = HLO_bytes        / HBM_bw           (per chip)
+    collective = wire_bytes       / link_bw          (per chip)
+
+cost_analysis() on the SPMD-partitioned module reports per-device FLOPs and
+bytes. Collective bytes are NOT in cost_analysis — they are parsed from the
+post-optimization HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute contributes wire bytes under a ring model
+(group size g from replica_groups):
+
+    all-gather       result·(g−1)/g        (each chip receives the rest)
+    all-reduce       2·result·(g−1)/g      (reduce-scatter + all-gather)
+    reduce-scatter   result·(g−1)          (operand = g·result shards sent)
+    all-to-all       result·(g−1)/g
+    collective-permute  result
+
+Hardware model (assignment constants): TPU v5e-like — 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "summarize_memory",
+           "parse_shape_bytes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HW:
+    peak_flops: float = 197e12       # bf16 per chip
+    hbm_bw: float = 819e9            # B/s per chip
+    link_bw: float = 50e9            # B/s per link
+    hbm_bytes: float = 16 * 2 ** 30  # v5e: 16 GiB HBM per chip
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_COLL_RE = re.compile(
+    r"=\s+(\([^=]*?\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_shape_bytes(shape_str: str) -> int:
+    """Total bytes of every typed buffer in an HLO shape string (handles
+    tuples by summing; for async-start tuples we take the LAST element —
+    the destination buffer)."""
+    matches = _SHAPE_RE.findall(shape_str)
+    if not matches:
+        return 0
+    if shape_str.startswith("("):
+        matches = matches[-1:]                    # async pair: result buffer
+    total = 0
+    for dt, dims in matches:
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:                                         # iota form [n_groups,g]
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_RE.search(line)
+    if m and m.group(1):
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> dict:
+    """Per-device wire bytes by collective kind (ring model above)."""
+    out = {"all-reduce": 0.0, "all-gather": 0.0, "reduce-scatter": 0.0,
+           "all-to-all": 0.0, "collective-permute": 0.0, "count": 0}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        shape_str, kind, _ = m.group(1), m.group(2), m.group(3)
+        rb = parse_shape_bytes(shape_str)
+        if rb == 0:
+            continue
+        g = _group_size(line, n_devices)
+        if kind == "all-gather":
+            wire = rb * (g - 1) / g
+        elif kind == "all-reduce":
+            wire = 2 * rb * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = rb * (g - 1)
+        elif kind == "all-to-all":
+            wire = rb * (g - 1) / g
+        else:
+            wire = rb
+        out[kind] += wire
+        out["count"] += 1
+    out["total"] = sum(v for k, v in out.items()
+                       if k not in ("count", "total"))
+    return out
+
+
+def _cost_get(cost, key):
+    if isinstance(cost, dict):
+        return float(cost.get(key, 0.0))
+    return 0.0
+
+
+def roofline_terms(compiled, n_devices: int, hw: HW = HW(),
+                   hlo_text: str | None = None) -> dict:
+    """The three terms (seconds) + dominant + raw counters for one cell."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = _cost_get(cost, "flops")
+    bytes_ = _cost_get(cost, "bytes accessed")
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text, n_devices)
+    terms = {
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_ / hw.hbm_bw,
+        "collective_s": coll["total"] / hw.link_bw,
+    }
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant,
+        "hlo_flops": flops,
+        "hlo_bytes": bytes_,
+        "collective_bytes": coll["total"],
+        "collectives": {k: v for k, v in coll.items()
+                        if k not in ("total",)},
+        # fraction of the roofline the dominant term would achieve if the
+        # other two overlapped perfectly (the optimization target)
+        "overlap_bound_frac": bound / total if total else 0.0,
+    }
+
+
+def summarize_memory(mem) -> dict:
+    """memory_analysis() → plain dict (per device)."""
+    keys = ["argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes"]
+    out = {}
+    for k in keys:
+        out[k] = int(getattr(mem, k, 0))
+    out["peak_bytes_estimate"] = (out["argument_size_in_bytes"]
+                                  + out["output_size_in_bytes"]
+                                  + out["temp_size_in_bytes"]
+                                  - out["alias_size_in_bytes"])
+    return out

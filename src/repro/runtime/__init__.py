@@ -1,0 +1,1 @@
+"""Distributed runtime: divisibility-safe sharding specs + fault tolerance."""

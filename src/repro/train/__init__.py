@@ -1,0 +1,2 @@
+"""Training/serving substrate: param sharding rules, AdamW+ZeRO-1,
+accumulating train step, KV-cache serve step."""

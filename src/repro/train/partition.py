@@ -1,0 +1,216 @@
+"""Parameter/optimizer/cache partition rules (Megatron-style, path-based).
+
+Tensor parallelism ("model" axis):
+  * embed table / lm head — vocab dim (vocab is padded to a clean multiple);
+  * attention q/k/v — output (heads) dim; o-proj — input dim;
+  * MLP — hidden (ffn) dim both directions;
+  * MoE expert stacks — expert dim (expert parallelism);
+  * MLA low-rank projections — rank/output dims;
+  * SSM block weights stay replicated (they are small; activations shard on
+    heads instead) — a deliberate DP-for-SSM choice recorded in DESIGN.md.
+
+ZeRO-1 ("data"/"pod" axes): optimizer moments + f32 master weights
+additionally shard their largest still-unsharded divisible dim over the
+data axes. Non-dividing shapes degrade to the plain param spec (safe_spec).
+
+Everything here is divisibility-safe: a rule that does not divide falls
+back to replication rather than failing — the dry-run then shows the cost.
+"""
+
+from __future__ import annotations
+
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.runtime.sharding import batch_axes, mesh_axis_size, safe_spec
+
+__all__ = ["param_specs", "param_shardings", "zero1_specs",
+           "zero1_shardings", "cache_specs"]
+
+# (path regex, wanted mesh axes per trailing dim) — matched right-to-left
+# against the dims so the leading layer-stack dim never needs mention.
+_RULES: list[tuple[str, list]] = [
+    (r"embed/table$",            [("model",), None]),
+    (r"head/w$",                 [None, ("model",)]),
+    (r"attn/w[qkv]/w$",          [None, ("model",)]),
+    (r"attn/w[qkv]/b$",          [("model",)]),
+    (r"attn/wo/w$",              [("model",), None]),
+    (r"xattn/w[qkv]/w$",         [None, ("model",)]),
+    (r"xattn/wo/w$",             [("model",), None]),
+    # MLA
+    (r"attn/w_dq/w$",            [None, ("model",)]),
+    (r"attn/w_uq/w$",            [None, ("model",)]),
+    (r"attn/w_dkv/w$",           [None, None]),
+    (r"attn/w_uk/w$",            [None, ("model",)]),
+    (r"attn/w_uv/w$",            [None, ("model",)]),
+    (r"attn/w_kr/w$",            [None, None]),
+    # dense mlp (w_gate/w_up stored as raw arrays for silu; dict for gelu)
+    (r"mlp/w_gate$",             [None, ("model",)]),
+    (r"mlp/w_up$",               [None, ("model",)]),
+    (r"mlp/w_down$",             [("model",), None]),
+    (r"mlp/w_up/w$",             [None, ("model",)]),
+    (r"mlp/w_up/b$",             [("model",)]),
+    (r"mlp/w_down/w$",           [("model",), None]),
+    # moe: expert-parallel stacks; shared experts like dense mlp
+    (r"moe/router$",             [None, None]),
+    (r"moe/w_gate$",             [("model",), None, None]),
+    (r"moe/w_up$",               [("model",), None, None]),
+    (r"moe/w_down$",             [("model",), None, None]),
+    (r"moe/shared/w_gate$",      [None, ("model",)]),
+    (r"moe/shared/w_up$",        [None, ("model",)]),
+    (r"moe/shared/w_down$",      [("model",), None]),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def _match_spec(mesh: Mesh, path: str, shape: tuple[int, ...]) -> P:
+    for pat, wanted in _RULES:
+        if re.search(pat, path):
+            nd = len(shape)
+            nw = len(wanted)
+            if nw > nd:        # rule assumes more dims than present
+                continue
+            full = [None] * (nd - nw) + list(wanted)
+            return safe_spec(mesh, shape, full)
+    return P()                 # replicate (norms, scalars, ssm, conv)
+
+
+def _shard_over_all(mesh: Mesh, params_shape) -> dict:
+    """Every tensor's largest divisible dim sharded over ALL mesh axes
+    (FSDP layout; weights all-gather per use)."""
+    axes = batch_axes(mesh) + (("model",) if "model" in mesh.shape else ())
+    size = mesh_axis_size(mesh, axes)
+
+    def one(leaf):
+        cands = [(d, i) for i, d in enumerate(leaf.shape)
+                 if d % size == 0 and d >= size]
+        if not cands:
+            return P()
+        _, idx = max(cands)
+        entries = [None] * len(leaf.shape)
+        entries[idx] = axes if len(axes) > 1 else axes[0]
+        return P(*entries)
+
+    return jax.tree.map(one, params_shape)
+
+
+def param_specs(mesh: Mesh, params_shape, policy: str = "tp") -> dict:
+    """Pytree of PartitionSpec matching a params(-shaped) tree.
+
+    policy "dp": params replicate (pure data parallelism; the optimizer
+    state still ZeRO-shards over every axis).
+    policy "fsdp": params themselves ZeRO-shard over every axis (weights
+    all-gather per layer on use — lets 33B train without TP syncs)."""
+    if policy == "dp":
+        return jax.tree.map(lambda _: P(), params_shape)
+    if policy == "ep":
+        # §Perf C4: ONLY the routed expert stacks live on the model axis;
+        # attention/shared/embeddings replicate (they are small for
+        # fine-grained-MoE archs) — zero per-layer activation syncs
+        import re as _re
+
+        def one(path, leaf):
+            ps = _path_str(path)
+            if _re.search(r"moe/w_(gate|up|down)$", ps):
+                return safe_spec(mesh, leaf.shape,
+                                 [None, ("model",), None, None]
+                                 [4 - len(leaf.shape):])
+            return P()
+        return jax.tree_util.tree_map_with_path(one, params_shape)
+    if policy == "fsdp":
+        return _shard_over_all(mesh, params_shape)
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _match_spec(mesh, _path_str(path), leaf.shape),
+        params_shape)
+
+
+def param_shardings(mesh: Mesh, params_shape, policy: str = "tp"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_specs(mesh, params_shape, policy))
+
+
+def zero1_specs(mesh: Mesh, params_shape, policy: str = "tp") -> dict:
+    """Optimizer-state specs: param spec + data-axis shard on the largest
+    free dim (ZeRO-1). policy "dp" spreads over the model axis too."""
+    if policy == "fsdp":           # opt state shares the FSDP param layout
+        return _shard_over_all(mesh, params_shape)
+    daxes = batch_axes(mesh)
+    if policy in ("dp", "ep") and "model" in mesh.shape:
+        daxes = daxes + ("model",)
+    dsize = mesh_axis_size(mesh, daxes)
+
+    ep_base = param_specs(mesh, params_shape, policy) \
+        if policy == "ep" else None
+
+    def one(path, leaf):
+        if policy == "dp":
+            base = P()
+        elif policy == "ep":
+            base = _match_spec(mesh, _path_str(path), leaf.shape)
+            import re as _re
+            if not _re.search(r"moe/w_(gate|up|down)$", _path_str(path)):
+                base = P()
+        else:
+            base = _match_spec(mesh, _path_str(path), leaf.shape)
+        if dsize == 1:
+            return base
+        entries = list(base) + [None] * (len(leaf.shape) - len(base))
+        dax = daxes
+        dsz = dsize
+        if policy == "ep" and any(e is not None for e in entries):
+            dax = batch_axes(mesh)           # model already used by experts
+            dsz = mesh_axis_size(mesh, dax)
+        # largest unsharded dim divisible by the data extent
+        cands = [(d, i) for i, (d, e) in enumerate(zip(leaf.shape, entries))
+                 if e is None and d % dsz == 0 and d >= dsz]
+        if not cands:
+            return base
+        _, idx = max(cands)
+        entries[idx] = dax if len(dax) > 1 else dax[0]
+        return P(*entries)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def zero1_shardings(mesh: Mesh, params_shape, policy: str = "tp"):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        zero1_specs(mesh, params_shape, policy))
+
+
+def cache_specs(mesh: Mesh, cache_shape) -> dict:
+    """Decode-cache specs. KV tensors (L, B, S, H, D): batch→data,
+    seq→model (distributed flash-decode); batch=1 (long_500k) falls back to
+    heads→data. SSM state (L, B, H, N, P): batch→data, heads→model.
+    MLA compressed cache (L, B, S, r): batch→data, seq→model."""
+    daxes = batch_axes(mesh)
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        if name in ("k", "v", "x_k", "x_v"):
+            spec = safe_spec(mesh, shape,
+                             [None, daxes, "model", None, None])
+            if spec[1] is None and shape[1] == 1:      # batch=1: heads→data
+                spec = safe_spec(mesh, shape,
+                                 [None, None, "model", daxes, None])
+            return spec
+        if name == "state":
+            return safe_spec(mesh, shape, [None, daxes, "model", None, None])
+        if name == "conv":
+            return safe_spec(mesh, shape, [None, daxes, None, None])
+        if name in ("c_kv", "k_rope"):
+            return safe_spec(mesh, shape, [None, daxes, "model", None])
+        return P()                                     # length scalar etc.
+
+    return jax.tree_util.tree_map_with_path(one, cache_shape)

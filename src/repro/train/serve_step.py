@@ -1,0 +1,64 @@
+"""Serving steps: batched single-token decode + prefill.
+
+decode shapes (decode_32k / long_500k) lower ``serve_step``: one new token
+for every sequence against a seq_len KV cache. The cache shardings
+(partition.cache_specs) put long contexts' seq axis on the model axis —
+the partial-softmax reduction XLA inserts is the distributed flash-decode
+of DESIGN.md §5.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.registry import ModelApi
+from repro.runtime.sharding import LogicalRules, batch_axes, safe_spec, \
+    use_rules
+from repro.train import partition
+
+__all__ = ["make_serve_step", "make_prefill_step", "serve_state_shardings"]
+
+
+def serve_state_shardings(api: ModelApi, mesh: Mesh, batch: int,
+                          max_len: int, enc_len: int | None = None):
+    params_shape = jax.eval_shape(api.init, jax.random.PRNGKey(0))
+    if api.cfg.is_encoder_decoder:
+        cache_shape = jax.eval_shape(
+            lambda: api.make_cache(batch, max_len, enc_len=enc_len))
+    else:
+        cache_shape = jax.eval_shape(lambda: api.make_cache(batch, max_len))
+    # serving has no gradients: params shard over the data axes as well
+    # (weights all-gather per layer on use — FSDP-style streaming) so the
+    # 33B decode cell fits HBM next to its 69 GB KV cache
+    p_shard = partition.zero1_shardings(mesh, params_shape)
+    c_spec = partition.cache_specs(mesh, cache_shape)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), c_spec)
+    return params_shape, cache_shape, p_shard, c_shard
+
+
+def make_serve_step(api: ModelApi, mesh: Mesh):
+    """serve_step(params, cache, tokens) → (logits, new_cache)."""
+    rules = LogicalRules(mesh)
+
+    def serve_step(params, cache, tokens):
+        with use_rules(rules):
+            logits, new_cache = api.decode(params, cache, tokens)
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(mesh, safe_spec(
+                    mesh, logits.shape, [batch_axes(mesh), "model"])))
+            return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill_step(api: ModelApi, mesh: Mesh):
+    """prefill(params, batch_inputs) → last-position logits."""
+    rules = LogicalRules(mesh)
+
+    def prefill_step(params, inputs):
+        with use_rules(rules):
+            return api.prefill(params, inputs)
+
+    return prefill_step

@@ -1,0 +1,90 @@
+"""Checkpoint manager + fault-tolerance loop tests (single device;
+multi-device elastic restore is covered in tests/test_distributed.py)."""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+from repro.lda.corpus import synthetic_lda_corpus, relabel_by_frequency
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+from repro.runtime.fault import StepTimer, run_with_restarts
+
+
+def test_save_restore_roundtrip(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=2)
+    p = {"a": np.arange(10), "iteration": np.int64(3)}
+    m.save(3, p)
+    back = m.restore_latest()
+    assert np.array_equal(back["a"], p["a"]) and int(back["iteration"]) == 3
+
+
+def test_keep_n_and_latest(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=2)
+    for s in (1, 2, 3, 4):
+        m.save(s, {"x": np.full(3, s), "iteration": np.int64(s)})
+    assert m.all_steps() == [3, 4]
+    assert int(m.restore_latest()["iteration"]) == 4
+
+
+def test_corrupt_checkpoint_skipped(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    m.save(1, {"x": np.arange(4), "iteration": np.int64(1)})
+    m.save(2, {"x": np.arange(4), "iteration": np.int64(2)})
+    # tear the newest file
+    path = os.path.join(str(tmp_path), "step_00000002.npz")
+    with open(path, "r+b") as f:
+        f.truncate(40)
+    back = m.restore_latest()
+    assert back is not None and int(back["iteration"]) == 1
+
+
+def test_no_tmp_leftovers_visible(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    m.save(1, {"x": np.arange(4)})
+    assert not [f for f in os.listdir(tmp_path) if f.startswith(".tmp")]
+
+
+def test_step_timer_straggler_flag():
+    t = StepTimer(window=20, z_threshold=4.0)
+    flagged = [t.record(1.0 + 0.01 * (i % 3)) for i in range(15)]
+    assert not any(flagged)
+    assert t.record(5.0)        # 5x median → straggler
+
+
+def test_run_with_restarts_resumes(tmp_path):
+    """Injected failures at steps 7 and 13 → run completes with 2 restarts
+    and the final state matches an uninterrupted run (ESCA is deterministic
+    given (corpus, seed, iteration) since D/W are derived from topics)."""
+    corpus = synthetic_lda_corpus(3, n_docs=40, n_words=60, n_topics=6,
+                                  mean_doc_len=30)
+    corpus, _ = relabel_by_frequency(corpus)
+    cfg = LDAConfig(n_topics=8, tile_size=256, seed=11)
+
+    def make_trainer():
+        return LDATrainer(corpus, cfg)
+
+    failures = {7, 13}
+    seen = set()
+
+    def fail_at(step):
+        if step in failures and step not in seen:
+            seen.add(step)
+            return True
+        return False
+
+    m = CheckpointManager(str(tmp_path), keep_n=3)
+    state, report = run_with_restarts(make_trainer, n_steps=20, manager=m,
+                                      checkpoint_every=5, fail_at=fail_at)
+    assert report.completed_steps == 20
+    assert report.restarts == 2
+    assert report.resumed_from == [5, 10]
+
+    # uninterrupted reference
+    tr = LDATrainer(corpus, cfg)
+    ref = tr.init_state()
+    for _ in range(20):
+        ref, _ = tr.step(ref)
+    assert np.array_equal(np.asarray(ref.topics), np.asarray(state.topics))

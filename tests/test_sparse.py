@@ -1,0 +1,101 @@
+"""Sparsity-aware format tests (paper §IV): pair packing, bucketed ELL rows,
+hybrid W, and the Table-I byte model direction."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import sparse
+from repro.lda.corpus import zipf_corpus, relabel_by_frequency
+
+
+@settings(max_examples=50, deadline=None)
+@given(idx=st.integers(0, 65_535), val=st.integers(0, 65_535))
+def test_pack_unpack_roundtrip(idx, val):
+    p = sparse.pack_pairs(jnp.full((1,), idx, jnp.int32),
+                          jnp.full((1,), val, jnp.int32))
+    i, v = sparse.unpack_pairs(p)
+    assert int(i[0]) == idx and int(v[0]) == val
+
+
+def test_pack_unpack_array_roundtrip():
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, 65_536, (10, 7)).astype(np.int32)
+    val = rng.integers(0, 65_536, (10, 7)).astype(np.int32)
+    p = sparse.pack_pairs(jnp.asarray(idx), jnp.asarray(val))
+    i, v = sparse.unpack_pairs(p)
+    assert np.array_equal(np.asarray(i), idx)
+    assert np.array_equal(np.asarray(v), val)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_build_densify_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    K = 24
+    dense = np.zeros((6, K), np.int32)
+    for r in range(6):
+        nnz = rng.integers(0, 9)
+        cols = rng.choice(K, nnz, replace=False)
+        dense[r, cols] = rng.integers(1, 100, nnz)
+    packed = sparse.build_sparse_rows(jnp.asarray(dense), capacity=10)
+    back = sparse.densify_rows(packed, K)
+    assert np.array_equal(np.asarray(back), dense)
+
+
+def test_sparse_lookup():
+    dense = jnp.asarray([[0, 5, 0, 7, 0, 0, 0, 0]], jnp.int32)
+    packed = sparse.build_sparse_rows(dense, capacity=3)
+    assert int(sparse.sparse_lookup(packed[0], jnp.int32(1))) == 5
+    assert int(sparse.sparse_lookup(packed[0], jnp.int32(3))) == 7
+    assert int(sparse.sparse_lookup(packed[0], jnp.int32(0))) == 0
+
+
+def test_bucket_plan_covers_and_bounds():
+    nnz = np.array([500, 400, 100, 90, 33, 12, 9, 3, 2, 1, 1, 1])
+    plans = sparse.bucket_plan(nnz, max_capacity=512, min_capacity=4)
+    covered = 0
+    for (s, e, cap) in plans:
+        assert np.all(nnz[s:e] <= cap), (s, e, cap)
+        assert s == covered
+        covered = e
+    assert covered == len(nnz)
+
+
+def test_hybrid_w_roundtrip(skewed_corpus):
+    corpus = skewed_corpus
+    K = 32
+    rng = np.random.default_rng(2)
+    W = np.zeros((corpus.n_words, K), np.int32)
+    # counts consistent with word_token_counts (row sum == token count)
+    for v in range(corpus.n_words):
+        c = int(corpus.word_token_counts[v])
+        if c:
+            ks = rng.integers(0, K, c)
+            np.add.at(W[v], ks, 1)
+    hw = sparse.build_hybrid_w(jnp.asarray(W), corpus.word_token_counts,
+                               threshold=K)
+    back = np.asarray(hw.densify(K))
+    assert np.array_equal(back, W)
+    # dense split point honors the paper's heuristic
+    assert np.all(corpus.word_token_counts[:hw.v_dense] >= K)
+    if hw.v_dense < corpus.n_words:
+        assert np.all(corpus.word_token_counts[hw.v_dense:] < K)
+
+
+def test_hybrid_beats_dense_and_sparse_at_large_k():
+    """Table I / Fig 13 direction: hybrid ≤ min(dense, all-sparse) at large K."""
+    c = zipf_corpus(3, n_docs=400, n_words=2000, exponent=1.4, mean_doc_len=80)
+    c, _ = relabel_by_frequency(c)
+    counts = c.word_token_counts
+    for K in (256, 1024, 4096):
+        dense_b = sparse.bytes_dense(c.n_words, K)
+        all_sparse_b = sparse.bytes_bucketed(
+            np.minimum(counts, K), max_capacity=K)
+        hybrid = sparse.bytes_hybrid(counts, K)
+        assert hybrid["total"] <= dense_b
+        assert hybrid["total"] <= all_sparse_b * 1.01  # ties allowed
+    # and savings grow with K (the paper's headline)
+    h1 = sparse.bytes_hybrid(counts, 256)["total"] / sparse.bytes_dense(c.n_words, 256)
+    h2 = sparse.bytes_hybrid(counts, 4096)["total"] / sparse.bytes_dense(c.n_words, 4096)
+    assert h2 < h1

@@ -1,0 +1,188 @@
+"""Tests for the paper's core contribution: three-branch sampling (Eq 6-10).
+
+The load-bearing properties:
+  1. Eq 9/10: S' <= S_est for any counts (hypothesis property test).
+  2. The skip theorem: a skipped token's exact sample is K1 (never changes
+     the distribution).
+  3. Three-branch sampling induces exactly p ∝ (D[d]+α)∘Ŵ[v] (stratified-u
+     total-variation check) — same distribution as two-branch.
+  4. The compacted (capacity) path is bit-identical to the reference path.
+  5. End-to-end: LLPT rises; skip fraction grows over iterations (Fig 12b)
+     and with g (paper parameter study).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import esca, three_branch
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _random_state(seed, n_docs=30, n_words=40, K=12, n=800):
+    rng = np.random.default_rng(seed)
+    word_ids = np.sort(rng.integers(0, n_words, n)).astype(np.int32)
+    doc_ids = rng.integers(0, n_docs, n).astype(np.int32)
+    topics = rng.integers(0, K, n).astype(np.int32)
+    D = np.zeros((n_docs, K), np.int32)
+    W = np.zeros((n_words, K), np.int32)
+    np.add.at(D, (doc_ids, topics), 1)
+    np.add.at(W, (word_ids, topics), 1)
+    return (jnp.asarray(word_ids), jnp.asarray(doc_ids), jnp.asarray(topics),
+            jnp.asarray(D), jnp.asarray(W))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), g=st.integers(1, 4))
+def test_s_est_upper_bounds_s_prime(seed, g):
+    """Eq 9/10: the g-term tail estimate dominates the true S'."""
+    word_ids, doc_ids, _, D, W = _random_state(seed)
+    alpha, beta = 50.0 / 12, 0.01
+    W_hat = esca.compute_w_hat(W, beta)
+    sw = three_branch.word_stats(W_hat, g=g, alpha=alpha)
+    u = jnp.zeros(word_ids.shape[0], jnp.float32)
+    dec = three_branch.skip_phase(u, word_ids, doc_ids, D, sw, g=g, alpha=alpha)
+    # true S' = sum_k D[d][k]*W_hat[v][k] − a1*b1
+    Wv = np.asarray(W_hat)[np.asarray(word_ids)]
+    Dd = np.asarray(D, np.float32)[np.asarray(doc_ids)]
+    k1 = np.asarray(sw.k[:, 0])[np.asarray(word_ids)]
+    a1 = np.asarray(sw.a[:, 0])[np.asarray(word_ids)]
+    b1 = Dd[np.arange(len(k1)), k1]
+    s_true = (Wv * Dd).sum(-1) - a1 * b1
+    assert np.all(np.asarray(dec.s_est) >= s_true - 1e-4), \
+        (np.asarray(dec.s_est) - s_true).min()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_skip_theorem(seed):
+    """Skipped tokens would have sampled K1 under the exact sampler."""
+    word_ids, doc_ids, _, D, W = _random_state(seed)
+    alpha, beta = 50.0 / 12, 0.01
+    W_hat = esca.compute_w_hat(W, beta)
+    sw = three_branch.word_stats(W_hat, g=2, alpha=alpha)
+    u = jax.random.uniform(jax.random.PRNGKey(seed), word_ids.shape,
+                           dtype=jnp.float32)
+    dec = three_branch.skip_phase(u, word_ids, doc_ids, D, sw, g=2, alpha=alpha)
+    topics_exact, _ = three_branch.exact_three_branch(
+        u, word_ids, doc_ids, sw.k[:, 0], D, W_hat, alpha=alpha, tile_size=256)
+    viol = np.asarray(dec.skip & (topics_exact != dec.k1))
+    assert viol.sum() == 0
+
+
+def test_three_branch_distribution_matches_exact_p():
+    """Stratified-u sweep: induced topic histogram == p ∝ (D+α)∘Ŵ."""
+    word_ids, doc_ids, _, D, W = _random_state(7)
+    K = 12
+    alpha, beta = 50.0 / K, 0.01
+    W_hat = esca.compute_w_hat(W, beta)
+    sw = three_branch.word_stats(W_hat, g=2, alpha=alpha)
+    for tok in (0, 100, 500):
+        v, d = int(word_ids[tok]), int(doc_ids[tok])
+        p = (np.asarray(D[d]) + alpha) * np.asarray(W_hat[v])
+        p = p / p.sum()
+        n = 100_000
+        us = jnp.asarray((np.arange(n) + 0.5) / n, jnp.float32)
+        t3, _ = three_branch.exact_three_branch(
+            us, jnp.full(n, v, jnp.int32), jnp.full(n, d, jnp.int32),
+            sw.k[:, 0], D, W_hat, alpha=alpha, tile_size=8192)
+        h = np.bincount(np.asarray(t3), minlength=K) / n
+        assert 0.5 * np.abs(h - p).sum() < 1e-3
+
+
+def test_three_branch_matches_two_branch_distribution():
+    """Both samplers induce the same distribution (different u→topic maps)."""
+    word_ids, doc_ids, topics, D, W = _random_state(11)
+    K = 12
+    alpha, beta = 50.0 / K, 0.01
+    W_hat = esca.compute_w_hat(W, beta)
+    v, d = int(word_ids[50]), int(doc_ids[50])
+    n = 100_000
+    us = jnp.asarray((np.arange(n) + 0.5) / n, jnp.float32)
+    vv = jnp.full(n, v, jnp.int32)
+    dd = jnp.full(n, d, jnp.int32)
+    t2, _ = esca.sample_two_branch(jax.random.PRNGKey(0), vv, dd,
+                                   jnp.zeros(n, jnp.int32), D, W_hat,
+                                   alpha=alpha, tile_size=8192)
+    # two-branch uses its own key; rebuild with stratified u via internals
+    from repro.core.esca import _sample_token
+    t2 = jax.vmap(lambda u: _sample_token(u, D[d], W_hat[v],
+                                          jnp.float32(alpha))[0])(us)
+    sw = three_branch.word_stats(W_hat, g=2, alpha=alpha)
+    t3, _ = three_branch.exact_three_branch(us, vv, dd, sw.k[:, 0], D, W_hat,
+                                            alpha=alpha, tile_size=8192)
+    h2 = np.bincount(np.asarray(t2), minlength=K) / n
+    h3 = np.bincount(np.asarray(t3), minlength=K) / n
+    assert 0.5 * np.abs(h2 - h3).sum() < 1e-3
+
+
+def test_compacted_path_equals_reference(small_corpus, small_config):
+    cfg = small_config
+    tr = LDATrainer(small_corpus, cfg)
+    state = tr.init_state()
+    for _ in range(3):
+        state, _ = tr.step(state)
+    key = jax.random.PRNGKey(9)
+    for cap in (64, 777, 100_000):
+        plan_ref = three_branch.Plan(g=2, tile_size=512, capacity=None)
+        plan_cap = three_branch.Plan(g=2, tile_size=512, capacity=cap)
+        t_ref, s_ref = three_branch.sample(
+            key, plan_ref, tr.word_ids, tr.doc_ids, state.topics,
+            state.D, state.W, cfg)
+        t_cap, s_cap = three_branch.sample(
+            key, plan_cap, tr.word_ids, tr.doc_ids, state.topics,
+            state.D, state.W, cfg)
+        assert bool(jnp.all(t_ref == t_cap))
+        assert float(s_ref.frac_skipped) == float(s_cap.frac_skipped)
+
+
+def test_llpt_rises_and_skip_grows(small_corpus):
+    """End-to-end: LLPT increases; skip fraction grows as tokens converge
+    (paper Figs 3 & 12b)."""
+    cfg = LDAConfig(n_topics=16, tile_size=512, eval_every=5)
+    tr = LDATrainer(small_corpus, cfg)
+    state = tr.init_state()
+    llpt0 = tr.evaluate(state)
+    skips = []
+    for i in range(20):
+        state, stats = tr.step(state)
+        skips.append(float(stats["frac_skipped"]))
+    llpt1 = tr.evaluate(state)
+    assert llpt1 > llpt0 + 0.05, (llpt0, llpt1)
+    assert np.mean(skips[-5:]) > np.mean(skips[:5]), skips
+    assert not np.isnan(llpt1)
+
+
+def test_skip_fraction_increases_with_g(small_corpus):
+    """Paper §III-B: larger g ⇒ tighter S_est ⇒ more skips."""
+    cfg = LDAConfig(n_topics=16, tile_size=512)
+    tr = LDATrainer(small_corpus, cfg)
+    state = tr.init_state()
+    for _ in range(10):
+        state, _ = tr.step(state)
+    key = jax.random.PRNGKey(3)
+    fracs = {}
+    for g in (1, 2, 4):
+        plan = three_branch.Plan(g=g, tile_size=512, capacity=None)
+        _, st = three_branch.sample(key, plan, tr.word_ids, tr.doc_ids,
+                                    state.topics, state.D, state.W, cfg)
+        fracs[g] = float(st.frac_skipped)
+    assert fracs[1] <= fracs[2] + 1e-6 and fracs[2] <= fracs[4] + 1e-6, fracs
+
+
+def test_two_and_three_branch_converge_to_same_llpt(small_corpus):
+    """The samplers share one stationary distribution: final LLPT agrees."""
+    res = {}
+    for sampler in ("two_branch", "three_branch"):
+        cfg = LDAConfig(n_topics=16, tile_size=512, sampler=sampler, seed=4)
+        tr = LDATrainer(small_corpus, cfg)
+        state = tr.init_state()
+        for _ in range(25):
+            state, _ = tr.step(state)
+        res[sampler] = tr.evaluate(state)
+    assert abs(res["two_branch"] - res["three_branch"]) < 0.15, res
