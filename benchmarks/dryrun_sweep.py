@@ -64,6 +64,31 @@ def run_lda(mesh: str, topics: int = 1024, timeout: int = 1800) -> dict:
         return json.load(f)
 
 
+def run_fused_bench(timeout: int = 1800) -> dict:
+    """Seed-vs-fused steady-state tokens/sec cell (resumable like the rest).
+
+    Subprocess isolation for the same reason as the dry-run cells; writes
+    results/dryrun/BENCH_fused_step.json via benchmarks.fused_step.
+    """
+    out = os.path.join(OUT_DIR, "BENCH_fused_step.json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    code = ("import benchmarks.fused_step as b; "
+            f"b.bench(out_path={out!r})")
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    if proc.returncode != 0 or not os.path.exists(out):
+        err = {"arch": "lda-fused-step", "status": "error",
+               "stderr": proc.stderr[-2000:]}
+        with open(out, "w") as f:
+            json.dump(err, f, indent=2)
+        return err
+    with open(out) as f:
+        return json.load(f)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
@@ -94,6 +119,18 @@ def main() -> int:
             r = run_lda(mesh, topics)
             print(f"[{time.time()-t0:7.0f}s] lda-K{topics:<18d} step"
                   f"         {mesh:6s} {r.get('status'):8s}", flush=True)
+    r = run_fused_bench()
+    if "speedup" in r:
+        n_ok += 1
+        print(f"[{time.time()-t0:7.0f}s] lda-fused-step               "
+              f"seed={r['seed_tokens_per_sec']:,.0f} tok/s "
+              f"fused={r['fused_tokens_per_sec']:,.0f} tok/s "
+              f"({r['speedup']:.2f}x, syncs_in_scan="
+              f"{r['host_syncs_in_scanned_region']})", flush=True)
+    else:
+        n_err += 1
+        print(f"[{time.time()-t0:7.0f}s] lda-fused-step               "
+              f"error", flush=True)
     print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
     return 1 if n_err else 0
 

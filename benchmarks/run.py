@@ -20,9 +20,10 @@ MODULES = [
     "fig16_scaling",
     "fig17_breakdown",
     "fig18_hw_generations",
+    "fused_step",          # seed vs fused steady-state tokens/sec
 ]
 
-QUICK_SKIP = {"fig16_scaling"}          # subprocess-heavy
+QUICK_SKIP = {"fig16_scaling", "fused_step"}   # long warmup / subprocesses
 
 
 def main(argv=None) -> int:

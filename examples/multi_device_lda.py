@@ -27,6 +27,7 @@ from repro.core import llpt as llpt_mod
 from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
 from repro.lda.distributed import DistLDATrainer
 from repro.lda.model import LDAConfig
+from repro.runtime.compat import make_mesh
 
 
 def global_llpt(tr, state, corpus, cfg):
@@ -46,8 +47,7 @@ def main():
     cfg = LDAConfig(n_topics=16, seed=0)
     mgr = CheckpointManager("/tmp/ezlda_example_ckpt", keep_n=2)
 
-    mesh4x2 = jax.make_mesh((4, 2), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh4x2 = make_mesh((4, 2), ("data", "model"))
     tr = DistLDATrainer(corpus, cfg, mesh4x2, pad_multiple=256)
     state = tr.init_state()
     print(f"mesh (4 data × 2 model): chunks hold "
@@ -61,8 +61,7 @@ def main():
     mgr.save(10, tr.host_payload(state))
     print("checkpoint saved; simulating pod loss → restart on a 2×4 mesh")
 
-    mesh2x4 = jax.make_mesh((2, 4), ("data", "model"),
-                            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh2x4 = make_mesh((2, 4), ("data", "model"))
     tr2 = DistLDATrainer(corpus, cfg, mesh2x4, pad_multiple=256)
     state2 = tr2.state_from_payload(mgr.restore_latest())
     D, W = tr2.gather_global(state2)

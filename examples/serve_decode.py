@@ -18,6 +18,7 @@ import numpy as np
 from repro.configs import REGISTRY
 from repro.models.registry import get_model, reduced_config
 from repro.train.serve_step import make_serve_step
+from repro.runtime.compat import make_mesh
 
 
 def main():
@@ -25,8 +26,7 @@ def main():
                          vocab_size=512, vocab_pad_multiple=128)
     api = get_model(cfg)
     params = api.init(jax.random.PRNGKey(0))
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     serve = jax.jit(make_serve_step(api, mesh), donate_argnums=(1,))
 
     batch, max_len, gen_len = 8, 64, 24

@@ -27,8 +27,11 @@ import jax.numpy as jnp
 
 __all__ = [
     "compute_w_hat",
+    "compute_w_hat_from_colsum",
     "sample_two_branch",
     "update_counts",
+    "delta_update_counts",
+    "delta_update_colsum",
     "init_counts",
     "SampleStats",
 ]
@@ -39,6 +42,20 @@ def compute_w_hat(W: jax.Array, beta: float) -> jax.Array:
     V = W.shape[0]
     colsum = jnp.sum(W, axis=0, dtype=jnp.float32)          # (K,)
     return (W.astype(jnp.float32) + beta) / (colsum + V * beta)
+
+
+def compute_w_hat_from_colsum(W: jax.Array, colsum: jax.Array,
+                              beta: float) -> jax.Array:
+    """compute_w_hat with an incrementally maintained column sum.
+
+    ``colsum`` is the int32 per-topic token count Σ_v W[v][k], kept up to
+    date by delta_update_colsum. Counts are < 2^24 in any corpus we fit in
+    int32 D/W, so the f32 cast is exact and this is bit-identical to
+    compute_w_hat — while skipping its O(V·K) reduction per iteration.
+    """
+    V = W.shape[0]
+    return (W.astype(jnp.float32) + beta) / \
+        (colsum.astype(jnp.float32) + V * beta)
 
 
 class SampleStats(NamedTuple):
@@ -124,6 +141,43 @@ def update_counts(word_ids: jax.Array, doc_ids: jax.Array, topics: jax.Array,
     D = jnp.zeros((n_docs, n_topics), jnp.int32).at[doc_ids, topics].add(w)
     W = jnp.zeros((n_words, n_topics), jnp.int32).at[word_ids, topics].add(w)
     return D, W
+
+
+@jax.jit
+def delta_update_counts(D: jax.Array, W: jax.Array, word_ids: jax.Array,
+                        doc_ids: jax.Array, old_topics: jax.Array,
+                        new_topics: jax.Array, mask: jax.Array):
+    """Incremental count update: scatter −1/+1 only where the topic changed.
+
+    ESCA's full rebuild (update_counts) zeroes (M,K)+(V,K) and histograms all
+    N tokens every iteration; once most tokens have converged the counts
+    barely move, so the update task should shrink with the sampling task
+    (SaberLDA's observation, applied to the update side). This applies
+
+        D[d][z_old] -= 1 ; D[d][z_new] += 1      (and likewise for W)
+
+    at exactly the tokens whose assignment changed. Masked (pad) tokens have
+    mask == 0 and contribute nothing, matching the rebuild oracle. Called
+    standalone this copies D/W like any jitted update; inside a donated
+    program (train/lda_step.fused_step) XLA turns it into an in-place walk
+    over the existing count matrices.
+    Exactly equal to update_counts applied to new_topics whenever (D, W) are
+    consistent with old_topics — the property tests/test_fused_step.py pins.
+    """
+    changed = (new_topics != old_topics) & (mask > 0)
+    w = changed.astype(jnp.int32)
+    D = D.at[doc_ids, old_topics].add(-w).at[doc_ids, new_topics].add(w)
+    W = W.at[word_ids, old_topics].add(-w).at[word_ids, new_topics].add(w)
+    return D, W
+
+
+@jax.jit
+def delta_update_colsum(colsum: jax.Array, old_topics: jax.Array,
+                        new_topics: jax.Array, mask: jax.Array) -> jax.Array:
+    """Maintain Ŵ's per-topic column sum Σ_v W[v][k] under a topic delta."""
+    changed = (new_topics != old_topics) & (mask > 0)
+    w = changed.astype(jnp.int32)
+    return colsum.at[old_topics].add(-w).at[new_topics].add(w)
 
 
 def init_counts(key: jax.Array, word_ids: jax.Array, doc_ids: jax.Array,

@@ -52,7 +52,8 @@ from repro.core.sparse import pack_pairs, unpack_pairs
 __all__ = [
     "WordStats", "word_stats", "SkipDecision", "skip_phase",
     "exact_three_branch", "ThreeBranchStats", "sample",
-    "build_plan", "Plan",
+    "build_plan", "Plan", "survivor_rank", "compact_survivor_indices",
+    "run_survivor_chunks",
 ]
 
 
@@ -71,7 +72,11 @@ class WordStats(NamedTuple):
 
 @functools.partial(jax.jit, static_argnames=("g", "alpha"))
 def word_stats(W_hat: jax.Array, *, g: int, alpha: float) -> WordStats:
-    vals, idxs = jax.lax.top_k(W_hat, g + 1)               # (V, g+1)
+    # The barrier stops XLA:CPU from fusing the top-k sort into each
+    # consumer (which re-runs the sort per use — measured 30× slower).
+    # Identity on values, so results are bit-identical.
+    vals, idxs = jax.lax.optimization_barrier(
+        jax.lax.top_k(W_hat, g + 1))                        # (V, g+1)
     wsum = jnp.sum(W_hat, axis=-1)                          # (V,)
     q_prime = alpha * (wsum - vals[:, 0])
     k = idxs[:, :g].astype(jnp.int32)
@@ -166,6 +171,9 @@ class ThreeBranchStats(NamedTuple):
     frac_m_final: jax.Array       # landed in M branch (skipped final sampling)
     frac_unchanged: jax.Array
     frac_at_max: jax.Array
+    # Q'-branch landings (paper Eq 6's α∘Ŵ' term). Defaults to 0.0 on paths
+    # that use the combined S'+Q' sweep and cannot attribute the branch.
+    frac_q_branch: jax.Array | float = 0.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -209,66 +217,92 @@ def _sample_reference(key, word_ids, doc_ids, old_topics, D, W_hat,
     return new_topics, st
 
 
-@functools.partial(jax.jit, static_argnames=("g", "alpha", "capacity"))
-def _phase1_and_rank(key, word_ids, doc_ids, D, W_hat, *, g, alpha, capacity):
+def compact_survivor_indices(rank, skip, total_slots):
+    """Dense survivor token-index list, built with ONE O(N) scatter.
+
+    Returns a (total_slots,) int32 buffer whose first n_surv entries are the
+    token indices of the un-skipped tokens in rank order; the tail holds the
+    out-of-range sentinel ``n``. Chunked consumers dynamic-slice O(capacity)
+    windows out of it and scatter results back with ``mode="drop"`` — the
+    sentinel slots drop, and no valid-mask read-modify-write is needed
+    (that pattern puts duplicate indices in one scatter, an XLA-order
+    hazard). Gathers at the sentinel clamp to token n−1; results dropped.
+    """
+    n = rank.shape[0]
+    slot = jnp.where(skip, total_slots, rank)               # pads → dumped
+    buf = jnp.full((total_slots + 1,), n, jnp.int32)
+    buf = buf.at[slot].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
+    return buf[:total_slots]
+
+
+def survivor_rank(skip: jax.Array):
+    """(rank, n_surv): dense rank of each un-skipped token, survivor count."""
+    rank = jnp.cumsum(~skip) - 1
+    n_surv = (rank[-1] + 1).astype(jnp.int32) if skip.shape[0] \
+        else jnp.int32(0)
+    return rank, n_surv
+
+
+def run_survivor_chunks(surv_idx, n_surv, init_topics, *, capacity,
+                        n_chunks, sample_chunk):
+    """Cond-guarded fori_loop over fixed-capacity survivor chunks.
+
+    The shared sync-free chunking pattern (also the fused pipeline's,
+    train/lda_step.py): budget of ``n_chunks`` covers every token so
+    correctness never depends on the survivor count; chunks past the
+    survivor tail cost one predicate. ``sample_chunk(idx) -> (topics,
+    in_m)`` supplies the phase-2 sampler (dense reference or Pallas
+    kernel); results scatter back with ``mode="drop"`` so sentinel slots
+    vanish. Returns (new_topics, in_m_acc).
+    """
+    n = init_topics.shape[0]
+
+    def chunk_body(c, carry):
+        def run_chunk(carry):
+            new_topics, in_m_acc = carry
+            idx = jax.lax.dynamic_slice(surv_idx, (c * capacity,),
+                                        (capacity,))
+            topics_c, in_m_c = sample_chunk(idx)
+            new_topics = new_topics.at[idx].set(topics_c, mode="drop")
+            in_m_acc = in_m_acc.at[idx].set(in_m_c, mode="drop")
+            return new_topics, in_m_acc
+        return jax.lax.cond(c * capacity < n_surv, run_chunk,
+                            lambda carry: carry, carry)
+
+    return jax.lax.fori_loop(0, n_chunks, chunk_body,
+                             (init_topics, jnp.zeros(n, jnp.bool_)))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("g", "alpha", "capacity", "tile_size"))
+def _sample_compacted(key, word_ids, doc_ids, old_topics, D, W_hat,
+                      *, g, alpha, capacity, tile_size):
+    """Compacted path as ONE dispatch: fori_loop over a static chunk budget.
+
+    The chunk budget is ceil(N/capacity) — full coverage, so correctness
+    never depends on how many tokens actually survive — but each chunk body
+    is guarded by ``lax.cond(lo < n_surv, ...)``: chunks past the survivor
+    tail cost one predicate, not one kernel. The survivor count therefore
+    never leaves the device (the seed's ``int(n_surv)`` sync is gone) and
+    runtime phase-2 work stays proportional to ceil(survivors/capacity).
+    """
     stats_w = word_stats(W_hat, g=g, alpha=alpha)
     n = word_ids.shape[0]
     u = jax.random.uniform(key, (n,), dtype=jnp.float32)
     dec = skip_phase(u, word_ids, doc_ids, D, stats_w, g=g, alpha=alpha)
-    rank = jnp.cumsum(~dec.skip) - 1                       # survivor rank
-    n_surv = rank[-1] + 1 if n else jnp.int32(0)
-    return u, dec, stats_w, rank, n_surv
+    rank, n_surv = survivor_rank(dec.skip)
+    k1_per_word = stats_w.k[:, 0]
+    n_chunks = max(1, -(-n // capacity))
+    surv_idx = compact_survivor_indices(rank, dec.skip, n_chunks * capacity)
 
+    def sample_chunk(idx):
+        return exact_three_branch(
+            u[idx], word_ids[idx], doc_ids[idx], k1_per_word, D, W_hat,
+            alpha=alpha, tile_size=tile_size)
 
-@functools.partial(jax.jit, static_argnames=("alpha", "capacity", "tile_size"))
-def _phase2_chunk(chunk_idx, u, word_ids, doc_ids, k1_per_word, D, W_hat,
-                  rank, skip, *, alpha, capacity, tile_size):
-    """Process survivor ranks [chunk_idx·cap, (chunk_idx+1)·cap)."""
-    n = word_ids.shape[0]
-    lo = chunk_idx * capacity
-    sel = (~skip) & (rank >= lo) & (rank < lo + capacity)
-    # Scatter token indices into a fixed-size buffer by rank − lo.
-    slot = jnp.where(sel, rank - lo, capacity)              # cap = dump slot
-    buf = jnp.full((capacity + 1,), 0, jnp.int32)
-    buf = buf.at[slot].set(jnp.arange(n, dtype=jnp.int32), mode="drop")
-    idx = buf[:capacity]
-    valid = jnp.zeros((capacity + 1,), jnp.bool_).at[slot].set(
-        True, mode="drop")[:capacity]
-    topics_c, in_m_c = exact_three_branch(
-        u[idx], word_ids[idx], doc_ids[idx], k1_per_word, D, W_hat,
-        alpha=alpha, tile_size=tile_size)
-    return idx, valid, topics_c, in_m_c
-
-
-def sample(key, plan: Plan, word_ids, doc_ids, old_topics, D, W, config):
-    """Full EZLDA sampler: Ŵ, phase 1, (compacted) phase 2, stats.
-
-    With ``plan.capacity`` set, only ceil(survivors/capacity) chunks of exact
-    sampling run — the paper's workload reduction made shape-static. The
-    python chunk loop re-uses one jit cache entry (chunk_idx is traced).
-    """
-    alpha, beta = config.alpha_, config.beta
-    W_hat = esca.compute_w_hat(W, beta)
-    if plan.capacity is None:
-        return _sample_reference(key, word_ids, doc_ids, old_topics, D, W_hat,
-                                 g=plan.g, alpha=alpha,
-                                 tile_size=plan.tile_size)
-
-    u, dec, stats_w, rank, n_surv = _phase1_and_rank(
-        key, word_ids, doc_ids, D, W_hat, g=plan.g, alpha=alpha,
-        capacity=plan.capacity)
-    n_surv = int(n_surv)                                    # one host sync
-    new_topics = dec.k1                                     # skipped ⇒ K1
-    in_m_acc = jnp.zeros(word_ids.shape[0], jnp.bool_)
-    n_chunks = -(-n_surv // plan.capacity) if n_surv else 0
-    for c in range(n_chunks):
-        idx, valid, topics_c, in_m_c = _phase2_chunk(
-            jnp.int32(c), u, word_ids, doc_ids, stats_w.k[:, 0], D, W_hat,
-            rank, dec.skip, alpha=alpha, capacity=plan.capacity,
-            tile_size=plan.tile_size)
-        new_topics = new_topics.at[idx].set(
-            jnp.where(valid, topics_c, new_topics[idx]))
-        in_m_acc = in_m_acc.at[idx].set(in_m_c & valid | in_m_acc[idx])
+    new_topics, in_m_acc = run_survivor_chunks(
+        surv_idx, n_surv, dec.k1,                           # skipped ⇒ K1
+        capacity=capacity, n_chunks=n_chunks, sample_chunk=sample_chunk)
     st = ThreeBranchStats(
         frac_skipped=jnp.mean(dec.skip.astype(jnp.float32)),
         frac_m_final=jnp.mean((dec.skip | in_m_acc).astype(jnp.float32)),
@@ -276,3 +310,23 @@ def sample(key, plan: Plan, word_ids, doc_ids, old_topics, D, W, config):
         frac_at_max=jnp.mean((new_topics == dec.k1).astype(jnp.float32)),
     )
     return new_topics, st
+
+
+def sample(key, plan: Plan, word_ids, doc_ids, old_topics, D, W, config):
+    """Full EZLDA sampler: Ŵ, phase 1, (compacted) phase 2, stats.
+
+    With ``plan.capacity`` set, only ceil(survivors/capacity) chunks of exact
+    sampling run — the paper's workload reduction made shape-static — and
+    the whole sampler is a single sync-free dispatch (see _sample_compacted;
+    train/lda_step.py builds its fused scanned iteration on the same
+    machinery).
+    """
+    alpha, beta = config.alpha_, config.beta
+    W_hat = esca.compute_w_hat(W, beta)
+    if plan.capacity is None:
+        return _sample_reference(key, word_ids, doc_ids, old_topics, D, W_hat,
+                                 g=plan.g, alpha=alpha,
+                                 tile_size=plan.tile_size)
+    return _sample_compacted(key, word_ids, doc_ids, old_topics, D, W_hat,
+                             g=plan.g, alpha=alpha, capacity=plan.capacity,
+                             tile_size=plan.tile_size)

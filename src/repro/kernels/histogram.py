@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["histogram_partials", "histogram"]
 
 DEFAULT_TILE_T = 512
@@ -66,8 +68,9 @@ def histogram_partials(row_ids: jax.Array, topics: jax.Array,
                        weights: jax.Array, tile_bases: jax.Array, *,
                        n_topics: int, tile_t: int = DEFAULT_TILE_T,
                        rows_per_tile: int = DEFAULT_ROWS,
-                       block_k: int = 512, interpret: bool = True):
+                       block_k: int = 512, interpret: bool | None = None):
     """Per-tile (R×K) one-hot MXU partial histograms + coverage mask."""
+    interpret = resolve_interpret(interpret)
     n = row_ids.shape[0]
     assert n % tile_t == 0, "pad tokens to a tile multiple first"
     n_tiles = n // tile_t
@@ -97,7 +100,8 @@ def histogram_partials(row_ids: jax.Array, topics: jax.Array,
 
 def histogram(row_ids: jax.Array, topics: jax.Array, weights: jax.Array, *,
               n_rows: int, n_topics: int, tile_t: int = DEFAULT_TILE_T,
-              rows_per_tile: int = DEFAULT_ROWS, interpret: bool = True):
+              rows_per_tile: int = DEFAULT_ROWS,
+              interpret: bool | None = None):
     """Full count rebuild: MXU partials + segment-add + scatter fallback.
 
     ``row_ids`` should be sorted (word-sorted T for W; doc-major order via

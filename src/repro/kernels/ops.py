@@ -19,14 +19,10 @@ from repro.core import esca, three_branch
 from repro.kernels import histogram as _hist
 from repro.kernels import sample_fused as _fused
 from repro.kernels import sample_sparse as _sparse
+from repro.kernels.runtime import interpret_default
 
 __all__ = ["interpret_default", "sample_tokens", "update_counts",
            "sample_tokens_sparse_d"]
-
-
-def interpret_default() -> bool:
-    """Interpret on anything that is not a real TPU."""
-    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "tile_size", "interpret"))
@@ -59,13 +55,16 @@ def sample_tokens(key, word_ids, doc_ids, old_topics, D, W_hat, *,
         tile_fn, None,
         (u_p.reshape(shape), v_p.reshape(shape), d_p.reshape(shape)))
     topics, m, s, q = (x.reshape(-1)[:n] for x in (topics, m, s, q))
-    in_m = u * (m + s + q) < m
+    x = u * (m + s + q)
+    in_m = x < m
+    in_q = (~in_m) & (x >= m + s)                     # landed past S' segment
     k1 = jnp.argmax(W_hat, axis=-1).astype(jnp.int32)[word_ids]
     stats = three_branch.ThreeBranchStats(
         frac_skipped=jnp.mean(in_m.astype(jnp.float32)),  # kernel = exact path
         frac_m_final=jnp.mean(in_m.astype(jnp.float32)),
         frac_unchanged=jnp.mean((topics == old_topics).astype(jnp.float32)),
         frac_at_max=jnp.mean((topics == k1).astype(jnp.float32)),
+        frac_q_branch=jnp.mean(in_q.astype(jnp.float32)),
     )
     return topics, stats
 
@@ -93,28 +92,31 @@ def sample_tokens_sparse_d(key, word_ids, doc_ids, old_topics,
     rows = packed_d_rows[doc_ids]                          # (N, L)
     idx = (rows.view(jnp.uint32) >> 16).astype(jnp.int32)
     w_at = jnp.take_along_axis(W_hat[word_ids], idx, axis=1)
-    topics, needs_q, _ = _sparse.sample_sparse(
+    topics, needs_q, s_prime = _sparse.sample_sparse(
         u, rows, w_at, k1, a1, b1, q_prime, alpha=alpha, interpret=interpret)
     # Q'-branch fallback: inverse-CDF over α·Ŵ' for flagged tokens only.
+    # Uses the kernel's own S' mass, so the fallback target is consistent
+    # with the needs_q decision (and the O(N·L) host recompute is gone).
     w_rows = W_hat[word_ids]
     w_prime = jnp.where(
         jnp.arange(W_hat.shape[1])[None, :] == k1[:, None], 0.0, w_rows)
     m = a1 * (b1 + alpha)
-    s_p = jnp.sum(rows_sp := (jnp.where(idx == k1[:, None], 0.0, w_at)
-                              * (rows.view(jnp.uint32)
-                                 & jnp.uint32(0xFFFF)).astype(jnp.float32)),
-                  axis=1)
-    xq = u * (m + s_p + q_prime) - m - s_p
+    xq = u * (m + s_prime + q_prime) - m - s_prime
     cq = jnp.cumsum(alpha * w_prime, axis=1)
     topic_q = jnp.minimum(
         jax.vmap(lambda c, x: jnp.searchsorted(c, x, side="right"))(cq, xq),
         W_hat.shape[1] - 1).astype(jnp.int32)
     topics = jnp.where(needs_q, topic_q, topics)
+    # Real per-branch fractions from the kernel outputs: the M branch is
+    # x < M (exact masses, no estimate phase in this path), the Q' branch is
+    # the kernel's needs_q flag, and frac_at_max comes from the final topics.
+    in_m = u * (m + s_prime + q_prime) < m
     stats = three_branch.ThreeBranchStats(
-        frac_skipped=jnp.mean((topics == k1).astype(jnp.float32)),
-        frac_m_final=jnp.mean((topics == k1).astype(jnp.float32)),
+        frac_skipped=jnp.mean(in_m.astype(jnp.float32)),  # kernel = exact path
+        frac_m_final=jnp.mean(in_m.astype(jnp.float32)),
         frac_unchanged=jnp.mean((topics == old_topics).astype(jnp.float32)),
         frac_at_max=jnp.mean((topics == k1).astype(jnp.float32)),
+        frac_q_branch=jnp.mean(needs_q.astype(jnp.float32)),
     )
     return topics, stats
 

@@ -1,0 +1,22 @@
+"""Kernel runtime policy shared by every Pallas entry point.
+
+Lives below ops.py so the kernels themselves (sample_fused, sample_sparse,
+histogram) can resolve their ``interpret=None`` default without importing
+ops (which imports them back).
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["interpret_default", "resolve_interpret"]
+
+
+def interpret_default() -> bool:
+    """Interpret on anything that is not a real TPU."""
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: bool | None) -> bool:
+    """``None`` means "compile to Mosaic iff we are on a TPU"."""
+    return interpret_default() if interpret is None else bool(interpret)

@@ -37,6 +37,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+from repro.runtime.compat import tpu_compiler_params
+
 __all__ = ["sample_fused", "DEFAULT_TILE_T", "DEFAULT_BLOCK_K"]
 
 DEFAULT_TILE_T = 128
@@ -122,16 +125,20 @@ def _kernel(u_ref, d_ref, w_ref,                       # inputs
                    static_argnames=("alpha", "tile_t", "block_k", "interpret"))
 def sample_fused(u: jax.Array, d_rows: jax.Array, w_rows: jax.Array, *,
                  alpha: float, tile_t: int = DEFAULT_TILE_T,
-                 block_k: int = DEFAULT_BLOCK_K, interpret: bool = True):
+                 block_k: int = DEFAULT_BLOCK_K,
+                 interpret: bool | None = None):
     """Sample topics for a token batch from pre-gathered (D, Ŵ) rows.
 
     Args:
       u: (N,) uniforms in [0,1).
       d_rows: (N, K) int32 — D[doc_ids] gathered rows.
       w_rows: (N, K) f32 — Ŵ[word_ids] gathered rows.
+      interpret: None resolves via runtime.interpret_default(), so direct
+        callers compile to Mosaic on TPU instead of silently interpreting.
     Returns:
       topics (N,) int32 and the exact branch masses (M, S', Q') per token.
     """
+    interpret = resolve_interpret(interpret)
     n, k_total = d_rows.shape
     n_pad = (-n) % tile_t
     k_pad = (-k_total) % block_k
@@ -166,7 +173,7 @@ def sample_fused(u: jax.Array, d_rows: jax.Array, w_rows: jax.Array, *,
         out_specs=(tok_spec, tok_spec, tok_spec, tok_spec),
         out_shape=out_shapes,
         scratch_shapes=scratch,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(u, d_rows, w_rows)

@@ -26,6 +26,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 __all__ = ["sample_sparse"]
 
 DEFAULT_TILE_T = 256
@@ -65,7 +67,8 @@ def _kernel(u_ref, packed_ref, w_ref, k1_ref, a1_ref, b1_ref, qp_ref,
 def sample_sparse(u: jax.Array, packed_rows: jax.Array, w_at_idx: jax.Array,
                   k1: jax.Array, a1: jax.Array, b1: jax.Array,
                   q_prime: jax.Array, *, alpha: float,
-                  tile_t: int = DEFAULT_TILE_T, interpret: bool = True):
+                  tile_t: int = DEFAULT_TILE_T,
+                  interpret: bool | None = None):
     """O(L)-per-token three-branch sampling over packed ELL D rows.
 
     Args:
@@ -75,6 +78,7 @@ def sample_sparse(u: jax.Array, packed_rows: jax.Array, w_at_idx: jax.Array,
     Returns:
       (topics, needs_q, s_prime); topics = -1 where needs_q.
     """
+    interpret = resolve_interpret(interpret)
     n, L = packed_rows.shape
     n_pad = (-n) % tile_t
     if n_pad:

@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.runtime import compat
+
 __all__ = ["make_production_mesh", "make_lda_mesh"]
 
 
@@ -25,17 +27,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     devs = jax.devices()
     if len(devs) != need:
         devs = devs[:need]
-    return jax.make_mesh(
-        shape, axes, devices=devs,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=devs)
 
 
 def make_lda_mesh(n_data: int, n_model: int, *, n_pod: int | None = None):
     """Small meshes for multi-device LDA tests/examples."""
     if n_pod:
-        return jax.make_mesh(
-            (n_pod, n_data, n_model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (n_data, n_model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((n_pod, n_data, n_model),
+                                ("pod", "data", "model"))
+    return compat.make_mesh((n_data, n_model), ("data", "model"))

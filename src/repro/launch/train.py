@@ -36,12 +36,9 @@ def train_lm(arch: str, *, steps: int = 200, seq_len: int = 256,
     if reduced:
         cfg = reduced_config(cfg)
     api = get_model(cfg)
-    mesh = jax.make_mesh(
-        (1, jax.device_count()), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2) \
-        if jax.device_count() > 1 else jax.make_mesh(
-            (1, 1), ("data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.runtime.compat import make_mesh as _make_mesh
+    mesh = _make_mesh((1, jax.device_count()), ("data", "model")) \
+        if jax.device_count() > 1 else _make_mesh((1, 1), ("data", "model"))
     opt = AdamWConfig(lr=lr, warmup_steps=max(steps // 20, 5),
                       total_steps=steps)
     step_fn, init_state = make_train_step(api, mesh, n_micro=1, opt_cfg=opt)

@@ -32,6 +32,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -41,6 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import three_branch
 from repro.lda.corpus import Corpus, chunk_documents
 from repro.lda.model import LDAConfig
+from repro.runtime.compat import shard_map as _shard_map
 from repro.runtime.sharding import batch_axes
 
 __all__ = ["ShardedCorpus", "shard_corpus", "DistLDAState", "DistLDATrainer"]
@@ -147,7 +149,6 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
     D = state.D[0]
     W = state.W
     k_local = W.shape[1]
-    pm = jax.lax.axis_size(model_axis)
     my = jax.lax.axis_index(model_axis)
     kb0 = my * k_local
     alpha = cfg.alpha_
@@ -202,6 +203,7 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
                      (d_rows + alpha) * w_rows)           # k ≠ K1
     l_mine = jnp.sum(mass, axis=1)                        # (N,) local mass
     l_all = jax.lax.all_gather(l_mine, model_axis)        # (Pm, N)
+    pm = l_all.shape[0]        # static axis size (jax.lax.axis_size compat)
     cum_before = jnp.sum(
         jnp.where(jnp.arange(pm)[:, None] < my, l_all, 0.0), axis=0)
     total = m_mass + jnp.sum(l_all, axis=0)
@@ -219,17 +221,26 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
     in_m = x < m_mass
     new_topics = jnp.where(skip | in_m, k1, topic_exact).astype(jnp.int32)
 
-    # --- update: local D rebuild; W = psum of per-shard histograms (§V-B)
+    # --- update: incremental ±1 deltas at changed tokens only (the fused
+    # step's delta update, per shard). Each token subtracts its old topic and
+    # adds its new one within this shard's column block; D updates in place
+    # (donation-friendly) and the W all-reduce carries a delta histogram —
+    # identical to the §V-B sum+broadcast because every data shard holds the
+    # same replica of W. Both matrices stay exactly equal to a full rebuild.
     wgt = mask.astype(jnp.int32)
-    t_rel = new_topics - kb0
-    t_in = (t_rel >= 0) & (t_rel < k_local)
-    wgt_blk = jnp.where(t_in, wgt, 0)
-    t_rel = jnp.clip(t_rel, 0, k_local - 1)
-    D_new = jnp.zeros((m_local, k_local), jnp.int32
-                      ).at[doc_ids, t_rel].add(wgt_blk)
-    W_local = jnp.zeros((n_words, k_local), jnp.int32
-                        ).at[word_ids, t_rel].add(wgt_blk)
-    W_new = jax.lax.psum(W_local, data_axes)              # sum + broadcast
+
+    def _blk(t):
+        rel = t - kb0
+        in_blk = (rel >= 0) & (rel < k_local)
+        return jnp.clip(rel, 0, k_local - 1), jnp.where(in_blk, wgt, 0)
+
+    old_rel, w_old = _blk(topics)
+    t_rel, w_new = _blk(new_topics)
+    D_new = D.at[doc_ids, old_rel].add(-w_old).at[doc_ids, t_rel].add(w_new)
+    dW_local = jnp.zeros((n_words, k_local), jnp.int32
+                         ).at[word_ids, old_rel].add(-w_old
+                         ).at[word_ids, t_rel].add(w_new)
+    W_new = W + jax.lax.psum(dW_local, data_axes)         # delta all-reduce
 
     fmask = mask.astype(jnp.float32)
     denom = jax.lax.psum(jnp.sum(fmask), data_axes)
@@ -240,6 +251,7 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
         frac_m_final=_avg((skip | in_m).astype(jnp.float32)),
         frac_unchanged=_avg((new_topics == topics).astype(jnp.float32)),
         frac_at_max=_avg((new_topics == k1).astype(jnp.float32)),
+        frac_q_branch=jnp.float32(0.0),   # combined sweep: not attributed
     )
     new_state = DistLDAState(
         topics=new_topics[None], D=D_new[None], W=W_new,
@@ -278,15 +290,17 @@ class DistLDATrainer:
             D=P(daxes, None, "model"),
             W=P(None, "model"),
             key=P(), iteration=P())
-        stats_spec = three_branch.ThreeBranchStats(P(), P(), P(), P())
+        stats_spec = three_branch.ThreeBranchStats(P(), P(), P(), P(), P())
         step = functools.partial(
             _dist_step, cfg=config, data_axes=daxes, model_axis="model",
             n_words=corpus.n_words, m_local=self.sc.m_local, g=config.g)
-        self._step = jax.jit(jax.shard_map(
+        self._sm_step = _shard_map(
             step, mesh=mesh,
             in_specs=(tok_spec, tok_spec, tok_spec, self.state_specs),
             out_specs=(self.state_specs, stats_spec),
-            check_vma=False))
+            check_vma=False)
+        self._step = jax.jit(self._sm_step)
+        self._scan_cache: dict[int, Any] = {}
 
         dev = NamedSharding(mesh, tok_spec)
         self.word_ids = jax.device_put(jnp.asarray(self.sc.word_ids), dev)
@@ -317,6 +331,27 @@ class DistLDATrainer:
 
     def step(self, state: DistLDAState):
         return self._step(self.word_ids, self.doc_ids, self.mask, state)
+
+    def run_fused(self, state: DistLDAState, n_iters: int):
+        """n_iters eval-free iterations in ONE dispatch (fused pipeline).
+
+        lax.scan over the per-shard step with the state buffers donated:
+        the multi-device analogue of train/lda_step.run_fused — no host
+        sync, no per-iteration dispatch. Returns (state, stacked stats)
+        where each stats leaf has a leading (n_iters,) axis.
+        """
+        fn = self._scan_cache.get(n_iters)
+        if fn is None:
+            sm = self._sm_step
+
+            def multi(word_ids, doc_ids, mask, st):
+                def body(carry, _):
+                    return sm(word_ids, doc_ids, mask, carry)
+                return jax.lax.scan(body, st, None, length=n_iters)
+
+            fn = jax.jit(multi, donate_argnums=(3,))
+            self._scan_cache[n_iters] = fn
+        return fn(self.word_ids, self.doc_ids, self.mask, state)
 
     # -- elastic checkpointing ---------------------------------------------
     # Checkpoints store topics in GLOBAL token order (+ rng + iteration), so

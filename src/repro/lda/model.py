@@ -23,6 +23,7 @@ class LDAConfig:
     d_capacity: int | None = None    # bucketed-sparse D row capacity; None=auto
     survivor_capacity: int | None = None  # phase-2 chunk size; None=reference
     dense_word_threshold: int | None = None  # tokens>=thr => dense W row; None=K (paper)
+    fused: bool = False              # route run() through train/lda_step.py
     seed: int = 0
     eval_every: int = 10
 

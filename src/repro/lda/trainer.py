@@ -3,6 +3,14 @@
 Drives either the two-branch (ESCA baseline) or the three-branch (EZLDA)
 sampler over a corpus. Multi-device training lives in lda/distributed.py and
 reuses the same per-shard step functions.
+
+Two execution modes share one state/checkpoint format:
+  * step(): the reference path — sample, full count rebuild, one dispatch
+    per phase. The semantics oracle.
+  * run_fused()/run(..with config.fused..): the fused pipeline from
+    train/lda_step.py — single donated dispatch per scanned stretch,
+    incremental delta count updates, no per-iteration host syncs. Produces
+    bit-identical topics/counts to step() for the same key.
 """
 
 from __future__ import annotations
@@ -37,6 +45,7 @@ class LDATrainer:
         self.n_words = corpus.n_words
         self.checkpoint_manager = checkpoint_manager
         self._sampler = self._make_sampler()
+        self._fused_pipeline = None
 
     # -- state ------------------------------------------------------------
 
@@ -112,6 +121,15 @@ class LDATrainer:
                              iteration=state.iteration + 1)
         return new_state, dict(stats._asdict())
 
+    def fused_pipeline(self):
+        """Lazily built train/lda_step.FusedPipeline over this corpus."""
+        if self._fused_pipeline is None:
+            from repro.train.lda_step import FusedPipeline
+            self._fused_pipeline = FusedPipeline(
+                self.word_ids, self.doc_ids, self.mask,
+                n_docs=self.n_docs, n_words=self.n_words, config=self.config)
+        return self._fused_pipeline
+
     def evaluate(self, state: LDAState) -> float:
         return float(llpt_mod.llpt(
             self.word_ids, self.doc_ids, self.mask, state.D, state.W,
@@ -120,9 +138,69 @@ class LDATrainer:
 
     # -- loop -------------------------------------------------------------
 
+    def run_fused(self, n_iters: int, state: LDAState | None = None,
+                  log_fn: Callable[[str], None] | None = None,
+                  checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
+        """Fused loop: eval-free stretches run as ONE scanned dispatch.
+
+        Iterations between eval/checkpoint boundaries never touch the host;
+        the survivor EMA re-plans chunk capacity only between scans.
+        """
+        state = self.restore_or_init() if state is None else state
+        pipe = self.fused_pipeline()
+        fstate = pipe.from_lda_state(state)
+        history: dict[str, list] = {"iteration": [], "llpt": [],
+                                    "tokens_per_sec": [], "stats": []}
+        start_iter = int(state.iteration)
+        done = 0
+        while done < n_iters:
+            # Scan exactly to the next absolute eval/checkpoint boundary, so
+            # resumed runs (start_iter % eval_every != 0) and non-divisible
+            # n_iters still hit every boundary the reference run() would.
+            # The first chunk is a single iteration: run() records a baseline
+            # eval after its first iteration, and history must not change
+            # shape when config.fused flips.
+            it_now = start_iter + done
+            if done == 0:
+                chunk = 1
+            else:
+                chunk = self.config.eval_every \
+                    - it_now % self.config.eval_every
+                if checkpoint_every:
+                    chunk = min(chunk,
+                                checkpoint_every - it_now % checkpoint_every)
+            chunk = min(chunk, n_iters - done)
+            t0 = time.perf_counter()
+            fstate, stats, _ = pipe.run_fused(fstate, chunk)
+            jax.block_until_ready(fstate.topics)
+            dt = time.perf_counter() - t0
+            done += chunk
+            it = start_iter + done
+            if it % self.config.eval_every == 0 or done == chunk:
+                lda_state = pipe.to_lda_state(fstate)
+                score = self.evaluate(lda_state)
+                last = {k: float(np.asarray(v)[-1])
+                        for k, v in stats._asdict().items()}
+                history["iteration"].append(it)
+                history["llpt"].append(score)
+                history["tokens_per_sec"].append(
+                    self.corpus.n_tokens * chunk / dt)
+                history["stats"].append(last)
+                if log_fn:
+                    log_fn(f"iter={it:4d} llpt={score:+.4f} "
+                           f"tok/s={self.corpus.n_tokens*chunk/dt:,.0f} "
+                           f"unchanged={last.get('frac_unchanged', 0):.3f}")
+            if (checkpoint_every and self.checkpoint_manager is not None
+                    and it % checkpoint_every == 0):
+                self.checkpoint_manager.save(
+                    it, pipe.to_lda_state(fstate).host_payload())
+        return pipe.to_lda_state(fstate), history
+
     def run(self, n_iters: int, state: LDAState | None = None,
             log_fn: Callable[[str], None] | None = None,
             checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
+        if self.config.fused:
+            return self.run_fused(n_iters, state, log_fn, checkpoint_every)
         state = self.restore_or_init() if state is None else state
         history: dict[str, list] = {"iteration": [], "llpt": [],
                                     "tokens_per_sec": [], "stats": []}

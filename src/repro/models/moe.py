@@ -25,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.models import layers
 from repro.models.config import ModelConfig
+from repro.runtime.compat import shard_map as _shard_map
 from repro.runtime.sharding import constrain
 
 __all__ = ["init_moe", "moe_ffn", "router_load_stats"]
@@ -144,12 +145,14 @@ def _a2a_routed(x_loc, router, wg, wu, wd, *, cfg: ModelConfig, k: int,
     at the source in the combine. Wire = 2 × (t_mini·k·cf·d) bytes per
     shard instead of per-layer full-activation psums.
     """
-    pm = jax.lax.axis_size(model_axis)
     my = jax.lax.axis_index(model_axis)
     bl, sl, d = x_loc.shape
     t = bl * sl
     xf = x_loc.reshape(t, d)
     e_loc = wg.shape[0]
+    # static model-axis extent (jax.lax.axis_size compat): experts are
+    # sharded over the model axis, so Pm = E_pad / E_loc
+    pm = router.shape[1] // e_loc
 
     logits = xf.astype(jnp.float32) @ router               # (t, E_pad)
     logits = jnp.where(jnp.arange(logits.shape[-1]) < e_total, logits,
@@ -233,7 +236,7 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
             # §Perf C4: batch sharded over ALL axes; only the a2a moves data
             import functools as _ft
             xs = P(daxes + ("model",), None, None)
-            y = jax.shard_map(
+            y = _shard_map(
                 _ft.partial(_a2a_routed, cfg=cfg, k=k, e_total=e),
                 mesh=mesh,
                 in_specs=(xs, P(), P("model", None, None),
@@ -248,7 +251,7 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         if use_a2a:                       # §Perf C3: a2a expert parallelism
             import functools as _ft
             xs = P(daxes, "model", None)
-            y = jax.shard_map(
+            y = _shard_map(
                 _ft.partial(_a2a_routed, cfg=cfg, k=k, e_total=e),
                 mesh=mesh,
                 in_specs=(xs, P(), P("model", None, None),
@@ -272,7 +275,7 @@ def moe_ffn(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
                 return jax.lax.psum(y.reshape(bl, sl, d), "model")
 
             xs = P(daxes, None, None)
-            y = jax.shard_map(
+            y = _shard_map(
                 routed, mesh=mesh,
                 in_specs=(xs, P(), P("model", None, None),
                           P("model", None, None), P("model", None, None)),

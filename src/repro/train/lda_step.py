@@ -1,0 +1,272 @@
+"""Fused LDA training iteration: one donated dispatch, zero host syncs.
+
+Why this module exists (DESIGN notes)
+=====================================
+
+EZLDA's central observation is that converged tokens make most per-iteration
+work redundant: the three-branch skip (paper §III) removes the sampling work,
+and the same convergence heterogeneity removes most of the *update* work —
+a token that keeps its topic moves no counts. The seed trainer nevertheless
+paid, every iteration:
+
+  * several separate jit dispatches (Ŵ, phase 1, per-chunk phase 2, rebuild),
+  * one host sync (``int(n_surv)`` in three_branch.sample) to size the
+    Python chunk loop,
+  * a full O(N) histogram rebuild of D and W from scratch,
+  * an O(V·K) column reduction for Ŵ's denominator.
+
+WarpLDA's lesson is that the *whole iteration*, not just the sampler, must be
+restructured around memory behavior; SaberLDA's is that sparsity-aware
+updates are where GPU LDA time actually goes. This module applies both:
+
+``fused_step(state) -> state`` is ONE jitted, buffer-donated program that
+runs, back to back on device:
+
+  1. Ŵ from the *maintained* column sum (state.colsum, int32 — exact), so
+     the O(V·K) reduction disappears;
+  2. phase-1 skip for every token (O(g) gathers per token);
+  3. survivor compaction + phase 2 over fixed-``capacity`` chunks inside a
+     ``lax.fori_loop`` with a static chunk budget of ceil(N/capacity).
+     Chunks past the survivor tail are skipped by ``lax.cond`` — correctness
+     never depends on the budget, runtime work is ceil(survivors/capacity).
+     Phase 2 routes through the Pallas ``sample_fused`` kernel when
+     ``config.impl == "pallas"`` (unifying the formerly disjoint
+     ``impl="pallas"`` and ``sampler="three_branch"`` paths) and through the
+     dense ``exact_three_branch`` reference otherwise;
+  4. the incremental delta update: scatter −1/+1 into D/W/colsum only at
+     tokens whose topic changed (esca.delta_update_counts), instead of the
+     full rebuild. The rebuild (esca.update_counts) stays as the oracle.
+
+``run_fused(state, n_iters)`` wraps the same body in ``lax.scan``, so an
+eval-free stretch of iterations is a single dispatch that never touches the
+host — no ``int()``, no ``block_until_ready``, no per-iteration Python.
+
+Capacity planning: the survivor count is data-dependent, so chunk capacity
+is chosen from an exponential moving average of survivor counts observed in
+*previous* scans (one device→host read per scan, after it completes) and
+re-planned only between scans, with power-of-two hysteresis to bound
+recompiles. Inside the compiled region nothing ever depends on a host value.
+
+PRNG discipline matches LDATrainer.step exactly (split once per iteration,
+uniforms drawn in one (N,) batch), so with the same key the fused path
+reproduces the reference trainer's topic assignments bit for bit — pinned
+by tests/test_fused_step.py.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import esca, three_branch
+from repro.kernels import sample_fused as _fused
+from repro.kernels.runtime import resolve_interpret
+
+__all__ = ["FusedState", "FusedPipeline", "plan_capacity"]
+
+
+class FusedState(NamedTuple):
+    """LDAState + the incrementally maintained Ŵ column sum."""
+    topics: jax.Array      # (N,) int32
+    D: jax.Array           # (M, K) int32
+    W: jax.Array           # (V, K) int32
+    colsum: jax.Array      # (K,) int32 == W.sum(axis=0), kept by deltas
+    key: jax.Array         # PRNG key
+    iteration: jax.Array   # () int32
+
+
+def plan_capacity(ema_survivors: float, n_tokens: int, *,
+                  target_chunks: int = 8, floor: int = 2048) -> int:
+    """Survivor-chunk capacity from the survivor-count EMA.
+
+    Survivor compaction is ONE O(N) scatter per iteration and each chunk is
+    an O(capacity) dynamic-slice, so small chunks are cheap: aim for about
+    ``target_chunks`` active chunks, which bounds the phase-2 overshoot
+    (work beyond the true survivor count) at ~1/target_chunks. Power-of-two
+    bucketing gives hysteresis: the jit cache grows logarithmically in
+    n_tokens and small EMA wobble never recompiles.
+    """
+    want = max(float(ema_survivors) / target_chunks, float(floor))
+    cap = 1 << max(int(want) - 1, 1).bit_length()
+    return int(min(cap, n_tokens))
+
+
+class FusedPipeline:
+    """Owns the compiled fused step/scan for one (corpus, config) pair.
+
+    Built from the same padded device arrays as LDATrainer; see the module
+    docstring for the architecture.
+    """
+
+    def __init__(self, word_ids: jax.Array, doc_ids: jax.Array,
+                 mask: jax.Array, *, n_docs: int, n_words: int, config):
+        self.config = config
+        self.word_ids = word_ids
+        self.doc_ids = doc_ids
+        self.mask = mask
+        self.n_docs = n_docs
+        self.n_words = n_words
+        self.n_tokens = int(word_ids.shape[0])
+        cap = getattr(config, "survivor_capacity", None)
+        self.capacity = int(cap) if cap else self.n_tokens
+        self.capacity = min(max(self.capacity, 1), self.n_tokens)
+        # An explicitly configured capacity is pinned: the EMA replanner
+        # keeps tracking survivors but never overrides the user's knob.
+        self._capacity_pinned = cap is not None
+        self._surv_ema: float | None = None
+        self._step_cache: dict[tuple, Callable] = {}
+        self._interpret = resolve_interpret(None)
+
+    # -- state conversion --------------------------------------------------
+
+    def from_lda_state(self, state) -> FusedState:
+        """Attach the derived colsum to a trainer LDAState.
+
+        Copies the count/topic buffers: step/run_fused DONATE their input,
+        and aliasing the caller's LDAState into a donated pytree would
+        silently invalidate it. One copy per entry into the fused pipeline,
+        never per iteration.
+        """
+        colsum = jnp.sum(state.W, axis=0, dtype=jnp.int32)
+        key = jax.random.wrap_key_data(jnp.copy(
+            jax.random.key_data(state.key)))
+        return FusedState(topics=jnp.copy(state.topics),
+                          D=jnp.copy(state.D), W=jnp.copy(state.W),
+                          colsum=colsum, key=key,
+                          iteration=jnp.copy(state.iteration))
+
+    def to_lda_state(self, fstate: FusedState):
+        from repro.lda.model import LDAState
+        return LDAState(topics=fstate.topics, D=fstate.D, W=fstate.W,
+                        key=fstate.key, iteration=fstate.iteration)
+
+    # -- the fused iteration body (traced; no host interaction) ------------
+
+    def _iteration(self, fstate: FusedState, *, capacity: int):
+        cfg = self.config
+        alpha, beta, g = cfg.alpha_, cfg.beta, cfg.g
+        word_ids, doc_ids, mask = self.word_ids, self.doc_ids, self.mask
+        n = self.n_tokens
+        topics, D, W, colsum, key, iteration = fstate
+
+        key, sub = jax.random.split(key)
+        W_hat = esca.compute_w_hat_from_colsum(W, colsum, beta)
+        stats_w = three_branch.word_stats(W_hat, g=g, alpha=alpha)
+        u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
+        dec = three_branch.skip_phase(u, word_ids, doc_ids, D, stats_w,
+                                      g=g, alpha=alpha)
+        rank, n_surv = three_branch.survivor_rank(dec.skip)
+        k1_per_word = stats_w.k[:, 0]
+        n_chunks = max(1, -(-n // capacity))
+        surv_idx = three_branch.compact_survivor_indices(
+            rank, dec.skip, n_chunks * capacity)
+
+        def sample_chunk(idx):
+            u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
+            if cfg.impl == "pallas":
+                t_c, m, s, q = _fused.sample_fused(
+                    u_c, D[d_c], W_hat[v_c], alpha=alpha,
+                    interpret=self._interpret)
+                return t_c, u_c * (m + s + q) < m
+            return three_branch.exact_three_branch(
+                u_c, v_c, d_c, k1_per_word, D, W_hat,
+                alpha=alpha, tile_size=cfg.tile_size)
+
+        new_topics, in_m_acc = three_branch.run_survivor_chunks(
+            surv_idx, n_surv, dec.k1,
+            capacity=capacity, n_chunks=n_chunks, sample_chunk=sample_chunk)
+
+        # Incremental count update over COMPACTED changed tokens: semantics
+        # of esca.delta_update_counts (the oracle the tests pin), but the
+        # ±1 scatters touch ~n_changed elements instead of 2N — at steady
+        # state most tokens keep their topic, so the update task shrinks
+        # with the sampling task, which is the whole point of this module.
+        changed = (new_topics != topics) & (mask > 0)
+        rank_c = jnp.cumsum(changed) - 1
+        n_chg = (rank_c[-1] + 1).astype(jnp.int32)
+        chg_idx = three_branch.compact_survivor_indices(
+            rank_c, ~changed, n_chunks * capacity)
+
+        def upd_body(c, carry):
+            def run_chunk(carry):
+                D, W, colsum = carry
+                idx = jax.lax.dynamic_slice(chg_idx, (c * capacity,),
+                                            (capacity,))
+                w = (idx < n).astype(jnp.int32)   # sentinel slots add 0
+                d_c, v_c = doc_ids[idx], word_ids[idx]
+                old_c, new_c = topics[idx], new_topics[idx]
+                D = D.at[d_c, old_c].add(-w).at[d_c, new_c].add(w)
+                W = W.at[v_c, old_c].add(-w).at[v_c, new_c].add(w)
+                colsum = colsum.at[old_c].add(-w).at[new_c].add(w)
+                return D, W, colsum
+            return jax.lax.cond(c * capacity < n_chg, run_chunk,
+                                lambda carry: carry, carry)
+
+        D, W, colsum = jax.lax.fori_loop(0, n_chunks, upd_body,
+                                         (D, W, colsum))
+        f32 = jnp.float32
+        st = three_branch.ThreeBranchStats(
+            frac_skipped=jnp.mean(dec.skip.astype(f32)),
+            frac_m_final=jnp.mean((dec.skip | in_m_acc).astype(f32)),
+            frac_unchanged=jnp.mean((new_topics == topics).astype(f32)),
+            frac_at_max=jnp.mean((new_topics == dec.k1).astype(f32)),
+        )
+        new_state = FusedState(topics=new_topics, D=D, W=W, colsum=colsum,
+                               key=key, iteration=iteration + 1)
+        return new_state, st, n_surv
+
+    # -- compiled entry points --------------------------------------------
+
+    def _get_fn(self, n_iters: int) -> Callable:
+        """(state) -> (state, stats, n_surv) for a scan of n_iters."""
+        sig = (n_iters, self.capacity)
+        fn = self._step_cache.get(sig)
+        if fn is None:
+            capacity = self.capacity
+
+            def multi(fstate):
+                def body(carry, _):
+                    st, stats, n_surv = self._iteration(carry,
+                                                        capacity=capacity)
+                    return st, (stats, n_surv)
+                fstate, (stats, n_surv) = jax.lax.scan(
+                    body, fstate, None, length=n_iters)
+                return fstate, stats, n_surv
+
+            fn = jax.jit(multi, donate_argnums=(0,))
+            self._step_cache[sig] = fn
+        return fn
+
+    def step(self, fstate: FusedState):
+        """One fused iteration — a single donated dispatch."""
+        fstate, stats, n_surv = self._get_fn(1)(fstate)
+        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+        return fstate, squeeze(stats), squeeze(n_surv)
+
+    def run_fused(self, fstate: FusedState, n_iters: int,
+                  replan: bool = True):
+        """n_iters iterations in one dispatch (lax.scan; no host syncs).
+
+        Returns (state, stats, n_surv) with a leading (n_iters,) axis on
+        the stats/survivor leaves. With ``replan=True`` the survivor counts
+        are read back once per scan (after it completes) to update the EMA
+        and possibly re-bucket the chunk capacity for the NEXT scan.
+        """
+        fstate, stats, n_surv = self._get_fn(int(n_iters))(fstate)
+        if replan:
+            self.note_survivors(n_surv)
+        return fstate, stats, n_surv
+
+    # -- between-scan capacity planning (host side) ------------------------
+
+    def note_survivors(self, n_surv, decay: float = 0.7) -> None:
+        import numpy as np
+        vals = np.atleast_1d(np.asarray(n_surv)).astype(np.float64)
+        ema = self._surv_ema
+        for v in vals:
+            ema = float(v) if ema is None else decay * ema + (1 - decay) * v
+        self._surv_ema = ema
+        if not self._capacity_pinned:
+            self.capacity = plan_capacity(ema, self.n_tokens)

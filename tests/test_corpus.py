@@ -2,7 +2,7 @@
 index (Fig 5), chunking (§V-B), padding, balance metadata (§V-A analogue)."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import balance, inverted_index
 from repro.lda.corpus import (from_documents, relabel_by_frequency,

@@ -59,6 +59,31 @@ def test_dist_converges_and_conserves_tokens():
 
 
 @pytest.mark.slow
+def test_run_fused_matches_stepwise():
+    """The scanned run_fused (donated state, stacked stats) is bit-identical
+    to calling step() the same number of times — the multi-device analogue
+    of tests/test_fused_step.py's scan-vs-stepwise pin."""
+    out = _run("""
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256)
+    s_step = tr.init_state()
+    for _ in range(4):
+        s_step, last_stats = tr.step(s_step)
+    s_scan, stats = tr.run_fused(tr.init_state(), 4)
+    assert np.array_equal(np.asarray(s_scan.topics), np.asarray(s_step.topics))
+    assert np.array_equal(np.asarray(s_scan.D), np.asarray(s_step.D))
+    assert np.array_equal(np.asarray(s_scan.W), np.asarray(s_step.W))
+    assert int(s_scan.iteration) == 4
+    assert np.asarray(stats.frac_skipped).shape == (4,)
+    assert float(stats.frac_skipped[-1]) == float(last_stats.frac_skipped)
+    D, W = tr.gather_global(s_scan)
+    assert D.sum() == corpus.n_tokens == W.sum()
+    print("OK")
+    """)
+    assert "OK" in out
+
+
+@pytest.mark.slow
 def test_multipod_mesh_axes():
     """(pod, data, model) mesh — the multi-pod collective path lowers+runs."""
     out = _run("""

@@ -3,7 +3,7 @@ hybrid W, and the Table-I byte model direction."""
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import sparse
 from repro.lda.corpus import zipf_corpus, relabel_by_frequency

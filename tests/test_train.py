@@ -19,8 +19,8 @@ from repro.train.serve_step import make_serve_step
 
 
 def _mesh11():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.runtime.compat import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_partition_rules_cover_all_archs():
