@@ -89,6 +89,31 @@ def run_fused_bench(timeout: int = 1800) -> dict:
         return json.load(f)
 
 
+def run_hybrid_sweep(timeout: int = 1800) -> dict:
+    """d_capacity × dense_word_threshold sweep of the hybrid live state.
+
+    Records steady-state tokens/sec + measured state nbytes per cell into
+    results/BENCH_hybrid_state.json (resumable like every other cell).
+    """
+    out = os.path.join("results", "BENCH_hybrid_state.json")
+    if os.path.exists(out):
+        with open(out) as f:
+            return json.load(f)
+    code = ("import benchmarks.fused_step as b; "
+            f"b.hybrid_sweep(out_path={out!r})")
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, timeout=timeout, env=env)
+    if proc.returncode != 0 or not os.path.exists(out):
+        err = {"arch": "lda-hybrid-state", "status": "error",
+               "stderr": proc.stderr[-2000:]}
+        with open(out, "w") as f:
+            json.dump(err, f, indent=2)
+        return err
+    with open(out) as f:
+        return json.load(f)
+
+
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--mesh", choices=["single", "multi", "both"],
@@ -126,10 +151,27 @@ def main() -> int:
               f"seed={r['seed_tokens_per_sec']:,.0f} tok/s "
               f"fused={r['fused_tokens_per_sec']:,.0f} tok/s "
               f"({r['speedup']:.2f}x, syncs_in_scan="
-              f"{r['host_syncs_in_scanned_region']})", flush=True)
+              f"{r['host_syncs_in_scanned_region']}) "
+              f"hybrid={r.get('hybrid_tokens_per_sec', 0):,.0f} tok/s "
+              f"({r.get('hybrid_state_bytes', 0)}B vs "
+              f"{r.get('dense_state_bytes', 0)}B)", flush=True)
     else:
         n_err += 1
         print(f"[{time.time()-t0:7.0f}s] lda-fused-step               "
+              f"error", flush=True)
+    r = run_hybrid_sweep()
+    if "cells" in r:
+        n_ok += 1
+        best = min(r["cells"], key=lambda c: c["state_bytes"])
+        print(f"[{time.time()-t0:7.0f}s] lda-hybrid-sweep             "
+              f"{len(r['cells'])} cells; smallest state "
+              f"{best['state_bytes']}B "
+              f"({best['vs_dense_bytes']:.2f}x dense) at "
+              f"L_d={best['d_capacity']} thr={best['dense_word_threshold']} "
+              f"{best['tokens_per_sec']:,.0f} tok/s", flush=True)
+    else:
+        n_err += 1
+        print(f"[{time.time()-t0:7.0f}s] lda-hybrid-sweep             "
               f"error", flush=True)
     print(f"done: ok={n_ok} skipped={n_skip} errors={n_err}")
     return 1 if n_err else 0

@@ -10,7 +10,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from benchmarks._common import planted_corpus
 from repro.lda.model import LDAConfig

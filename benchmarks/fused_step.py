@@ -13,6 +13,12 @@ The fused stretch runs under ``jax.transfer_guard("disallow")`` — any
 device→host sync inside the scanned region would raise, which is the
 "zero per-iteration host syncs" evidence, recorded in the JSON.
 
+Also races the HYBRID live state (format="hybrid": packed-ELL D + HybridW
+through the same fused pipeline) from the same steady state, recording its
+tokens/sec ratio vs the dense fused path and the MEASURED nbytes() of both
+live states; and ``hybrid_sweep()`` sweeps d_capacity × dense_word_threshold
+into results/BENCH_hybrid_state.json.
+
 Timings are medians over repeats with the compile iteration excluded.
 Emits results/BENCH_fused_step.json (configurable via bench(out_path=...)).
 """
@@ -68,18 +74,39 @@ def bench(out_path: str = "results/BENCH_fused_step.json") -> dict:
             jax.block_until_ready(s.topics)          # the seed's host sync
         seed_ts.append(n_tok * TIMED_ITERS / (time.perf_counter() - t0))
 
-    # -- fused path: scanned stretches, sync-free inside the scan ---------
+    # -- hybrid pipeline set up FIRST: run_fused donates fs below, and
+    # state aliases its buffers (from_lda_state copies them out)
+    cfg_h = LDAConfig(n_topics=N_TOPICS, tile_size=8192,
+                      sampler="three_branch", format="hybrid")
+    tr_h = LDATrainer(corpus, cfg_h)
+    pipe_h = tr_h.fused_pipeline()
+    pipe_h.capacity = pipe.capacity              # same chunking, fair race
+    pipe_h._capacity_pinned = True
+    hs = pipe_h.from_lda_state(state)
+    hybrid_bytes = hs.nbytes()
+    dense_bytes = state.nbytes()
+
+    # -- fused dense vs hybrid live state, INTERLEAVED repeats ------------
     # (run_fused donates its input state, so each call consumes the last
-    # result — the compile call is excluded from timing)
+    # result — the compile calls are excluded from timing). Interleaving
+    # dense/hybrid stretches keeps CPU frequency drift from biasing the
+    # ratio the acceptance bound is about.
     fs_t, _, _ = pipe.run_fused(fs, TIMED_ITERS, replan=False)
     jax.block_until_ready(fs_t.topics)
-    fused_ts = []
+    hs, _, _ = pipe_h.run_fused(hs, TIMED_ITERS, replan=False)
+    jax.block_until_ready(hs.topics)
+    fused_ts, hybrid_ts = [], []
     for _ in range(REPEATS):
         t0 = time.perf_counter()
         with jax.transfer_guard("disallow"):         # proves zero syncs
             fs_t, _, _ = pipe.run_fused(fs_t, TIMED_ITERS, replan=False)
             jax.block_until_ready(fs_t.topics)
         fused_ts.append(n_tok * TIMED_ITERS / (time.perf_counter() - t0))
+        t0 = time.perf_counter()
+        with jax.transfer_guard("disallow"):         # hybrid is sync-free too
+            hs, _, _ = pipe_h.run_fused(hs, TIMED_ITERS, replan=False)
+            jax.block_until_ready(hs.topics)
+        hybrid_ts.append(n_tok * TIMED_ITERS / (time.perf_counter() - t0))
 
     result = {
         "corpus": {"docs": corpus.n_docs, "words": corpus.n_words,
@@ -91,9 +118,80 @@ def bench(out_path: str = "results/BENCH_fused_step.json") -> dict:
         "seed_tokens_per_sec": float(np.median(seed_ts)),
         "fused_tokens_per_sec": float(np.median(fused_ts)),
         "speedup": float(np.median(fused_ts) / np.median(seed_ts)),
+        "hybrid_tokens_per_sec": float(np.median(hybrid_ts)),
+        # > 1 means hybrid is SLOWER than the dense fused path by that
+        # factor; the acceptance bound is <= 1.25
+        "hybrid_slowdown_factor": float(np.median(fused_ts)
+                                        / np.median(hybrid_ts)),
+        # at-rest live-state bytes (SparseLDAState.nbytes()); each hybrid
+        # step still densifies transiently, so PEAK step memory ~= dense
+        "hybrid_state_bytes": int(hybrid_bytes),
+        "dense_state_bytes": int(dense_bytes),
         "host_syncs_in_scanned_region": 0,           # transfer_guard held
         "phase2_impl": cfg.impl,
         "survivor_capacity": pipe.capacity,
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def hybrid_sweep(out_path: str = "results/BENCH_hybrid_state.json") -> dict:
+    """Sweep d_capacity × dense_word_threshold: tokens/sec + measured nbytes.
+
+    The knobs trade state bytes against update work: a larger d_capacity
+    wastes slots (more densify/scatter traffic), a lower dense_word_threshold
+    moves words into the dense head (bytes up, packing work down). Every
+    cell trains from the SAME warmed-up state.
+    """
+    corpus = planted_corpus(n_docs=400, n_words=800, n_topics=32,
+                            mean_doc_len=100)
+    n_tok = corpus.n_tokens
+    k = N_TOPICS
+    tr0 = LDATrainer(corpus, LDAConfig(n_topics=k, tile_size=8192))
+    pipe0 = tr0.fused_pipeline()
+    fs = pipe0.from_lda_state(tr0.init_state())
+    fs, _, _ = pipe0.run_fused(fs, 40)
+    jax.block_until_ready(fs.topics)
+    state = pipe0.to_lda_state(fs)
+    d_bound = int(min(corpus.doc_lengths.max(), k))
+    dense_bytes = state.nbytes()
+    cells = []
+    # dedup: with long docs the doubled capacity can collide with k
+    d_caps = sorted({d_bound, min(2 * d_bound, k), k})
+    for d_cap in d_caps:
+        for thr in (k // 4, k // 2, None):       # None = K (paper heuristic)
+            cfg = LDAConfig(n_topics=k, tile_size=8192, format="hybrid",
+                            d_capacity=d_cap, dense_word_threshold=thr)
+            tr = LDATrainer(corpus, cfg)
+            pipe = tr.fused_pipeline()
+            pipe.capacity = pipe0.capacity
+            pipe._capacity_pinned = True
+            hs = pipe.from_lda_state(state)
+            nbytes = hs.nbytes()
+            hs, _, _ = pipe.run_fused(hs, 10, replan=False)  # compile
+            jax.block_until_ready(hs.topics)
+            t0 = time.perf_counter()
+            hs, _, _ = pipe.run_fused(hs, 10, replan=False)
+            jax.block_until_ready(hs.topics)
+            tok_s = n_tok * 10 / (time.perf_counter() - t0)
+            cells.append({
+                "d_capacity": pipe.layout.d_capacity,
+                "dense_word_threshold": thr if thr is not None else k,
+                "v_dense": pipe.layout.v_dense,
+                "tokens_per_sec": float(tok_s),
+                "state_bytes": int(nbytes),
+                "vs_dense_bytes": round(nbytes / dense_bytes, 4),
+            })
+    result = {
+        "corpus": {"docs": corpus.n_docs, "words": corpus.n_words,
+                   "tokens": n_tok},
+        "n_topics": k,
+        "d_capacity_bound": d_bound,
+        "dense_state_bytes": int(dense_bytes),
+        "cells": cells,
     }
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
@@ -113,6 +211,12 @@ def run():
     yield ("fused_step/fused_iter", round(us_fused, 1),
            f"tok_s={r['fused_tokens_per_sec']:.0f}")
     yield ("fused_step/speedup", 0, round(r["speedup"], 2))
+    yield ("fused_step/hybrid_iter", 0,
+           f"tok_s={r['hybrid_tokens_per_sec']:.0f}")
+    yield ("fused_step/hybrid_slowdown_factor", 0,
+           round(r["hybrid_slowdown_factor"], 3))
+    yield ("fused_step/hybrid_state_bytes", 0, r["hybrid_state_bytes"])
+    yield ("fused_step/dense_state_bytes", 0, r["dense_state_bytes"])
 
 
 if __name__ == "__main__":

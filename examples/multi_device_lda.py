@@ -72,6 +72,28 @@ def main():
         state2, stats = tr2.step(state2)
     print(f"iter 20: llpt={global_llpt(tr2, state2, corpus, cfg):+.4f} "
           f"skip={float(stats.frac_skipped):.2%}")
+
+    # --- hybrid live state across devices: the SAME checkpoint payload
+    # restores into per-shard packed-ELL D + a replicated HybridW whose
+    # updates ride the delta psum (model axis 1: packed slots hold global
+    # topic ids). Memory is measured from the actual buffers.
+    import dataclasses
+    cfg_h = dataclasses.replace(cfg, format="hybrid")
+    mesh8x1 = make_mesh((8, 1), ("data", "model"))
+    tr_h = DistLDATrainer(corpus, cfg_h, mesh8x1, pad_multiple=256)
+    state_h = tr_h.state_from_payload(tr2.host_payload(state2))
+    tr_d = DistLDATrainer(corpus, cfg, mesh8x1, pad_multiple=256)
+    state_d = tr_d.state_from_payload(tr2.host_payload(state2))
+    print(f"hybrid dist state: {tr_h.state_nbytes(state_h):,} B vs dense "
+          f"{tr_d.state_nbytes(state_d):,} B "
+          f"({tr_h.state_nbytes(state_h) / tr_d.state_nbytes(state_d):.2%}) "
+          f"on 8 data shards")
+    for i in range(5):
+        state_h, stats = tr_h.step(state_h)
+    D_h, W_h = tr_h.gather_global(state_h)
+    assert D_h.sum() == corpus.n_tokens == W_h.sum()
+    print(f"iter 25 (hybrid): llpt={global_llpt(tr_h, state_h, corpus, cfg):+.4f} "
+          f"skip={float(stats.frac_skipped):.2%}")
     print("OK")
 
 

@@ -21,7 +21,6 @@ Three pieces, each a TPU-shape-static adaptation of the paper's format:
 
 from __future__ import annotations
 
-import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -31,12 +30,16 @@ import numpy as np
 __all__ = [
     "pack_pairs", "unpack_pairs",
     "build_sparse_rows", "densify_rows", "sparse_lookup",
+    "pack_rows_sorted", "densify_rows_sorted",
+    "ell_lookup", "ell_sub_one", "ell_add_one", "ell_apply_deltas",
+    "ell_slot_apply",
     "BucketedSparse", "bucket_plan", "build_bucketed",
     "HybridW", "build_hybrid_w",
     "bytes_dense", "bytes_pair_csr", "bytes_bucketed", "bytes_hybrid",
 ]
 
 _VAL_MASK = jnp.int32(0xFFFF)
+EMPTY_IDX = 0xFFFF   # pad idx for sorted rows: sorts after any real column
 
 
 # ---------------------------------------------------------------------------
@@ -87,6 +90,198 @@ def sparse_lookup(packed_row: jax.Array, col: jax.Array) -> jax.Array:
     return jnp.sum(jnp.where(idx == col, val, 0))
 
 
+def pack_rows_sorted(dense: jax.Array, capacity: int):
+    """Dense (R, K) counts -> (R, capacity) packed rows SORTED by column.
+
+    Scatter-free (cumsum + searchsorted + gathers), which on XLA:CPU is an
+    order of magnitude cheaper than scatter- or top_k-based packing — this
+    is the fused pipeline's repack primitive. Empty slots pack as
+    (EMPTY_IDX, 0) so the idx fields of a row are non-decreasing with all
+    real columns first; densify_rows_sorted relies on that invariant.
+
+    Rows with more than ``capacity`` nonzeros drop their HIGHEST column
+    ids (deterministic), counted in the returned overflow tripwire —
+    impossible when capacity is the row-nnz upper bound (HybridLayout's
+    build-time guarantee).
+    """
+    n_cols = dense.shape[1]
+    pos = jnp.cumsum((dense > 0).astype(jnp.int32), axis=1)    # (R, K)
+    nnz = pos[:, -1]
+    j = jnp.arange(capacity)
+    # method: "scan" beats "scan_unrolled" in THIS direction (few queries
+    # over a long array) on XLA:CPU — measured 2×; densify_rows_sorted
+    # (many queries over a short array) wants the opposite.
+    cols = jax.vmap(lambda p: jnp.searchsorted(
+        p, j + 1, side="left", method="scan"))(pos)            # (R, L)
+    cols = jnp.minimum(cols, n_cols - 1)
+    vals = jnp.take_along_axis(dense, cols, axis=1)
+    valid = j[None, :] < nnz[:, None]
+    packed = pack_pairs(jnp.where(valid, cols, EMPTY_IDX),
+                        jnp.where(valid, vals, 0))
+    return packed, jnp.sum(jnp.maximum(nnz - capacity, 0))
+
+
+def densify_rows_sorted(packed: jax.Array, n_cols: int) -> jax.Array:
+    """Inverse of pack_rows_sorted — also scatter-free.
+
+    Requires the sorted-slot invariant (idx non-decreasing, EMPTY_IDX
+    padding); use densify_rows for arbitrary slot orders (e.g. rows
+    maintained by the ell_* incremental ops).
+    """
+    idx, val = unpack_pairs(packed)                            # (R, L)
+    k = jnp.arange(n_cols)
+    slot = jax.vmap(lambda row: jnp.searchsorted(
+        row, k, side="left", method="scan_unrolled"))(idx)     # (R, K)
+    slot = jnp.minimum(slot, idx.shape[1] - 1)
+    hit_idx = jnp.take_along_axis(idx, slot, axis=1)
+    hit_val = jnp.take_along_axis(val, slot, axis=1)
+    return jnp.where(hit_idx == k, hit_val, 0)
+
+
+# ---------------------------------------------------------------------------
+# incremental packed-ELL updates (the live-training-state ops)
+#
+# Invariants (DESIGN.md SS5): a slot is FREE iff its val field is 0 — the idx
+# bits of a freed slot are stale and ignored by every reader; a live column
+# occupies exactly ONE slot per row (build_sparse_rows starts that way, the
+# ops below preserve it). All ops are batch ops over duplicate-friendly
+# (row, col) update lists: duplicates resolve to the same slot from the same
+# pre-state gather, so their scatter contributions accumulate exactly.
+# ---------------------------------------------------------------------------
+
+def ell_lookup(packed: jax.Array, rows: jax.Array,
+               cols: jax.Array) -> jax.Array:
+    """Batched count lookup: counts of ``cols`` in packed ELL ``rows``.
+
+    packed (R, L); rows (C,); cols (C,) or (C, G). Returns int32 (C,) or
+    (C, G). One row gather serves all G columns; free slots contribute 0.
+    """
+    idx, val = unpack_pairs(packed[rows])                  # (C, L)
+    if cols.ndim == 1:
+        return jnp.sum(jnp.where(idx == cols[:, None], val, 0), axis=1)
+    out = [jnp.sum(jnp.where(idx == cols[:, g:g + 1], val, 0), axis=1)
+           for g in range(cols.shape[1])]
+    return jnp.stack(out, axis=1)
+
+
+def ell_sub_one(packed: jax.Array, rows: jax.Array, cols: jax.Array,
+                weight: jax.Array):
+    """−1 at each weighted (row, col); a slot reaching val == 0 becomes free.
+
+    ``weight`` ∈ {0, 1} gates each update (0 = no-op, for masked tokens).
+    Rows are clipped for gated entries, so out-of-range rows with weight 0
+    are safe. Returns (packed, n_missing) where n_missing counts weighted
+    updates whose column held no live slot — impossible when the packed
+    state is consistent with the topic assignments, so a nonzero value is
+    a corruption tripwire (surfaced as SparseLDAState.overflow).
+    """
+    n_rows = packed.shape[0]
+    w = weight.astype(jnp.int32)
+    rc = jnp.clip(rows, 0, n_rows - 1)
+    idx, val = unpack_pairs(packed[rc])                    # (C, L)
+    match = (idx == cols[:, None]) & (val > 0)
+    has = jnp.any(match, axis=1)
+    slot = jnp.argmax(match, axis=1)
+    wd = w * has.astype(jnp.int32)
+    missing = jnp.sum(w * (1 - has.astype(jnp.int32)))
+    # val sits in the low 16 bits and is > 0 wherever wd is 1, so the int32
+    # subtraction never borrows into the idx bits.
+    return packed.at[rc, slot].add(-wd), missing
+
+
+def ell_add_one(packed: jax.Array, rows: jax.Array, cols: jax.Array,
+                weight: jax.Array):
+    """+1 at each weighted (row, col), inserting new columns into free slots.
+
+    Existing live columns accumulate in place. Brand-new (row, col) pairs are
+    deduplicated (a stable lexicographic sort groups duplicates), and each
+    unique insert takes the rank-th free slot of its row, so concurrent
+    inserts into one row land in distinct slots. Inserts that find no free
+    slot are DROPPED and counted in the returned n_overflow — the runtime
+    escape hatch of the overflow policy (DESIGN.md SS5); with capacities at
+    the row-nnz upper bound it stays 0.
+    """
+    n_rows = packed.shape[0]
+    c = rows.shape[0]
+    w = weight.astype(jnp.int32)
+    rc = jnp.clip(rows, 0, n_rows - 1)
+    idx, val = unpack_pairs(packed[rc])                    # (C, L) pre-state
+    live = (idx == cols[:, None]) & (val > 0)
+    has = jnp.any(live, axis=1)
+    slot = jnp.argmax(live, axis=1)
+    packed = packed.at[rc, slot].add(w * has.astype(jnp.int32))
+
+    # -- inserts: dedup by (row, col), then per-row free-slot assignment ----
+    ins = (w > 0) & ~has
+    row_key = jnp.where(ins, rc, n_rows)                   # invalid sort last
+    o1 = jnp.argsort(cols)                                 # stable
+    order = o1[jnp.argsort(row_key[o1])]                   # lex (row, col)
+    rs, cs = row_key[order], cols[order]
+    ws = ins[order]
+    prev_differs = jnp.concatenate([
+        jnp.ones((1,), bool), (rs[1:] != rs[:-1]) | (cs[1:] != cs[:-1])])
+    uniq = ws & prev_differs
+    newrow = jnp.concatenate([jnp.ones((1,), bool), rs[1:] != rs[:-1]])
+    ucum = jnp.cumsum(uniq.astype(jnp.int32))              # inclusive
+    pre = ucum - uniq.astype(jnp.int32)                    # exclusive
+    # uniques-before-this-row, carried forward from each row's first entry
+    base = jax.lax.cummax(jnp.where(newrow & ws, pre, -1))
+    rank = ucum - 1 - base                                 # per-row rank
+    uix = jnp.clip(ucum - 1, 0, c - 1)                     # segment per key
+    cnt = jax.ops.segment_sum(ws.astype(jnp.int32), uix,
+                              num_segments=c)[uix]         # duplicates
+    free = (val == 0)[order]                               # (C, L); the live
+    cfree = jnp.cumsum(free.astype(jnp.int32), axis=1)     # adds above never
+    sel = free & (cfree == (rank + 1)[:, None])            # free a slot
+    okslot = jnp.any(sel, axis=1)
+    slot_ins = jnp.argmax(sel, axis=1)
+    do = uniq & okslot
+    n_overflow = jnp.sum(jnp.where(uniq & ~okslot, cnt, 0))
+    target_row = jnp.where(do, rs, n_rows)                 # non-do → dropped
+    packed = packed.at[target_row, slot_ins].set(
+        pack_pairs(cs, cnt), mode="drop")
+    return packed, n_overflow
+
+
+def ell_apply_deltas(packed: jax.Array, rows: jax.Array, old_cols: jax.Array,
+                     new_cols: jax.Array, weight: jax.Array):
+    """The ±1 topic-move update: −1 at (row, old), +1 at (row, new).
+
+    Decrements run first so a freed slot is reusable by the insert phase of
+    the same batch. Densifying the result always equals the dense scatter
+    oracle (esca.delta_update_counts) — pinned by the property tests.
+    Returns (packed, n_dropped) with n_dropped = missing + overflow.
+    """
+    packed, missing = ell_sub_one(packed, rows, old_cols, weight)
+    packed, overflow = ell_add_one(packed, rows, new_cols, weight)
+    return packed, missing + overflow
+
+
+# ---------------------------------------------------------------------------
+# matrix-shaped delta application
+#
+# The token-batch ell ops above pay O(batch × L) gathers per call; when the
+# iteration's ±1 moves have already been accumulated into a dense delta
+# matrix (one cheap scatter, exactly like the dense pipeline's update),
+# slot-apply lands the live-column part at matrix shape (O(rows × L)). The
+# fused pipeline composes this idea with a sorted repack
+# (pack_rows_sorted), which also covers inserts and frees — see
+# train/lda_step.py's HybridFusedPipeline docstring for the cost model.
+# ---------------------------------------------------------------------------
+
+def ell_slot_apply(packed: jax.Array, delta: jax.Array) -> jax.Array:
+    """Add a dense (R, K) delta to the LIVE slots of packed (R, L) rows.
+
+    Columns with no live slot are untouched (inserts need a free-slot
+    assignment — ell_add_one, or a pack_rows_sorted repack); a live slot
+    driven to 0 becomes free.
+    """
+    idx, val = unpack_pairs(packed)                        # (R, L)
+    rows = jnp.broadcast_to(jnp.arange(packed.shape[0])[:, None], idx.shape)
+    d_at = jnp.where(val > 0, delta[rows, idx], 0)
+    return packed + d_at          # low 16 bits adjust; no borrow (val+d >= 0)
+
+
 # ---------------------------------------------------------------------------
 # bucketed sparse (static-shape CSR analogue)
 # ---------------------------------------------------------------------------
@@ -112,7 +307,11 @@ def bucket_plan(row_nnz_upper: np.ndarray, max_capacity: int,
     ``row_nnz_upper`` must be non-increasing (guaranteed after frequency
     relabeling since nnz(row) <= token_count(word)).
     """
-    assert np.all(np.diff(row_nnz_upper) <= 0), "rows must be sorted by count"
+    if not np.all(np.diff(row_nnz_upper) <= 0):
+        raise ValueError(
+            "bucket_plan requires row_nnz_upper sorted non-increasing: run "
+            "corpus.relabel_by_frequency first so heavy rows get small ids "
+            "(the bucket capacities assume nnz bounds decay with row id)")
     plans: list[tuple[int, int, int]] = []
     start = 0
     n = len(row_nnz_upper)
@@ -171,7 +370,11 @@ def build_hybrid_w(W: jax.Array, word_token_counts: np.ndarray,
     a single row index.
     """
     counts = np.asarray(word_token_counts)
-    assert np.all(np.diff(counts) <= 0), "relabel_by_frequency first"
+    if not np.all(np.diff(counts) <= 0):
+        raise ValueError(
+            "build_hybrid_w requires frequency-relabeled word ids (token "
+            "counts non-increasing): call corpus.relabel_by_frequency first "
+            "so the dense/sparse split is a single row index")
     v_dense = int(np.searchsorted(-counts, -threshold, side="right"))
     K = W.shape[1]
     tail_upper = np.minimum(counts[v_dense:], K)

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import esca
-from repro.core.sparse import pack_pairs, unpack_pairs
+from repro.core.sparse import pack_pairs
 
 __all__ = [
     "WordStats", "word_stats", "SkipDecision", "skip_phase",

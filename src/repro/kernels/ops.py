@@ -22,7 +22,7 @@ from repro.kernels import sample_sparse as _sparse
 from repro.kernels.runtime import interpret_default
 
 __all__ = ["interpret_default", "sample_tokens", "update_counts",
-           "sample_tokens_sparse_d"]
+           "sample_tokens_sparse_d", "sparse_tail_draw"]
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "tile_size", "interpret"))
@@ -69,6 +69,40 @@ def sample_tokens(key, word_ids, doc_ids, old_topics, D, W_hat, *,
     return topics, stats
 
 
+def sparse_tail_draw(u, packed_rows, w_rows, k1, a1, b1, q_prime, *,
+                     alpha: float, interpret: bool | None = None):
+    """One O(L) three-branch draw per token over packed ELL D rows.
+
+    The building block shared by sample_tokens_sparse_d and the hybrid
+    fused pipeline's tail dispatch (train/lda_step.py): the Pallas
+    ``sample_sparse`` kernel covers the M and S' branches in O(L) slots,
+    then the rare Q' landings finish against α·Ŵ' via one inverse-CDF.
+    Args are per-token gathers: packed_rows (C, L); w_rows = Ŵ[word] (C, K);
+    k1/a1/b1/q_prime per-token word/doc stats. Returns (topics, needs_q,
+    in_m).
+    """
+    idx = (packed_rows.view(jnp.uint32) >> 16).astype(jnp.int32)
+    w_at = jnp.take_along_axis(w_rows, idx, axis=1)
+    topics, needs_q, s_prime = _sparse.sample_sparse(
+        u, packed_rows, w_at, k1, a1, b1, q_prime, alpha=alpha,
+        interpret=interpret)
+    # Q'-branch fallback: inverse-CDF over α·Ŵ' for flagged tokens only.
+    # Uses the kernel's own S' mass, so the fallback target is consistent
+    # with the needs_q decision (and the O(N·L) host recompute is gone).
+    k_total = w_rows.shape[1]
+    w_prime = jnp.where(
+        jnp.arange(k_total)[None, :] == k1[:, None], 0.0, w_rows)
+    m = a1 * (b1 + alpha)
+    xq = u * (m + s_prime + q_prime) - m - s_prime
+    cq = jnp.cumsum(alpha * w_prime, axis=1)
+    topic_q = jnp.minimum(
+        jax.vmap(lambda c, x: jnp.searchsorted(c, x, side="right"))(cq, xq),
+        k_total - 1).astype(jnp.int32)
+    topics = jnp.where(needs_q, topic_q, topics)
+    in_m = u * (m + s_prime + q_prime) < m
+    return topics, needs_q, in_m
+
+
 @functools.partial(jax.jit, static_argnames=(
     "alpha", "g", "interpret"))
 def sample_tokens_sparse_d(key, word_ids, doc_ids, old_topics,
@@ -90,27 +124,12 @@ def sample_tokens_sparse_d(key, word_ids, doc_ids, old_topics,
     b1 = D[doc_ids, k1].astype(jnp.float32)
     q_prime = stats_w.q_prime[word_ids]
     rows = packed_d_rows[doc_ids]                          # (N, L)
-    idx = (rows.view(jnp.uint32) >> 16).astype(jnp.int32)
-    w_at = jnp.take_along_axis(W_hat[word_ids], idx, axis=1)
-    topics, needs_q, s_prime = _sparse.sample_sparse(
-        u, rows, w_at, k1, a1, b1, q_prime, alpha=alpha, interpret=interpret)
-    # Q'-branch fallback: inverse-CDF over α·Ŵ' for flagged tokens only.
-    # Uses the kernel's own S' mass, so the fallback target is consistent
-    # with the needs_q decision (and the O(N·L) host recompute is gone).
-    w_rows = W_hat[word_ids]
-    w_prime = jnp.where(
-        jnp.arange(W_hat.shape[1])[None, :] == k1[:, None], 0.0, w_rows)
-    m = a1 * (b1 + alpha)
-    xq = u * (m + s_prime + q_prime) - m - s_prime
-    cq = jnp.cumsum(alpha * w_prime, axis=1)
-    topic_q = jnp.minimum(
-        jax.vmap(lambda c, x: jnp.searchsorted(c, x, side="right"))(cq, xq),
-        W_hat.shape[1] - 1).astype(jnp.int32)
-    topics = jnp.where(needs_q, topic_q, topics)
     # Real per-branch fractions from the kernel outputs: the M branch is
     # x < M (exact masses, no estimate phase in this path), the Q' branch is
     # the kernel's needs_q flag, and frac_at_max comes from the final topics.
-    in_m = u * (m + s_prime + q_prime) < m
+    topics, needs_q, in_m = sparse_tail_draw(
+        u, rows, W_hat[word_ids], k1, a1, b1, q_prime, alpha=alpha,
+        interpret=interpret)
     stats = three_branch.ThreeBranchStats(
         frac_skipped=jnp.mean(in_m.astype(jnp.float32)),  # kernel = exact path
         frac_m_final=jnp.mean(in_m.astype(jnp.float32)),

@@ -1,9 +1,11 @@
 from repro.lda.corpus import (Corpus, from_documents, relabel_by_frequency,
                               synthetic_lda_corpus, zipf_corpus,
                               chunk_documents, pad_corpus)
-from repro.lda.model import LDAConfig, LDAState
+from repro.lda.model import (LDAConfig, LDAState, SparseLDAState,
+                             HybridLayout)
 from repro.lda.trainer import LDATrainer
 
 __all__ = ["Corpus", "from_documents", "relabel_by_frequency",
            "synthetic_lda_corpus", "zipf_corpus", "chunk_documents",
-           "pad_corpus", "LDAConfig", "LDAState", "LDATrainer"]
+           "pad_corpus", "LDAConfig", "LDAState", "SparseLDAState",
+           "HybridLayout", "LDATrainer"]

@@ -39,13 +39,14 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.core import three_branch
+from repro.core import sparse, three_branch
 from repro.lda.corpus import Corpus, chunk_documents
-from repro.lda.model import LDAConfig
+from repro.lda.model import HybridLayout, LDAConfig
 from repro.runtime.compat import shard_map as _shard_map
 from repro.runtime.sharding import batch_axes
 
-__all__ = ["ShardedCorpus", "shard_corpus", "DistLDAState", "DistLDATrainer"]
+__all__ = ["ShardedCorpus", "shard_corpus", "DistLDAState",
+           "DistHybridState", "DistLDATrainer"]
 
 
 # ---------------------------------------------------------------------------
@@ -132,22 +133,64 @@ class DistLDAState:
     iteration: jax.Array
 
 
+@functools.partial(jax.tree_util.register_dataclass,
+                   data_fields=["topics", "D", "W_head", "W_tail",
+                                "overflow", "key", "iteration"],
+                   meta_fields=[])
+@dataclasses.dataclass(frozen=True)
+class DistHybridState:
+    """Hybrid-format multi-device state (config.format == "hybrid").
+
+    The per-shard D chunk is packed ELL (the shard owns its documents, so
+    its rows pack independently); HybridW is REPLICATED over the data axes
+    and maintained by the paper's §V-B sum+broadcast, carried as a delta
+    psum that lands back in the packed layout each iteration. Topic-axis
+    model parallelism is dense-format-only (packed slots hold global topic
+    ids, which do not block-partition), so the model mesh axis must be 1.
+    ``overflow`` is the global (psum'd) count of packed updates any shard
+    could not place — the same corruption tripwire as
+    SparseLDAState.overflow, 0 by the capacity-bound construction.
+    """
+    topics: jax.Array               # (S, N_loc) int32, data-sharded
+    D: jax.Array                    # (S, M_loc, L) int32 packed ELL
+    W_head: jax.Array               # (V_dense, K) int32, replicated
+    W_tail: tuple[jax.Array, ...]   # packed tail buckets, replicated
+    overflow: jax.Array             # () int32, replicated tripwire
+    key: jax.Array
+    iteration: jax.Array
+
+
 # ---------------------------------------------------------------------------
 # the per-shard step (runs inside shard_map)
 # ---------------------------------------------------------------------------
 
-def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
+def _dist_step(word_ids, doc_ids, mask, state, *,
                cfg: LDAConfig, data_axes: tuple[str, ...], model_axis: str,
-               n_words: int, m_local: int, g: int):
+               n_words: int, m_local: int, g: int,
+               layout: HybridLayout | None = None):
     """One EZLDA iteration for one (data, model) shard.
 
     Inputs arrive with the shard axes stripped: word_ids (1, N_loc),
-    D (1, M_loc, K_loc), W (V, K_loc) where K_loc = K / P_model.
+    D (1, M_loc, K_loc), W (V, K_loc) where K_loc = K / P_model. With
+    ``layout`` set (hybrid format, model axis = 1) the state carries packed
+    D rows and HybridW; the sampling sweep densifies the gathered per-token
+    rows (exact integers, so the trajectory is bit-equal to the dense
+    format) and the update lands back in the packed layout.
     """
     word_ids, doc_ids, mask = word_ids[0], doc_ids[0], mask[0]
     topics = state.topics[0]
-    D = state.D[0]
-    W = state.W
+    if layout is None:
+        D = state.D[0]
+        W = state.W
+        d_tok = D[doc_ids]                                # (N, K_loc)
+        len_rows = jnp.sum(D, axis=-1, dtype=jnp.float32)   # (M_loc,)
+    else:
+        d_packed = state.D[0]                             # (M_loc, L)
+        W = layout.densify_w(state.W_head, state.W_tail)  # (V, K) exact
+        d_tok = sparse.densify_rows(d_packed[doc_ids], layout.n_topics)
+        # per-doc length from the packed val fields: O(M_loc·L), exact ints
+        len_rows = jnp.sum(sparse.unpack_pairs(d_packed)[1],
+                           axis=-1).astype(jnp.float32)
     k_local = W.shape[1]
     my = jax.lax.axis_index(model_axis)
     kb0 = my * k_local
@@ -183,11 +226,10 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
     in_blk = (rel >= 0) & (rel < k_local)
     b_loc = jnp.where(
         in_blk,
-        jnp.take_along_axis(D[doc_ids], jnp.clip(rel, 0, k_local - 1),
+        jnp.take_along_axis(d_tok, jnp.clip(rel, 0, k_local - 1),
                             axis=1), 0).astype(jnp.float32)
     b = jax.lax.psum(b_loc, model_axis)                   # (N, g)
-    len_d = jax.lax.psum(
-        jnp.sum(D, axis=-1, dtype=jnp.float32), model_axis)[doc_ids]
+    len_d = jax.lax.psum(len_rows, model_axis)[doc_ids]
     m_mass = a[:, 0] * (b[:, 0] + alpha)                  # Eq 8
     head = jnp.sum(a[:, 1:g] * b[:, 1:g], axis=-1)
     s_est = head + a[:, g] * (len_d - jnp.sum(b, axis=-1))
@@ -196,7 +238,7 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
     k1 = g_idx[word_ids][:, 0]
 
     # --- phase 2: two-level inverse-CDF over model shards (combined sweep)
-    d_rows = D[doc_ids].astype(jnp.float32)               # (N, K_loc)
+    d_rows = d_tok.astype(jnp.float32)                    # (N, K_loc)
     w_rows = W_hat[word_ids]                              # (N, K_loc)
     k_global = kb0 + jnp.arange(k_local)[None, :]
     mass = jnp.where(k_global == k1[:, None], 0.0,
@@ -236,11 +278,27 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
 
     old_rel, w_old = _blk(topics)
     t_rel, w_new = _blk(new_topics)
-    D_new = D.at[doc_ids, old_rel].add(-w_old).at[doc_ids, t_rel].add(w_new)
     dW_local = jnp.zeros((n_words, k_local), jnp.int32
                          ).at[word_ids, old_rel].add(-w_old
                          ).at[word_ids, t_rel].add(w_new)
-    W_new = W + jax.lax.psum(dW_local, data_axes)         # delta all-reduce
+    dW = jax.lax.psum(dW_local, data_axes)                # delta all-reduce
+    if layout is None:
+        D_new = D.at[doc_ids, old_rel].add(-w_old) \
+                 .at[doc_ids, t_rel].add(w_new)
+        W_new = W + dW
+    else:
+        # Packed per-shard D: topic moves land as ±1 slot updates (changed
+        # tokens only — unchanged tokens are a no-op in both layouts). The
+        # drop count psums into the replicated overflow tripwire.
+        chg = wgt * (topics != new_topics).astype(jnp.int32)
+        D_new, drop = sparse.ell_apply_deltas(
+            d_packed, doc_ids, topics, new_topics, chg)
+        overflow = state.overflow + jax.lax.psum(drop, data_axes)
+        # Replicated HybridW: the identical psum'd delta lands on every
+        # data shard; the tail repacks from the updated dense rows (exact —
+        # bucket capacities are nnz upper bounds, so top_k loses nothing).
+        w_full = W + dW
+        w_head_new, w_tail_new = layout.split_w(w_full)
 
     fmask = mask.astype(jnp.float32)
     denom = jax.lax.psum(jnp.sum(fmask), data_axes)
@@ -253,9 +311,15 @@ def _dist_step(word_ids, doc_ids, mask, state: DistLDAState, *,
         frac_at_max=_avg((new_topics == k1).astype(jnp.float32)),
         frac_q_branch=jnp.float32(0.0),   # combined sweep: not attributed
     )
-    new_state = DistLDAState(
-        topics=new_topics[None], D=D_new[None], W=W_new,
-        key=state.key, iteration=state.iteration + 1)
+    if layout is None:
+        new_state = DistLDAState(
+            topics=new_topics[None], D=D_new[None], W=W_new,
+            key=state.key, iteration=state.iteration + 1)
+    else:
+        new_state = DistHybridState(
+            topics=new_topics[None], D=D_new[None], W_head=w_head_new,
+            W_tail=w_tail_new, overflow=overflow, key=state.key,
+            iteration=state.iteration + 1)
     return new_state, stats
 
 
@@ -279,21 +343,40 @@ class DistLDATrainer:
         self.data_axes = batch_axes(mesh)
         self.pm = mesh.shape["model"]
         assert config.n_topics % self.pm == 0
+        self.layout = None
+        if config.format == "hybrid":
+            if self.pm != 1:
+                raise ValueError(
+                    "format='hybrid' needs a model mesh axis of size 1: "
+                    "packed ELL slots store GLOBAL topic ids, which do not "
+                    "block-partition over the topic axis. Use a pure "
+                    "data-parallel mesh (the paper's §V-B scheme) or "
+                    "format='dense' for topic-axis model parallelism")
+            self.layout = HybridLayout.build(corpus, config)
         n_data = int(np.prod([mesh.shape[a] for a in self.data_axes]))
         self.sc = shard_corpus(corpus, n_data, pad_multiple)
         self.corpus = corpus
 
         daxes = self.data_axes
         tok_spec = P(daxes)
-        self.state_specs = DistLDAState(
-            topics=tok_spec,
-            D=P(daxes, None, "model"),
-            W=P(None, "model"),
-            key=P(), iteration=P())
+        if self.layout is None:
+            self.state_specs = DistLDAState(
+                topics=tok_spec,
+                D=P(daxes, None, "model"),
+                W=P(None, "model"),
+                key=P(), iteration=P())
+        else:
+            self.state_specs = DistHybridState(
+                topics=tok_spec,
+                D=P(daxes, None, None),
+                W_head=P(None, None),
+                W_tail=tuple(P(None, None) for _ in self.layout.tail_caps),
+                overflow=P(), key=P(), iteration=P())
         stats_spec = three_branch.ThreeBranchStats(P(), P(), P(), P(), P())
         step = functools.partial(
             _dist_step, cfg=config, data_axes=daxes, model_axis="model",
-            n_words=corpus.n_words, m_local=self.sc.m_local, g=config.g)
+            n_words=corpus.n_words, m_local=self.sc.m_local, g=config.g,
+            layout=self.layout)
         self._sm_step = _shard_map(
             step, mesh=mesh,
             in_specs=(tok_spec, tok_spec, tok_spec, self.state_specs),
@@ -307,7 +390,31 @@ class DistLDATrainer:
         self.doc_ids = jax.device_put(jnp.asarray(self.sc.doc_ids), dev)
         self.mask = jax.device_put(jnp.asarray(self.sc.mask), dev)
 
-    def init_state(self) -> DistLDAState:
+    def _device_state(self, topics, D, W, key, iteration):
+        """Place (dense host counts, topics) as the configured state format."""
+        put = lambda x, spec: jax.device_put(
+            jnp.asarray(x), NamedSharding(self.mesh, spec))
+        if self.layout is None:
+            return DistLDAState(
+                topics=put(topics, P(self.data_axes)),
+                D=put(D, P(self.data_axes, None, "model")),
+                W=put(W, P(None, "model")),
+                key=key, iteration=iteration)
+        lay = self.layout
+        s_n, m_loc = self.sc.n_shards, self.sc.m_local
+        d_flat = jnp.asarray(np.asarray(D).reshape(s_n * m_loc, -1))
+        d_packed = sparse.build_sparse_rows(d_flat, lay.d_capacity) \
+            .reshape(s_n, m_loc, lay.d_capacity)
+        w_head, w_tail = lay.split_w(jnp.asarray(W))
+        return DistHybridState(
+            topics=put(topics, P(self.data_axes)),
+            D=put(d_packed, P(self.data_axes, None, None)),
+            W_head=put(w_head, P(None, None)),
+            W_tail=tuple(put(b, P(None, None)) for b in w_tail),
+            overflow=put(jnp.int32(0), P()),
+            key=key, iteration=iteration)
+
+    def init_state(self):
         cfg = self.cfg
         key = jax.random.PRNGKey(cfg.seed)
         topics = jax.random.randint(
@@ -321,13 +428,7 @@ class DistLDATrainer:
             sel = self.sc.mask[s] > 0
             np.add.at(D[s], (self.sc.doc_ids[s][sel], t_np[s][sel]), 1)
             np.add.at(W, (self.sc.word_ids[s][sel], t_np[s][sel]), 1)
-        put = lambda x, spec: jax.device_put(
-            jnp.asarray(x), NamedSharding(self.mesh, spec))
-        return DistLDAState(
-            topics=put(topics, P(self.data_axes)),
-            D=put(D, P(self.data_axes, None, "model")),
-            W=put(W, P(None, "model")),
-            key=key, iteration=jnp.int32(0))
+        return self._device_state(topics, D, W, key, jnp.int32(0))
 
     def step(self, state: DistLDAState):
         return self._step(self.word_ids, self.doc_ids, self.mask, state)
@@ -369,7 +470,7 @@ class DistLDATrainer:
                 "key": np.asarray(jax.random.key_data(state.key)),
                 "iteration": int(state.iteration)}
 
-    def state_from_payload(self, payload: dict) -> DistLDAState:
+    def state_from_payload(self, payload: dict):
         tg = np.asarray(payload["topics_global"], np.int32)
         assert tg.shape[0] == self.corpus.n_tokens
         S, K = self.sc.n_shards, self.cfg.n_topics
@@ -383,19 +484,30 @@ class DistLDATrainer:
             sel = self.sc.mask[s] > 0
             np.add.at(D[s], (self.sc.doc_ids[s][sel], topics[s][sel]), 1)
             np.add.at(W, (self.sc.word_ids[s][sel], topics[s][sel]), 1)
-        put = lambda x, spec: jax.device_put(
-            jnp.asarray(x), NamedSharding(self.mesh, spec))
         key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
-        return DistLDAState(
-            topics=put(topics, P(self.data_axes)),
-            D=put(D, P(self.data_axes, None, "model")),
-            W=put(W, P(None, "model")),
-            key=key, iteration=jnp.int32(payload["iteration"]))
+        return self._device_state(topics, D, W, key,
+                                  jnp.int32(payload["iteration"]))
 
-    def gather_global(self, state: DistLDAState):
+    def state_nbytes(self, state) -> int:
+        """Measured live count-state bytes (all shards' D + the W replica)."""
+        if self.layout is None:
+            return int(state.D.size + state.W.size) * 4
+        total = int(state.D.size + state.W_head.size)
+        total += sum(int(b.size) for b in state.W_tail)
+        return total * 4
+
+    def gather_global(self, state):
         """Global (D, W) count matrices for eval/parity checks."""
-        W = np.asarray(state.W)
-        D_sh = np.asarray(state.D)
+        if self.layout is None:
+            W = np.asarray(state.W)
+            D_sh = np.asarray(state.D)
+        else:
+            lay = self.layout
+            W = np.asarray(lay.densify_w(state.W_head, state.W_tail))
+            s_n, m_loc = self.sc.n_shards, self.sc.m_local
+            flat = jnp.asarray(state.D).reshape(s_n * m_loc, -1)
+            D_sh = np.asarray(sparse.densify_rows(flat, lay.n_topics)) \
+                .reshape(s_n, m_loc, lay.n_topics)
         K = W.shape[1]
         D = np.zeros((self.corpus.n_docs, K), np.int64)
         for s in range(self.sc.n_shards):

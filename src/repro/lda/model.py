@@ -1,4 +1,4 @@
-"""LDA configuration and training state."""
+"""LDA configuration and training state (dense and hybrid-sparse layouts)."""
 
 from __future__ import annotations
 
@@ -6,9 +6,12 @@ import dataclasses
 from typing import Any, NamedTuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["LDAConfig", "LDAState"]
+from repro.core import sparse
+
+__all__ = ["LDAConfig", "LDAState", "SparseLDAState", "HybridLayout"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -20,7 +23,9 @@ class LDAConfig:
     impl: str = "xla"                # "xla" | "pallas"
     g: int = 2                       # Eq 10 tail-bound terms (paper uses 2)
     tile_size: int = 8192            # token tile (balance.py); pow2
-    d_capacity: int | None = None    # bucketed-sparse D row capacity; None=auto
+    format: str = "dense"            # live-state layout: "dense" | "hybrid"
+    tail_sampler: str = "exact"      # hybrid tail phase-2: "exact" | "sparse"
+    d_capacity: int | None = None    # packed-ELL D row capacity; None=auto
     survivor_capacity: int | None = None  # phase-2 chunk size; None=reference
     dense_word_threshold: int | None = None  # tokens>=thr => dense W row; None=K (paper)
     fused: bool = False              # route run() through train/lda_step.py
@@ -40,7 +45,7 @@ class LDAConfig:
 
 
 class LDAState(NamedTuple):
-    """Device-resident training state.
+    """Device-resident training state, dense layout.
 
     D and W are *derived* from (corpus, topics); checkpoints persist only
     topics + rng + iteration, which makes restore elastic (DESIGN.md SS6).
@@ -57,3 +62,143 @@ class LDAState(NamedTuple):
             "key": np.asarray(jax.random.key_data(self.key)),
             "iteration": int(self.iteration),
         }
+
+    def nbytes(self) -> int:
+        """Measured live count-state bytes (D + W buffers)."""
+        return int(self.D.size + self.W.size) * 4
+
+
+class SparseLDAState(NamedTuple):
+    """Device-resident training state, hybrid sparse layout (DESIGN.md SS5).
+
+    D rows are packed ELL (topic<<16 | count per slot, SS IV-B pair
+    packing); W splits into a dense head (frequent words) and a bucketed
+    packed tail (HybridW made live). The Ŵ column sum rides along so Ŵ's
+    denominator never needs the densified W. ``overflow`` counts ±1 updates
+    the packed formats could not place — 0 by construction when capacities
+    respect the row-nnz upper bounds (the overflow policy's tripwire).
+
+    Checkpoint payloads stay topics + rng + iteration: both layouts restore
+    from the same payload because the counts are derived state.
+    """
+    topics: jax.Array                 # (N,) int32
+    D: jax.Array                      # (M, L_d) int32 packed ELL
+    W_head: jax.Array                 # (V_dense, K) int32 dense head
+    W_tail: tuple[jax.Array, ...]     # packed ELL buckets, decaying capacity
+    colsum: jax.Array                 # (K,) int32 == Σ_v W[v][k]
+    overflow: jax.Array               # () int32 dropped-update tripwire
+    key: jax.Array                    # PRNG key
+    iteration: jax.Array              # () int32
+
+    def host_payload(self) -> dict[str, Any]:
+        return {
+            "topics": np.asarray(self.topics),
+            "key": np.asarray(jax.random.key_data(self.key)),
+            "iteration": int(self.iteration),
+        }
+
+    def nbytes(self) -> int:
+        """Measured live count-state bytes (packed D + hybrid W + colsum)."""
+        total = int(self.D.size + self.W_head.size + self.colsum.size)
+        total += sum(int(b.size) for b in self.W_tail)
+        return total * 4
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridLayout:
+    """Static shape plan for the hybrid live state (built once per corpus).
+
+    Capacities are row-nnz UPPER BOUNDS, which is the overflow policy
+    (DESIGN.md SS5): a D row holds at most min(doc_len, K) distinct topics
+    and a tail W row at most min(token_count, K), so sizing slots at those
+    bounds makes overflow impossible; a pinned ``d_capacity`` below the
+    bound is rejected here (fail at build, never corrupt at runtime).
+    """
+    n_topics: int
+    n_docs: int
+    n_words: int
+    d_capacity: int                   # uniform packed-ELL D row slots
+    v_dense: int                      # words [0, v_dense) keep dense W rows
+    tail_starts: tuple[int, ...]      # absolute word-id start per bucket
+    tail_caps: tuple[int, ...]        # slots per row, halving per bucket
+
+    @classmethod
+    def build(cls, corpus, config: LDAConfig) -> "HybridLayout":
+        counts = np.asarray(corpus.word_token_counts)
+        if counts.size and not np.all(np.diff(counts) <= 0):
+            raise ValueError(
+                "format='hybrid' requires a frequency-relabeled corpus "
+                "(word token counts non-increasing): call "
+                "corpus.relabel_by_frequency before building the trainer")
+        k = config.n_topics
+        d_bound = int(min(max(int(corpus.doc_lengths.max(initial=1)), 1), k))
+        if config.d_capacity is None:
+            d_cap = d_bound
+        else:
+            d_cap = int(config.d_capacity)
+            if d_cap < d_bound:
+                raise ValueError(
+                    f"d_capacity={d_cap} is below the D row-nnz upper bound "
+                    f"min(max_doc_len, K)={d_bound}; such rows would "
+                    "overflow their ELL slots and break bit-exactness. "
+                    "Raise d_capacity (or leave it None for the auto bound)")
+            d_cap = min(d_cap, k)
+        thr = max(int(config.dense_threshold_), 1)
+        v_dense = int(np.searchsorted(-counts, -thr, side="right"))
+        tail_upper = np.minimum(counts[v_dense:], k)
+        starts: list[int] = []
+        caps: list[int] = []
+        if len(tail_upper):
+            plans = sparse.bucket_plan(tail_upper,
+                                       max_capacity=int(min(thr, k)))
+            for (s, _e, cap) in plans:
+                starts.append(v_dense + s)
+                caps.append(int(min(cap, k)))
+        return cls(n_topics=k, n_docs=corpus.n_docs, n_words=corpus.n_words,
+                   d_capacity=d_cap, v_dense=v_dense,
+                   tail_starts=tuple(starts), tail_caps=tuple(caps))
+
+    # -- conversions (dense <-> hybrid) ------------------------------------
+
+    def pack_d(self, D: jax.Array) -> jax.Array:
+        """(M, K) -> (M, L) packed, sorted-slot invariant (scatter-free)."""
+        packed, _ = sparse.pack_rows_sorted(D, self.d_capacity)
+        return packed
+
+    def split_w(self, W: jax.Array):
+        """Dense (V, K) W -> (dense head, packed tail buckets, sorted)."""
+        head = W[:self.v_dense]
+        tail = []
+        for b, start in enumerate(self.tail_starts):
+            end = self.tail_starts[b + 1] if b + 1 < len(self.tail_starts) \
+                else self.n_words
+            packed, _ = sparse.pack_rows_sorted(W[start:end],
+                                                self.tail_caps[b])
+            tail.append(packed)
+        return head, tuple(tail)
+
+    def densify_w(self, w_head: jax.Array,
+                  w_tail: tuple[jax.Array, ...]) -> jax.Array:
+        """(head, tail buckets) -> dense (V, K) int32 — exact (integers)."""
+        parts = [w_head]
+        for b in w_tail:
+            parts.append(sparse.densify_rows(b, self.n_topics))
+        return jnp.concatenate(parts, axis=0) if len(parts) > 1 else w_head
+
+    def to_sparse(self, state: LDAState) -> SparseLDAState:
+        w_head, w_tail = self.split_w(state.W)
+        colsum = jnp.sum(state.W, axis=0, dtype=jnp.int32)
+        key = jax.random.wrap_key_data(jnp.copy(
+            jax.random.key_data(state.key)))
+        return SparseLDAState(
+            topics=jnp.copy(state.topics), D=self.pack_d(state.D),
+            W_head=w_head, W_tail=w_tail, colsum=colsum,
+            overflow=jnp.int32(0), key=key,
+            iteration=jnp.copy(state.iteration))
+
+    def to_dense(self, state: SparseLDAState) -> LDAState:
+        return LDAState(
+            topics=state.topics,
+            D=sparse.densify_rows(state.D, self.n_topics),
+            W=self.densify_w(state.W_head, state.W_tail),
+            key=state.key, iteration=state.iteration)

@@ -35,6 +35,12 @@ class LDATrainer:
     def __init__(self, corpus: Corpus, config: LDAConfig,
                  checkpoint_manager: Any | None = None):
         corpus.validate()
+        if config.format not in ("dense", "hybrid"):
+            raise ValueError(f"unknown state format {config.format!r}: "
+                             "expected 'dense' or 'hybrid'")
+        if config.tail_sampler not in ("exact", "sparse"):
+            raise ValueError(f"unknown tail_sampler {config.tail_sampler!r}: "
+                             "expected 'exact' or 'sparse'")
         self.config = config
         self.corpus = corpus
         padded, mask = pad_corpus(corpus, config.tile_size)
@@ -122,13 +128,37 @@ class LDATrainer:
         return new_state, dict(stats._asdict())
 
     def fused_pipeline(self):
-        """Lazily built train/lda_step.FusedPipeline over this corpus."""
+        """Lazily built fused pipeline (dense or hybrid, per config.format).
+
+        Both expose the same surface (from_lda_state/to_lda_state/step/
+        run_fused); with ``format="hybrid"`` the live training state between
+        dispatches is the packed SparseLDAState instead of dense D/W.
+        """
         if self._fused_pipeline is None:
-            from repro.train.lda_step import FusedPipeline
-            self._fused_pipeline = FusedPipeline(
-                self.word_ids, self.doc_ids, self.mask,
-                n_docs=self.n_docs, n_words=self.n_words, config=self.config)
+            from repro.train.lda_step import (FusedPipeline,
+                                              HybridFusedPipeline)
+            if self.config.format == "hybrid":
+                self._fused_pipeline = HybridFusedPipeline(
+                    self.word_ids, self.doc_ids, self.mask,
+                    n_docs=self.n_docs, n_words=self.n_words,
+                    config=self.config, corpus=self.corpus)
+            else:
+                self._fused_pipeline = FusedPipeline(
+                    self.word_ids, self.doc_ids, self.mask,
+                    n_docs=self.n_docs, n_words=self.n_words,
+                    config=self.config)
         return self._fused_pipeline
+
+    def live_state_nbytes(self, state: LDAState) -> int:
+        """Measured count-state bytes of the LIVE training representation.
+
+        For format="hybrid" this converts through the pipeline's layout and
+        measures the actual packed buffers (what Table I now reports),
+        not an analytic byte model.
+        """
+        if self.config.format == "hybrid":
+            return self.fused_pipeline().from_lda_state(state).nbytes()
+        return state.nbytes()
 
     def evaluate(self, state: LDAState) -> float:
         return float(llpt_mod.llpt(
@@ -199,7 +229,9 @@ class LDATrainer:
     def run(self, n_iters: int, state: LDAState | None = None,
             log_fn: Callable[[str], None] | None = None,
             checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
-        if self.config.fused:
+        # The hybrid live state only exists inside the fused pipeline; the
+        # per-iteration step() stays the dense semantics oracle.
+        if self.config.fused or self.config.format == "hybrid":
             return self.run_fused(n_iters, state, log_fn, checkpoint_every)
         state = self.restore_or_init() if state is None else state
         history: dict[str, list] = {"iteration": [], "llpt": [],

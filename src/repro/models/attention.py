@@ -18,7 +18,6 @@ Memory discipline is the whole design here:
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -41,6 +41,12 @@ runs, back to back on device:
 eval-free stretch of iterations is a single dispatch that never touches the
 host — no ``int()``, no ``block_until_ready``, no per-iteration Python.
 
+``HybridFusedPipeline`` runs the same architecture over the hybrid sparse
+live state (SparseLDAState: packed-ELL D + HybridW, DESIGN.md SS5) —
+selected by ``LDAConfig.format == "hybrid"`` — with the phase-2 sampler
+dispatched by the T partition and the delta updates landing in the packed
+formats.
+
 Capacity planning: the survivor count is data-dependent, so chunk capacity
 is chosen from an exponential moving average of survivor counts observed in
 *previous* scans (one device→host read per scan, after it completes) and
@@ -59,12 +65,15 @@ from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core import esca, three_branch
+from repro.core import esca, sparse, three_branch
+from repro.kernels import ops as kops
 from repro.kernels import sample_fused as _fused
 from repro.kernels.runtime import resolve_interpret
 
-__all__ = ["FusedState", "FusedPipeline", "plan_capacity"]
+__all__ = ["FusedState", "FusedPipeline", "HybridFusedPipeline",
+           "plan_capacity"]
 
 
 class FusedState(NamedTuple):
@@ -75,6 +84,56 @@ class FusedState(NamedTuple):
     colsum: jax.Array      # (K,) int32 == W.sum(axis=0), kept by deltas
     key: jax.Array         # PRNG key
     iteration: jax.Array   # () int32
+
+
+def scatter_changed_deltas(topics, new_topics, doc_ids, word_ids, mask, *,
+                           capacity: int, D, W, colsum):
+    """±1 scatters at the CHANGED tokens only, over compacted chunks.
+
+    The shared update engine of both pipelines: semantics of
+    esca.delta_update_counts (the oracle the tests pin), but the scatters
+    touch ~n_changed elements instead of 2N — at steady state most tokens
+    keep their topic, so the update task shrinks with the sampling task.
+    ``D``/``W`` may be the live count matrices (dense pipeline) or zero
+    delta matrices destined for a packed repack (hybrid pipeline); the
+    chunk bodies are cond-guarded so chunks past the changed-token tail
+    cost one predicate.
+    """
+    n = topics.shape[0]
+    changed = (new_topics != topics) & (mask > 0)
+    rank_c = jnp.cumsum(changed) - 1
+    n_chg = (rank_c[-1] + 1).astype(jnp.int32)
+    n_chunks = max(1, -(-n // capacity))
+    chg_idx = three_branch.compact_survivor_indices(
+        rank_c, ~changed, n_chunks * capacity)
+
+    def upd_body(c, carry):
+        def run_chunk(carry):
+            D, W, colsum = carry
+            idx = jax.lax.dynamic_slice(chg_idx, (c * capacity,),
+                                        (capacity,))
+            w = (idx < n).astype(jnp.int32)   # sentinel slots add 0
+            d_c, v_c = doc_ids[idx], word_ids[idx]
+            old_c, new_c = topics[idx], new_topics[idx]
+            D = D.at[d_c, old_c].add(-w).at[d_c, new_c].add(w)
+            W = W.at[v_c, old_c].add(-w).at[v_c, new_c].add(w)
+            colsum = colsum.at[old_c].add(-w).at[new_c].add(w)
+            return D, W, colsum
+        return jax.lax.cond(c * capacity < n_chg, run_chunk,
+                            lambda carry: carry, carry)
+
+    return jax.lax.fori_loop(0, n_chunks, upd_body, (D, W, colsum))
+
+
+def branch_stats(skip, in_m_acc, new_topics, old_topics, k1):
+    """The ThreeBranchStats both pipelines report (Fig 12 fractions)."""
+    f32 = jnp.float32
+    return three_branch.ThreeBranchStats(
+        frac_skipped=jnp.mean(skip.astype(f32)),
+        frac_m_final=jnp.mean((skip | in_m_acc).astype(f32)),
+        frac_unchanged=jnp.mean((new_topics == old_topics).astype(f32)),
+        frac_at_max=jnp.mean((new_topics == k1).astype(f32)),
+    )
 
 
 def plan_capacity(ema_survivors: float, n_tokens: int, *,
@@ -178,41 +237,12 @@ class FusedPipeline:
             surv_idx, n_surv, dec.k1,
             capacity=capacity, n_chunks=n_chunks, sample_chunk=sample_chunk)
 
-        # Incremental count update over COMPACTED changed tokens: semantics
-        # of esca.delta_update_counts (the oracle the tests pin), but the
-        # ±1 scatters touch ~n_changed elements instead of 2N — at steady
-        # state most tokens keep their topic, so the update task shrinks
-        # with the sampling task, which is the whole point of this module.
-        changed = (new_topics != topics) & (mask > 0)
-        rank_c = jnp.cumsum(changed) - 1
-        n_chg = (rank_c[-1] + 1).astype(jnp.int32)
-        chg_idx = three_branch.compact_survivor_indices(
-            rank_c, ~changed, n_chunks * capacity)
-
-        def upd_body(c, carry):
-            def run_chunk(carry):
-                D, W, colsum = carry
-                idx = jax.lax.dynamic_slice(chg_idx, (c * capacity,),
-                                            (capacity,))
-                w = (idx < n).astype(jnp.int32)   # sentinel slots add 0
-                d_c, v_c = doc_ids[idx], word_ids[idx]
-                old_c, new_c = topics[idx], new_topics[idx]
-                D = D.at[d_c, old_c].add(-w).at[d_c, new_c].add(w)
-                W = W.at[v_c, old_c].add(-w).at[v_c, new_c].add(w)
-                colsum = colsum.at[old_c].add(-w).at[new_c].add(w)
-                return D, W, colsum
-            return jax.lax.cond(c * capacity < n_chg, run_chunk,
-                                lambda carry: carry, carry)
-
-        D, W, colsum = jax.lax.fori_loop(0, n_chunks, upd_body,
-                                         (D, W, colsum))
-        f32 = jnp.float32
-        st = three_branch.ThreeBranchStats(
-            frac_skipped=jnp.mean(dec.skip.astype(f32)),
-            frac_m_final=jnp.mean((dec.skip | in_m_acc).astype(f32)),
-            frac_unchanged=jnp.mean((new_topics == topics).astype(f32)),
-            frac_at_max=jnp.mean((new_topics == dec.k1).astype(f32)),
-        )
+        # The incremental delta update (see scatter_changed_deltas) lands
+        # directly in the live dense matrices here.
+        D, W, colsum = scatter_changed_deltas(
+            topics, new_topics, doc_ids, word_ids, mask,
+            capacity=capacity, D=D, W=W, colsum=colsum)
+        st = branch_stats(dec.skip, in_m_acc, new_topics, topics, dec.k1)
         new_state = FusedState(topics=new_topics, D=D, W=W, colsum=colsum,
                                key=key, iteration=iteration + 1)
         return new_state, st, n_surv
@@ -262,7 +292,6 @@ class FusedPipeline:
     # -- between-scan capacity planning (host side) ------------------------
 
     def note_survivors(self, n_surv, decay: float = 0.7) -> None:
-        import numpy as np
         vals = np.atleast_1d(np.asarray(n_surv)).astype(np.float64)
         ema = self._surv_ema
         for v in vals:
@@ -270,3 +299,174 @@ class FusedPipeline:
         self._surv_ema = ema
         if not self._capacity_pinned:
             self.capacity = plan_capacity(ema, self.n_tokens)
+
+
+class HybridFusedPipeline(FusedPipeline):
+    """The fused iteration over the hybrid sparse live state (DESIGN.md SS5).
+
+    Same architecture as FusedPipeline (single donated dispatch, survivor
+    chunking, lax.scan stretches, EMA capacity planning — all inherited),
+    but the training state is a SparseLDAState: packed-ELL D rows and
+    HybridW (dense head + bucketed packed tail), with the ±1 delta updates
+    landing directly in the packed formats.
+
+    Cost shape (why the body looks the way it does): XLA:CPU scatters and
+    sorts price per ENTRY (~10M/s) while gathers and elementwise run two
+    orders of magnitude faster, so anything O(tokens × slots) — or even a
+    per-slot scatter — is ruinous. The packed rows therefore keep their
+    slots SORTED BY COLUMN (pack_rows_sorted), which makes both directions
+    scatter-free: each iteration (a) densifies the packed state ONCE at
+    matrix shape via batched binary search (densify_rows_sorted), runs the
+    identical dense-speed sampling phases (bit-exact by construction:
+    densified integers are exact, Ŵ comes from the same
+    compute_w_hat_from_colsum), then (b) accumulates the iteration's ±1
+    moves into transient dense delta matrices (the same compacted
+    changed-token scatters the dense pipeline uses — the update task still
+    shrinks with convergence) and repacks matrix + delta back to sorted
+    slots. This mirrors the paper's own kernels, which densify D/Ŵ rows
+    into shared memory per block while the formats at rest stay packed.
+    The per-token incremental ell_* ops remain the update path where
+    per-token semantics are required (the distributed trainer) and the
+    semantics oracle for these repacks.
+
+    The three-branch sampler dispatches by the T partition (word-sorted
+    token list, split at layout.v_dense — a STATIC boundary). With the
+    default ``tail_sampler="exact"`` both partitions route through the
+    same densified exact sweep (Pallas ``sample_fused`` when config.impl
+    == "pallas"), so the two routes coincide and run as one compaction —
+    bit-exact vs the dense reference trainer end to end.
+    ``tail_sampler="sparse"`` splits the dispatch: tail-word survivors go
+    through the O(L) Pallas ``sample_sparse`` kernel + Q' fallback over
+    the packed D rows (kernels/ops.sparse_tail_draw) — the paper's S'/Q'
+    decomposition, which draws from the identical distribution but sums
+    branch masses in a different order, so it is convergence-equivalent
+    rather than bit-equal (the documented trade in DESIGN.md SS5).
+    """
+
+    def __init__(self, word_ids: jax.Array, doc_ids: jax.Array,
+                 mask: jax.Array, *, n_docs: int, n_words: int, config,
+                 corpus):
+        super().__init__(word_ids, doc_ids, mask, n_docs=n_docs,
+                         n_words=n_words, config=config)
+        from repro.lda.model import HybridLayout
+        self.layout = HybridLayout.build(corpus, config)
+        head = np.asarray(word_ids) < self.layout.v_dense
+        self.head_mask = jnp.asarray(head)
+        self.tail_mask = jnp.asarray(~head)
+        self.n_head = int(head.sum())
+        self.n_tail = int((~head).sum())
+
+    # -- state conversion --------------------------------------------------
+
+    def from_lda_state(self, state):
+        """Dense LDAState -> SparseLDAState (fresh buffers: donation-safe)."""
+        return self.layout.to_sparse(state)
+
+    def to_lda_state(self, fstate):
+        return self.layout.to_dense(fstate)
+
+    # -- the fused iteration body (traced; no host interaction) ------------
+
+    def _iteration(self, hs, *, capacity: int):
+        cfg, lay = self.config, self.layout
+        alpha, g = cfg.alpha_, cfg.g
+        word_ids, doc_ids, mask = self.word_ids, self.doc_ids, self.mask
+        n = self.n_tokens
+        k_total = lay.n_topics
+        v_dense = lay.v_dense
+        topics, d_packed, w_head, w_tail, colsum, overflow, key, iteration \
+            = hs
+
+        key, sub = jax.random.split(key)
+        # Matrix-shaped, scatter-free densification (see class doc); the
+        # densified integers are exact, so everything downstream is the
+        # dense pipeline's arithmetic, bit for bit.
+        d_dense = sparse.densify_rows_sorted(d_packed, k_total)
+        w_parts = [w_head] + [sparse.densify_rows_sorted(b, k_total)
+                              for b in w_tail]
+        w_int = jnp.concatenate(w_parts, axis=0) if len(w_parts) > 1 \
+            else w_head
+        w_hat = esca.compute_w_hat_from_colsum(w_int, colsum, cfg.beta)
+        stats_w = three_branch.word_stats(w_hat, g=g, alpha=alpha)
+        u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
+        dec = three_branch.skip_phase(u, word_ids, doc_ids, d_dense,
+                                      stats_w, g=g, alpha=alpha)
+        k1_per_word = stats_w.k[:, 0]
+
+        def dense_chunk(idx):
+            u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
+            if cfg.impl == "pallas":
+                t_c, m, s, q = _fused.sample_fused(
+                    u_c, d_dense[d_c], w_hat[v_c], alpha=alpha,
+                    interpret=self._interpret)
+                return t_c, u_c * (m + s + q) < m
+            return three_branch.exact_three_branch(
+                u_c, v_c, d_c, k1_per_word, d_dense, w_hat,
+                alpha=alpha, tile_size=cfg.tile_size)
+
+        def sparse_tail_chunk(idx):
+            u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
+            k1 = k1_per_word[v_c]
+            b1 = d_dense[d_c, k1].astype(jnp.float32)
+            t_c, _needs_q, in_m = kops.sparse_tail_draw(
+                u_c, d_packed[d_c], w_hat[v_c], k1, stats_w.a[v_c, 0], b1,
+                stats_w.q_prime[v_c], alpha=alpha,
+                interpret=self._interpret)
+            return t_c, in_m
+
+        # -- phase 2, dispatched by the T partition (static split). With
+        # the exact tail sampler both partitions route identically, so they
+        # run as ONE compaction (bit-equal to the dense pipeline's order).
+        if cfg.tail_sampler == "sparse" and self.n_tail:
+            segments = [(self.head_mask, self.n_head, dense_chunk),
+                        (self.tail_mask, self.n_tail, sparse_tail_chunk)]
+        else:
+            segments = [(None, n, dense_chunk)]
+        new_topics = dec.k1                      # skipped ⇒ K1 everywhere
+        in_m_acc = jnp.zeros(n, jnp.bool_)
+        n_surv_total = jnp.int32(0)
+        for seg_mask, n_seg, chunk_fn in segments:
+            if n_seg == 0:
+                continue
+            skip_seg = dec.skip if seg_mask is None else dec.skip | ~seg_mask
+            rank, n_surv = three_branch.survivor_rank(skip_seg)
+            n_chunks = max(1, -(-n_seg // capacity))
+            surv_idx = three_branch.compact_survivor_indices(
+                rank, skip_seg, n_chunks * capacity)
+            new_topics, in_m_seg = three_branch.run_survivor_chunks(
+                surv_idx, n_surv, new_topics,
+                capacity=capacity, n_chunks=n_chunks, sample_chunk=chunk_fn)
+            in_m_acc = in_m_acc | in_m_seg
+            n_surv_total = n_surv_total + n_surv
+
+        # -- the update: the SAME compacted changed-token scatter engine as
+        # the dense pipeline, aimed straight at the densified matrices
+        # (their sampling consumers are done), which then land back on the
+        # packed state at matrix shape.
+        d_new, w_new, colsum = scatter_changed_deltas(
+            topics, new_topics, doc_ids, word_ids, mask, capacity=capacity,
+            D=d_dense, W=w_int, colsum=colsum)
+
+        # updated matrices -> sorted repack (scatter-free; the overflow
+        # tripwire stays 0 because capacities are row-nnz upper bounds)
+        d_packed, ov_d = sparse.pack_rows_sorted(d_new, lay.d_capacity)
+        overflow = overflow + ov_d
+        w_head = w_new[:v_dense]                 # HybridW dense-head part
+        new_tail = []
+        for b in range(len(w_tail)):
+            start = lay.tail_starts[b]
+            end = lay.tail_starts[b + 1] if b + 1 < len(lay.tail_starts) \
+                else lay.n_words
+            bucket, ov_b = sparse.pack_rows_sorted(w_new[start:end],
+                                                   lay.tail_caps[b])
+            new_tail.append(bucket)
+            overflow = overflow + ov_b
+        w_tail = tuple(new_tail)
+
+        st = branch_stats(dec.skip, in_m_acc, new_topics, topics, dec.k1)
+        from repro.lda.model import SparseLDAState
+        new_state = SparseLDAState(
+            topics=new_topics, D=d_packed, W_head=w_head, W_tail=w_tail,
+            colsum=colsum, overflow=overflow, key=key,
+            iteration=iteration + 1)
+        return new_state, st, n_surv_total

@@ -10,7 +10,6 @@ of DESIGN.md §5.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models.registry import ModelApi

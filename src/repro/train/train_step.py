@@ -14,7 +14,6 @@ Collective schedule (all derived from sharding annotations, DESIGN.md §6):
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -1,7 +1,6 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the single real CPU device; only launch/dryrun.py forges 512 devices."""
 
-import numpy as np
 import pytest
 
 from repro.lda.corpus import synthetic_lda_corpus, relabel_by_frequency, zipf_corpus

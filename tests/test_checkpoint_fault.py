@@ -4,7 +4,6 @@ multi-device elastic restore is covered in tests/test_distributed.py)."""
 import os
 
 import numpy as np
-import pytest
 
 from repro.checkpoint import CheckpointManager
 from repro.lda.corpus import synthetic_lda_corpus, relabel_by_frequency

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from repro.core import esca
 from repro.lda.model import LDAConfig
 from repro.lda.trainer import LDATrainer
-from repro.train.lda_step import FusedPipeline, plan_capacity
+from repro.train.lda_step import plan_capacity
 
 jax.config.update("jax_platform_name", "cpu")
 

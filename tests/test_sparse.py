@@ -3,6 +3,7 @@ hybrid W, and the Table-I byte model direction."""
 
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from _hyp import given, settings, st
 
 from repro.core import sparse
@@ -81,6 +82,181 @@ def test_hybrid_w_roundtrip(skewed_corpus):
     assert np.all(corpus.word_token_counts[:hw.v_dense] >= K)
     if hw.v_dense < corpus.n_words:
         assert np.all(corpus.word_token_counts[hw.v_dense:] < K)
+
+
+# ---------------------------------------------------------------------------
+# incremental packed-ELL ops (the live-state update path)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_ell_insert_remove_sequences_match_dense(seed):
+    """Random ±1 sequences on bucketed rows == the dense scatter oracle,
+    including remove-to-zero slot reclamation (freed slots get reused)."""
+    rng = np.random.default_rng(seed)
+    R, K = 6, 20
+    L = K                       # nnz <= K: overflow impossible by bound
+    dense = np.zeros((R, K), np.int32)
+    packed = sparse.build_sparse_rows(jnp.asarray(dense), L)
+    for _ in range(8):
+        C = 24
+        rows = rng.integers(0, R, C).astype(np.int32)
+        add = rng.integers(0, K, C).astype(np.int32)
+        sub = np.zeros(C, np.int32)
+        w_add = rng.integers(0, 2, C).astype(np.int32)
+        w_sub = np.zeros(C, np.int32)
+        budget = dense.copy()
+        for i in range(C):
+            nz = np.nonzero(budget[rows[i]])[0]
+            if len(nz) and rng.random() < 0.7:
+                sub[i] = rng.choice(nz)
+                w_sub[i] = 1
+                budget[rows[i], sub[i]] -= 1
+        packed, miss = sparse.ell_sub_one(packed, jnp.asarray(rows),
+                                          jnp.asarray(sub),
+                                          jnp.asarray(w_sub))
+        packed, over = sparse.ell_add_one(packed, jnp.asarray(rows),
+                                          jnp.asarray(add),
+                                          jnp.asarray(w_add))
+        np.subtract.at(dense, (rows[w_sub > 0], sub[w_sub > 0]), 1)
+        np.add.at(dense, (rows[w_add > 0], add[w_add > 0]), 1)
+        assert int(miss) == 0 and int(over) == 0
+        back = np.asarray(sparse.densify_rows(packed, K))
+        assert np.array_equal(back, dense)
+    # slot reclamation: remove EVERYTHING — every slot must read as free
+    # (val == 0), and the row must accept a full load of fresh columns.
+    r0 = 0
+    nz = np.nonzero(dense[r0])[0]
+    for c in nz:
+        reps = int(dense[r0, c])
+        packed, miss = sparse.ell_sub_one(
+            packed, jnp.full((reps,), r0, jnp.int32),
+            jnp.full((reps,), c, jnp.int32), jnp.ones(reps, jnp.int32))
+        assert int(miss) == 0
+    _, val = sparse.unpack_pairs(packed[r0])
+    assert int(jnp.sum(val)) == 0
+    fresh = np.arange(K, dtype=np.int32)
+    packed, over = sparse.ell_add_one(
+        packed, jnp.full((K,), r0, jnp.int32), jnp.asarray(fresh),
+        jnp.ones(K, jnp.int32))
+    assert int(over) == 0          # all K columns fit: slots were reclaimed
+    assert np.array_equal(
+        np.asarray(sparse.densify_rows(packed, K))[r0], np.ones(K))
+
+
+@settings(max_examples=30, deadline=None)
+@given(col=st.integers(0, 65_535), count=st.integers(1, 60_000))
+def test_ell_ops_full_16bit_index_range(col, count):
+    """Slot lookups/updates stay correct across the full 16-bit idx range
+    (unsigned unpack: idx >= 32768 must not sign-extend)."""
+    K = 65_536
+    packed = jnp.zeros((1, 4), jnp.int32)
+    rows = jnp.zeros((3,), jnp.int32)
+    cols = jnp.full((3,), col, jnp.int32)
+    packed, over = sparse.ell_add_one(packed, rows, cols,
+                                      jnp.ones(3, jnp.int32))
+    assert int(over) == 0
+    # bulk-load the count via a direct pack, then one ±1 round trip
+    packed = packed.at[0, 0].set(int(sparse.pack_pairs(
+        jnp.int32(col), jnp.int32(count))))
+    packed = packed.at[0, 1:].set(0)
+    assert int(sparse.ell_lookup(packed, rows[:1], cols[:1])[0]) == count
+    packed, _ = sparse.ell_sub_one(packed, rows[:1], cols[:1],
+                                   jnp.ones(1, jnp.int32))
+    assert int(sparse.ell_lookup(packed, rows[:1], cols[:1])[0]) == count - 1
+
+
+def test_ell_apply_deltas_duplicates_match_scatter_oracle():
+    """Duplicate (row, col) updates in ONE batch accumulate exactly."""
+    rng = np.random.default_rng(5)
+    R, K = 4, 12
+    dense = rng.integers(0, 4, (R, K)).astype(np.int32)
+    packed = sparse.build_sparse_rows(jnp.asarray(dense), K)
+    C = 40
+    rows = rng.integers(0, R, C).astype(np.int32)
+    new = rng.integers(0, K, C).astype(np.int32)
+    old = np.zeros(C, np.int32)
+    w = np.zeros(C, np.int32)
+    budget = dense.copy()
+    for i in range(C):
+        nz = np.nonzero(budget[rows[i]])[0]
+        if len(nz):
+            old[i] = rng.choice(nz)
+            w[i] = 1
+            budget[rows[i], old[i]] -= 1
+    packed, dropped = sparse.ell_apply_deltas(
+        packed, jnp.asarray(rows), jnp.asarray(old), jnp.asarray(new),
+        jnp.asarray(w))
+    oracle = dense.copy()
+    np.subtract.at(oracle, (rows[w > 0], old[w > 0]), 1)
+    np.add.at(oracle, (rows[w > 0], new[w > 0]), 1)
+    assert int(dropped) == 0
+    assert np.array_equal(np.asarray(sparse.densify_rows(packed, K)), oracle)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_pack_rows_sorted_roundtrip(seed):
+    """Sorted pack <-> densify round-trips exactly; slots sorted by col."""
+    rng = np.random.default_rng(seed)
+    R, K, L = 7, 40, 24
+    dense = np.zeros((R, K), np.int32)
+    for r in range(R):
+        cols = rng.choice(K, rng.integers(0, L), replace=False)
+        dense[r, cols] = rng.integers(1, 100, len(cols))
+    packed, over = sparse.pack_rows_sorted(jnp.asarray(dense), L)
+    assert int(over) == 0
+    idx, val = sparse.unpack_pairs(packed)
+    assert np.all(np.diff(np.asarray(idx), axis=1) >= 0)  # sorted invariant
+    back = sparse.densify_rows_sorted(packed, K)
+    assert np.array_equal(np.asarray(back), dense)
+    # the order-agnostic densify agrees too (EMPTY_IDX pads drop)
+    back2 = sparse.densify_rows(packed, K)
+    assert np.array_equal(np.asarray(back2), dense)
+
+
+def test_pack_rows_sorted_overflow_counted():
+    dense = jnp.asarray([[1, 2, 3, 4, 0, 0]], jnp.int32)
+    packed, over = sparse.pack_rows_sorted(dense, 2)
+    assert int(over) == 2                     # two nonzeros did not fit
+    back = np.asarray(sparse.densify_rows_sorted(packed, 6))
+    assert np.array_equal(back[0], [1, 2, 0, 0, 0, 0])  # lowest cols kept
+
+
+def test_ell_slot_apply_matches_dense_on_live_columns():
+    rng = np.random.default_rng(9)
+    R, K, L = 5, 16, 16
+    dense = rng.integers(0, 5, (R, K)).astype(np.int32)
+    packed, _ = sparse.pack_rows_sorted(jnp.asarray(dense), L)
+    # a delta that only touches live columns (incl. driving some to zero)
+    delta = np.where(dense > 0, rng.integers(-1, 3, (R, K)), 0)
+    delta = np.maximum(delta, -dense).astype(np.int32)
+    packed = sparse.ell_slot_apply(packed, jnp.asarray(delta))
+    back = np.asarray(sparse.densify_rows(packed, K))
+    assert np.array_equal(back, dense + delta)
+
+
+def test_ell_overflow_is_counted_not_corrupting():
+    """Inserts beyond capacity drop and report; live slots stay intact."""
+    packed = sparse.build_sparse_rows(jnp.zeros((1, 8), jnp.int32), 2)
+    rows = jnp.zeros((3,), jnp.int32)
+    packed, over = sparse.ell_add_one(
+        packed, rows, jnp.asarray([1, 2, 3], jnp.int32),
+        jnp.ones(3, jnp.int32))
+    assert int(over) == 1
+    back = np.asarray(sparse.densify_rows(packed, 8))
+    assert back.sum() == 2 and back.max() == 1
+
+
+def test_bucket_plan_rejects_unsorted_rows():
+    with pytest.raises(ValueError, match="relabel"):
+        sparse.bucket_plan(np.array([1, 5, 3]), max_capacity=8)
+
+
+def test_build_hybrid_w_rejects_unsorted_counts():
+    W = jnp.zeros((3, 4), jnp.int32)
+    with pytest.raises(ValueError, match="relabel"):
+        sparse.build_hybrid_w(W, np.array([1, 9, 2]), threshold=4)
 
 
 def test_hybrid_beats_dense_and_sparse_at_large_k():

@@ -14,7 +14,6 @@ The load-bearing properties:
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 from _hyp import given, settings, st
 
 from repro.core import esca, three_branch
