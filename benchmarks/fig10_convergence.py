@@ -12,8 +12,8 @@ import time
 
 
 from benchmarks._common import planted_corpus
+from repro.lda.api import LDAEngine
 from repro.lda.model import LDAConfig
-from repro.lda.trainer import LDATrainer
 
 WARM, ITERS = 100, 10   # the paper measures converged throughput (iter 100)
 K = 128                 # large-K regime: per-token O(K) sampling dominates
@@ -35,7 +35,7 @@ def run():
         cfg = LDAConfig(n_topics=K, sampler=sampler, tile_size=4096, seed=3,
                         survivor_capacity=cap)
         # (paper Fig 10c: 1.5x at iteration 100; we measure 1.4x here)
-        tr = LDATrainer(corpus, cfg)
+        tr = LDAEngine(corpus, cfg, backend="single").trainer
         state = tr.init_state()
         for _ in range(WARM):                 # compile + build up skips
             state, _ = tr.step(state)

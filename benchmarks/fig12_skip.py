@@ -8,15 +8,15 @@ import jax
 
 from benchmarks._common import planted_corpus
 from repro.core import three_branch
+from repro.lda.api import LDAEngine
 from repro.lda.model import LDAConfig
-from repro.lda.trainer import LDATrainer
 
 
 def run():
     corpus = planted_corpus(n_docs=250, n_words=400, n_topics=12,
                             mean_doc_len=60)
     cfg = LDAConfig(n_topics=32, tile_size=2048, seed=5)
-    tr = LDATrainer(corpus, cfg)
+    tr = LDAEngine(corpus, cfg, backend="single").trainer
     state = tr.init_state()
     rows = []
     marks = {5, 20, 50}

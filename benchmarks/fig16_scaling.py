@@ -20,14 +20,15 @@ sys.path.insert(0, "src")
 import jax, numpy as np, jax.numpy as jnp
 from repro.lda.corpus import synthetic_lda_corpus, relabel_by_frequency
 from repro.lda.model import LDAConfig
-from repro.lda.distributed import DistLDATrainer
+from repro.lda.api import LDAEngine
 n_dev = %d
 corpus = synthetic_lda_corpus(0, n_docs=240, n_words=300, n_topics=8,
                               mean_doc_len=60)
 corpus, _ = relabel_by_frequency(corpus)
-mesh = jax.make_mesh((n_dev, 1), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,)*2)
-tr = DistLDATrainer(corpus, LDAConfig(n_topics=16), mesh, pad_multiple=256)
+from repro.runtime.compat import make_mesh
+mesh = make_mesh((n_dev, 1), ("data", "model"))
+tr = LDAEngine(corpus, LDAConfig(n_topics=16), backend="distributed",
+               mesh=mesh, pad_multiple=256).trainer
 state = tr.init_state()
 state, _ = tr.step(state)                       # compile
 t0 = time.perf_counter()

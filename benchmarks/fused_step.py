@@ -33,8 +33,8 @@ import jax
 import numpy as np
 
 from benchmarks._common import planted_corpus
+from repro.lda.api import LDAEngine
 from repro.lda.model import LDAConfig
-from repro.lda.trainer import LDATrainer
 
 # The planted (dryrun) corpus actually converges, which is the regime the
 # three-branch skip — and therefore the fused pipeline — is built for; the
@@ -47,7 +47,7 @@ REPEATS = 3
 
 def _steady_state(corpus, cfg):
     """Warm up with the fused pipeline (cheapest) and return its state."""
-    tr = LDATrainer(corpus, cfg)
+    tr = LDAEngine(corpus, cfg, backend="single").trainer
     pipe = tr.fused_pipeline()
     fs = pipe.from_lda_state(tr.init_state())
     fs, _, _ = pipe.run_fused(fs, WARMUP_ITERS)
@@ -78,7 +78,7 @@ def bench(out_path: str = "results/BENCH_fused_step.json") -> dict:
     # state aliases its buffers (from_lda_state copies them out)
     cfg_h = LDAConfig(n_topics=N_TOPICS, tile_size=8192,
                       sampler="three_branch", format="hybrid")
-    tr_h = LDATrainer(corpus, cfg_h)
+    tr_h = LDAEngine(corpus, cfg_h, backend="single").trainer
     pipe_h = tr_h.fused_pipeline()
     pipe_h.capacity = pipe.capacity              # same chunking, fair race
     pipe_h._capacity_pinned = True
@@ -150,7 +150,8 @@ def hybrid_sweep(out_path: str = "results/BENCH_hybrid_state.json") -> dict:
                             mean_doc_len=100)
     n_tok = corpus.n_tokens
     k = N_TOPICS
-    tr0 = LDATrainer(corpus, LDAConfig(n_topics=k, tile_size=8192))
+    tr0 = LDAEngine(corpus, LDAConfig(n_topics=k, tile_size=8192),
+                    backend="single").trainer
     pipe0 = tr0.fused_pipeline()
     fs = pipe0.from_lda_state(tr0.init_state())
     fs, _, _ = pipe0.run_fused(fs, 40)
@@ -165,7 +166,7 @@ def hybrid_sweep(out_path: str = "results/BENCH_hybrid_state.json") -> dict:
         for thr in (k // 4, k // 2, None):       # None = K (paper heuristic)
             cfg = LDAConfig(n_topics=k, tile_size=8192, format="hybrid",
                             d_capacity=d_cap, dense_word_threshold=thr)
-            tr = LDATrainer(corpus, cfg)
+            tr = LDAEngine(corpus, cfg, backend="single").trainer
             pipe = tr.fused_pipeline()
             pipe.capacity = pipe0.capacity
             pipe._capacity_pinned = True

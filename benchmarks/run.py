@@ -21,9 +21,10 @@ MODULES = [
     "fig17_breakdown",
     "fig18_hw_generations",
     "fused_step",          # seed vs fused steady-state tokens/sec
+    "serve_lda",           # FrozenLDAModel fold-in docs/sec
 ]
 
-QUICK_SKIP = {"fig16_scaling", "fused_step"}   # long warmup / subprocesses
+QUICK_SKIP = {"fig16_scaling", "fused_step", "serve_lda"}   # long warmup
 
 
 def main(argv=None) -> int:

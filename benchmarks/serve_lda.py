@@ -1,0 +1,140 @@
+"""Serving throughput: docs/sec for FrozenLDAModel fold-in inference.
+
+The serving subsystem's claim (DESIGN.md SS7): a transform batch is ONE
+donated jit dispatch — random init, n_sweeps ESCA sweeps against the
+frozen φ, and the θ/LLPT readout — with the per-word three-branch
+quantities amortized to FREEZE time, so per-request work is O(g) gathers
+per token where the skip bound holds. This benchmark measures what a
+serving tier cares about:
+
+  * docs/sec end-to-end (host prep + dispatch + θ readback), and
+  * docs/sec of the pure dispatch, run under ``jax.transfer_guard
+    ("disallow")`` — the proof that NOTHING syncs to the host inside a
+    serving batch — swept over batch size × sweep count.
+
+Trains a small model through ``LDAEngine`` first (the benchmark drives the
+public surface only). ``--dry-run`` shrinks everything to a seconds-long
+smoke (the CI hook) but still writes the same JSON schema.
+
+Emits results/BENCH_serve_lda.json.
+Run:  PYTHONPATH=src python benchmarks/serve_lda.py [--dry-run]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __name__ == "__main__":                      # runnable as a script
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import from_documents, synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+
+
+def _split_corpus(n_docs, n_held, n_words, mean_doc_len, seed=0,
+                  n_topics=16):
+    full = synthetic_lda_corpus(seed, n_docs=n_docs + n_held,
+                                n_words=n_words, n_topics=n_topics,
+                                mean_doc_len=mean_doc_len)
+    docs = full.documents()
+    return from_documents(docs[:n_docs], full.n_words), docs[n_docs:]
+
+
+def bench(out_path: str = "results/BENCH_serve_lda.json",
+          dry_run: bool = False) -> dict:
+    if dry_run:
+        train_docs, held, train_iters, k = 60, 16, 10, 16
+        batch_sizes, sweep_counts, repeats = (8,), (2,), 1
+        n_words, doc_len = 150, 40
+    else:
+        train_docs, held, train_iters, k = 400, 256, 60, 64
+        batch_sizes, sweep_counts, repeats = (8, 32, 128), (5, 20), 5
+        n_words, doc_len = 800, 80
+    corpus, held_out = _split_corpus(train_docs, held, n_words, doc_len,
+                                     n_topics=max(k // 4, 2))
+    cfg = LDAConfig(n_topics=k, fused=True, eval_every=max(train_iters, 1),
+                    seed=0)
+    engine = LDAEngine(corpus, cfg, backend="single")
+    t0 = time.perf_counter()
+    engine.fit(train_iters)
+    train_s = time.perf_counter() - t0
+    model = engine.export()
+
+    key = jax.random.PRNGKey(0)
+    cells = []
+    for bs in batch_sizes:
+        docs = [held_out[i % len(held_out)] for i in range(bs)]
+        for sweeps in sweep_counts:
+            # warm the (B, L, sweeps) signature (compile excluded)
+            model.transform_batch(model.prepare_batch(docs), key,
+                                  n_sweeps=sweeps)
+            e2e, disp = [], []
+            for _ in range(repeats):
+                t0 = time.perf_counter()
+                theta = model.transform(docs, n_sweeps=sweeps, key=key)
+                e2e.append(bs / (time.perf_counter() - t0))
+                batch = model.prepare_batch(docs)
+                t0 = time.perf_counter()
+                with jax.transfer_guard("disallow"):   # proves zero syncs
+                    out = model.transform_batch(batch, key, n_sweeps=sweeps)
+                    jax.block_until_ready(out)
+                disp.append(bs / (time.perf_counter() - t0))
+            llpt = float(out[3])      # the guarded dispatch already has it
+            cells.append({
+                "batch_size": bs,
+                "n_sweeps": sweeps,
+                "padded_tokens": int(batch.word_ids.shape[0]),
+                "docs_per_sec": float(np.median(e2e)),
+                "docs_per_sec_dispatch": float(np.median(disp)),
+                "held_out_llpt": float(llpt),
+                "theta_shape": list(np.asarray(theta).shape),
+            })
+    best = max(cells, key=lambda c: c["docs_per_sec"])
+    result = {
+        "dry_run": dry_run,
+        "model": {"n_words": model.n_words, "n_topics": model.n_topics,
+                  "g": model.g},
+        "train": {"docs": corpus.n_docs, "tokens": corpus.n_tokens,
+                  "iters": train_iters, "seconds": round(train_s, 2)},
+        "host_syncs_in_dispatch": 0,          # transfer_guard held
+        "repeats": repeats,
+        "cells": cells,
+        "best_docs_per_sec": best["docs_per_sec"],
+        "best_cell": {"batch_size": best["batch_size"],
+                      "n_sweeps": best["n_sweeps"]},
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def run():
+    """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
+    r = bench()
+    for c in r["cells"]:
+        us = 1e6 / c["docs_per_sec"] * c["batch_size"]
+        yield (f"serve_lda/b{c['batch_size']}_s{c['n_sweeps']}",
+               round(us, 1), f"docs_s={c['docs_per_sec']:.0f}")
+    yield ("serve_lda/best_docs_per_sec", 0,
+           round(r["best_docs_per_sec"], 1))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="seconds-long smoke with tiny sizes (CI)")
+    ap.add_argument("--out", default="results/BENCH_serve_lda.json")
+    args = ap.parse_args()
+    res = bench(out_path=args.out, dry_run=args.dry_run)
+    print(json.dumps(res, indent=2))

@@ -58,16 +58,17 @@ def run():
 def measured_live_state():
     """Measured nbytes() of the live hybrid state vs dense, Zipf corpus."""
     from repro.lda.corpus import relabel_by_frequency, zipf_corpus
+    from repro.lda.api import LDAEngine
     from repro.lda.model import LDAConfig
-    from repro.lda.trainer import LDATrainer
 
     corpus = zipf_corpus(3, n_docs=400, n_words=2000, exponent=1.4,
                          mean_doc_len=80)
     corpus, _ = relabel_by_frequency(corpus)
     rows = []
     for k in (256, 1024):
-        tr = LDATrainer(corpus, LDAConfig(n_topics=k, tile_size=8192,
-                                          format="hybrid"))
+        tr = LDAEngine(corpus, LDAConfig(n_topics=k, tile_size=8192,
+                                         format="hybrid"),
+                       backend="single").trainer
         state = tr.init_state()            # dense counts, derived from topics
         hybrid_bytes = tr.live_state_nbytes(state)   # measured packed buffers
         dense_bytes = state.nbytes()

@@ -1,11 +1,17 @@
-"""Multi-device EZLDA: data+model parallel training with checkpoint/restart
-and elastic rescale — the paper's §V-B scaled out, on 8 forged devices.
+"""Multi-device EZLDA through the LDAEngine front door: data+model
+parallel training with checkpoint/restart and elastic rescale — the
+paper's §V-B scaled out, on 8 forged devices.
 
 Demonstrates:
-  * document-chunk data parallelism + topic-axis model parallelism,
-  * the ΔW psum (the paper's sum+broadcast) inside shard_map,
-  * a mid-run "node failure" → restore from checkpoint onto a DIFFERENT
-    mesh shape (elastic), training continuing seamlessly.
+  * backend="distributed" (auto-selected on multi-device hosts) with
+    document-chunk data parallelism + topic-axis model parallelism,
+  * the ONE checkpoint format: a mid-run save restores onto a DIFFERENT
+    mesh shape (elastic), a different live-state format (dense <->
+    hybrid), and would equally restore into backend="single",
+  * serving straight from a distributed run: engine.export() gathers the
+    global W and the FrozenLDAModel folds held-out docs in.
+
+No trainer class is constructed here — engine only.
 
 Run:  python examples/multi_device_lda.py        (sets XLA_FLAGS itself)
 """
@@ -18,82 +24,75 @@ import sys
 
 sys.path.insert(0, "src")
 
+import dataclasses
+
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import CheckpointManager
-from repro.core import llpt as llpt_mod
-from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
-from repro.lda.distributed import DistLDATrainer
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import synthetic_lda_corpus
 from repro.lda.model import LDAConfig
 from repro.runtime.compat import make_mesh
 
 
-def global_llpt(tr, state, corpus, cfg):
-    D, W = tr.gather_global(state)
-    return float(llpt_mod.llpt(
-        jnp.asarray(corpus.word_ids), jnp.asarray(corpus.doc_ids),
-        jnp.ones(corpus.n_tokens, jnp.int32),
-        jnp.asarray(D.astype(np.int32)), jnp.asarray(W.astype(np.int32)),
-        alpha=cfg.alpha_, beta=cfg.beta))
-
-
 def main():
     print(f"devices: {jax.device_count()}")
-    corpus = synthetic_lda_corpus(0, n_docs=240, n_words=300, n_topics=8,
-                                  mean_doc_len=60)
-    corpus, _ = relabel_by_frequency(corpus)
-    cfg = LDAConfig(n_topics=16, seed=0)
+    full = synthetic_lda_corpus(0, n_docs=272, n_words=300, n_topics=8,
+                                mean_doc_len=60)
+    docs = full.documents()
+    from repro.lda.corpus import from_documents
+    corpus = from_documents(docs[:240], full.n_words)   # train split
+    held_out_docs = docs[240:]                          # served only
+    cfg = LDAConfig(n_topics=16, seed=0, eval_every=5)
+    import shutil
+    shutil.rmtree("/tmp/ezlda_example_ckpt", ignore_errors=True)
     mgr = CheckpointManager("/tmp/ezlda_example_ckpt", keep_n=2)
 
-    mesh4x2 = make_mesh((4, 2), ("data", "model"))
-    tr = DistLDATrainer(corpus, cfg, mesh4x2, pad_multiple=256)
-    state = tr.init_state()
-    print(f"mesh (4 data × 2 model): chunks hold "
-          f"{tr.sc.tokens_per_shard.tolist()} tokens "
-          f"(max/mean = {tr.sc.tokens_per_shard.max() / tr.sc.tokens_per_shard.mean():.3f}"
+    eng = LDAEngine(corpus, cfg, mesh=make_mesh((4, 2), ("data", "model")),
+                    checkpoint_manager=mgr, pad_multiple=256)
+    sc = eng.trainer.sc
+    print(f"backend={eng.backend_name}, mesh (4 data × 2 model): chunks "
+          f"hold {sc.tokens_per_shard.tolist()} tokens "
+          f"(max/mean = {sc.tokens_per_shard.max() / sc.tokens_per_shard.mean():.3f}"
           f" — paper observes ≤1.05)")
-    for i in range(10):
-        state, stats = tr.step(state)
-    print(f"iter 10: llpt={global_llpt(tr, state, corpus, cfg):+.4f} "
-          f"skip={float(stats.frac_skipped):.2%}")
-    mgr.save(10, tr.host_payload(state))
+    eng.fit(10, log_fn=lambda s: print("  " + s))
+    eng.save()
     print("checkpoint saved; simulating pod loss → restart on a 2×4 mesh")
 
-    mesh2x4 = make_mesh((2, 4), ("data", "model"))
-    tr2 = DistLDATrainer(corpus, cfg, mesh2x4, pad_multiple=256)
-    state2 = tr2.state_from_payload(mgr.restore_latest())
-    D, W = tr2.gather_global(state2)
+    eng2 = LDAEngine(corpus, cfg, mesh=make_mesh((2, 4), ("data", "model")),
+                     checkpoint_manager=mgr, pad_multiple=256).resume()
+    D, W = eng2.trainer.gather_global(eng2.state)
     assert D.sum() == corpus.n_tokens == W.sum(), "elastic restore broke counts"
-    print(f"restored at iter {int(state2.iteration)} on 2 data × 4 model; "
+    print(f"restored at iter {eng2.iteration} on 2 data × 4 model; "
           f"counts conserved ({int(D.sum())} tokens)")
-    for i in range(10):
-        state2, stats = tr2.step(state2)
-    print(f"iter 20: llpt={global_llpt(tr2, state2, corpus, cfg):+.4f} "
-          f"skip={float(stats.frac_skipped):.2%}")
+    eng2.fit(10, log_fn=lambda s: print("  " + s))
 
-    # --- hybrid live state across devices: the SAME checkpoint payload
-    # restores into per-shard packed-ELL D + a replicated HybridW whose
-    # updates ride the delta psum (model axis 1: packed slots hold global
-    # topic ids). Memory is measured from the actual buffers.
-    import dataclasses
+    # --- hybrid live state across devices: the SAME checkpoint restores
+    # into per-shard packed-ELL D + a replicated HybridW (model axis 1:
+    # packed slots hold global topic ids). Memory measured from buffers.
+    eng2.save()
     cfg_h = dataclasses.replace(cfg, format="hybrid")
     mesh8x1 = make_mesh((8, 1), ("data", "model"))
-    tr_h = DistLDATrainer(corpus, cfg_h, mesh8x1, pad_multiple=256)
-    state_h = tr_h.state_from_payload(tr2.host_payload(state2))
-    tr_d = DistLDATrainer(corpus, cfg, mesh8x1, pad_multiple=256)
-    state_d = tr_d.state_from_payload(tr2.host_payload(state2))
-    print(f"hybrid dist state: {tr_h.state_nbytes(state_h):,} B vs dense "
-          f"{tr_d.state_nbytes(state_d):,} B "
-          f"({tr_h.state_nbytes(state_h) / tr_d.state_nbytes(state_d):.2%}) "
+    eng_h = LDAEngine(corpus, cfg_h, mesh=mesh8x1, checkpoint_manager=mgr,
+                      pad_multiple=256).resume()
+    eng_d = LDAEngine(corpus, cfg, mesh=mesh8x1, checkpoint_manager=mgr,
+                      pad_multiple=256).resume()
+    print(f"hybrid dist state: {eng_h.state_nbytes():,} B vs dense "
+          f"{eng_d.state_nbytes():,} B "
+          f"({eng_h.state_nbytes() / eng_d.state_nbytes():.2%}) "
           f"on 8 data shards")
-    for i in range(5):
-        state_h, stats = tr_h.step(state_h)
-    D_h, W_h = tr_h.gather_global(state_h)
+    hist = eng_h.fit(5, log_fn=lambda s: print("  " + s))
+    D_h, W_h = eng_h.trainer.gather_global(eng_h.state)
     assert D_h.sum() == corpus.n_tokens == W_h.sum()
-    print(f"iter 25 (hybrid): llpt={global_llpt(tr_h, state_h, corpus, cfg):+.4f} "
-          f"skip={float(stats.frac_skipped):.2%}")
+    print(f"iter {eng_h.iteration} (hybrid): llpt={hist['llpt'][-1]:+.4f}")
+
+    # --- serve from the distributed run (θ + LLPT from ONE dispatch)
+    model = eng_h.export()
+    served = model.fold_in(held_out_docs, n_sweeps=15, seed=2)
+    print(f"served {served.theta.shape[0]} held-out docs from the "
+          f"distributed model: held-out LLPT {served.llpt:+.3f}")
+    assert np.allclose(served.theta.sum(axis=1), 1.0, atol=1e-5)
     print("OK")
 
 

@@ -21,8 +21,8 @@ import numpy as np
 
 from repro.core import esca
 from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
+from repro.lda.api import LDAEngine
 from repro.lda.model import LDAConfig
-from repro.lda.trainer import LDATrainer
 
 DROP_START, REINCLUDE, TOTAL = 15, 35, 45
 PATIENCE = 3
@@ -34,7 +34,7 @@ def main():
     corpus, _ = relabel_by_frequency(corpus)
     cfg = LDAConfig(n_topics=16, sampler="two_branch", tile_size=2048,
                     seed=0)
-    tr = LDATrainer(corpus, cfg)
+    tr = LDAEngine(corpus, cfg, backend="single").trainer
 
     # --- naive dropping run -------------------------------------------------
     state = tr.init_state()
@@ -64,7 +64,7 @@ def main():
     # --- EZLDA three-branch run (same budget) --------------------------------
     cfg3 = LDAConfig(n_topics=16, sampler="three_branch", tile_size=2048,
                      seed=0)
-    tr3 = LDATrainer(corpus, cfg3)
+    tr3 = LDAEngine(corpus, cfg3, backend="single").trainer
     s3 = tr3.init_state()
     ezlda = []
     for i in range(TOTAL):

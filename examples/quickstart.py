@@ -1,11 +1,15 @@
-"""Quickstart: EZLDA topic modeling end-to-end on a synthetic corpus.
+"""Quickstart: EZLDA end-to-end through the ONE front door (LDAEngine).
 
 Builds a planted-topic corpus, trains with the paper's three-branch
 sampler on the HYBRID sparse live state (format="hybrid": packed-ELL D +
-HybridW, the paper's §IV formats as the actual training representation),
-prints the LLPT trajectory + skip fractions, the measured live-state
-memory vs dense, and the top words per topic (demonstrating actual topic
-recovery).
+HybridW as the actual training representation), prints the LLPT
+trajectory + skip fractions and the measured live-state memory vs dense —
+then freezes the model into a FrozenLDAModel and SERVES it: batched
+fold-in of held-out documents (one donated jit dispatch per batch) plus
+the topic-recovery readout via top_words.
+
+No trainer class is constructed here: the engine owns corpus prep
+(frequency relabeling), backend selection, and the checkpoint format.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -16,46 +20,61 @@ sys.path.insert(0, "src")
 
 import numpy as np
 
-from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import synthetic_lda_corpus
 from repro.lda.model import LDAConfig
-from repro.lda.trainer import LDATrainer
 
 
 def main():
     true_k = 8
-    corpus, truth = synthetic_lda_corpus(
-        seed=0, n_docs=300, n_words=500, n_topics=true_k, mean_doc_len=80,
-        return_truth=True)
-    corpus, old_to_new = relabel_by_frequency(corpus)
+    full = synthetic_lda_corpus(
+        seed=0, n_docs=364, n_words=500, n_topics=true_k, mean_doc_len=80)
+    # train/held-out split from ONE generative model: the engine trains on
+    # the first 300 docs; the last 64 are served by fold-in only
+    docs = full.documents()
+    from repro.lda.corpus import from_documents
+    corpus = from_documents(docs[:300], full.n_words)
+    held_out_docs = docs[300:]
     print(f"corpus: {corpus.n_docs} docs, {corpus.n_words} words, "
-          f"{corpus.n_tokens} tokens (planted topics: {true_k})")
+          f"{corpus.n_tokens} tokens (planted topics: {true_k}; "
+          f"{len(held_out_docs)} docs held out for serving)")
 
+    # -- train ------------------------------------------------------------
     cfg = LDAConfig(n_topics=16, sampler="three_branch", tile_size=2048,
                     eval_every=5, seed=0, format="hybrid")
-    trainer = LDATrainer(corpus, cfg)
-    state, history = trainer.run(
-        n_iters=40, log_fn=lambda s: print("  " + s))
+    engine = LDAEngine(corpus, cfg, backend="single")
+    history = engine.fit(40, log_fn=lambda s: print("  " + s))
 
-    hybrid_bytes = trainer.live_state_nbytes(state)   # measured, not modeled
-    dense_bytes = state.nbytes()
-    lay = trainer.fused_pipeline().layout
+    hybrid_bytes = engine.state_nbytes()            # measured, not modeled
+    dense_bytes = engine.state.nbytes()             # same counts, dense
+    lay = engine.trainer.fused_pipeline().layout
     print(f"\nhybrid live state: {hybrid_bytes:,} B vs dense "
           f"{dense_bytes:,} B ({hybrid_bytes / dense_bytes:.2%}) — "
           f"packed D rows of {lay.d_capacity} slots, {lay.v_dense} dense-head "
           f"words, tail bucket capacities {lay.tail_caps}")
-
-    print("\ntop words of the 4 heaviest topics:")
-    W = np.asarray(state.W)
-    heavy = np.argsort(-W.sum(axis=0))[:4]
-    for k in heavy:
-        top = np.argsort(-W[:, k])[:8]
-        print(f"  topic {k:2d}: words {top.tolist()} "
-              f"({W[:, k].sum()} tokens)")
     assert history["llpt"][-1] > history["llpt"][0], "LLPT must rise"
-    print("\nOK: LLPT rose from "
-          f"{history['llpt'][0]:.3f} to {history['llpt'][-1]:.3f}; "
-          f"final skip fraction "
+    print(f"OK: LLPT rose from {history['llpt'][0]:.3f} to "
+          f"{history['llpt'][-1]:.3f}; final skip fraction "
           f"{history['stats'][-1]['frac_skipped']:.2%}")
+
+    # -- serve ------------------------------------------------------------
+    model = engine.export()                         # FrozenLDAModel
+    print("\ntop words of the 4 heaviest topics (original vocab ids):")
+    heavy = np.argsort(-model.W.sum(axis=0))[:4]
+    tops = model.top_words(8)
+    for k in heavy:
+        print(f"  topic {k:2d}: words {tops[k].tolist()} "
+              f"({model.W[:, k].sum()} tokens)")
+
+    served = model.fold_in(held_out_docs, n_sweeps=20, seed=1)
+    theta, llpt = served.theta, served.llpt
+    conc = float(np.mean(np.max(theta, axis=1)))
+    print(f"\nserved {theta.shape[0]} held-out docs: doc-topic θ "
+          f"{theta.shape}, held-out LLPT {llpt:+.3f}, "
+          f"mean top-topic mass {conc:.2f}")
+    assert np.allclose(theta.sum(axis=1), 1.0, atol=1e-5)
+    assert conc > 2.0 / model.n_topics, "fold-in should beat uniform θ"
+    print("OK: fold-in served unseen documents from the frozen artifact")
 
 
 if __name__ == "__main__":

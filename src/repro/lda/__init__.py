@@ -1,3 +1,4 @@
+from repro.lda.api import FoldInBatch, FrozenLDAModel, LDAEngine
 from repro.lda.corpus import (Corpus, from_documents, relabel_by_frequency,
                               synthetic_lda_corpus, zipf_corpus,
                               chunk_documents, pad_corpus)
@@ -8,4 +9,5 @@ from repro.lda.trainer import LDATrainer
 __all__ = ["Corpus", "from_documents", "relabel_by_frequency",
            "synthetic_lda_corpus", "zipf_corpus", "chunk_documents",
            "pad_corpus", "LDAConfig", "LDAState", "SparseLDAState",
-           "HybridLayout", "LDATrainer"]
+           "HybridLayout", "LDATrainer", "LDAEngine", "FrozenLDAModel",
+           "FoldInBatch"]

@@ -1,0 +1,739 @@
+"""One front door for LDA: the ``LDAEngine`` facade + the serving artifact.
+
+The paper's pipeline (three-branch sampling, hybrid D/W live state,
+multi-device scaling) used to hide behind three disjoint entry points —
+``LDATrainer``, ``DistLDATrainer``, and a launcher that advertised an
+``--lda`` mode it never wired — and had no inference path for unseen
+documents at all. This module is the single public surface (DESIGN.md SS7):
+
+``LDAEngine``
+    Owns corpus prep (frequency relabeling when the layout needs it),
+    backend selection (``backend="auto"|"single"|"distributed"``, auto by
+    device count / mesh), and a scikit-style lifecycle — ``fit(n_iters)``,
+    ``resume()``, ``score()`` — over ONE config (validated once, in
+    ``LDAConfig.__post_init__``) and ONE checkpoint format. The trainers
+    are internal backends; constructing them directly still works but is
+    deprecated.
+
+``FrozenLDAModel``
+    The serving artifact: frozen topic-word counts W + column sum +
+    hyperparameters, exportable from any training state or checkpoint and
+    ``save``/``load``-able. Its ``transform(docs)`` is a jit-compiled,
+    buffer-donated, batched **fold-in Gibbs sampler** that reuses the
+    three-branch skip machinery read-only: the per-word amortized
+    quantities (top-(g+1) of Ŵ, Q', ΣŴ — ``three_branch.word_stats``) are
+    computed ONCE when the model is frozen, because Ŵ never changes at
+    serve time. That is WarpLDA's O(1)-per-token view applied to serving:
+    each fold-in sweep is O(g) gathers per token for the skip test plus
+    the exact sweep only where the bound fails. A whole batch — random
+    init, ``n_sweeps`` ESCA sweeps, the θ readout — runs as ONE donated
+    dispatch with zero host syncs (pinned by tests/test_serving.py under
+    ``jax.transfer_guard``).
+
+Canonical checkpoint format (all backends, all formats)
+    ``{"topics_global": (n_tokens,) int32, "key": raw PRNG key data,
+    "iteration": int}`` — topics in UNPADDED global token order of the
+    engine's prepped corpus. Counts are derived state and get rebuilt on
+    restore, which is what makes restores elastic across backends, mesh
+    shapes, padding multiples, and live-state formats (dense <-> hybrid,
+    single <-> distributed; pinned bit-equal by tests/test_api.py).
+    Legacy single-trainer payloads (padded ``"topics"``) still restore.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import llpt as llpt_mod, three_branch
+from repro.lda.corpus import Corpus, from_documents, relabel_by_frequency
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import run_boundary_chunked
+
+__all__ = ["LDAEngine", "FrozenLDAModel", "FoldInBatch", "FoldInResult"]
+
+
+# ---------------------------------------------------------------------------
+# serving: the frozen artifact + the batched fold-in sampler
+# ---------------------------------------------------------------------------
+
+class FoldInBatch(tuple):
+    """Device-resident padded token batch for one transform dispatch.
+
+    Built host-side by ``FrozenLDAModel.prepare_batch``; ``word_ids`` is
+    DONATED to the fold-in dispatch (its buffer is reused for the returned
+    topics), so a batch is consumed by exactly one ``transform_batch``
+    call. Both the doc axis and the length axis are bucketed to powers of
+    two, which bounds the number of compiled signatures a long-lived
+    serving process can accumulate; pad docs/tokens carry mask 0 and
+    never touch θ or the LLPT.
+    """
+    __slots__ = ()
+
+    def __new__(cls, word_ids, doc_ids, mask, n_docs, doc_lens,
+                n_real_docs):
+        return tuple.__new__(cls, (word_ids, doc_ids, mask, n_docs,
+                                   doc_lens, n_real_docs))
+
+    word_ids = property(lambda s: s[0])    # (B*L,) int32, flattened
+    doc_ids = property(lambda s: s[1])     # (B*L,) int32 — row index
+    mask = property(lambda s: s[2])        # (B*L,) int32 — 1 = real token
+    n_docs = property(lambda s: s[3])      # B, bucketed (static)
+    doc_lens = property(lambda s: s[4])    # (B_real,) host int64
+    n_real_docs = property(lambda s: s[5])  # rows of θ that are real docs
+
+
+def _next_pow2(n: int, floor: int = 16) -> int:
+    return max(floor, 1 << (max(int(n), 1) - 1).bit_length())
+
+
+class FoldInResult(NamedTuple):
+    """One fold-in dispatch's host-side readout."""
+    theta: np.ndarray          # (B, K) doc-topic distributions
+    llpt: float                # held-out log-likelihood per token (Eq 5)
+    frac_skipped: np.ndarray   # (n_sweeps,) phase-1 skip fraction per sweep
+
+
+def _top_words(W: np.ndarray, word_map: np.ndarray | None,
+               k: int) -> np.ndarray:
+    """(K, k) most probable word ids per topic, in the ORIGINAL vocab.
+
+    When the engine frequency-relabeled the corpus, W's rows live in
+    relabeled space; the inverse map restores user-facing ids.
+    """
+    top = np.argsort(-W, axis=0, kind="stable")[:k].T        # (K, k)
+    if word_map is not None:
+        V = W.shape[0]
+        new_to_old = np.empty(V, np.int64)
+        new_to_old[np.asarray(word_map, np.int64)] = np.arange(V)
+        top = new_to_old[top]
+    return top
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class FrozenLDAModel:
+    """Frozen LDA model for serving: W + colsum + hyperparams, read-only.
+
+    ``phi[v][k] = (W[v][k]+β)/(colsum[k]+V·β)`` (== training's Ŵ) is fixed,
+    so everything per-word is precomputed at freeze time and fold-in only
+    pays per-token work. ``word_map`` carries the engine's
+    frequency-relabeling (old id -> model id); ``transform``/``score``
+    accept documents in the ORIGINAL vocabulary and remap internally.
+    """
+    W: np.ndarray                  # (V, K) int32 frozen topic-word counts
+    alpha: float
+    beta: float
+    g: int = 2
+    word_map: np.ndarray | None = None   # (V,) int64 old->model ids
+    tile_size: int = 8192
+
+    def __post_init__(self):
+        W = np.asarray(self.W, np.int32)
+        if W.ndim != 2:
+            raise ValueError(f"W must be (V, K), got shape {W.shape}")
+        object.__setattr__(self, "W", W)
+        colsum = W.sum(axis=0, dtype=np.int64)
+        V = W.shape[0]
+        w_hat = jnp.asarray(
+            (W.astype(np.float32) + np.float32(self.beta))
+            / (colsum.astype(np.float32) + np.float32(V * self.beta)))
+        object.__setattr__(self, "_w_hat", w_hat)
+        # The serving amortization: per-word top-(g+1)/Q'/ΣŴ once, forever.
+        object.__setattr__(self, "_stats", three_branch.word_stats(
+            w_hat, g=self.g, alpha=float(self.alpha)))
+        object.__setattr__(self, "_fold_cache", {})
+
+    # -- shape ---------------------------------------------------------------
+
+    @property
+    def n_words(self) -> int:
+        return int(self.W.shape[0])
+
+    @property
+    def n_topics(self) -> int:
+        return int(self.W.shape[1])
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_state(cls, state, config: LDAConfig,
+                   word_map: np.ndarray | None = None) -> "FrozenLDAModel":
+        """Freeze a dense training state (LDAState or anything with .W)."""
+        return cls(W=np.asarray(state.W, np.int32), alpha=config.alpha_,
+                   beta=config.beta, g=config.g, word_map=word_map,
+                   tile_size=config.tile_size)
+
+    @classmethod
+    def from_payload(cls, payload: dict[str, Any], corpus: Corpus,
+                     config: LDAConfig,
+                     word_map: np.ndarray | None = None) -> "FrozenLDAModel":
+        """Freeze straight from a canonical checkpoint payload.
+
+        W is derived state: it is rebuilt from (corpus, topics_global) by
+        one histogram, so any checkpoint any backend wrote can be served.
+        """
+        topics = np.asarray(
+            _canonical_topics(payload, corpus.n_tokens), np.int32)
+        W = np.zeros((corpus.n_words, config.n_topics), np.int32)
+        np.add.at(W, (corpus.word_ids, topics), 1)
+        return cls(W=W, alpha=config.alpha_, beta=config.beta, g=config.g,
+                   word_map=word_map, tile_size=config.tile_size)
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> str:
+        arrs = {"W": self.W,
+                "alpha": np.float64(self.alpha),
+                "beta": np.float64(self.beta),
+                "g": np.int64(self.g),
+                "tile_size": np.int64(self.tile_size)}
+        if self.word_map is not None:
+            arrs["word_map"] = np.asarray(self.word_map, np.int64)
+        with open(path, "wb") as f:
+            np.savez(f, **arrs)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "FrozenLDAModel":
+        with np.load(path) as z:
+            wm = z["word_map"] if "word_map" in z.files else None
+            return cls(W=z["W"], alpha=float(z["alpha"]),
+                       beta=float(z["beta"]), g=int(z["g"]),
+                       word_map=wm, tile_size=int(z["tile_size"]))
+
+    # -- batching ------------------------------------------------------------
+
+    def prepare_batch(self, docs: Sequence[Sequence[int]]) -> FoldInBatch:
+        """Pad docs to a (B, L) grid and place it on device.
+
+        L is bucketed to the next power of two (compile-cache friendly);
+        pad slots use word 0 with mask 0, so they never touch θ. Word ids
+        arrive in the ORIGINAL vocabulary and are remapped through
+        ``word_map`` when the engine relabeled.
+        """
+        if not len(docs):
+            raise ValueError("prepare_batch needs at least one document")
+        arrs = [np.asarray(d, np.int64).ravel() for d in docs]
+        for i, a in enumerate(arrs):
+            if a.size and (a.min() < 0 or a.max() >= self.n_words):
+                raise ValueError(
+                    f"doc {i} has word ids outside [0, {self.n_words}): "
+                    "documents must use the training vocabulary")
+        if self.word_map is not None:
+            wm = np.asarray(self.word_map, np.int64)
+            arrs = [wm[a] for a in arrs]
+        n_real = len(arrs)
+        B = _next_pow2(n_real, floor=8)   # bucketed like L: bounded jit cache
+        lens = np.array([a.size for a in arrs], np.int64)
+        L = _next_pow2(int(lens.max(initial=1)))
+        wid = np.zeros((B, L), np.int32)
+        mask = np.zeros((B, L), np.int32)
+        for i, a in enumerate(arrs):
+            wid[i, :a.size] = a
+            mask[i, :a.size] = 1
+        doc_ids = np.repeat(np.arange(B, dtype=np.int32), L)
+        return FoldInBatch(jnp.asarray(wid.ravel()), jnp.asarray(doc_ids),
+                           jnp.asarray(mask.ravel()), B, lens, n_real)
+
+    # -- the fold-in sampler (ONE donated dispatch per batch) ---------------
+
+    def _fold_in_fn(self, n_docs: int, n_tokens: int,
+                    n_sweeps: int) -> Callable:
+        """Compiled fold-in for one (B, B·L, sweeps) shape signature.
+
+        Per sweep (ESCA semantics, matching training: every token samples
+        from the sweep-start counts, then D rebuilds):
+          1. phase-1 three-branch skip test from the FROZEN word stats —
+             O(g) gathers per token, no O(K) work where the bound holds;
+          2. survivor compaction + the exact combined sweep over cond-
+             guarded fixed-capacity chunks (training's run_survivor_chunks
+             read-only): chunks past the survivor tail cost one predicate,
+             so phase-2 work is ceil(survivors/capacity) chunks — skipped
+             tokens save REAL compute, exactly as in the fused trainer;
+          3. one (B, K) histogram rebuild of the batch's doc-topic counts.
+        The sweep keys are prefix-stable (``fold_in(key, s)``), so
+        ``n_sweeps=s`` is bit-equal to the first s sweeps of any longer
+        run — which is also what lets tests/test_serving.py teacher-force
+        the NumPy oracle sweep by sweep.
+        """
+        sig = (n_docs, n_tokens, n_sweeps)
+        fn = self._fold_cache.get(sig)
+        if fn is not None:
+            return fn
+        w_hat, stats_w = self._w_hat, self._stats
+        alpha, g, K = float(self.alpha), self.g, self.n_topics
+        tile = self.tile_size
+        # ~8 active chunks at full survivorship; later sweeps (high skip)
+        # run only the occupied prefix. Same shape logic as training's
+        # plan_capacity, but static per signature (serving has no EMA).
+        capacity = min(n_tokens, _next_pow2(max(n_tokens // 8, 1),
+                                            floor=64))
+        n_chunks = max(1, -(-n_tokens // capacity))
+
+        def fold_in(key, word_ids, doc_ids, mask):
+            kinit, ksweep = jax.random.split(key)
+            topics = jax.random.randint(kinit, (n_tokens,), 0, K,
+                                        dtype=jnp.int32)
+            D = jnp.zeros((n_docs, K), jnp.int32) \
+                .at[doc_ids, topics].add(mask)
+            n_real = jnp.maximum(jnp.sum(mask), 1).astype(jnp.float32)
+
+            def sweep(carry, s):
+                topics, D = carry
+                u = jax.random.uniform(jax.random.fold_in(ksweep, s),
+                                       (n_tokens,), dtype=jnp.float32)
+                dec = three_branch.skip_phase(
+                    u, word_ids, doc_ids, D, stats_w, g=g, alpha=alpha)
+                rank, n_surv = three_branch.survivor_rank(dec.skip)
+                surv_idx = three_branch.compact_survivor_indices(
+                    rank, dec.skip, n_chunks * capacity)
+
+                def sample_chunk(idx):
+                    return three_branch.exact_three_branch(
+                        u[idx], word_ids[idx], doc_ids[idx],
+                        stats_w.k[:, 0], D, w_hat, alpha=alpha,
+                        tile_size=tile)
+
+                new_topics, _ = three_branch.run_survivor_chunks(
+                    surv_idx, n_surv, dec.k1,       # skipped ⇒ K1
+                    capacity=capacity, n_chunks=n_chunks,
+                    sample_chunk=sample_chunk)
+                D = jnp.zeros((n_docs, K), jnp.int32) \
+                    .at[doc_ids, new_topics].add(mask)
+                frac_skip = jnp.sum(dec.skip * mask) / n_real
+                return (new_topics, D), frac_skip
+
+            (topics, D), skips = jax.lax.scan(
+                sweep, (topics, D), jnp.arange(n_sweeps))
+            len_d = jnp.sum(D, axis=1, dtype=jnp.float32)
+            theta = (D.astype(jnp.float32) + alpha) \
+                / (len_d[:, None] + K * alpha)
+            # Held-out LLPT readout (Eq 5 with the frozen φ == Ŵ): riding
+            # inside the dispatch keeps score() sync-free too.
+            p = jnp.sum(theta[doc_ids] * w_hat[word_ids], axis=-1)
+            ll = jnp.log2(jnp.maximum(p, 1e-30)) * mask
+            llpt = jnp.sum(ll) / n_real
+            return theta, D, topics, llpt, skips
+
+        # word_ids is donated and consumed: the returned topics alias its
+        # buffer (same shape/dtype), so the dispatch allocates no second
+        # (B·L,) int32 — the serving analogue of the trainer's donation.
+        fn = jax.jit(fold_in, donate_argnums=(1,))
+        self._fold_cache[sig] = fn
+        return fn
+
+    def transform_batch(self, batch: FoldInBatch, key, *,
+                        n_sweeps: int = 20):
+        """(θ, D, topics, llpt, per-sweep skip fracs) for a prepared batch.
+
+        ONE donated jit dispatch; every return value is a device array and
+        nothing syncs to the host (provable under
+        ``jax.transfer_guard("disallow")`` once the shape is compiled).
+        ``batch.word_ids`` is consumed (its buffer is donated to the
+        returned topics).
+        """
+        fn = self._fold_in_fn(batch.n_docs, int(batch.word_ids.shape[0]),
+                              int(n_sweeps))
+        return fn(key, batch.word_ids, batch.doc_ids, batch.mask)
+
+    def fold_in(self, docs: Sequence[Sequence[int]], *, n_sweeps: int = 20,
+                seed: int = 0, key=None) -> FoldInResult:
+        """θ AND the held-out LLPT AND skip stats from ONE dispatch.
+
+        The single entry point when a caller wants more than one readout:
+        transform()/score() are thin views over this, so asking for both
+        through fold_in halves the serving work.
+        """
+        batch = self.prepare_batch(docs)
+        if key is None:
+            key = jax.random.PRNGKey(seed)
+        theta, _, _, llpt, skips = self.transform_batch(batch, key,
+                                                        n_sweeps=n_sweeps)
+        # drop the bucketing pad rows (uniform θ, zero tokens)
+        return FoldInResult(theta=np.asarray(theta)[:batch.n_real_docs],
+                            llpt=float(llpt),
+                            frac_skipped=np.asarray(skips))
+
+    def transform(self, docs: Sequence[Sequence[int]], *,
+                  n_sweeps: int = 20, seed: int = 0,
+                  key=None) -> np.ndarray:
+        """Fold unseen documents in: (B, K) doc-topic distributions θ.
+
+        θ[d][k] = (D'[d][k]+α)/(len(d)+K·α) where D' comes from
+        ``n_sweeps`` Gibbs sweeps against the frozen φ. Bit-reproducible
+        for a fixed key/seed.
+        """
+        return self.fold_in(docs, n_sweeps=n_sweeps, seed=seed,
+                            key=key).theta
+
+    def score(self, docs: Sequence[Sequence[int]], *, n_sweeps: int = 20,
+              seed: int = 0, key=None) -> float:
+        """Held-out log-likelihood per token (Eq 5) under the frozen φ."""
+        return self.fold_in(docs, n_sweeps=n_sweeps, seed=seed,
+                            key=key).llpt
+
+    # -- introspection -------------------------------------------------------
+
+    def top_words(self, k: int = 10) -> np.ndarray:
+        """(K, k) most probable word ids per topic, in the ORIGINAL vocab."""
+        return _top_words(self.W, self.word_map, k)
+
+
+# ---------------------------------------------------------------------------
+# the canonical checkpoint payload
+# ---------------------------------------------------------------------------
+
+def _canonical_topics(payload: dict[str, Any], n_tokens: int,
+                      padded_len: int | None = None) -> np.ndarray:
+    """Unpadded global-order topics from a canonical OR legacy payload.
+
+    A legacy (padded ``"topics"``) payload is accepted only when its length
+    is exactly ``n_tokens`` or exactly ``padded_len`` (the restoring
+    trainer's padded length, when known) — the same strictness as the old
+    trainer-level shape check, so a payload from a different corpus never
+    silently truncates into garbage counts.
+    """
+    if "topics_global" in payload:
+        tg = np.asarray(payload["topics_global"], np.int32)
+        if tg.shape[0] != n_tokens:
+            raise ValueError(
+                f"checkpoint topics_global has {tg.shape[0]} entries but "
+                f"the corpus holds {n_tokens} tokens: the checkpoint "
+                "belongs to a different corpus")
+        return tg
+    if "topics" in payload:
+        tg = np.asarray(payload["topics"], np.int32)
+        if tg.shape[0] != n_tokens and (padded_len is None
+                                        or tg.shape[0] != padded_len):
+            want = f"{n_tokens}" if padded_len is None \
+                else f"{n_tokens} (unpadded) or {padded_len} (padded)"
+            raise ValueError(
+                f"legacy checkpoint topics have {tg.shape[0]} entries; "
+                f"expected {want}: the checkpoint belongs to a different "
+                "corpus or tiling")
+        return tg[:n_tokens]
+    raise ValueError(
+        "checkpoint payload has neither 'topics_global' (canonical) "
+        f"nor 'topics' (legacy): keys = {sorted(payload)}")
+
+
+class _CanonicalManager:
+    """Checkpoint-manager adapter: canonical payloads on disk, backend
+    payloads in memory.
+
+    The single trainer speaks padded ``"topics"``; this wrapper converts to
+    the unpadded canonical format on save and back on restore, so every
+    backend's checkpoints are interchangeable without the trainers knowing.
+    """
+
+    def __init__(self, inner: CheckpointManager, to_canonical: Callable,
+                 from_canonical: Callable):
+        self.inner = inner
+        self._to = to_canonical
+        self._from = from_canonical
+
+    def save(self, step: int, payload: dict[str, Any]) -> str:
+        return self.inner.save(step, self._to(payload))
+
+    def restore_latest(self) -> dict[str, Any] | None:
+        payload = self.inner.restore_latest()
+        return None if payload is None else self._from(payload)
+
+
+# ---------------------------------------------------------------------------
+# backends (internal: the old trainers behind the one surface)
+# ---------------------------------------------------------------------------
+
+class _SingleBackend:
+    """LDATrainer behind the engine surface (one host, dense or hybrid)."""
+
+    name = "single"
+
+    def __init__(self, corpus: Corpus, config: LDAConfig,
+                 manager: CheckpointManager | None):
+        from repro.lda.trainer import LDATrainer
+        self.corpus = corpus
+        self.config = config
+        wrapped = None
+        if manager is not None:
+            wrapped = _CanonicalManager(manager, self._to_canonical,
+                                        self._from_canonical)
+        self.trainer = LDATrainer(corpus, config, checkpoint_manager=wrapped,
+                                  _from_engine=True)
+
+    # payload conversion (trainer speaks padded "topics")
+    def _to_canonical(self, payload: dict[str, Any]) -> dict[str, Any]:
+        return {"topics_global": np.asarray(payload["topics"], np.int32)
+                [:self.corpus.n_tokens],
+                "key": payload["key"], "iteration": payload["iteration"]}
+
+    def _from_canonical(self, payload: dict[str, Any]) -> dict[str, Any]:
+        tg = _canonical_topics(payload, self.corpus.n_tokens,
+                               padded_len=int(self.trainer.word_ids.shape[0]))
+        padded = np.zeros(self.trainer.word_ids.shape, np.int32)
+        padded[:self.corpus.n_tokens] = tg
+        return {"topics": padded, "key": payload["key"],
+                "iteration": payload["iteration"]}
+
+    # lifecycle
+    def restore_or_init(self):
+        return self.trainer.restore_or_init()
+
+    def state_from_canonical(self, payload: dict[str, Any]):
+        return self.trainer.state_from_payload(self._from_canonical(payload))
+
+    def canonical_payload(self, state) -> dict[str, Any]:
+        return self._to_canonical(state.host_payload())
+
+    def run(self, n_iters: int, state, log_fn, checkpoint_every):
+        return self.trainer.run(n_iters, state, log_fn, checkpoint_every)
+
+    def evaluate(self, state) -> float:
+        return self.trainer.evaluate(state)
+
+    def dense_W(self, state) -> np.ndarray:
+        return np.asarray(state.W, np.int32)
+
+    def state_nbytes(self, state) -> int:
+        return self.trainer.live_state_nbytes(state)
+
+
+class _DistBackend:
+    """DistLDATrainer behind the engine surface (shard_map multi-device)."""
+
+    name = "distributed"
+
+    def __init__(self, corpus: Corpus, config: LDAConfig,
+                 manager: CheckpointManager | None, mesh,
+                 pad_multiple: int = 1024):
+        from repro.lda.distributed import DistLDATrainer
+        if mesh is None:
+            from repro.runtime.compat import make_mesh
+            mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+        self.corpus = corpus
+        self.config = config
+        self.manager = manager
+        self.trainer = DistLDATrainer(corpus, config, mesh,
+                                      pad_multiple=pad_multiple,
+                                      _from_engine=True)
+
+    def restore_or_init(self):
+        if self.manager is not None:
+            payload = self.manager.restore_latest()
+            if payload is not None:
+                return self.state_from_canonical(payload)
+        return self.trainer.init_state()
+
+    def state_from_canonical(self, payload: dict[str, Any]):
+        # the dist trainer's native payload IS the canonical format
+        return self.trainer.state_from_payload(
+            {"topics_global": _canonical_topics(payload,
+                                                self.corpus.n_tokens),
+             "key": payload["key"], "iteration": payload["iteration"]})
+
+    def canonical_payload(self, state) -> dict[str, Any]:
+        return self.trainer.host_payload(state)
+
+    def evaluate(self, state) -> float:
+        D, W = self.trainer.gather_global(state)
+        c = self.corpus
+        return float(llpt_mod.llpt(
+            jnp.asarray(c.word_ids), jnp.asarray(c.doc_ids),
+            jnp.ones(c.n_tokens, jnp.int32),
+            jnp.asarray(D.astype(np.int32)),
+            jnp.asarray(W.astype(np.int32)),
+            alpha=self.config.alpha_, beta=self.config.beta,
+            tile_size=self.config.tile_size))
+
+    def run(self, n_iters: int, state, log_fn, checkpoint_every):
+        """Boundary-chunked scan loop: the multi-device mirror of
+        LDATrainer.run_fused — same shared driver, so same history
+        schema, eval cadence, and checkpoint timing by construction."""
+        tr = self.trainer
+        carry = {"s": state}
+
+        def run_chunk(chunk):
+            carry["s"], stats = tr.run_fused(carry["s"], chunk)
+            jax.block_until_ready(carry["s"].topics)
+            return stats
+
+        history = run_boundary_chunked(
+            n_iters, int(state.iteration),
+            n_tokens=self.corpus.n_tokens,
+            eval_every=self.config.eval_every,
+            checkpoint_every=checkpoint_every,
+            run_chunk=run_chunk,
+            evaluate=lambda: self.evaluate(carry["s"]),
+            save=None if self.manager is None else
+            lambda it: self.manager.save(
+                it, self.canonical_payload(carry["s"])),
+            log_fn=log_fn)
+        return carry["s"], history
+
+    def dense_W(self, state) -> np.ndarray:
+        _, W = self.trainer.gather_global(state)
+        return np.asarray(W, np.int32)
+
+    def state_nbytes(self, state) -> int:
+        return self.trainer.state_nbytes(state)
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class LDAEngine:
+    """The single public entry point for EZLDA training and serving.
+
+    >>> engine = LDAEngine(corpus, LDAConfig(n_topics=64))
+    >>> engine.fit(100)
+    >>> model = engine.export()          # FrozenLDAModel
+    >>> theta = model.transform(new_docs)
+
+    Backends: ``"single"`` (LDATrainer — dense or hybrid fused pipeline)
+    and ``"distributed"`` (DistLDATrainer — shard_map over a device mesh);
+    ``"auto"`` picks distributed iff more than one device is visible (or a
+    multi-device mesh is passed). All backends share the canonical
+    checkpoint format, so an engine can restore any engine's checkpoints
+    regardless of backend, live-state format, mesh, or padding.
+    """
+
+    def __init__(self, corpus: Corpus | Sequence[Sequence[int]],
+                 config: LDAConfig, *, backend: str = "auto", mesh=None,
+                 checkpoint_dir: str | None = None,
+                 checkpoint_manager: CheckpointManager | None = None,
+                 pad_multiple: int = 1024, n_words: int | None = None):
+        if backend not in ("auto", "single", "distributed"):
+            raise ValueError(f"unknown backend {backend!r}: expected "
+                             "'auto', 'single', or 'distributed'")
+        if checkpoint_dir is not None and checkpoint_manager is not None:
+            raise ValueError("pass checkpoint_dir OR checkpoint_manager, "
+                             "not both")
+        # -- corpus prep (the engine owns it) -------------------------------
+        if not isinstance(corpus, Corpus):
+            docs = [np.asarray(d, np.int64) for d in corpus]
+            if n_words is None:
+                n_words = int(max((int(d.max()) for d in docs if d.size),
+                                  default=-1)) + 1
+            corpus = from_documents(docs, n_words)
+        self.word_map: np.ndarray | None = None
+        counts = np.asarray(corpus.word_token_counts)
+        if counts.size and np.any(np.diff(counts) > 0):
+            # the hybrid layout REQUIRES the frequency relabeling and every
+            # other path tolerates it, so prep applies it uniformly; the
+            # map is kept so serving can speak the original vocabulary
+            corpus, self.word_map = relabel_by_frequency(corpus)
+        self.corpus = corpus
+        self.config = config
+        if checkpoint_dir is not None:
+            checkpoint_manager = CheckpointManager(checkpoint_dir)
+        self.checkpoint_manager = checkpoint_manager
+
+        # -- backend selection ----------------------------------------------
+        if backend == "auto":
+            # an explicit mesh is an explicit request for shard_map
+            backend = "distributed" if (mesh is not None
+                                        or jax.device_count() > 1) \
+                else "single"
+        self.backend_name = backend
+        if backend == "single":
+            if mesh is not None:
+                raise ValueError("backend='single' does not take a mesh")
+            self._backend = _SingleBackend(corpus, config,
+                                           checkpoint_manager)
+        else:
+            self._backend = _DistBackend(corpus, config, checkpoint_manager,
+                                         mesh, pad_multiple=pad_multiple)
+        self._state = None
+        self.history: dict[str, list] = {"iteration": [], "llpt": [],
+                                         "tokens_per_sec": [], "stats": []}
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def trainer(self):
+        """The internal backend trainer (benchmarks / advanced use)."""
+        return self._backend.trainer
+
+    @property
+    def state(self):
+        if self._state is None:
+            raise RuntimeError("no training state yet: call fit() or "
+                               "resume() first")
+        return self._state
+
+    @property
+    def iteration(self) -> int:
+        return int(self.state.iteration)
+
+    def state_nbytes(self) -> int:
+        """Measured live count-state bytes of the CURRENT representation."""
+        return self._backend.state_nbytes(self.state)
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def fit(self, n_iters: int, *, log_fn: Callable[[str], None] | None = None,
+            checkpoint_every: int | None = None) -> dict[str, list]:
+        """Train for n_iters (resuming from the engine's current state, a
+        checkpoint if one exists, or a fresh init). Returns this call's
+        history; ``engine.history`` accumulates across calls."""
+        if self._state is None:
+            self._state = self._backend.restore_or_init()
+        self._state, hist = self._backend.run(
+            n_iters, self._state, log_fn, checkpoint_every)
+        for k, v in hist.items():
+            self.history.setdefault(k, []).extend(v)
+        return hist
+
+    def resume(self) -> "LDAEngine":
+        """Restore the newest checkpoint into the engine (explicit resume).
+
+        Requires a checkpoint manager/dir; falls back to a fresh init when
+        no checkpoint exists yet. Returns self (chainable)."""
+        if self.checkpoint_manager is None:
+            raise ValueError("resume() needs checkpoint_dir or "
+                             "checkpoint_manager")
+        self._state = self._backend.restore_or_init()
+        return self
+
+    def score(self) -> float:
+        """Training-corpus LLPT (Eq 5) at the current state."""
+        return self._backend.evaluate(self.state)
+
+    # -- checkpoints ---------------------------------------------------------
+
+    def host_payload(self) -> dict[str, Any]:
+        """The canonical checkpoint payload for the current state."""
+        return self._backend.canonical_payload(self.state)
+
+    def save(self) -> str:
+        if self.checkpoint_manager is None:
+            raise ValueError("save() needs checkpoint_dir or "
+                             "checkpoint_manager")
+        return self.checkpoint_manager.save(self.iteration,
+                                            self.host_payload())
+
+    def restore(self, payload: dict[str, Any]) -> "LDAEngine":
+        """Adopt a canonical (or legacy) payload as the current state."""
+        self._state = self._backend.state_from_canonical(payload)
+        return self
+
+    # -- serving -------------------------------------------------------------
+
+    def export(self) -> FrozenLDAModel:
+        """Freeze the current state into the serving artifact."""
+        return FrozenLDAModel(
+            W=self._backend.dense_W(self.state), alpha=self.config.alpha_,
+            beta=self.config.beta, g=self.config.g, word_map=self.word_map,
+            tile_size=self.config.tile_size)
+
+    def top_words(self, k: int = 10) -> np.ndarray:
+        """(K, k) top word ids per topic at the current state (original
+        vocab) — straight from the counts, no serving artifact built."""
+        return _top_words(self._backend.dense_W(self.state), self.word_map,
+                          k)

@@ -54,6 +54,18 @@ class Corpus:
     def n_tokens(self) -> int:
         return int(self.word_ids.shape[0])
 
+    def documents(self) -> list[np.ndarray]:
+        """Per-document word-id lists (the inverse of ``from_documents``).
+
+        Reads T through the inverted index, so each document's tokens come
+        back in T (word-sorted) order — a permutation of the original
+        document, which is all an exchangeable bag-of-words model ever
+        sees. Used by the serving path to fold held-out corpora in.
+        """
+        return [self.word_ids[self.inv_token_idx[
+                    self.inv_doc_offsets[d]:self.inv_doc_offsets[d + 1]]]
+                for d in range(self.n_docs)]
+
     def validate(self) -> None:
         assert self.word_ids.shape == self.doc_ids.shape
         assert np.all(np.diff(self.word_ids) >= 0), "T must be sorted by wordId"

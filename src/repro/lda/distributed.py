@@ -333,16 +333,38 @@ class DistLDATrainer:
     mesh must carry a 'model' axis (size 1 reproduces the paper's pure
     data-parallel scheme) plus 'data' (and optionally 'pod') axes.
     K must divide the model-axis size; data shards = data-axis extent.
+
+    Deprecated as a PUBLIC entry point: construct through
+    ``repro.lda.api.LDAEngine`` (backend="distributed"), which owns mesh
+    defaulting, the unified checkpoint format, and the serving export.
+    Direct construction still works — it is the engine's internal backend —
+    but emits a DeprecationWarning.
     """
 
     def __init__(self, corpus: Corpus, config: LDAConfig, mesh: Mesh,
-                 pad_multiple: int = 1024):
-        assert "model" in mesh.shape, "mesh needs a model axis (size 1 ok)"
+                 pad_multiple: int = 1024, *, _from_engine: bool = False):
+        if not _from_engine:
+            import warnings
+            warnings.warn(
+                "constructing DistLDATrainer directly is deprecated; use "
+                "repro.lda.api.LDAEngine (backend='distributed') as the "
+                "front door — it wraps this trainer with unified "
+                "checkpoints and the serving export path",
+                DeprecationWarning, stacklevel=2)
+        if "model" not in mesh.shape:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.shape)} lack a 'model' axis: the "
+                "distributed trainer needs one (size 1 reproduces the "
+                "paper's pure data-parallel scheme)")
         self.cfg = config
         self.mesh = mesh
         self.data_axes = batch_axes(mesh)
         self.pm = mesh.shape["model"]
-        assert config.n_topics % self.pm == 0
+        if config.n_topics % self.pm != 0:
+            raise ValueError(
+                f"n_topics={config.n_topics} is not divisible by the model "
+                f"mesh axis ({self.pm}): topic-axis model parallelism "
+                "block-partitions K over the model shards")
         self.layout = None
         if config.format == "hybrid":
             if self.pm != 1:
@@ -472,7 +494,11 @@ class DistLDATrainer:
 
     def state_from_payload(self, payload: dict):
         tg = np.asarray(payload["topics_global"], np.int32)
-        assert tg.shape[0] == self.corpus.n_tokens
+        if tg.shape[0] != self.corpus.n_tokens:
+            raise ValueError(
+                f"checkpoint topics_global has {tg.shape[0]} entries but "
+                f"the corpus holds {self.corpus.n_tokens} tokens: the "
+                "checkpoint belongs to a different corpus")
         S, K = self.sc.n_shards, self.cfg.n_topics
         topics = np.zeros_like(self.sc.word_ids)
         for s in range(S):

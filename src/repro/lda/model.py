@@ -32,6 +32,42 @@ class LDAConfig:
     seed: int = 0
     eval_every: int = 10
 
+    def __post_init__(self) -> None:
+        # The ONE validation point for every knob (DESIGN.md SS7): trainers,
+        # pipelines, and the engine all consume an already-validated config,
+        # so a bad knob fails here — at construction, with the full menu —
+        # never deep inside a backend __init__ or a traced function.
+        if self.n_topics < 1:
+            raise ValueError(f"n_topics={self.n_topics} must be >= 1")
+        if self.sampler not in ("two_branch", "three_branch"):
+            raise ValueError(f"unknown sampler {self.sampler!r}: "
+                             "expected 'two_branch' or 'three_branch'")
+        if self.impl not in ("xla", "pallas"):
+            raise ValueError(f"unknown impl {self.impl!r}: "
+                             "expected 'xla' or 'pallas'")
+        if self.format not in ("dense", "hybrid"):
+            raise ValueError(f"unknown state format {self.format!r}: "
+                             "expected 'dense' or 'hybrid'")
+        if self.tail_sampler not in ("exact", "sparse"):
+            raise ValueError(f"unknown tail_sampler {self.tail_sampler!r}: "
+                             "expected 'exact' or 'sparse'")
+        if self.g < 1:
+            raise ValueError(f"g={self.g} must be >= 1 (paper uses 2)")
+        if self.tile_size < 1:
+            raise ValueError(f"tile_size={self.tile_size} must be >= 1")
+        if self.eval_every < 1:
+            raise ValueError(f"eval_every={self.eval_every} must be >= 1")
+        if self.alpha is not None and self.alpha <= 0:
+            raise ValueError(f"alpha={self.alpha} must be positive "
+                             "(or None for the paper's 50/K)")
+        if self.beta <= 0:
+            raise ValueError(f"beta={self.beta} must be positive")
+        for knob in ("d_capacity", "survivor_capacity",
+                     "dense_word_threshold"):
+            v = getattr(self, knob)
+            if v is not None and v < 1:
+                raise ValueError(f"{knob}={v} must be >= 1 (or None for auto)")
+
     @property
     def alpha_(self) -> float:
         return 50.0 / self.n_topics if self.alpha is None else self.alpha

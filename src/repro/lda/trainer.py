@@ -16,6 +16,7 @@ Two execution modes share one state/checkpoint format:
 from __future__ import annotations
 
 import time
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -26,21 +27,94 @@ from repro.core import esca, llpt as llpt_mod
 from repro.lda.corpus import Corpus, pad_corpus
 from repro.lda.model import LDAConfig, LDAState
 
-__all__ = ["LDATrainer"]
+__all__ = ["LDATrainer", "chunk_to_boundary", "run_boundary_chunked"]
+
+
+def chunk_to_boundary(it_now: int, done: int, remaining: int,
+                      eval_every: int,
+                      checkpoint_every: int | None = None) -> int:
+    """Iterations to scan before the next absolute eval/ckpt boundary.
+
+    Shared by LDATrainer.run_fused and the engine's distributed loop so
+    both backends hit the SAME boundaries (same history shape) for the
+    same config: resumed runs (start % eval_every != 0) and non-divisible
+    n_iters still land on every boundary a stepwise loop would. The first
+    chunk is a single iteration — a baseline eval is recorded after it,
+    and history must not change shape when the loop flavor changes.
+    """
+    if done == 0:
+        return min(1, remaining)
+    chunk = eval_every - it_now % eval_every
+    if checkpoint_every:
+        chunk = min(chunk, checkpoint_every - it_now % checkpoint_every)
+    return min(chunk, remaining)
+
+
+def run_boundary_chunked(n_iters: int, start_iter: int, *, n_tokens: int,
+                         eval_every: int, checkpoint_every: int | None,
+                         run_chunk: Callable, evaluate: Callable,
+                         save: Callable | None,
+                         log_fn: Callable[[str], None] | None) -> dict:
+    """The ONE boundary-chunked driver both backends run fit() through.
+
+    ``run_chunk(chunk) -> stacked stats`` advances the caller's carried
+    state by ``chunk`` iterations (blocking until done — the dt here is
+    real device time); ``evaluate() -> float`` scores the current carry;
+    ``save(it)`` checkpoints it. Eval cadence, history schema, log format,
+    and checkpoint timing live only here, so the single and distributed
+    backends cannot drift apart (the engine's same-history-shape
+    contract).
+    """
+    history: dict[str, list] = {"iteration": [], "llpt": [],
+                                "tokens_per_sec": [], "stats": []}
+    done = 0
+    while done < n_iters:
+        chunk = chunk_to_boundary(start_iter + done, done, n_iters - done,
+                                  eval_every, checkpoint_every)
+        t0 = time.perf_counter()
+        stats = run_chunk(chunk)
+        dt = time.perf_counter() - t0
+        done += chunk
+        it = start_iter + done
+        if it % eval_every == 0 or done == chunk:
+            score = evaluate()
+            last = {k: float(np.asarray(v)[-1])
+                    for k, v in stats._asdict().items()}
+            history["iteration"].append(it)
+            history["llpt"].append(score)
+            history["tokens_per_sec"].append(n_tokens * chunk / dt)
+            history["stats"].append(last)
+            if log_fn:
+                log_fn(f"iter={it:4d} llpt={score:+.4f} "
+                       f"tok/s={n_tokens*chunk/dt:,.0f} "
+                       f"unchanged={last.get('frac_unchanged', 0):.3f}")
+        if checkpoint_every and save is not None \
+                and it % checkpoint_every == 0:
+            save(it)
+    return history
 
 
 class LDATrainer:
-    """Owns device arrays for one corpus and jit-compiled step functions."""
+    """Owns device arrays for one corpus and jit-compiled step functions.
+
+    Deprecated as a PUBLIC entry point: construct through
+    ``repro.lda.api.LDAEngine`` (backend="single"), which owns corpus prep,
+    backend selection, and the unified checkpoint format. Direct
+    construction still works — it is the engine's internal backend — but
+    emits a DeprecationWarning.
+    """
 
     def __init__(self, corpus: Corpus, config: LDAConfig,
-                 checkpoint_manager: Any | None = None):
+                 checkpoint_manager: Any | None = None, *,
+                 _from_engine: bool = False):
+        if not _from_engine:
+            warnings.warn(
+                "constructing LDATrainer directly is deprecated; use "
+                "repro.lda.api.LDAEngine (backend='single') as the front "
+                "door — it wraps this trainer with unified checkpoints "
+                "and the serving export path",
+                DeprecationWarning, stacklevel=2)
         corpus.validate()
-        if config.format not in ("dense", "hybrid"):
-            raise ValueError(f"unknown state format {config.format!r}: "
-                             "expected 'dense' or 'hybrid'")
-        if config.tail_sampler not in ("exact", "sparse"):
-            raise ValueError(f"unknown tail_sampler {config.tail_sampler!r}: "
-                             "expected 'exact' or 'sparse'")
         self.config = config
         self.corpus = corpus
         padded, mask = pad_corpus(corpus, config.tile_size)
@@ -77,8 +151,15 @@ class LDATrainer:
 
     def state_from_payload(self, payload: dict[str, Any]) -> LDAState:
         topics = jnp.asarray(payload["topics"], jnp.int32)
-        assert topics.shape == self.word_ids.shape, \
-            "checkpoint topics do not match corpus padding"
+        if topics.shape != self.word_ids.shape:
+            raise ValueError(
+                f"checkpoint topics have shape {tuple(topics.shape)} but "
+                f"this trainer's padded corpus has "
+                f"{tuple(self.word_ids.shape)} token slots: the checkpoint "
+                "was written for a different corpus or tile_size. Restore "
+                "through repro.lda.api.LDAEngine, whose canonical payload "
+                "stores topics in unpadded global token order and re-pads "
+                "for whatever tiling the restoring trainer uses")
         D, W = esca.update_counts(
             self.word_ids, self.doc_ids, topics, self.mask,
             n_docs=self.n_docs, n_words=self.n_words,
@@ -178,53 +259,25 @@ class LDATrainer:
         """
         state = self.restore_or_init() if state is None else state
         pipe = self.fused_pipeline()
-        fstate = pipe.from_lda_state(state)
-        history: dict[str, list] = {"iteration": [], "llpt": [],
-                                    "tokens_per_sec": [], "stats": []}
-        start_iter = int(state.iteration)
-        done = 0
-        while done < n_iters:
-            # Scan exactly to the next absolute eval/checkpoint boundary, so
-            # resumed runs (start_iter % eval_every != 0) and non-divisible
-            # n_iters still hit every boundary the reference run() would.
-            # The first chunk is a single iteration: run() records a baseline
-            # eval after its first iteration, and history must not change
-            # shape when config.fused flips.
-            it_now = start_iter + done
-            if done == 0:
-                chunk = 1
-            else:
-                chunk = self.config.eval_every \
-                    - it_now % self.config.eval_every
-                if checkpoint_every:
-                    chunk = min(chunk,
-                                checkpoint_every - it_now % checkpoint_every)
-            chunk = min(chunk, n_iters - done)
-            t0 = time.perf_counter()
-            fstate, stats, _ = pipe.run_fused(fstate, chunk)
-            jax.block_until_ready(fstate.topics)
-            dt = time.perf_counter() - t0
-            done += chunk
-            it = start_iter + done
-            if it % self.config.eval_every == 0 or done == chunk:
-                lda_state = pipe.to_lda_state(fstate)
-                score = self.evaluate(lda_state)
-                last = {k: float(np.asarray(v)[-1])
-                        for k, v in stats._asdict().items()}
-                history["iteration"].append(it)
-                history["llpt"].append(score)
-                history["tokens_per_sec"].append(
-                    self.corpus.n_tokens * chunk / dt)
-                history["stats"].append(last)
-                if log_fn:
-                    log_fn(f"iter={it:4d} llpt={score:+.4f} "
-                           f"tok/s={self.corpus.n_tokens*chunk/dt:,.0f} "
-                           f"unchanged={last.get('frac_unchanged', 0):.3f}")
-            if (checkpoint_every and self.checkpoint_manager is not None
-                    and it % checkpoint_every == 0):
-                self.checkpoint_manager.save(
-                    it, pipe.to_lda_state(fstate).host_payload())
-        return pipe.to_lda_state(fstate), history
+        carry = {"fs": pipe.from_lda_state(state)}
+
+        def run_chunk(chunk):
+            carry["fs"], stats, _ = pipe.run_fused(carry["fs"], chunk)
+            jax.block_until_ready(carry["fs"].topics)
+            return stats
+
+        history = run_boundary_chunked(
+            n_iters, int(state.iteration),
+            n_tokens=self.corpus.n_tokens,
+            eval_every=self.config.eval_every,
+            checkpoint_every=checkpoint_every,
+            run_chunk=run_chunk,
+            evaluate=lambda: self.evaluate(pipe.to_lda_state(carry["fs"])),
+            save=None if self.checkpoint_manager is None else
+            lambda it: self.checkpoint_manager.save(
+                it, pipe.to_lda_state(carry["fs"]).host_payload()),
+            log_fn=log_fn)
+        return pipe.to_lda_state(carry["fs"]), history
 
     def run(self, n_iters: int, state: LDAState | None = None,
             log_fn: Callable[[str], None] | None = None,

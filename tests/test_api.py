@@ -1,0 +1,289 @@
+"""LDAEngine front-door tests (repro/lda/api.py).
+
+The load-bearing properties:
+  1. Validation is centralized: every bad knob fails at LDAConfig
+     construction (one place), and the engine rejects bad backends.
+  2. The old trainer constructors are deprecation shims: direct use warns,
+     the engine path does not.
+  3. ONE checkpoint format: payloads written under any (backend, format)
+     pair restore into any other with topics bit-equal — dense <-> hybrid
+     in-process, single <-> distributed in a forged-device subprocess.
+  4. Legacy padded-"topics" payloads still restore.
+  5. The scikit-style lifecycle (fit / resume / score) behaves: LLPT
+     rises, resume picks up the newest checkpoint, fit continues from it.
+"""
+
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.checkpoint import CheckpointManager
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    # raw (UNrelabeled) on purpose: the engine owns corpus prep
+    return synthetic_lda_corpus(0, n_docs=60, n_words=80, n_topics=8,
+                                mean_doc_len=40)
+
+
+def _cfg(**kw):
+    base = dict(n_topics=16, tile_size=512, eval_every=5, fused=True)
+    base.update(kw)
+    return LDAConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# 1. centralized validation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bad", [
+    dict(n_topics=0),
+    dict(sampler="four_branch"),
+    dict(impl="cuda"),
+    dict(format="csr"),
+    dict(tail_sampler="magic"),
+    dict(g=0),
+    dict(eval_every=0),
+    dict(alpha=-1.0),
+    dict(beta=0.0),
+    dict(d_capacity=0),
+    dict(survivor_capacity=-3),
+])
+def test_config_validation_centralized(bad):
+    """Every knob fails at CONFIG construction, not inside a backend."""
+    kw = dict(n_topics=8)
+    kw.update(bad)
+    with pytest.raises(ValueError):
+        LDAConfig(**kw)
+
+
+def test_engine_rejects_unknown_backend(corpus):
+    with pytest.raises(ValueError, match="backend"):
+        LDAEngine(corpus, _cfg(), backend="tpu_pod")
+
+
+def test_engine_single_rejects_mesh(corpus):
+    from repro.runtime.compat import make_mesh
+    with pytest.raises(ValueError, match="mesh"):
+        LDAEngine(corpus, _cfg(), backend="single",
+                  mesh=make_mesh((1, 1), ("data", "model")))
+
+
+# ---------------------------------------------------------------------------
+# 2. deprecation shims
+# ---------------------------------------------------------------------------
+
+def test_direct_trainer_construction_warns(corpus):
+    from repro.lda.trainer import LDATrainer
+    with pytest.warns(DeprecationWarning, match="LDAEngine"):
+        LDATrainer(corpus, _cfg())
+
+
+def test_engine_path_does_not_warn(corpus):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)
+        LDAEngine(corpus, _cfg(), backend="single")
+
+
+def test_auto_backend_single_device(corpus):
+    # the test suite runs on one real CPU device
+    eng = LDAEngine(corpus, _cfg())
+    assert eng.backend_name == "single"
+
+
+# ---------------------------------------------------------------------------
+# 3./5. lifecycle + one checkpoint format (in-process: dense <-> hybrid)
+# ---------------------------------------------------------------------------
+
+def test_fit_score_lifecycle(corpus):
+    eng = LDAEngine(corpus, _cfg(), backend="single")
+    with pytest.raises(RuntimeError, match="fit"):
+        eng.state  # no state before fit/resume
+    hist = eng.fit(20)
+    assert hist["llpt"][-1] > hist["llpt"][0], "LLPT must rise"
+    assert eng.iteration == 20
+    # 20 is an eval boundary: score() at the final state == last history eval
+    assert eng.score() == pytest.approx(hist["llpt"][-1])
+    # engine-owned prep: the raw corpus was frequency-relabeled
+    assert eng.word_map is not None
+    assert np.all(np.diff(eng.corpus.word_token_counts) <= 0)
+    # history accumulates across fit calls
+    eng.fit(5)
+    assert eng.history["iteration"][-1] == 25
+
+
+def test_checkpoint_roundtrip_dense_hybrid(corpus, tmp_path):
+    """Canonical payloads cross live-state formats with topics bit-equal."""
+    mgr = CheckpointManager(str(tmp_path))
+    eng = LDAEngine(corpus, _cfg(format="dense"), backend="single",
+                    checkpoint_manager=mgr)
+    eng.fit(10)
+    eng.save()
+    p0 = eng.host_payload()
+
+    eng_h = LDAEngine(corpus, _cfg(format="hybrid"), backend="single",
+                      checkpoint_manager=mgr).resume()
+    assert eng_h.iteration == 10
+    p1 = eng_h.host_payload()
+    assert np.array_equal(p0["topics_global"], p1["topics_global"])
+    assert np.array_equal(p0["key"], p1["key"])
+
+    # reverse: train hybrid, restore into dense
+    eng_h.fit(5)
+    eng_h.save()
+    eng_d = LDAEngine(corpus, _cfg(format="dense"), backend="single",
+                      checkpoint_manager=mgr).resume()
+    assert eng_d.iteration == 15
+    assert np.array_equal(eng_h.host_payload()["topics_global"],
+                          eng_d.host_payload()["topics_global"])
+    # counts are derived state: the restored dense W equals the hybrid's
+    W_h = eng_h._backend.dense_W(eng_h.state)
+    W_d = eng_d._backend.dense_W(eng_d.state)
+    assert np.array_equal(W_h, W_d)
+
+
+def test_resume_continues_training(corpus, tmp_path):
+    eng = LDAEngine(corpus, _cfg(), backend="single",
+                    checkpoint_dir=str(tmp_path))
+    eng.fit(10, checkpoint_every=5)
+    eng2 = LDAEngine(corpus, _cfg(), backend="single",
+                     checkpoint_dir=str(tmp_path)).resume()
+    assert eng2.iteration == 10
+    hist = eng2.fit(5)
+    assert eng2.iteration == 15
+    assert hist["iteration"][0] > 10
+
+
+def test_resume_without_manager_raises(corpus):
+    with pytest.raises(ValueError, match="checkpoint"):
+        LDAEngine(corpus, _cfg(), backend="single").resume()
+
+
+# ---------------------------------------------------------------------------
+# 4. legacy + malformed payloads
+# ---------------------------------------------------------------------------
+
+def test_legacy_padded_topics_payload_restores(corpus):
+    eng = LDAEngine(corpus, _cfg(), backend="single")
+    eng.fit(5)
+    # what an old single-trainer checkpoint looked like: PADDED topics
+    legacy = eng.trainer.host_payload(eng.state)
+    assert "topics" in legacy and "topics_global" not in legacy
+    eng2 = LDAEngine(corpus, _cfg(), backend="single").restore(legacy)
+    assert eng2.iteration == 5
+    assert np.array_equal(eng.host_payload()["topics_global"],
+                          eng2.host_payload()["topics_global"])
+
+
+def test_malformed_payload_actionable_errors(corpus):
+    eng = LDAEngine(corpus, _cfg(), backend="single")
+    key = np.asarray(jax.random.key_data(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="different corpus"):
+        eng.restore({"topics_global": np.zeros(3, np.int32),
+                     "key": key, "iteration": 1})
+    with pytest.raises(ValueError, match="topics"):
+        eng.restore({"key": key, "iteration": 1})
+
+
+def test_trainer_payload_shape_error_is_valueerror(corpus):
+    """The finished bare-assert sweep: a wrong-shape checkpoint raises an
+    actionable ValueError, not AssertionError."""
+    from repro.lda.trainer import LDATrainer
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        tr = LDATrainer(corpus, _cfg())
+    key = np.asarray(jax.random.key_data(jax.random.PRNGKey(0)))
+    with pytest.raises(ValueError, match="padded corpus"):
+        tr.state_from_payload({"topics": np.zeros(7, np.int32),
+                               "key": key, "iteration": 0})
+
+
+# ---------------------------------------------------------------------------
+# 3b. cross-BACKEND round trip (single <-> distributed, forged devices)
+# ---------------------------------------------------------------------------
+
+_PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys; sys.path.insert(0, "src")
+import tempfile
+import numpy as np, jax
+from repro.checkpoint import CheckpointManager
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+
+corpus = synthetic_lda_corpus(0, n_docs=60, n_words=80, n_topics=8,
+                              mean_doc_len=40)
+cfg = LDAConfig(n_topics=16, tile_size=512, eval_every=4, fused=True)
+mgr = CheckpointManager(tempfile.mkdtemp())
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_roundtrip_single_to_distributed():
+    """backend='single' format='dense' -> backend='distributed'
+    format='hybrid' and back: topics bit-equal, counts conserved, and the
+    restored engines keep training."""
+    body = _PRELUDE + textwrap.dedent("""
+    import dataclasses
+    eng = LDAEngine(corpus, cfg, backend="single", checkpoint_manager=mgr)
+    eng.fit(8)
+    eng.save()
+    p0 = eng.host_payload()
+
+    cfg_h = dataclasses.replace(cfg, format="hybrid")
+    eng_d = LDAEngine(corpus, cfg_h, backend="distributed",
+                      checkpoint_manager=mgr, pad_multiple=256).resume()
+    assert eng_d.backend_name == "distributed"
+    assert eng_d.iteration == 8
+    p1 = eng_d.host_payload()
+    assert np.array_equal(p0["topics_global"], p1["topics_global"])
+    D, W = eng_d.trainer.gather_global(eng_d.state)
+    assert D.sum() == corpus.n_tokens == W.sum()
+
+    # reverse: distributed hybrid -> single dense, bit-equal again
+    eng_d.fit(4)
+    eng_d.save()
+    eng_s = LDAEngine(corpus, cfg, backend="single",
+                      checkpoint_manager=mgr).resume()
+    assert eng_s.iteration == 12
+    assert np.array_equal(eng_d.host_payload()["topics_global"],
+                          eng_s.host_payload()["topics_global"])
+    hist = eng_s.fit(4)
+    assert eng_s.iteration == 16 and len(hist["llpt"]) >= 1
+    print("OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", body],
+                          capture_output=True, text=True, timeout=900,
+                          cwd=".")
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OK" in proc.stdout
+
+
+@pytest.mark.slow
+def test_auto_backend_picks_distributed_on_multi_device():
+    body = _PRELUDE + textwrap.dedent("""
+    eng = LDAEngine(corpus, cfg)
+    assert eng.backend_name == "distributed", eng.backend_name
+    hist = eng.fit(4)
+    assert hist["llpt"][-1] >= hist["llpt"][0] - 0.2
+    print("OK")
+    """)
+    proc = subprocess.run([sys.executable, "-c", body],
+                          capture_output=True, text=True, timeout=900,
+                          cwd=".")
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,233 @@
+"""FrozenLDAModel serving tests (repro/lda/api.py fold-in inference).
+
+The load-bearing properties:
+  1. transform() is bit-reproducible under a fixed key, and the sweep key
+     schedule is prefix-stable (n_sweeps=s reproduces the first s sweeps
+     of any longer run).
+  2. The fold-in sampler agrees with a float64 NumPy oracle, teacher-
+     forced sweep by sweep (mismatches allowed only within a tiny margin
+     of a CDF boundary — the f32-vs-f64 edge).
+  3. score() on the training documents matches the trainer's evaluate()
+     within tolerance: fold-in re-derives θ that the training D already
+     encodes.
+  4. A serving batch is ONE donated jit dispatch with zero host syncs:
+     transform_batch runs under jax.transfer_guard("disallow") and
+     consumes (donates) the batch's word_ids buffer.
+  5. The artifact round-trips: save/load, export-from-state vs
+     export-from-checkpoint-payload, and the vocab map survives.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.lda.api import FrozenLDAModel, LDAEngine
+from repro.lda.corpus import synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def raw_corpus():
+    # raw (unrelabeled): the engine preps it, so word_map is exercised
+    return synthetic_lda_corpus(0, n_docs=40, n_words=40, n_topics=4,
+                                mean_doc_len=14)
+
+
+@pytest.fixture(scope="module")
+def engine(raw_corpus):
+    eng = LDAEngine(raw_corpus,
+                    LDAConfig(n_topics=8, tile_size=256, eval_every=5,
+                              fused=True),
+                    backend="single")
+    eng.fit(15)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def model(engine):
+    return engine.export()
+
+
+@pytest.fixture(scope="module")
+def held_docs():
+    rng = np.random.default_rng(7)
+    return [list(rng.integers(0, 40, 12)) for _ in range(6)]
+
+
+# ---------------------------------------------------------------------------
+# 1. reproducibility
+# ---------------------------------------------------------------------------
+
+def test_transform_bit_reproducible(model, held_docs):
+    t1 = model.transform(held_docs, n_sweeps=6, seed=3)
+    t2 = model.transform(held_docs, n_sweeps=6, seed=3)
+    assert np.array_equal(t1, t2)
+    assert t1.shape == (len(held_docs), model.n_topics)
+    assert np.allclose(t1.sum(axis=1), 1.0, atol=1e-5)
+    t3 = model.transform(held_docs, n_sweeps=6, seed=4)
+    assert not np.array_equal(t1, t3), "different key must change θ"
+
+
+def test_sweep_keys_prefix_stable(model, held_docs):
+    """n_sweeps=0 returns the raw init; the init matches the documented
+    key schedule (kinit from the first split) — the contract the oracle
+    teacher-forcing below builds on."""
+    key = jax.random.PRNGKey(5)
+    b = model.prepare_batch(held_docs)
+    n = int(b.word_ids.shape[0])
+    t0 = np.asarray(model.transform_batch(
+        model.prepare_batch(held_docs), key, n_sweeps=0)[2])
+    kinit, _ = jax.random.split(key)
+    expect = np.asarray(jax.random.randint(kinit, (n,), 0, model.n_topics,
+                                           dtype=jnp.int32))
+    assert np.array_equal(t0, expect)
+
+
+# ---------------------------------------------------------------------------
+# 2. the NumPy fold-in oracle
+# ---------------------------------------------------------------------------
+
+def test_fold_in_matches_numpy_oracle(model, held_docs):
+    """Teacher-forced sweep-by-sweep: float64 exact three-branch sampling
+    must reproduce the jit fold-in's topic draws (identical uniforms, the
+    prefix-stable key schedule), except within ~1e-4·total of a CDF
+    boundary where f32 and f64 may legitimately disagree."""
+    K, V = model.n_topics, model.n_words
+    alpha, beta = float(model.alpha), float(model.beta)
+    key = jax.random.PRNGKey(5)
+    b0 = model.prepare_batch(held_docs)
+    wid = np.asarray(b0.word_ids)
+    did = np.asarray(b0.doc_ids)
+    msk = np.asarray(b0.mask)
+    n, B = wid.shape[0], b0.n_docs
+
+    W = model.W.astype(np.float64)
+    W_hat = (W + beta) / (W.sum(0) + V * beta)           # the frozen φ
+    _, ksweep = jax.random.split(key)
+
+    prev = np.asarray(model.transform_batch(
+        model.prepare_batch(held_docs), key, n_sweeps=0)[2])
+    n_sweeps, mismatches, real = 3, 0, 0
+    for s in range(n_sweeps):
+        D = np.zeros((B, K), np.int64)
+        np.add.at(D, (did, prev), msk)
+        u = np.asarray(jax.random.uniform(
+            jax.random.fold_in(ksweep, s), (n,),
+            dtype=jnp.float32)).astype(np.float64)
+        nxt = np.asarray(model.transform_batch(
+            model.prepare_batch(held_docs), key, n_sweeps=s + 1)[2])
+        for i in range(n):
+            if not msk[i]:
+                continue
+            real += 1
+            w = W_hat[wid[i]]
+            k1 = int(np.argmax(w))
+            drow = D[did[i]].astype(np.float64)
+            mass = np.where(np.arange(K) == k1, 0.0, (drow + alpha) * w)
+            m = w[k1] * (drow[k1] + alpha)
+            cum = np.cumsum(mass)
+            x = u[i] * (m + cum[-1])
+            if x < m:
+                topic = k1
+            else:
+                topic = int(min(np.searchsorted(cum, x - m, side="right"),
+                                K - 1))
+            if topic != nxt[i]:
+                # only a CDF-boundary fp edge may disagree
+                bounds = np.concatenate([[m], m + cum])
+                margin = np.min(np.abs(x - bounds)) / (m + cum[-1])
+                assert margin < 1e-4, (
+                    f"sweep {s} token {i}: oracle {topic} vs jax "
+                    f"{int(nxt[i])} with margin {margin:.2e}")
+                mismatches += 1
+        prev = nxt
+    assert real >= 100, "oracle corpus too small to mean anything"
+    assert mismatches <= max(1, real // 100), \
+        f"{mismatches}/{real} boundary mismatches is too many"
+
+
+# ---------------------------------------------------------------------------
+# 3. score() vs evaluate()
+# ---------------------------------------------------------------------------
+
+def test_score_on_training_docs_matches_evaluate(engine, model, raw_corpus):
+    """Fold-in re-derives what training already knows: LLPT from
+    transform()'s θ on the training docs lands within tolerance of the
+    trainer's evaluate() (measured gap ~0.007 bits; bound 0.15)."""
+    ev = engine.score()
+    # raw_corpus.documents() is in the ORIGINAL vocab — the model remaps
+    sc = model.score(raw_corpus.documents(), n_sweeps=30, seed=0)
+    assert abs(ev - sc) < 0.15, (ev, sc)
+
+
+# ---------------------------------------------------------------------------
+# 4. one donated dispatch, zero host syncs
+# ---------------------------------------------------------------------------
+
+def test_transform_batch_no_host_syncs_and_donated(model, held_docs):
+    key = jax.random.PRNGKey(1)
+    # warm the compile cache for this (B, L, sweeps) signature
+    model.transform_batch(model.prepare_batch(held_docs), key, n_sweeps=4)
+    batch = model.prepare_batch(held_docs)
+    with jax.transfer_guard("disallow"):      # any host sync would raise
+        out = model.transform_batch(batch, key, n_sweeps=4)
+        jax.block_until_ready(out)
+    assert batch.word_ids.is_deleted(), \
+        "word_ids must be DONATED to the dispatch"
+    theta = np.asarray(out[0])                # readback after the guard
+    assert np.allclose(theta.sum(axis=1), 1.0, atol=1e-5)
+    skips = np.asarray(out[4])
+    assert skips.shape == (4,) and np.all((skips >= 0) & (skips <= 1))
+
+
+# ---------------------------------------------------------------------------
+# 5. the artifact round-trips
+# ---------------------------------------------------------------------------
+
+def test_save_load_roundtrip(model, held_docs, tmp_path):
+    path = str(tmp_path / "frozen.npz")
+    model.save(path)
+    back = FrozenLDAModel.load(path)
+    assert np.array_equal(back.W, model.W)
+    assert back.alpha == model.alpha and back.beta == model.beta
+    assert np.array_equal(back.word_map, model.word_map)
+    t1 = model.transform(held_docs, n_sweeps=5, seed=2)
+    t2 = back.transform(held_docs, n_sweeps=5, seed=2)
+    assert np.array_equal(t1, t2), "loaded artifact must serve identically"
+
+
+def test_export_from_checkpoint_payload(engine, model):
+    """FrozenLDAModel.from_payload(canonical checkpoint) rebuilds the same
+    W the live-state export carries — counts are derived state."""
+    m2 = FrozenLDAModel.from_payload(engine.host_payload(), engine.corpus,
+                                     engine.config,
+                                     word_map=engine.word_map)
+    assert np.array_equal(m2.W, model.W)
+
+
+def test_top_words_speak_original_vocab(engine, model):
+    top = model.top_words(5)
+    assert top.shape == (model.n_topics, 5)
+    assert top.min() >= 0 and top.max() < model.n_words
+    # invert the check: mapping the reported (original) ids through the
+    # engine's word_map must reproduce the model-space argsort
+    wm = np.asarray(engine.word_map)
+    model_space = np.argsort(-model.W, axis=0, kind="stable")[:5].T
+    assert np.array_equal(wm[top], model_space)
+
+
+def test_prepare_batch_validation(model):
+    with pytest.raises(ValueError, match="at least one"):
+        model.prepare_batch([])
+    with pytest.raises(ValueError, match="vocabulary"):
+        model.prepare_batch([[0, 1, model.n_words + 3]])
+
+
+def test_from_state_constructor(engine):
+    m = FrozenLDAModel.from_state(engine.state, engine.config,
+                                  word_map=engine.word_map)
+    assert np.array_equal(m.W, np.asarray(engine.state.W))
