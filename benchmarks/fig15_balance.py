@@ -1,21 +1,153 @@
-"""Fig 15: hierarchical workload balancing — max/mean load imbalance of the
-scheduling schemes on a power-law corpus (paper: 1.1-1.7× throughput from
-balancing; here the structural metric those speedups came from)."""
+"""Fig 15: hierarchical workload balancing — structural max/mean load
+imbalance of the scheduling schemes on a power-law corpus (paper: 1.1-1.7×
+throughput from balancing) PLUS the measured throughput of the LIVE
+tile-scheduled pipeline (``LDAConfig.balance="tiles"``) against the untiled
+dispatch on the same corpus.
+
+Emits results/BENCH_balance.json:
+
+  corpus            {docs, words, tokens, exponent}
+  schemes           [{scheme, max, mean, imbalance}] — the four Fig-15
+                    scheduling schemes at kernel-lane granularity
+  tile_plan         {tile_size, n_tiles, max_words_per_tile,
+                     max_tiles_per_word} — the static corpus TilePlan
+  shard_loads       {doc_chunking, token_tiles} — device-level max/mean
+                    token imbalance (greedy doc chunking vs
+                    assign_token_shards' dissect-and-pack)
+  throughput        {untiled_tokens_per_sec, tiled_tokens_per_sec,
+                     tiled_over_untiled, win_words, survivor_capacity}
+                    — steady-state training tokens/sec, interleaved
+                    repeats, median
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
 from benchmarks._common import bench_corpus
 from repro.core import balance
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import chunk_documents
+from repro.lda.model import LDAConfig
+
+N_TOPICS = 64
+WARMUP_ITERS = 30          # converge enough that the skip shapes the stream
+TIMED_ITERS = 15
+REPEATS = 3
+N_SHARDS = 8
+
+
+def _pipeline(corpus, bal: str):
+    cfg = LDAConfig(n_topics=N_TOPICS, tile_size=8192,
+                    sampler="three_branch", balance=bal)
+    tr = LDAEngine(corpus, cfg, backend="single").trainer
+    pipe = tr.fused_pipeline()
+    fs = pipe.from_lda_state(tr.init_state())
+    fs, _, _ = pipe.run_fused(fs, WARMUP_ITERS)   # replans capacity + window
+    jax.block_until_ready(fs.topics)
+    return pipe, fs
+
+
+def bench(out_path: str = "results/BENCH_balance.json") -> dict:
+    c = bench_corpus(n_docs=600, n_words=3000, mean_doc_len=150,
+                     exponent=1.5)
+
+    # -- structural metric: the paper's four schemes at lane granularity.
+    # tile_size 256 keeps tiles ≫ units (89 coarse tiles over 80 units
+    # would round-robin unevenly and measure quantization, not scheduling)
+    schemes = [balance.load_imbalance(c, s, n_units=80, tile_size=256,
+                                      dissect_threshold=10_000)
+               for s in ("block_per_word", "dynamic", "dynamic+dissect",
+                         "token_tiles")]
+
+    plan = balance.build_tiles(c, tile_size=256)
+
+    # -- device level: doc chunking vs token tiles over N_SHARDS ----------
+    assign = chunk_documents(c, N_SHARDS)
+    doc_loads = np.bincount(assign, weights=c.doc_lengths,
+                            minlength=N_SHARDS)
+    _, tile_loads = balance.assign_token_shards(c, N_SHARDS)
+    shard_loads = {
+        "doc_chunking": float(doc_loads.max() / doc_loads.mean()),
+        "token_tiles": float(tile_loads.max() / tile_loads.mean()),
+    }
+
+    # -- measured throughput: tiled vs untiled live pipeline --------------
+    # each mode runs its SHIPPED planner (untiled: survivor-EMA chunks at
+    # ~8/scan; tiled: working-set-bounded equal-token tiles + re-tiled
+    # word windows); interleaved repeats (median) so CPU frequency drift
+    # cannot bias the ratio. Both race from their own converged state.
+    pipe_u, fs_u = _pipeline(c, "none")
+    pipe_t, fs_t = _pipeline(c, "tiles")
+    fs_u, _, _ = pipe_u.run_fused(fs_u, TIMED_ITERS, replan=False)  # compile
+    fs_t, _, _ = pipe_t.run_fused(fs_t, TIMED_ITERS, replan=False)
+    jax.block_until_ready((fs_u.topics, fs_t.topics))
+    ts_u, ts_t = [], []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        fs_u, _, _ = pipe_u.run_fused(fs_u, TIMED_ITERS, replan=False)
+        jax.block_until_ready(fs_u.topics)
+        ts_u.append(c.n_tokens * TIMED_ITERS / (time.perf_counter() - t0))
+        t0 = time.perf_counter()
+        fs_t, _, _ = pipe_t.run_fused(fs_t, TIMED_ITERS, replan=False)
+        jax.block_until_ready(fs_t.topics)
+        ts_t.append(c.n_tokens * TIMED_ITERS / (time.perf_counter() - t0))
+
+    result = {
+        "corpus": {"docs": c.n_docs, "words": c.n_words,
+                   "tokens": c.n_tokens, "exponent": 1.5},
+        "n_topics": N_TOPICS,
+        "schemes": schemes,
+        "tile_plan": {
+            "tile_size": plan.tile_size,
+            "n_tiles": plan.n_tiles,
+            "max_words_per_tile": plan.max_words_per_tile,
+            "max_tiles_per_word": plan.max_tiles_per_word,
+        },
+        "shard_loads": shard_loads,
+        "throughput": {
+            "warmup_iters": WARMUP_ITERS,
+            "timed_iters": TIMED_ITERS,
+            "repeats": REPEATS,
+            "untiled_tokens_per_sec": float(np.median(ts_u)),
+            "tiled_tokens_per_sec": float(np.median(ts_t)),
+            # >= 1.0 is the acceptance bar: tile scheduling must not cost
+            "tiled_over_untiled": float(np.median(ts_t) / np.median(ts_u)),
+            "win_words": pipe_t.win_words,
+            "tiled_capacity": pipe_t.capacity,
+            "untiled_capacity": pipe_u.capacity,
+        },
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
 
 
 def run():
-    c = bench_corpus(n_docs=600, n_words=3000, mean_doc_len=150,
-                     exponent=1.5)
-    rows = []
-    for scheme in ("block_per_word", "dynamic", "dynamic+dissect",
-                   "token_tiles"):
-        r = balance.load_imbalance(c, scheme, n_units=80, tile_size=1024,
-                                   dissect_threshold=10_000)
-        rows.append((f"fig15/imbalance_{scheme}", 0.0,
-                     round(r["imbalance"], 3)))
-    return rows
+    """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
+    r = bench()
+    for s in r["schemes"]:
+        yield (f"fig15/imbalance_{s['scheme']}", 0.0,
+               round(s["imbalance"], 3))
+    yield ("fig15/shard_imbalance_doc_chunking", 0.0,
+           round(r["shard_loads"]["doc_chunking"], 4))
+    yield ("fig15/shard_imbalance_token_tiles", 0.0,
+           round(r["shard_loads"]["token_tiles"], 4))
+    th = r["throughput"]
+    yield ("fig15/untiled_tokens_per_sec", 0.0,
+           round(th["untiled_tokens_per_sec"], 0))
+    yield ("fig15/tiled_tokens_per_sec", 0.0,
+           round(th["tiled_tokens_per_sec"], 0))
+    yield ("fig15/tiled_over_untiled", 0.0,
+           round(th["tiled_over_untiled"], 3))
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=2))

@@ -9,8 +9,12 @@ unit* -- is reached at preprocessing time: the word-sorted token list is cut
 into fixed tiles of TILE tokens. A tile packs many small words (dynamic
 assignment analogue) and a large word spans many tiles (dissection analogue).
 The per-tile word-run metadata below is the two-level index analogue; it is
-what the Pallas sampling kernels consume. No runtime coordination remains --
-the scheduling moved to compile time (DESIGN.md SS2).
+what the tile-scheduled Pallas sampling kernels consume
+(``kernels/sample_fused.sample_fused_tiled``). The plan is LIVE dispatch
+geometry, not just an analysis artifact: ``train/lda_step.py`` re-tiles the
+survivor token stream between scans (``config.balance == "tiles"``) and
+``lda/distributed.py`` uses ``assign_token_shards`` for device-level
+token-balanced sharding with >threshold word dissection (DESIGN.md SS9).
 """
 
 from __future__ import annotations
@@ -21,7 +25,8 @@ import numpy as np
 
 from repro.lda.corpus import Corpus
 
-__all__ = ["TilePlan", "build_tiles", "load_imbalance"]
+__all__ = ["TilePlan", "build_tiles", "build_tiles_from_word_ids",
+           "tiles_spanned", "assign_token_shards", "load_imbalance"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,24 +42,151 @@ class TilePlan:
     max_tiles_per_word: int
 
 
-def build_tiles(corpus: Corpus, tile_size: int) -> TilePlan:
-    n = corpus.n_tokens
+def tiles_spanned(offsets: np.ndarray, counts: np.ndarray,
+                  tile_size: int) -> np.ndarray:
+    """EXACT number of tiles each word's token run overlaps.
+
+    A word whose tokens occupy ``[offset, offset + count)`` of the
+    word-sorted token list touches tiles ``offset // tile`` through
+    ``(offset + count - 1) // tile`` inclusive — zero tiles for an absent
+    word. This is the true dissection depth; the old
+    ``ceil(count/tile) + 1`` bound over-counted every word by at least one
+    tile (and words smaller than one tile by up to two).
+    """
+    offsets = np.asarray(offsets, np.int64)
+    counts = np.asarray(counts, np.int64)
+    last = np.maximum(offsets + counts - 1, offsets)
+    span = last // tile_size - offsets // tile_size + 1
+    return np.where(counts > 0, span, 0)
+
+
+def build_tiles_from_word_ids(word_ids: np.ndarray, tile_size: int,
+                              n_tokens: int | None = None) -> TilePlan:
+    """Tile ANY word-sorted id array (a corpus or a live survivor stream).
+
+    ``n_tokens`` restricts the plan to a leading prefix of ``word_ids`` —
+    the live-survivor case, where the compacted stream occupies the first
+    ``n_surv`` slots of a fixed-size buffer. Tiles partition the token
+    index space exactly: tile t covers ``[t·tile, min((t+1)·tile, n))``,
+    every token lands in exactly one tile, and no tile is empty.
+    """
+    if tile_size < 1:
+        raise ValueError(f"tile_size={tile_size} must be >= 1")
+    word_ids = np.asarray(word_ids)
+    n = int(word_ids.shape[0]) if n_tokens is None else int(n_tokens)
+    if n < 0 or n > word_ids.shape[0]:
+        raise ValueError(
+            f"n_tokens={n} outside [0, {word_ids.shape[0]}]")
+    if n == 0:
+        return TilePlan(tile_size=tile_size, n_tiles=0,
+                        tile_first_word=np.zeros(0, np.int32),
+                        tile_last_word=np.zeros(0, np.int32),
+                        max_words_per_tile=1, max_tiles_per_word=1)
+    if np.any(np.diff(word_ids[:n].astype(np.int64)) < 0):
+        raise ValueError("word_ids must be sorted ascending (the word-"
+                         "sorted token list T) to build a tile plan")
     n_tiles = (n + tile_size - 1) // tile_size
     starts = np.arange(n_tiles, dtype=np.int64) * tile_size
     ends = np.minimum(starts + tile_size, n) - 1
-    first = corpus.word_ids[starts].astype(np.int32)
-    last = corpus.word_ids[ends].astype(np.int32)
+    first = word_ids[starts].astype(np.int32)
+    last = word_ids[ends].astype(np.int32)
     words_per_tile = (last - first + 1)
-    tiles_per_word = np.maximum(
-        1, np.ceil(corpus.word_token_counts / tile_size).astype(np.int64) + 1)
+    # exact per-word tile span from the run boundaries within [0, n)
+    uniq, offs, cnts = np.unique(word_ids[:n].astype(np.int64),
+                                 return_index=True, return_counts=True)
+    del uniq
+    spans = tiles_spanned(offs, cnts, tile_size)
     return TilePlan(
         tile_size=tile_size,
         n_tiles=int(n_tiles),
         tile_first_word=first,
         tile_last_word=last,
         max_words_per_tile=int(words_per_tile.max(initial=1)),
-        max_tiles_per_word=int(tiles_per_word.max(initial=1)),
+        max_tiles_per_word=int(spans.max(initial=1)),
     )
+
+
+def build_tiles(corpus: Corpus, tile_size: int) -> TilePlan:
+    """Static tile plan over a corpus's word-sorted token list.
+
+    Uses the corpus CSR offsets for the exact per-word dissection depth;
+    equivalent to ``build_tiles_from_word_ids(corpus.word_ids, tile_size)``.
+    """
+    if tile_size < 1:
+        raise ValueError(f"tile_size={tile_size} must be >= 1")
+    n = corpus.n_tokens
+    if n == 0:
+        return build_tiles_from_word_ids(corpus.word_ids, tile_size)
+    n_tiles = (n + tile_size - 1) // tile_size
+    starts = np.arange(n_tiles, dtype=np.int64) * tile_size
+    ends = np.minimum(starts + tile_size, n) - 1
+    first = corpus.word_ids[starts].astype(np.int32)
+    last = corpus.word_ids[ends].astype(np.int32)
+    words_per_tile = (last - first + 1)
+    spans = tiles_spanned(corpus.word_offsets[:-1],
+                          corpus.word_token_counts, tile_size)
+    return TilePlan(
+        tile_size=tile_size,
+        n_tiles=int(n_tiles),
+        tile_first_word=first,
+        tile_last_word=last,
+        max_words_per_tile=int(words_per_tile.max(initial=1)),
+        max_tiles_per_word=int(spans.max(initial=1)),
+    )
+
+
+def assign_token_shards(corpus: Corpus, n_shards: int,
+                        dissect_threshold: int | None = None
+                        ) -> tuple[np.ndarray, np.ndarray]:
+    """Device-level token-balanced shard assignment (paper SS V-A applied
+    at shard granularity).
+
+    Work units are word runs of the word-sorted token list; any word with
+    more than ``dissect_threshold`` tokens is DISSECTED into contiguous
+    pieces of at most that size (the paper's huge-word dissection), then
+    units are packed greedy longest-processing-time onto shards. Every
+    token is assigned through its unit, so per-shard loads are balanced
+    even when one power-law head word dwarfs whole documents — the case
+    greedy *document* chunking cannot fix (the head word rides inside many
+    documents, but a single-document corpus or a corpus dominated by one
+    word still serializes).
+
+    ``dissect_threshold=None`` auto-sizes to ``ceil(n_tokens / (4·S))`` so
+    no unit exceeds a quarter of a perfect shard load (max/mean <= 1.25 by
+    LPT's bound, in practice ~1.0). Returns ``(token_shard (N,) int32,
+    loads (S,) int64)``.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} must be >= 1")
+    n = corpus.n_tokens
+    if dissect_threshold is None:
+        dissect_threshold = max(1, -(-n // (4 * n_shards)))
+    if dissect_threshold < 1:
+        raise ValueError(
+            f"dissect_threshold={dissect_threshold} must be >= 1")
+    token_shard = np.zeros(n, np.int32)
+    loads = np.zeros(n_shards, np.int64)
+    if n == 0:
+        return token_shard, loads
+    # units: (start, size) spans of T — word runs, dissected at threshold
+    starts: list[int] = []
+    sizes: list[int] = []
+    offs = corpus.word_offsets
+    for v in range(corpus.n_words):
+        o, e = int(offs[v]), int(offs[v + 1])
+        while e - o > dissect_threshold:
+            starts.append(o)
+            sizes.append(dissect_threshold)
+            o += dissect_threshold
+        if e > o:
+            starts.append(o)
+            sizes.append(e - o)
+    order = np.argsort(-np.asarray(sizes), kind="stable")    # LPT
+    for i in order:
+        s = int(np.argmin(loads))
+        token_shard[starts[i]:starts[i] + sizes[i]] = s
+        loads[s] += sizes[i]
+    return token_shard, loads
 
 
 def load_imbalance(corpus: Corpus, scheme: str, n_units: int,

@@ -51,7 +51,8 @@ from repro.core.sparse import pack_pairs
 
 __all__ = [
     "WordStats", "word_stats", "SkipDecision", "skip_phase",
-    "exact_three_branch", "ThreeBranchStats", "sample",
+    "exact_three_branch", "exact_three_branch_tiled", "ThreeBranchStats",
+    "sample",
     "build_plan", "Plan", "survivor_rank", "compact_survivor_indices",
     "run_survivor_chunks",
 ]
@@ -159,6 +160,31 @@ def exact_three_branch(u: jax.Array, word_ids: jax.Array, doc_ids: jax.Array,
                             jnp.float32(alpha))
 
     return jax.lax.map(token_fn, (u, word_ids, doc_ids),
+                       batch_size=min(tile_size, n) if n else None)
+
+
+@functools.partial(jax.jit, static_argnames=("alpha", "tile_size"))
+def exact_three_branch_tiled(u: jax.Array, local_word: jax.Array,
+                             doc_ids: jax.Array, k1_win: jax.Array,
+                             D: jax.Array, w_win: jax.Array, *,
+                             alpha: float, tile_size: int = 8192):
+    """Tile-scheduled exact branch: Ŵ rows from a per-tile word WINDOW.
+
+    The tile-scheduled dispatch (``config.balance == "tiles"``,
+    DESIGN.md SS9) hands every chunk one ``(win_words, K)`` slice of Ŵ
+    (and of the per-word K1 vector) covering the chunk's word run;
+    ``local_word`` indexes into it. Same per-token arithmetic as
+    ``exact_three_branch`` on identical row values ⇒ bit-equal — the
+    window only changes where the gather reads from.
+    """
+    n = local_word.shape[0]
+
+    def token_fn(args):
+        u_t, l_t, d_t = args
+        return _exact_token(u_t, D[d_t], w_win[l_t], k1_win[l_t],
+                            jnp.float32(alpha))
+
+    return jax.lax.map(token_fn, (u, local_word, doc_ids),
                        batch_size=min(tile_size, n) if n else None)
 
 

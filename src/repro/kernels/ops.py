@@ -22,7 +22,8 @@ from repro.kernels import sample_sparse as _sparse
 from repro.kernels.runtime import interpret_default
 
 __all__ = ["interpret_default", "sample_tokens", "update_counts",
-           "sample_tokens_sparse_d", "sparse_tail_draw"]
+           "sample_tokens_sparse_d", "sparse_tail_draw",
+           "sparse_tail_draw_tiled"]
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "tile_size", "interpret"))
@@ -69,6 +70,29 @@ def sample_tokens(key, word_ids, doc_ids, old_topics, D, W_hat, *,
     return topics, stats
 
 
+def _q_fallback(u, topics, needs_q, s_prime, w_rows, k1, a1, b1, q_prime,
+                alpha):
+    """Q'-branch fallback: inverse-CDF over α·Ŵ' for flagged tokens only.
+
+    Uses the kernel's own S' mass, so the fallback target is consistent
+    with the needs_q decision (and the O(N·L) host recompute is gone).
+    Shared by the plain and tile-scheduled tail draws — same values in ⇒
+    same bits out.
+    """
+    k_total = w_rows.shape[1]
+    w_prime = jnp.where(
+        jnp.arange(k_total)[None, :] == k1[:, None], 0.0, w_rows)
+    m = a1 * (b1 + alpha)
+    xq = u * (m + s_prime + q_prime) - m - s_prime
+    cq = jnp.cumsum(alpha * w_prime, axis=1)
+    topic_q = jnp.minimum(
+        jax.vmap(lambda c, x: jnp.searchsorted(c, x, side="right"))(cq, xq),
+        k_total - 1).astype(jnp.int32)
+    topics = jnp.where(needs_q, topic_q, topics)
+    in_m = u * (m + s_prime + q_prime) < m
+    return topics, needs_q, in_m
+
+
 def sparse_tail_draw(u, packed_rows, w_rows, k1, a1, b1, q_prime, *,
                      alpha: float, interpret: bool | None = None):
     """One O(L) three-branch draw per token over packed ELL D rows.
@@ -86,21 +110,42 @@ def sparse_tail_draw(u, packed_rows, w_rows, k1, a1, b1, q_prime, *,
     topics, needs_q, s_prime = _sparse.sample_sparse(
         u, packed_rows, w_at, k1, a1, b1, q_prime, alpha=alpha,
         interpret=interpret)
-    # Q'-branch fallback: inverse-CDF over α·Ŵ' for flagged tokens only.
-    # Uses the kernel's own S' mass, so the fallback target is consistent
-    # with the needs_q decision (and the O(N·L) host recompute is gone).
-    k_total = w_rows.shape[1]
-    w_prime = jnp.where(
-        jnp.arange(k_total)[None, :] == k1[:, None], 0.0, w_rows)
-    m = a1 * (b1 + alpha)
-    xq = u * (m + s_prime + q_prime) - m - s_prime
-    cq = jnp.cumsum(alpha * w_prime, axis=1)
-    topic_q = jnp.minimum(
-        jax.vmap(lambda c, x: jnp.searchsorted(c, x, side="right"))(cq, xq),
-        k_total - 1).astype(jnp.int32)
-    topics = jnp.where(needs_q, topic_q, topics)
-    in_m = u * (m + s_prime + q_prime) < m
-    return topics, needs_q, in_m
+    return _q_fallback(u, topics, needs_q, s_prime, w_rows, k1, a1, b1,
+                       q_prime, alpha)
+
+
+def sparse_tail_draw_tiled(u, packed_rows, w_hat, word_ids, first_word,
+                           k1_w, a1_w, q_prime_w, b1, *, alpha: float,
+                           win_words: int, interpret: bool | None = None):
+    """Tile-scheduled sparse tail draw (paper SSV-A made live, DESIGN SS9).
+
+    Instead of per-token gathered Ŵ rows and word stats, the tile's
+    word-run metadata (``first_word``, static ``win_words`` window bound)
+    selects ONE window of Ŵ / K1 / a1 / Q' shared by the whole chunk; the
+    ``sample_sparse_tiled`` kernel resolves per-token values by local word
+    offset. The Q' fallback reads the same windows, so the result is
+    bit-equal to ``sparse_tail_draw`` on the per-token gathers. Callers
+    guarantee the chunk's word span fits the window (cond-guarded in
+    train/lda_step.py).
+    """
+    v_total, k_total = w_hat.shape
+    win = int(min(win_words, v_total))
+    first = jnp.clip(jnp.asarray(first_word, jnp.int32), 0, v_total - win)
+    local = jnp.clip(word_ids.astype(jnp.int32) - first, 0, win - 1)
+    w_win = jax.lax.dynamic_slice(w_hat, (first, 0), (win, k_total))
+    rows = w_win[local]        # ONE (C, K) materialization from the window
+    topics, needs_q, s_prime = _sparse.sample_sparse_tiled(
+        u, packed_rows, jnp.take_along_axis(
+            rows,
+            (packed_rows.view(jnp.uint32) >> 16).astype(jnp.int32), axis=1),
+        word_ids, first, k1_w, a1_w, q_prime_w, b1, alpha=alpha,
+        win_words=win_words, interpret=interpret)
+    k1_win = jax.lax.dynamic_slice(k1_w, (first,), (win,))
+    a1_win = jax.lax.dynamic_slice(a1_w, (first,), (win,))
+    qp_win = jax.lax.dynamic_slice(q_prime_w, (first,), (win,))
+    return _q_fallback(u, topics, needs_q, s_prime, rows,
+                       k1_win[local], a1_win[local], b1, qp_win[local],
+                       alpha)
 
 
 @functools.partial(jax.jit, static_argnames=(

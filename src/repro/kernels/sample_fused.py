@@ -19,13 +19,30 @@ as two separate trees because S' is sparse on GPU; per-topic the combined
 mass is (D+α)∘Ŵ' = p_s' + p_q' exactly, so one pass draws from the identical
 distribution (tests pin this against ref.three_branch_masses/ref oracles).
 
-The (D rows, Ŵ rows) inputs arrive pre-gathered per token tile — the gather
-is the inverted-index-driven part that XLA does well; the O(T·K) arithmetic
-+ reduction is the part that wants MXU/VPU block residency.
+Two entry points share the phase body:
+
+``sample_fused``       — the (D rows, Ŵ rows) inputs arrive pre-gathered per
+  token: the gather is the inverted-index-driven part that XLA does well;
+  the O(T·K) arithmetic + reduction is the part that wants MXU/VPU block
+  residency.
+
+``sample_fused_tiled`` — the tile-scheduled variant (paper §V-A made live,
+  DESIGN.md SS9): the caller supplies the FULL Ŵ matrix plus the tile's
+  word-run metadata (``first_word`` and the static window ``win_words`` =
+  the plan's ``max_words_per_tile`` bound), and the kernel resolves each
+  token's Ŵ row from a per-tile word WINDOW held in VMEM — one
+  (win_words, K) slice per tile instead of one (T, K) gather per token.
+  This is the two-level (word, region) index analogue: within a tile every
+  token of the same word reads the same resident row. Scratch/window size
+  is bounded by the tile plan's ``max_words_per_tile``, exactly the
+  paper's per-block shared-memory budget. Bit-exact vs ``sample_fused``
+  (same f32 row values ⇒ identical arithmetic), pinned by
+  tests/test_balance.py.
 
 VMEM budget per grid step: 2 · TILE_T · BLOCK_K · 4 B (D and Ŵ blocks)
-+ O(TILE_T) scratch. Defaults (128 × 512) use 512 KB — well under 16 MB,
-leaving room for double buffering.
++ O(TILE_T) scratch (+ win_words · BLOCK_K · 4 B for the tiled window).
+Defaults (128 × 512) use 512 KB — well under 16 MB, leaving room for
+double buffering.
 """
 
 from __future__ import annotations
@@ -40,24 +57,27 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.runtime import resolve_interpret
 from repro.runtime.compat import tpu_compiler_params
 
-__all__ = ["sample_fused", "DEFAULT_TILE_T", "DEFAULT_BLOCK_K"]
+__all__ = ["sample_fused", "sample_fused_tiled",
+           "DEFAULT_TILE_T", "DEFAULT_BLOCK_K"]
 
 DEFAULT_TILE_T = 128
 DEFAULT_BLOCK_K = 512
 _NEG_INF = -1e30  # python float: jnp module-level consts can't be captured
 
 
-def _kernel(u_ref, d_ref, w_ref,                       # inputs
-            topic_ref, m_ref, s_ref, q_ref,            # outputs
-            amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
-            *, block_k: int, n_kblocks: int, k_total: int, alpha: float):
-    phase = pl.program_id(1)
-    kb = pl.program_id(2)
-    d = d_ref[...].astype(jnp.float32)                 # (T, BK)
-    w = w_ref[...]                                     # (T, BK)
+def _phase_body(phase, kb, d, w, valid,                 # per-block values
+                u_ref, topic_ref, m_ref, s_ref, q_ref,  # token-tile refs
+                amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
+                *, block_k: int, n_kblocks: int, k_total: int, alpha: float):
+    """The shared two-phase sweep over one (token tile, k block) step.
+
+    ``d``/``w`` are the resolved (T, BK) blocks — pre-gathered rows for the
+    plain kernel, window-resolved rows for the tiled kernel. Everything
+    downstream is identical, which is what makes the two entry points
+    bit-equal.
+    """
     k_global = kb * block_k + jax.lax.broadcasted_iota(
         jnp.int32, d.shape, dimension=1)               # (T, BK)
-    valid = k_global < k_total                         # tail-block mask
 
     @pl.when((phase == 0) & (kb == 0))
     def _init():
@@ -72,7 +92,6 @@ def _kernel(u_ref, d_ref, w_ref,                       # inputs
         wv = jnp.where(valid, w, _NEG_INF)
         blk_max = jnp.max(wv, axis=1)                  # (T,)
         blk_arg = jnp.argmax(wv, axis=1).astype(jnp.int32)
-        rows = jax.lax.broadcasted_iota(jnp.int32, d.shape, 0)
         sel = blk_arg[:, None] == jax.lax.broadcasted_iota(
             jnp.int32, d.shape, 1)
         blk_d = jnp.sum(jnp.where(sel, d, 0.0), axis=1)
@@ -121,6 +140,63 @@ def _kernel(u_ref, d_ref, w_ref,                       # inputs
             topic_ref[...] = jnp.where(found[...], cand[...], k_total - 1)
 
 
+def _kernel(u_ref, d_ref, w_ref,                       # inputs
+            topic_ref, m_ref, s_ref, q_ref,            # outputs
+            amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
+            *, block_k: int, n_kblocks: int, k_total: int, alpha: float):
+    phase = pl.program_id(1)
+    kb = pl.program_id(2)
+    d = d_ref[...].astype(jnp.float32)                 # (T, BK)
+    w = w_ref[...]                                     # (T, BK)
+    k_global = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, d.shape, dimension=1)
+    valid = k_global < k_total                         # tail-block mask
+    _phase_body(phase, kb, d, w, valid,
+                u_ref, topic_ref, m_ref, s_ref, q_ref,
+                amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
+                block_k=block_k, n_kblocks=n_kblocks, k_total=k_total,
+                alpha=alpha)
+
+
+def _tiled_kernel(u_ref, local_ref, d_ref, wwin_ref,   # inputs
+                  topic_ref, m_ref, s_ref, q_ref,      # outputs
+                  amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
+                  *, block_k: int, n_kblocks: int, k_total: int,
+                  alpha: float):
+    phase = pl.program_id(1)
+    kb = pl.program_id(2)
+    d = d_ref[...].astype(jnp.float32)                 # (T, BK)
+    # resolve each token's Ŵ row from the tile's resident word window —
+    # the two-level (word, region) lookup. jnp.take keeps interpret mode
+    # and Mosaic's dynamic-gather lowering on the same path.
+    w = jnp.take(wwin_ref[...], local_ref[...], axis=0)  # (T, BK)
+    k_global = kb * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, d.shape, dimension=1)
+    valid = k_global < k_total
+    _phase_body(phase, kb, d, w, valid,
+                u_ref, topic_ref, m_ref, s_ref, q_ref,
+                amax, bmax, kmax, sum_s, sum_q, cum, target, found, cand,
+                block_k=block_k, n_kblocks=n_kblocks, k_total=k_total,
+                alpha=alpha)
+
+
+def _scratch(tile_t: int):
+    return [pltpu.VMEM((tile_t,), jnp.float32)] * 2 \
+        + [pltpu.VMEM((tile_t,), jnp.int32)] \
+        + [pltpu.VMEM((tile_t,), jnp.float32)] * 4 \
+        + [pltpu.VMEM((tile_t,), jnp.bool_)] \
+        + [pltpu.VMEM((tile_t,), jnp.int32)]
+
+
+def _out_shapes(n: int):
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.int32),    # topic
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # M
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # S'
+        jax.ShapeDtypeStruct((n,), jnp.float32),  # Q'
+    )
+
+
 @functools.partial(jax.jit,
                    static_argnames=("alpha", "tile_t", "block_k", "interpret"))
 def sample_fused(u: jax.Array, d_rows: jax.Array, w_rows: jax.Array, *,
@@ -153,28 +229,87 @@ def sample_fused(u: jax.Array, d_rows: jax.Array, w_rows: jax.Array, *,
     kernel = functools.partial(
         _kernel, block_k=block_k, n_kblocks=n_kblocks, k_total=k_total,
         alpha=float(alpha))
-    out_shapes = (
-        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.int32),   # topic
-        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32), # M
-        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32), # S'
-        jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32), # Q'
-    )
     tok_spec = pl.BlockSpec((tile_t,), lambda t, p, kb: (t,))
     mat_spec = pl.BlockSpec((tile_t, block_k), lambda t, p, kb: (t, kb))
-    scratch = [pltpu.VMEM((tile_t,), jnp.float32)] * 2 \
-        + [pltpu.VMEM((tile_t,), jnp.int32)] \
-        + [pltpu.VMEM((tile_t,), jnp.float32)] * 4 \
-        + [pltpu.VMEM((tile_t,), jnp.bool_)] \
-        + [pltpu.VMEM((tile_t,), jnp.int32)]
     topics, m, s, q = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[tok_spec, mat_spec, mat_spec],
         out_specs=(tok_spec, tok_spec, tok_spec, tok_spec),
-        out_shape=out_shapes,
-        scratch_shapes=scratch,
+        out_shape=_out_shapes(n_tiles * tile_t),
+        scratch_shapes=_scratch(tile_t),
         compiler_params=tpu_compiler_params(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
         interpret=interpret,
     )(u, d_rows, w_rows)
+    return topics[:n], m[:n], s[:n], q[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "win_words", "tile_t", "block_k",
+                                    "interpret"))
+def sample_fused_tiled(u: jax.Array, d_rows: jax.Array, w_hat: jax.Array,
+                       word_ids: jax.Array, first_word: jax.Array, *,
+                       alpha: float, win_words: int,
+                       tile_t: int = DEFAULT_TILE_T,
+                       block_k: int = DEFAULT_BLOCK_K,
+                       interpret: bool | None = None):
+    """Tile-scheduled sample_fused: Ŵ rows resolved from a word window.
+
+    The tile's word-run metadata (``first_word`` .. ``first_word +
+    win_words``) selects ONE (win_words, K) window of Ŵ for the whole
+    token batch; each token reads its row by local offset inside the
+    kernel. ``win_words`` is static — the tile plan's
+    ``max_words_per_tile`` bound (pow2-bucketed by the pipeline) — so the
+    window is the kernel's shared-memory analogue. Callers guarantee
+    every token's word lies inside the window (the pipeline cond-guards
+    on the measured span and falls back to ``sample_fused`` otherwise);
+    out-of-window ids are clipped, which only matters for tokens a caller
+    already masked out.
+
+    Args:
+      u: (N,) uniforms; d_rows: (N, K) int32 pre-gathered D rows.
+      w_hat: (V, K) f32 — the FULL Ŵ matrix (not per-token rows).
+      word_ids: (N,) int32 token word ids (word-sorted within the tile).
+      first_word: () int32 — first word id of the tile's run.
+    Returns:
+      (topics, M, S', Q') — bit-equal to ``sample_fused`` on the gathered
+      rows.
+    """
+    interpret = resolve_interpret(interpret)
+    n, k_total = d_rows.shape
+    v_total = w_hat.shape[0]
+    win = int(min(win_words, v_total))
+    first = jnp.clip(jnp.asarray(first_word, jnp.int32), 0, v_total - win)
+    window = jax.lax.dynamic_slice(w_hat, (first, 0), (win, k_total))
+    local = jnp.clip(word_ids.astype(jnp.int32) - first, 0, win - 1)
+
+    n_pad = (-n) % tile_t
+    k_pad = (-k_total) % block_k
+    if n_pad or k_pad:
+        u = jnp.pad(u, (0, n_pad))
+        local = jnp.pad(local, (0, n_pad))
+        d_rows = jnp.pad(d_rows, ((0, n_pad), (0, k_pad)))
+        window = jnp.pad(window, ((0, 0), (0, k_pad)))
+    n_tiles = u.shape[0] // tile_t
+    n_kblocks = window.shape[1] // block_k
+
+    grid = (n_tiles, 2, n_kblocks)
+    kernel = functools.partial(
+        _tiled_kernel, block_k=block_k, n_kblocks=n_kblocks,
+        k_total=k_total, alpha=float(alpha))
+    tok_spec = pl.BlockSpec((tile_t,), lambda t, p, kb: (t,))
+    mat_spec = pl.BlockSpec((tile_t, block_k), lambda t, p, kb: (t, kb))
+    win_spec = pl.BlockSpec((win, block_k), lambda t, p, kb: (0, kb))
+    topics, m, s, q = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[tok_spec, tok_spec, mat_spec, win_spec],
+        out_specs=(tok_spec, tok_spec, tok_spec, tok_spec),
+        out_shape=_out_shapes(n_tiles * tile_t),
+        scratch_shapes=_scratch(tile_t),
+        compiler_params=tpu_compiler_params(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+        interpret=interpret,
+    )(u, local, d_rows, window)
     return topics[:n], m[:n], s[:n], q[:n]

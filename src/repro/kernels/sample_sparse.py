@@ -15,6 +15,14 @@ Tokens whose draw lands in the Q' branch (mass α·ΣŴ', no dependence on D)
 are flagged via ``needs_q`` and finished by the caller against the per-word
 Q table — they are rare once training converges (S' ≫ Q' for converged
 tokens) and batchable per word.
+
+``sample_sparse_tiled`` is the tile-scheduled variant (paper §V-A made
+live, DESIGN.md SS9): the per-WORD quantities (K1, a1, Q') arrive as one
+(win_words,) window per tile — the tile plan's ``max_words_per_tile``
+bound — and each token resolves them by local word offset inside the
+kernel, instead of the caller gathering them per token. b1 = D[d][K1]
+stays per-token (it depends on the document). Bit-equal to
+``sample_sparse`` on the gathered values.
 """
 
 from __future__ import annotations
@@ -28,26 +36,24 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.runtime import resolve_interpret
 
-__all__ = ["sample_sparse"]
+__all__ = ["sample_sparse", "sample_sparse_tiled"]
 
 DEFAULT_TILE_T = 256
 
 
-def _kernel(u_ref, packed_ref, w_ref, k1_ref, a1_ref, b1_ref, qp_ref,
-            topic_ref, needs_q_ref, s_ref, *, alpha: float):
-    packed = packed_ref[...]                              # (T, L) int32
+def _draw(u, packed, w_at, k1, a1, b1, qp,
+          topic_ref, needs_q_ref, s_ref, *, alpha: float):
+    """Shared O(L) three-branch draw body (plain and tiled kernels)."""
     # 16/16 pair unpack (paper §IV-B) — unsigned shift via uint32 view
     up = pltpu.bitcast(packed, jnp.uint32)
     idx = (up >> 16).astype(jnp.int32)
     val = (up & 0xFFFF).astype(jnp.float32)
-    w_at = w_ref[...]                                     # (T, L) f32
-    k1 = k1_ref[...]
-    m = a1_ref[...] * (b1_ref[...] + alpha)               # Eq 8
+    m = a1 * (b1 + alpha)                                 # Eq 8
     w_eff = jnp.where(idx == k1[:, None], 0.0, w_at)      # zero the K1 slot
     p_s = val * w_eff
     cdf = jnp.cumsum(p_s, axis=1)
     s_p = cdf[:, -1]
-    x = u_ref[...] * (m + s_p + qp_ref[...])
+    x = u * (m + s_p + qp)
     in_m = x < m
     hit = cdf > (x - m)[:, None]
     found = jnp.any(hit, axis=1)
@@ -61,6 +67,33 @@ def _kernel(u_ref, packed_ref, w_ref, k1_ref, a1_ref, b1_ref, qp_ref,
     topic_ref[...] = jnp.where(in_m, k1, jnp.where(in_s, rows_sel, -1))
     needs_q_ref[...] = needs_q
     s_ref[...] = s_p
+
+
+def _kernel(u_ref, packed_ref, w_ref, k1_ref, a1_ref, b1_ref, qp_ref,
+            topic_ref, needs_q_ref, s_ref, *, alpha: float):
+    _draw(u_ref[...], packed_ref[...], w_ref[...], k1_ref[...], a1_ref[...],
+          b1_ref[...], qp_ref[...], topic_ref, needs_q_ref, s_ref,
+          alpha=alpha)
+
+
+def _tiled_kernel(u_ref, packed_ref, w_ref, local_ref, b1_ref,
+                  k1w_ref, a1w_ref, qpw_ref,
+                  topic_ref, needs_q_ref, s_ref, *, alpha: float):
+    # per-word stats resolved from the tile's word window (two-level index)
+    local = local_ref[...]
+    k1 = jnp.take(k1w_ref[...], local)
+    a1 = jnp.take(a1w_ref[...], local)
+    qp = jnp.take(qpw_ref[...], local)
+    _draw(u_ref[...], packed_ref[...], w_ref[...], k1, a1, b1_ref[...], qp,
+          topic_ref, needs_q_ref, s_ref, alpha=alpha)
+
+
+def _out_shapes(n: int):
+    return (
+        jax.ShapeDtypeStruct((n,), jnp.int32),
+        jax.ShapeDtypeStruct((n,), jnp.bool_),
+        jax.ShapeDtypeStruct((n,), jnp.float32),
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("alpha", "tile_t", "interpret"))
@@ -97,11 +130,60 @@ def sample_sparse(u: jax.Array, packed_rows: jax.Array, w_at_idx: jax.Array,
         grid=(n_tiles,),
         in_specs=[tok, mat, mat, tok, tok, tok, tok],
         out_specs=(tok, tok, tok),
-        out_shape=(
-            jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.int32),
-            jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.bool_),
-            jax.ShapeDtypeStruct((n_tiles * tile_t,), jnp.float32),
-        ),
+        out_shape=_out_shapes(n_tiles * tile_t),
         interpret=interpret,
     )(u, packed_rows, w_at_idx, k1, a1, b1, q_prime)
+    return topics[:n], needs_q[:n], s_p[:n]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "win_words", "tile_t",
+                                    "interpret"))
+def sample_sparse_tiled(u: jax.Array, packed_rows: jax.Array,
+                        w_at_idx: jax.Array, word_ids: jax.Array,
+                        first_word: jax.Array, k1_w: jax.Array,
+                        a1_w: jax.Array, q_prime_w: jax.Array,
+                        b1: jax.Array, *, alpha: float, win_words: int,
+                        tile_t: int = DEFAULT_TILE_T,
+                        interpret: bool | None = None):
+    """Tile-scheduled sample_sparse: per-word stats from a word window.
+
+    Args:
+      u/packed_rows/w_at_idx/b1: per-token, as in ``sample_sparse``.
+      word_ids: (N,) int32 token word ids; first_word: () int32 tile run
+        start; win_words: static window size (plan's max_words_per_tile).
+      k1_w/a1_w/q_prime_w: (V,) per-WORD stat vectors — the kernel reads
+        the tile's (win_words,) window of each.
+    Returns:
+      (topics, needs_q, s_prime) — bit-equal to ``sample_sparse`` on the
+      per-token gathered stats.
+    """
+    interpret = resolve_interpret(interpret)
+    n, L = packed_rows.shape
+    v_total = k1_w.shape[0]
+    win = int(min(win_words, v_total))
+    first = jnp.clip(jnp.asarray(first_word, jnp.int32), 0, v_total - win)
+    k1_win = jax.lax.dynamic_slice(k1_w, (first,), (win,))
+    a1_win = jax.lax.dynamic_slice(a1_w, (first,), (win,))
+    qp_win = jax.lax.dynamic_slice(q_prime_w, (first,), (win,))
+    local = jnp.clip(word_ids.astype(jnp.int32) - first, 0, win - 1)
+    n_pad = (-n) % tile_t
+    if n_pad:
+        u = jnp.pad(u, (0, n_pad))
+        packed_rows = jnp.pad(packed_rows, ((0, n_pad), (0, 0)))
+        w_at_idx = jnp.pad(w_at_idx, ((0, n_pad), (0, 0)))
+        local = jnp.pad(local, (0, n_pad))
+        b1 = jnp.pad(b1, (0, n_pad))
+    n_tiles = u.shape[0] // tile_t
+    tok = pl.BlockSpec((tile_t,), lambda t: (t,))
+    mat = pl.BlockSpec((tile_t, L), lambda t: (t, 0))
+    win_spec = pl.BlockSpec((win,), lambda t: (0,))
+    topics, needs_q, s_p = pl.pallas_call(
+        functools.partial(_tiled_kernel, alpha=float(alpha)),
+        grid=(n_tiles,),
+        in_specs=[tok, mat, mat, tok, tok, win_spec, win_spec, win_spec],
+        out_specs=(tok, tok, tok),
+        out_shape=_out_shapes(n_tiles * tile_t),
+        interpret=interpret,
+    )(u, packed_rows, w_at_idx, local, b1, k1_win, a1_win, qp_win)
     return topics[:n], needs_q[:n], s_p[:n]

@@ -33,6 +33,7 @@ from repro.train.train_step import make_train_step
 def train_lda(*, n_topics: int = 64, iters: int = 100, n_docs: int = 400,
               n_words: int = 800, mean_doc_len: int = 80,
               fmt: str = "dense", backend: str = "auto",
+              balance: str = "none",
               checkpoint_dir: str | None = None,
               checkpoint_every: int | None = None, eval_every: int = 10,
               seed: int = 0, export_path: str | None = None,
@@ -52,7 +53,7 @@ def train_lda(*, n_topics: int = 64, iters: int = 100, n_docs: int = 400,
         seed, n_docs=n_docs, n_words=n_words,
         n_topics=max(n_topics // 2, 2), mean_doc_len=mean_doc_len)
     cfg = LDAConfig(n_topics=n_topics, format=fmt, fused=True, seed=seed,
-                    eval_every=eval_every)
+                    eval_every=eval_every, balance=balance)
     engine = LDAEngine(corpus, cfg, backend=backend,
                        checkpoint_dir=checkpoint_dir)
     log_fn(f"[lda] {corpus.n_docs} docs / {corpus.n_words} words / "
@@ -136,6 +137,10 @@ def main(argv=None) -> int:
     ap.add_argument("--lda-words", type=int, default=800)
     ap.add_argument("--lda-format", choices=("dense", "hybrid"),
                     default="dense")
+    ap.add_argument("--lda-balance", choices=("none", "tiles"),
+                    default="none",
+                    help="hierarchical tile-scheduled workload balancing "
+                         "(DESIGN.md SS9); pure perf knob, bit-equal")
     ap.add_argument("--lda-backend", choices=("auto", "single",
                                               "distributed"), default="auto")
     ap.add_argument("--lda-export", default=None, metavar="PATH",
@@ -145,6 +150,7 @@ def main(argv=None) -> int:
         hist = train_lda(n_topics=args.lda_topics, iters=args.lda_iters,
                          n_docs=args.lda_docs, n_words=args.lda_words,
                          fmt=args.lda_format, backend=args.lda_backend,
+                         balance=args.lda_balance,
                          checkpoint_dir=args.checkpoint_dir,
                          checkpoint_every=args.checkpoint_every,
                          export_path=args.lda_export)

@@ -13,7 +13,10 @@ documents at all. This module is the single public surface (DESIGN.md SS7):
     ``resume()``, ``score()`` — over ONE config (validated once, in
     ``LDAConfig.__post_init__``) and ONE checkpoint format. The trainers
     are internal backends; constructing them directly still works but is
-    deprecated.
+    deprecated. Every config knob flows through unchanged — notably
+    ``balance="tiles"`` (hierarchical tile-scheduled workload balancing,
+    DESIGN.md SS9): a pure performance knob on either backend, bit-equal
+    to ``balance="none"`` (distributed: dense format only).
 
 ``FrozenLDAModel``
     The serving artifact: frozen topic-word counts W + column sum +

@@ -8,6 +8,20 @@ Paper-faithful mapping (DESIGN.md §6):
     broadcasting** the result (= one ``psum``), exactly the paper's multi-GPU
     update.
 
+Device-level workload balancing (``config.balance == "tiles"``, paper §V-A
+applied at shard granularity, DESIGN.md SS9): greedy *document* chunking
+cannot split a document, so one giant document — or a power-law head word
+riding inside most documents — can still serialize a shard. With tiles on,
+``core/balance.assign_token_shards`` assigns TOKENS to shards through word
+runs of the word-sorted list, dissecting any >threshold word across shards
+(the paper's huge-word dissection, at the device level). Documents whose
+tokens land on several shards get their D row REPLICATED on each of them:
+every replica holds the full global row (sampling semantics unchanged),
+and each iteration the shared rows' ±1 deltas are summed over the data
+axes by one extra psum — the same sum+broadcast discipline W already uses,
+restricted to the dissection boundary set. Dense format only (packed
+per-shard D rows cannot absorb remote dense deltas scatter-free).
+
 Beyond-paper (what the paper says GPU LDA could not do — §I-A: LightLDA-style
 model parallelism needs hash tables): shard the **topic axis** of W/Ŵ/D over
 the ``model`` mesh axis and sample with a *two-level inverse-CDF*:
@@ -39,6 +53,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core import balance as balance_mod
 from repro.core import sparse, three_branch
 from repro.lda.corpus import Corpus, chunk_documents
 from repro.lda.model import HybridLayout, LDAConfig
@@ -71,6 +86,16 @@ class ShardedCorpus:
     n_words: int
     m_local: int              # D rows per shard (padded)
     n_shards: int
+    # balance="tiles" extras (None under document chunking): docs split
+    # across shards by token-level assignment get REPLICATED D rows, glued
+    # by a per-iteration delta psum over a global shared-doc slot list.
+    owns: np.ndarray | None = None         # (S, M_loc) int32 — 1 iff this
+                                           # shard is the doc's gather owner
+    shared_slot: np.ndarray | None = None  # (S, N_loc) int32 — token's slot
+                                           # in the shared-doc list, or
+                                           # n_shared (sentinel)
+    shared_rows: np.ndarray | None = None  # (S, n_shared) int32 — shared doc
+                                           # j's local row, or M_loc sentinel
 
     @property
     def tokens_per_shard(self) -> np.ndarray:
@@ -78,9 +103,14 @@ class ShardedCorpus:
 
 
 def shard_corpus(corpus: Corpus, n_shards: int,
-                 pad_multiple: int = 1024) -> ShardedCorpus:
-    assign = chunk_documents(corpus, n_shards)            # (M,) chunk per doc
-    tok_chunk = assign[corpus.doc_ids]                    # (N,)
+                 pad_multiple: int = 1024, balance: str = "none",
+                 dissect_threshold: int | None = None) -> ShardedCorpus:
+    if balance == "tiles":
+        tok_chunk, _loads = balance_mod.assign_token_shards(
+            corpus, n_shards, dissect_threshold)
+    else:
+        assign = chunk_documents(corpus, n_shards)        # (M,) chunk per doc
+        tok_chunk = assign[corpus.doc_ids]                # (N,)
     n_loc, m_loc = 1, 1
     per_shard: list[tuple[np.ndarray, np.ndarray, np.ndarray]] = []
     doc_maps = []
@@ -111,10 +141,43 @@ def shard_corpus(corpus: Corpus, n_shards: int,
         DM[s, :len(doc_maps[s])] = doc_maps[s]
         GP[s, :len(gp)] = gp
         nd[s] = len(doc_maps[s])
-    return ShardedCorpus(word_ids=W, doc_ids=Dv, mask=Mk, doc_map=DM,
-                         docs_per_shard=nd, global_pos=GP,
-                         n_words=corpus.n_words,
-                         m_local=m_loc, n_shards=n_shards)
+    sc = ShardedCorpus(word_ids=W, doc_ids=Dv, mask=Mk, doc_map=DM,
+                       docs_per_shard=nd, global_pos=GP,
+                       n_words=corpus.n_words,
+                       m_local=m_loc, n_shards=n_shards)
+    if balance != "tiles":
+        return sc
+
+    # -- shared-doc bookkeeping (dissected documents) ----------------------
+    # owner = lowest shard holding the doc: gathers count each row once
+    owner = np.full(corpus.n_docs, -1, np.int64)
+    for s in range(n_shards):
+        fresh = doc_maps[s][owner[doc_maps[s]] < 0]
+        owner[fresh] = s
+    occ = np.bincount(np.concatenate(doc_maps) if doc_maps else
+                      np.zeros(0, np.int64), minlength=corpus.n_docs)
+    shared_global = np.nonzero(occ > 1)[0]                # global doc ids
+    n_shared = max(len(shared_global), 1)                 # keep shapes >0
+    slot_of_doc = np.full(corpus.n_docs, n_shared, np.int64)
+    slot_of_doc[shared_global] = np.arange(len(shared_global))
+    owns = np.zeros((n_shards, m_loc), np.int32)
+    SS = np.full((n_shards, n_loc), n_shared, np.int32)
+    SR = np.full((n_shards, n_shared), m_loc, np.int32)
+    for s in range(n_shards):
+        docs = doc_maps[s]
+        owns[s, :len(docs)] = (owner[docs] == s)
+        # token → shared slot, through the SAME global-position ordering
+        # the token arrays above were built from
+        gp = per_shard[s][2]
+        SS[s, :len(gp)] = slot_of_doc[corpus.doc_ids[gp]]
+        # shared doc j → local row on this shard (or the M_loc sentinel)
+        if len(shared_global) and len(docs):
+            pos = np.searchsorted(docs, shared_global)
+            here = (pos < len(docs)) & (docs[np.minimum(pos, len(docs) - 1)]
+                                        == shared_global)
+            SR[s, :len(shared_global)] = np.where(here, pos, m_loc)
+    return dataclasses.replace(sc, owns=owns, shared_slot=SS,
+                               shared_rows=SR)
 
 
 # ---------------------------------------------------------------------------
@@ -167,7 +230,7 @@ class DistHybridState:
 def _dist_step(word_ids, doc_ids, mask, state, *,
                cfg: LDAConfig, data_axes: tuple[str, ...], model_axis: str,
                n_words: int, m_local: int, g: int,
-               layout: HybridLayout | None = None):
+               layout: HybridLayout | None = None, shared=None):
     """One EZLDA iteration for one (data, model) shard.
 
     Inputs arrive with the shard axes stripped: word_ids (1, N_loc),
@@ -176,6 +239,12 @@ def _dist_step(word_ids, doc_ids, mask, state, *,
     D rows and HybridW; the sampling sweep densifies the gathered per-token
     rows (exact integers, so the trajectory is bit-equal to the dense
     format) and the update lands back in the packed layout.
+
+    ``shared`` (balance="tiles" only) is ``(shared_slot (1, N_loc),
+    shared_rows (1, n_shared))``: docs dissected across data shards keep a
+    full replica of their D row on every holder, and the replicas are kept
+    identical by one psum of the shared rows' ±1 deltas per iteration
+    (module docstring, DESIGN.md SS9).
     """
     word_ids, doc_ids, mask = word_ids[0], doc_ids[0], mask[0]
     topics = state.topics[0]
@@ -285,6 +354,18 @@ def _dist_step(word_ids, doc_ids, mask, state, *,
     if layout is None:
         D_new = D.at[doc_ids, old_rel].add(-w_old) \
                  .at[doc_ids, t_rel].add(w_new)
+        if shared is not None:
+            # Dissected docs (balance="tiles"): every holder applied its
+            # LOCAL deltas above; add the other shards' deltas so each
+            # replica stays the full global row. One psum over the shared
+            # slot list — the D analogue of W's §V-B sum+broadcast.
+            ss, srows = shared[0][0], shared[1][0]         # (N,), (n_sh,)
+            n_sh = srows.shape[0]
+            dsh = jnp.zeros((n_sh + 1, k_local), jnp.int32) \
+                .at[ss, old_rel].add(-w_old) \
+                .at[ss, t_rel].add(w_new)[:n_sh]           # sentinel row off
+            remote = jax.lax.psum(dsh, data_axes) - dsh
+            D_new = D_new.at[srows].add(remote, mode="drop")
         W_new = W + dW
     else:
         # Packed per-shard D: topic moves land as ±1 slot updates (changed
@@ -374,9 +455,18 @@ class DistLDATrainer:
                     "block-partition over the topic axis. Use a pure "
                     "data-parallel mesh (the paper's §V-B scheme) or "
                     "format='dense' for topic-axis model parallelism")
+            if config.balance == "tiles":
+                raise ValueError(
+                    "balance='tiles' with format='hybrid' is not supported "
+                    "on the distributed backend: dissected documents need "
+                    "remote dense D-row deltas, which packed ELL rows "
+                    "cannot absorb scatter-free. Use format='dense' for "
+                    "token-balanced sharding, or balance='none' (document "
+                    "chunking) with the hybrid state")
             self.layout = HybridLayout.build(corpus, config)
         n_data = int(np.prod([mesh.shape[a] for a in self.data_axes]))
-        self.sc = shard_corpus(corpus, n_data, pad_multiple)
+        self.sc = shard_corpus(corpus, n_data, pad_multiple,
+                               balance=config.balance)
         self.corpus = corpus
 
         daxes = self.data_axes
@@ -399,11 +489,23 @@ class DistLDATrainer:
             _dist_step, cfg=config, data_axes=daxes, model_axis="model",
             n_words=corpus.n_words, m_local=self.sc.m_local, g=config.g,
             layout=self.layout)
-        self._sm_step = _shard_map(
-            step, mesh=mesh,
-            in_specs=(tok_spec, tok_spec, tok_spec, self.state_specs),
-            out_specs=(self.state_specs, stats_spec),
-            check_vma=False)
+        if self.sc.shared_slot is not None:
+            def step_shared(word_ids, doc_ids, mask, shared_slot,
+                            shared_rows, state):
+                return step(word_ids, doc_ids, mask, state,
+                            shared=(shared_slot, shared_rows))
+            self._sm_step = _shard_map(
+                step_shared, mesh=mesh,
+                in_specs=(tok_spec, tok_spec, tok_spec, tok_spec,
+                          P(daxes, None), self.state_specs),
+                out_specs=(self.state_specs, stats_spec),
+                check_vma=False)
+        else:
+            self._sm_step = _shard_map(
+                step, mesh=mesh,
+                in_specs=(tok_spec, tok_spec, tok_spec, self.state_specs),
+                out_specs=(self.state_specs, stats_spec),
+                check_vma=False)
         self._step = jax.jit(self._sm_step)
         self._scan_cache: dict[int, Any] = {}
 
@@ -411,6 +513,16 @@ class DistLDATrainer:
         self.word_ids = jax.device_put(jnp.asarray(self.sc.word_ids), dev)
         self.doc_ids = jax.device_put(jnp.asarray(self.sc.doc_ids), dev)
         self.mask = jax.device_put(jnp.asarray(self.sc.mask), dev)
+        if self.sc.shared_slot is not None:
+            self.shared_slot = jax.device_put(
+                jnp.asarray(self.sc.shared_slot), dev)
+            self.shared_rows = jax.device_put(
+                jnp.asarray(self.sc.shared_rows),
+                NamedSharding(mesh, P(daxes, None)))
+            self._step_inputs = (self.word_ids, self.doc_ids, self.mask,
+                                 self.shared_slot, self.shared_rows)
+        else:
+            self._step_inputs = (self.word_ids, self.doc_ids, self.mask)
 
     def _device_state(self, topics, D, W, key, iteration):
         """Place (dense host counts, topics) as the configured state format."""
@@ -436,24 +548,40 @@ class DistLDATrainer:
             overflow=put(jnp.int32(0), P()),
             key=key, iteration=iteration)
 
+    def _build_counts(self, t_np: np.ndarray):
+        """(D, W) host counts from per-shard topics.
+
+        D rows are built from the GLOBAL per-document histogram and placed
+        on every shard holding the doc — identical to the shard-local
+        histogram under document chunking (each doc is whole on one
+        shard), and the required full-row replica for docs dissected
+        across shards under balance="tiles".
+        """
+        S, K = self.sc.n_shards, self.cfg.n_topics
+        Dg = np.zeros((self.corpus.n_docs, K), np.int64)
+        W = np.zeros((self.corpus.n_words, K), np.int32)
+        for s in range(S):
+            sel = self.sc.mask[s] > 0
+            gdoc = self.sc.doc_map[s][self.sc.doc_ids[s][sel]]
+            np.add.at(Dg, (gdoc, t_np[s][sel]), 1)
+            np.add.at(W, (self.sc.word_ids[s][sel], t_np[s][sel]), 1)
+        D = np.zeros((S, self.sc.m_local, K), np.int32)
+        for s in range(S):
+            nd = int(self.sc.docs_per_shard[s])
+            D[s, :nd] = Dg[self.sc.doc_map[s][:nd]]
+        return D, W
+
     def init_state(self):
         cfg = self.cfg
         key = jax.random.PRNGKey(cfg.seed)
         topics = jax.random.randint(
             jax.random.fold_in(key, 7), self.sc.word_ids.shape, 0,
             cfg.n_topics, dtype=jnp.int32)
-        S, K = self.sc.n_shards, cfg.n_topics
-        t_np = np.asarray(topics)
-        D = np.zeros((S, self.sc.m_local, K), np.int32)
-        W = np.zeros((self.corpus.n_words, K), np.int32)
-        for s in range(S):
-            sel = self.sc.mask[s] > 0
-            np.add.at(D[s], (self.sc.doc_ids[s][sel], t_np[s][sel]), 1)
-            np.add.at(W, (self.sc.word_ids[s][sel], t_np[s][sel]), 1)
+        D, W = self._build_counts(np.asarray(topics))
         return self._device_state(topics, D, W, key, jnp.int32(0))
 
     def step(self, state: DistLDAState):
-        return self._step(self.word_ids, self.doc_ids, self.mask, state)
+        return self._step(*self._step_inputs, state)
 
     def run_fused(self, state: DistLDAState, n_iters: int):
         """n_iters eval-free iterations in ONE dispatch (fused pipeline).
@@ -466,15 +594,18 @@ class DistLDATrainer:
         fn = self._scan_cache.get(n_iters)
         if fn is None:
             sm = self._sm_step
+            n_in = len(self._step_inputs)
 
-            def multi(word_ids, doc_ids, mask, st):
+            def multi(*args):
+                inputs, st = args[:n_in], args[n_in]
+
                 def body(carry, _):
-                    return sm(word_ids, doc_ids, mask, carry)
+                    return sm(*inputs, carry)
                 return jax.lax.scan(body, st, None, length=n_iters)
 
-            fn = jax.jit(multi, donate_argnums=(3,))
+            fn = jax.jit(multi, donate_argnums=(n_in,))
             self._scan_cache[n_iters] = fn
-        return fn(self.word_ids, self.doc_ids, self.mask, state)
+        return fn(*self._step_inputs, state)
 
     # -- elastic checkpointing ---------------------------------------------
     # Checkpoints store topics in GLOBAL token order (+ rng + iteration), so
@@ -499,17 +630,12 @@ class DistLDATrainer:
                 f"checkpoint topics_global has {tg.shape[0]} entries but "
                 f"the corpus holds {self.corpus.n_tokens} tokens: the "
                 "checkpoint belongs to a different corpus")
-        S, K = self.sc.n_shards, self.cfg.n_topics
+        S = self.sc.n_shards
         topics = np.zeros_like(self.sc.word_ids)
         for s in range(S):
             sel = self.sc.mask[s] > 0
             topics[s][sel] = tg[self.sc.global_pos[s][sel]]
-        D = np.zeros((S, self.sc.m_local, K), np.int32)
-        W = np.zeros((self.corpus.n_words, K), np.int32)
-        for s in range(S):
-            sel = self.sc.mask[s] > 0
-            np.add.at(D[s], (self.sc.doc_ids[s][sel], topics[s][sel]), 1)
-            np.add.at(W, (self.sc.word_ids[s][sel], topics[s][sel]), 1)
+        D, W = self._build_counts(topics)
         key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
         return self._device_state(topics, D, W, key,
                                   jnp.int32(payload["iteration"]))
@@ -538,5 +664,12 @@ class DistLDATrainer:
         D = np.zeros((self.corpus.n_docs, K), np.int64)
         for s in range(self.sc.n_shards):
             nd = int(self.sc.docs_per_shard[s])
-            D[self.sc.doc_map[s][:nd]] += D_sh[s][:nd]
+            rows = self.sc.doc_map[s][:nd]
+            d_rows = D_sh[s][:nd]
+            if self.sc.owns is not None:
+                # dissected docs hold FULL replicas on every shard — count
+                # each doc once, through its gather owner
+                sel = self.sc.owns[s][:nd] > 0
+                rows, d_rows = rows[sel], d_rows[sel]
+            D[rows] += d_rows
         return D, W

@@ -25,6 +25,7 @@ class LDAConfig:
     tile_size: int = 8192            # token tile (balance.py); pow2
     format: str = "dense"            # live-state layout: "dense" | "hybrid"
     tail_sampler: str = "exact"      # hybrid tail phase-2: "exact" | "sparse"
+    balance: str = "none"            # workload balancing: "none" | "tiles"
     d_capacity: int | None = None    # packed-ELL D row capacity; None=auto
     survivor_capacity: int | None = None  # phase-2 chunk size; None=reference
     dense_word_threshold: int | None = None  # tokens>=thr => dense W row; None=K (paper)
@@ -51,6 +52,11 @@ class LDAConfig:
         if self.tail_sampler not in ("exact", "sparse"):
             raise ValueError(f"unknown tail_sampler {self.tail_sampler!r}: "
                              "expected 'exact' or 'sparse'")
+        if self.balance not in ("none", "tiles"):
+            raise ValueError(
+                f"unknown balance {self.balance!r}: expected 'none' or "
+                "'tiles' (hierarchical tile-scheduled workload balancing, "
+                "paper SSV-A / DESIGN.md SS9)")
         if self.g < 1:
             raise ValueError(f"g={self.g} must be >= 1 (paper uses 2)")
         if self.tile_size < 1:

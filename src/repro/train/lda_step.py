@@ -47,11 +47,29 @@ selected by ``LDAConfig.format == "hybrid"`` — with the phase-2 sampler
 dispatched by the T partition and the delta updates landing in the packed
 formats.
 
+Tile-scheduled workload balancing (``config.balance == "tiles"``,
+paper §V-A, DESIGN.md SS9): each survivor chunk IS a tile of the live
+(compacted, word-sorted) survivor stream — equal survivor tokens per
+schedulable unit. The tile plan supplies the second level of the paper's
+two-level index: a per-chunk word-run window of static size ``win_words``
+(initialized from ``core/balance.build_tiles``'s ``max_words_per_tile``
+over the static corpus, then RE-PLANNED between scans from the measured
+span of the live survivor tiles — three-branch skips shift the word
+distribution as convergence heterogeneity kicks in, so the plan tracks
+the live stream, not the static corpus). Phase 2 then resolves Ŵ rows
+(and per-word stats) from the resident window via the tile-scheduled
+kernels (``sample_fused_tiled`` / ``sample_sparse_tiled`` /
+``exact_three_branch_tiled``). Chunks whose measured span exceeds the
+window cond-fall back to the per-token gather — bit-exactness never
+depends on the plan (pinned by tests/test_balance.py).
+
 Capacity planning: the survivor count is data-dependent, so chunk capacity
 is chosen from an exponential moving average of survivor counts observed in
 *previous* scans (one device→host read per scan, after it completes) and
 re-planned only between scans, with power-of-two hysteresis to bound
-recompiles. Inside the compiled region nothing ever depends on a host value.
+recompiles. The tile window re-plans on the same cadence from the observed
+chunk spans. Inside the compiled region nothing ever depends on a host
+value.
 
 PRNG discipline matches LDATrainer.step exactly (split once per iteration,
 uniforms drawn in one (N,) batch), so with the same key the fused path
@@ -67,13 +85,21 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import balance as balance_mod
 from repro.core import esca, sparse, three_branch
 from repro.kernels import ops as kops
 from repro.kernels import sample_fused as _fused
 from repro.kernels.runtime import resolve_interpret
 
 __all__ = ["FusedState", "FusedPipeline", "HybridFusedPipeline",
-           "plan_capacity"]
+           "plan_capacity", "plan_window", "plan_tile_capacity"]
+
+# Per-tile phase-2 working-set budget (capacity · K · 4 B): the CPU-cache /
+# VMEM analogue of the paper's shared-memory-sized blocks. Equal-token
+# tiles sized to keep their working set resident are what turns the
+# structural balance into measured throughput (benchmarks/fig15_balance.py:
+# 16384-token chunks run ~1.7× slower than 1024-token tiles at K=64).
+TILE_WORKING_SET_BYTES = 1 << 18
 
 
 class FusedState(NamedTuple):
@@ -152,11 +178,42 @@ def plan_capacity(ema_survivors: float, n_tokens: int, *,
     return int(min(cap, n_tokens))
 
 
+def plan_tile_capacity(ema_survivors: float, n_tokens: int,
+                       n_topics: int, *, floor: int = 128) -> int:
+    """Tile size under ``balance="tiles"``: survivor-EMA capacity, capped
+    by the working-set budget.
+
+    A phase-2 tile touches ~capacity·K·4 B of gathered rows; keeping that
+    inside ``TILE_WORKING_SET_BYTES`` keeps every schedulable unit's
+    working set resident (VMEM on TPU, L2 on CPU) — the paper's
+    shared-memory-sized block, applied to the live survivor stream.
+    """
+    budget = TILE_WORKING_SET_BYTES // (4 * max(int(n_topics), 1))
+    budget = max(floor, 1 << max(int(budget).bit_length() - 1, 0))
+    return max(floor, min(plan_capacity(ema_survivors, n_tokens), budget))
+
+
+def plan_window(max_span: float, n_words: int, *, floor: int = 64) -> int:
+    """Tile word-window size from the observed survivor-chunk word spans.
+
+    The live analogue of ``TilePlan.max_words_per_tile``: the window must
+    cover the widest word run any survivor tile currently spans (else that
+    chunk cond-falls back to the per-token gather — correct, just
+    unamortized). Power-of-two bucketing bounds recompiles exactly like
+    ``plan_capacity``; the window never exceeds the vocabulary (at V the
+    tiled path degenerates to the plain one and is skipped statically).
+    """
+    want = max(float(max_span), float(floor))
+    win = 1 << max(int(want) - 1, 1).bit_length()
+    return int(min(win, n_words))
+
+
 class FusedPipeline:
     """Owns the compiled fused step/scan for one (corpus, config) pair.
 
     Built from the same padded device arrays as LDATrainer; see the module
-    docstring for the architecture.
+    docstring for the architecture (including the ``balance="tiles"``
+    tile-scheduled phase-2 dispatch).
     """
 
     def __init__(self, word_ids: jax.Array, doc_ids: jax.Array,
@@ -177,6 +234,24 @@ class FusedPipeline:
         self._surv_ema: float | None = None
         self._step_cache: dict[tuple, Callable] = {}
         self._interpret = resolve_interpret(None)
+        # -- tile-scheduled balancing (paper §V-A, DESIGN.md SS9) ----------
+        self.balance = getattr(config, "balance", "none")
+        self._span_ema: float | None = None
+        self.win_words = n_words
+        if self.balance == "tiles":
+            if not self._capacity_pinned:
+                # full-survivorship tile size, working-set capped from the
+                # start (the survivor EMA refines it between scans)
+                self.capacity = plan_tile_capacity(
+                    self.n_tokens, self.n_tokens, config.n_topics)
+            # initial plan over the STATIC corpus stream at the current
+            # tile size; re-planned live from observed survivor spans
+            self.tile_plan = balance_mod.build_tiles_from_word_ids(
+                np.asarray(word_ids), min(self.capacity, self.n_tokens))
+            self.win_words = plan_window(self.tile_plan.max_words_per_tile,
+                                         n_words)
+        else:
+            self.tile_plan = None
 
     # -- state conversion --------------------------------------------------
 
@@ -201,17 +276,120 @@ class FusedPipeline:
         return LDAState(topics=fstate.topics, D=fstate.D, W=fstate.W,
                         key=fstate.key, iteration=fstate.iteration)
 
+    # -- tile helpers (traced) ---------------------------------------------
+
+    # a word window must be MUCH narrower than the vocabulary to beat the
+    # plain per-token gather (the slice costs one window copy per chunk);
+    # wider streams still run tile-scheduled, just without the window
+    WINDOW_VOCAB_FRACTION = 4
+
+    def _use_tiles(self, win_words: int) -> bool:
+        return self.balance == "tiles" \
+            and win_words * self.WINDOW_VOCAB_FRACTION <= self.n_words
+
+    def _chunk_run(self, v_c, idx):
+        """(first_word, last_word) over a chunk's valid tokens — the live
+        per-tile word-run metadata (TilePlan's two-level index, computed
+        on the fly for the survivor stream). An all-sentinel chunk yields
+        (n_words-1, 0), whose negative span always passes the fits test."""
+        valid = idx < self.n_tokens
+        vmin = jnp.min(jnp.where(valid, v_c, self.n_words - 1))
+        vmax = jnp.max(jnp.where(valid, v_c, 0))
+        return vmin.astype(jnp.int32), vmax.astype(jnp.int32)
+
+    def _max_chunk_span(self, surv_idx, n_chunks: int, capacity: int):
+        """Max word span over the scan's survivor tiles (for re-planning).
+
+        One (n_chunks·capacity) gather per iteration — O(N) like the
+        compaction itself; read back on the host only between scans.
+        """
+        n = self.n_tokens
+        idx_m = surv_idx.reshape(n_chunks, capacity)
+        valid = idx_m < n
+        v = self.word_ids[jnp.minimum(idx_m, n - 1)]
+        vmin = jnp.min(jnp.where(valid, v, self.n_words - 1), axis=1)
+        vmax = jnp.max(jnp.where(valid, v, 0), axis=1)
+        span = jnp.where(jnp.any(valid, axis=1), vmax - vmin + 1, 0)
+        return jnp.max(span).astype(jnp.int32)
+
+    def _dense_chunk_sampler(self, u, word_ids, doc_ids, D, W_hat,
+                             k1_per_word, *, win_words: int):
+        """Build the phase-2 ``sample_chunk(idx)`` closure (both pipelines).
+
+        With tiles on, each chunk resolves its live word run and samples
+        through the tile-scheduled kernel against a ``(win_words, K)``
+        resident Ŵ window; a chunk whose span outgrows the window (the
+        live distribution drifted since the last re-plan) cond-falls back
+        to the per-token gather. Identical row values either way ⇒ the
+        tiled dispatch is bit-equal to the untiled one.
+        """
+        cfg = self.config
+        alpha = cfg.alpha_
+        use_tiles = self._use_tiles(win_words)
+
+        def sample_chunk(idx):
+            u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
+            if cfg.impl == "pallas":
+                d_rows = D[d_c]
+                if not use_tiles:
+                    t_c, m, s, q = _fused.sample_fused(
+                        u_c, d_rows, W_hat[v_c], alpha=alpha,
+                        interpret=self._interpret)
+                else:
+                    first, last = self._chunk_run(v_c, idx)
+
+                    def tiled(_):
+                        return _fused.sample_fused_tiled(
+                            u_c, d_rows, W_hat, v_c, first, alpha=alpha,
+                            win_words=win_words, interpret=self._interpret)
+
+                    def untiled(_):
+                        return _fused.sample_fused(
+                            u_c, d_rows, W_hat[v_c], alpha=alpha,
+                            interpret=self._interpret)
+
+                    t_c, m, s, q = jax.lax.cond(
+                        last - first < win_words, tiled, untiled, None)
+                return t_c, u_c * (m + s + q) < m
+            if not use_tiles:
+                return three_branch.exact_three_branch(
+                    u_c, v_c, d_c, k1_per_word, D, W_hat,
+                    alpha=alpha, tile_size=cfg.tile_size)
+            first, last = self._chunk_run(v_c, idx)
+            first = jnp.clip(first, 0, self.n_words - win_words)
+
+            def tiled(_):
+                w_win = jax.lax.dynamic_slice(
+                    W_hat, (first, 0), (win_words, W_hat.shape[1]))
+                k1_win = jax.lax.dynamic_slice(k1_per_word, (first,),
+                                               (win_words,))
+                local = jnp.clip(v_c - first, 0, win_words - 1)
+                return three_branch.exact_three_branch_tiled(
+                    u_c, local, d_c, k1_win, D, w_win, alpha=alpha,
+                    tile_size=cfg.tile_size)
+
+            def untiled(_):
+                return three_branch.exact_three_branch(
+                    u_c, v_c, d_c, k1_per_word, D, W_hat,
+                    alpha=alpha, tile_size=cfg.tile_size)
+
+            return jax.lax.cond(last - first < win_words, tiled, untiled,
+                                None)
+
+        return sample_chunk
+
     # -- the fused iteration body (traced; no host interaction) ------------
 
-    def _iteration(self, fstate: FusedState, *, capacity: int):
+    def _iteration(self, fstate: FusedState, *, capacity: int,
+                   win_words: int):
         cfg = self.config
-        alpha, beta, g = cfg.alpha_, cfg.beta, cfg.g
+        alpha, g = cfg.alpha_, cfg.g
         word_ids, doc_ids, mask = self.word_ids, self.doc_ids, self.mask
         n = self.n_tokens
         topics, D, W, colsum, key, iteration = fstate
 
         key, sub = jax.random.split(key)
-        W_hat = esca.compute_w_hat_from_colsum(W, colsum, beta)
+        W_hat = esca.compute_w_hat_from_colsum(W, colsum, cfg.beta)
         stats_w = three_branch.word_stats(W_hat, g=g, alpha=alpha)
         u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
         dec = three_branch.skip_phase(u, word_ids, doc_ids, D, stats_w,
@@ -221,18 +399,12 @@ class FusedPipeline:
         n_chunks = max(1, -(-n // capacity))
         surv_idx = three_branch.compact_survivor_indices(
             rank, dec.skip, n_chunks * capacity)
+        max_span = self._max_chunk_span(surv_idx, n_chunks, capacity) \
+            if self.balance == "tiles" else jnp.int32(0)
 
-        def sample_chunk(idx):
-            u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
-            if cfg.impl == "pallas":
-                t_c, m, s, q = _fused.sample_fused(
-                    u_c, D[d_c], W_hat[v_c], alpha=alpha,
-                    interpret=self._interpret)
-                return t_c, u_c * (m + s + q) < m
-            return three_branch.exact_three_branch(
-                u_c, v_c, d_c, k1_per_word, D, W_hat,
-                alpha=alpha, tile_size=cfg.tile_size)
-
+        sample_chunk = self._dense_chunk_sampler(
+            u, word_ids, doc_ids, D, W_hat, k1_per_word,
+            win_words=win_words)
         new_topics, in_m_acc = three_branch.run_survivor_chunks(
             surv_idx, n_surv, dec.k1,
             capacity=capacity, n_chunks=n_chunks, sample_chunk=sample_chunk)
@@ -245,25 +417,25 @@ class FusedPipeline:
         st = branch_stats(dec.skip, in_m_acc, new_topics, topics, dec.k1)
         new_state = FusedState(topics=new_topics, D=D, W=W, colsum=colsum,
                                key=key, iteration=iteration + 1)
-        return new_state, st, n_surv
+        return new_state, st, n_surv, max_span
 
     # -- compiled entry points --------------------------------------------
 
     def _get_fn(self, n_iters: int) -> Callable:
-        """(state) -> (state, stats, n_surv) for a scan of n_iters."""
-        sig = (n_iters, self.capacity)
+        """(state) -> (state, stats, n_surv, max_span) for a scan."""
+        sig = (n_iters, self.capacity, self.win_words)
         fn = self._step_cache.get(sig)
         if fn is None:
-            capacity = self.capacity
+            capacity, win = self.capacity, self.win_words
 
             def multi(fstate):
                 def body(carry, _):
-                    st, stats, n_surv = self._iteration(carry,
-                                                        capacity=capacity)
-                    return st, (stats, n_surv)
-                fstate, (stats, n_surv) = jax.lax.scan(
+                    st, stats, n_surv, span = self._iteration(
+                        carry, capacity=capacity, win_words=win)
+                    return st, (stats, n_surv, span)
+                fstate, (stats, n_surv, span) = jax.lax.scan(
                     body, fstate, None, length=n_iters)
-                return fstate, stats, n_surv
+                return fstate, stats, n_surv, span
 
             fn = jax.jit(multi, donate_argnums=(0,))
             self._step_cache[sig] = fn
@@ -271,7 +443,7 @@ class FusedPipeline:
 
     def step(self, fstate: FusedState):
         """One fused iteration — a single donated dispatch."""
-        fstate, stats, n_surv = self._get_fn(1)(fstate)
+        fstate, stats, n_surv, _ = self._get_fn(1)(fstate)
         squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
         return fstate, squeeze(stats), squeeze(n_surv)
 
@@ -281,12 +453,16 @@ class FusedPipeline:
 
         Returns (state, stats, n_surv) with a leading (n_iters,) axis on
         the stats/survivor leaves. With ``replan=True`` the survivor counts
-        are read back once per scan (after it completes) to update the EMA
-        and possibly re-bucket the chunk capacity for the NEXT scan.
+        (and, under ``balance="tiles"``, the survivor-tile word spans) are
+        read back once per scan (after it completes) to update the EMAs
+        and possibly re-bucket the chunk capacity / re-tile the window for
+        the NEXT scan.
         """
-        fstate, stats, n_surv = self._get_fn(int(n_iters))(fstate)
+        fstate, stats, n_surv, span = self._get_fn(int(n_iters))(fstate)
         if replan:
             self.note_survivors(n_surv)
+            if self.balance == "tiles":
+                self.note_spans(span)
         return fstate, stats, n_surv
 
     # -- between-scan capacity planning (host side) ------------------------
@@ -298,17 +474,34 @@ class FusedPipeline:
             ema = float(v) if ema is None else decay * ema + (1 - decay) * v
         self._surv_ema = ema
         if not self._capacity_pinned:
-            self.capacity = plan_capacity(ema, self.n_tokens)
+            self.capacity = plan_tile_capacity(
+                ema, self.n_tokens, self.config.n_topics) \
+                if self.balance == "tiles" \
+                else plan_capacity(ema, self.n_tokens)
+
+    def note_spans(self, spans, decay: float = 0.7) -> None:
+        """Re-tile: update the live word-span EMA and re-plan the window.
+
+        The EMA is floored at the newest observed max so the window only
+        lags on SHRINK, never on growth — an undershot window silently
+        costs the per-token fallback gather, an overshot one only VMEM.
+        """
+        m = float(np.max(np.atleast_1d(np.asarray(spans))))
+        ema = self._span_ema
+        self._span_ema = m if ema is None \
+            else max(m, decay * ema + (1 - decay) * m)
+        self.win_words = plan_window(self._span_ema, self.n_words)
 
 
 class HybridFusedPipeline(FusedPipeline):
     """The fused iteration over the hybrid sparse live state (DESIGN.md SS5).
 
     Same architecture as FusedPipeline (single donated dispatch, survivor
-    chunking, lax.scan stretches, EMA capacity planning — all inherited),
-    but the training state is a SparseLDAState: packed-ELL D rows and
-    HybridW (dense head + bucketed packed tail), with the ±1 delta updates
-    landing directly in the packed formats.
+    chunking, lax.scan stretches, EMA capacity planning, tile-scheduled
+    dispatch under ``balance="tiles"`` — all inherited), but the training
+    state is a SparseLDAState: packed-ELL D rows and HybridW (dense head +
+    bucketed packed tail), with the ±1 delta updates landing directly in
+    the packed formats.
 
     Cost shape (why the body looks the way it does): XLA:CPU scatters and
     sorts price per ENTRY (~10M/s) while gathers and elementwise run two
@@ -337,10 +530,12 @@ class HybridFusedPipeline(FusedPipeline):
     bit-exact vs the dense reference trainer end to end.
     ``tail_sampler="sparse"`` splits the dispatch: tail-word survivors go
     through the O(L) Pallas ``sample_sparse`` kernel + Q' fallback over
-    the packed D rows (kernels/ops.sparse_tail_draw) — the paper's S'/Q'
-    decomposition, which draws from the identical distribution but sums
-    branch masses in a different order, so it is convergence-equivalent
-    rather than bit-equal (the documented trade in DESIGN.md SS5).
+    the packed D rows (kernels/ops.sparse_tail_draw — the tile-scheduled
+    ``sparse_tail_draw_tiled`` under ``balance="tiles"``) — the paper's
+    S'/Q' decomposition, which draws from the identical distribution but
+    sums branch masses in a different order, so it is
+    convergence-equivalent rather than bit-equal (the documented trade in
+    DESIGN.md SS5).
     """
 
     def __init__(self, word_ids: jax.Array, doc_ids: jax.Array,
@@ -367,7 +562,7 @@ class HybridFusedPipeline(FusedPipeline):
 
     # -- the fused iteration body (traced; no host interaction) ------------
 
-    def _iteration(self, hs, *, capacity: int):
+    def _iteration(self, hs, *, capacity: int, win_words: int):
         cfg, lay = self.config, self.layout
         alpha, g = cfg.alpha_, cfg.g
         word_ids, doc_ids, mask = self.word_ids, self.doc_ids, self.mask
@@ -392,27 +587,40 @@ class HybridFusedPipeline(FusedPipeline):
         dec = three_branch.skip_phase(u, word_ids, doc_ids, d_dense,
                                       stats_w, g=g, alpha=alpha)
         k1_per_word = stats_w.k[:, 0]
+        use_tiles = self._use_tiles(win_words)
 
-        def dense_chunk(idx):
-            u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
-            if cfg.impl == "pallas":
-                t_c, m, s, q = _fused.sample_fused(
-                    u_c, d_dense[d_c], w_hat[v_c], alpha=alpha,
-                    interpret=self._interpret)
-                return t_c, u_c * (m + s + q) < m
-            return three_branch.exact_three_branch(
-                u_c, v_c, d_c, k1_per_word, d_dense, w_hat,
-                alpha=alpha, tile_size=cfg.tile_size)
+        dense_chunk = self._dense_chunk_sampler(
+            u, word_ids, doc_ids, d_dense, w_hat, k1_per_word,
+            win_words=win_words)
 
         def sparse_tail_chunk(idx):
             u_c, v_c, d_c = u[idx], word_ids[idx], doc_ids[idx]
             k1 = k1_per_word[v_c]
             b1 = d_dense[d_c, k1].astype(jnp.float32)
-            t_c, _needs_q, in_m = kops.sparse_tail_draw(
-                u_c, d_packed[d_c], w_hat[v_c], k1, stats_w.a[v_c, 0], b1,
-                stats_w.q_prime[v_c], alpha=alpha,
-                interpret=self._interpret)
-            return t_c, in_m
+            if not use_tiles:
+                t_c, _needs_q, in_m = kops.sparse_tail_draw(
+                    u_c, d_packed[d_c], w_hat[v_c], k1, stats_w.a[v_c, 0],
+                    b1, stats_w.q_prime[v_c], alpha=alpha,
+                    interpret=self._interpret)
+                return t_c, in_m
+            first, last = self._chunk_run(v_c, idx)
+
+            def tiled(_):
+                t_c, _nq, in_m = kops.sparse_tail_draw_tiled(
+                    u_c, d_packed[d_c], w_hat, v_c, first, k1_per_word,
+                    stats_w.a[:, 0], stats_w.q_prime, b1, alpha=alpha,
+                    win_words=win_words, interpret=self._interpret)
+                return t_c, in_m
+
+            def untiled(_):
+                t_c, _nq, in_m = kops.sparse_tail_draw(
+                    u_c, d_packed[d_c], w_hat[v_c], k1, stats_w.a[v_c, 0],
+                    b1, stats_w.q_prime[v_c], alpha=alpha,
+                    interpret=self._interpret)
+                return t_c, in_m
+
+            return jax.lax.cond(last - first < win_words, tiled, untiled,
+                                None)
 
         # -- phase 2, dispatched by the T partition (static split). With
         # the exact tail sampler both partitions route identically, so they
@@ -425,6 +633,7 @@ class HybridFusedPipeline(FusedPipeline):
         new_topics = dec.k1                      # skipped ⇒ K1 everywhere
         in_m_acc = jnp.zeros(n, jnp.bool_)
         n_surv_total = jnp.int32(0)
+        max_span = jnp.int32(0)
         for seg_mask, n_seg, chunk_fn in segments:
             if n_seg == 0:
                 continue
@@ -433,6 +642,10 @@ class HybridFusedPipeline(FusedPipeline):
             n_chunks = max(1, -(-n_seg // capacity))
             surv_idx = three_branch.compact_survivor_indices(
                 rank, skip_seg, n_chunks * capacity)
+            if self.balance == "tiles":
+                max_span = jnp.maximum(
+                    max_span,
+                    self._max_chunk_span(surv_idx, n_chunks, capacity))
             new_topics, in_m_seg = three_branch.run_survivor_chunks(
                 surv_idx, n_surv, new_topics,
                 capacity=capacity, n_chunks=n_chunks, sample_chunk=chunk_fn)
@@ -469,4 +682,4 @@ class HybridFusedPipeline(FusedPipeline):
             topics=new_topics, D=d_packed, W_head=w_head, W_tail=w_tail,
             colsum=colsum, overflow=overflow, key=key,
             iteration=iteration + 1)
-        return new_state, st, n_surv_total
+        return new_state, st, n_surv_total, max_span

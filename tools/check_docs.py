@@ -1,0 +1,108 @@
+"""Docs-integrity check (the CI docs step).
+
+Two gates, so the docs surface cannot silently rot:
+
+  1. Markdown link check: every relative link/anchor in README.md,
+     DESIGN.md, and docs/*.md must resolve to an existing file (and,
+     for ``#fragment`` links, to a heading slug in the target file).
+     External (``http``/``https``/``mailto``) links are not fetched.
+  2. API-reference import check: every dotted ``repro.*`` symbol named
+     in docs/API.md must import — module attributes are resolved with
+     ``getattr`` after importing the longest importable module prefix —
+     so the reference cannot drift from the actual public surface.
+
+Usage: PYTHONPATH=src python tools/check_docs.py
+Exits nonzero with a list of failures.
+"""
+
+from __future__ import annotations
+
+import glob
+import importlib
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SYMBOL_RE = re.compile(r"\brepro(?:\.\w+)+")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def _slug(heading: str) -> str:
+    """GitHub-style anchor slug (enough for our own docs)."""
+    h = re.sub(r"`([^`]*)`", r"\1", heading).strip().lower()
+    h = re.sub(r"[^\w\s-]", "", h)
+    return re.sub(r"[\s]+", "-", h)
+
+
+def _doc_files() -> list[str]:
+    files = [os.path.join(ROOT, "README.md"), os.path.join(ROOT, "DESIGN.md")]
+    files += sorted(glob.glob(os.path.join(ROOT, "docs", "*.md")))
+    return [f for f in files if os.path.exists(f)]
+
+
+def check_links() -> list[str]:
+    errors = []
+    for path in _doc_files():
+        text = open(path).read()
+        base = os.path.dirname(path)
+        rel = os.path.relpath(path, ROOT)
+        for target in LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            file_part, _, frag = target.partition("#")
+            tgt_path = path if not file_part \
+                else os.path.normpath(os.path.join(base, file_part))
+            if not os.path.exists(tgt_path):
+                errors.append(f"{rel}: broken link -> {target}")
+                continue
+            if frag and tgt_path.endswith(".md"):
+                slugs = {_slug(h)
+                         for h in HEADING_RE.findall(open(tgt_path).read())}
+                if frag.lower() not in slugs:
+                    errors.append(f"{rel}: broken anchor -> {target}")
+    return errors
+
+
+def check_api_symbols() -> list[str]:
+    api_md = os.path.join(ROOT, "docs", "API.md")
+    if not os.path.exists(api_md):
+        return ["docs/API.md is missing"]
+    errors = []
+    for name in sorted(set(SYMBOL_RE.findall(open(api_md).read()))):
+        parts = name.split(".")
+        mod, attrs = None, []
+        for cut in range(len(parts), 0, -1):
+            try:
+                mod = importlib.import_module(".".join(parts[:cut]))
+                attrs = parts[cut:]
+                break
+            except ImportError:
+                continue
+        if mod is None:
+            errors.append(f"docs/API.md names unimportable module: {name}")
+            continue
+        obj = mod
+        for a in attrs:
+            if not hasattr(obj, a):
+                errors.append(f"docs/API.md names missing symbol: {name}")
+                break
+            obj = getattr(obj, a)
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_api_symbols()
+    for e in errors:
+        print(f"DOCS-INTEGRITY: {e}", file=sys.stderr)
+    if not errors:
+        n_files = len(_doc_files())
+        print(f"docs-integrity OK ({n_files} markdown files, links + "
+              "API symbols verified)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
