@@ -20,11 +20,13 @@ MODULES = [
     "fig16_scaling",
     "fig17_breakdown",
     "fig18_hw_generations",
+    "fig19_streaming",     # streamed vs resident tokens/sec + device bytes
     "fused_step",          # seed vs fused steady-state tokens/sec
     "serve_lda",           # FrozenLDAModel fold-in docs/sec
 ]
 
-QUICK_SKIP = {"fig16_scaling", "fused_step", "serve_lda"}   # long warmup
+QUICK_SKIP = {"fig16_scaling", "fig19_streaming", "fused_step",
+              "serve_lda"}                                  # long warmup
 
 
 def main(argv=None) -> int:
@@ -36,6 +38,12 @@ def main(argv=None) -> int:
     mods = MODULES
     if args.only:
         keys = args.only.split(",")
+        unknown = [k for k in keys
+                   if not any(m.startswith(k) for m in MODULES)]
+        if unknown:
+            # a typo'd figure name must error, not silently run nothing
+            ap.error(f"--only matched no modules for {unknown}; "
+                     f"known modules: {', '.join(MODULES)}")
         mods = [m for m in MODULES if any(m.startswith(k) for k in keys)]
     if args.quick:
         mods = [m for m in mods if m not in QUICK_SKIP]

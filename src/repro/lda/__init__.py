@@ -1,13 +1,14 @@
 from repro.lda.api import FoldInBatch, FrozenLDAModel, LDAEngine
-from repro.lda.corpus import (Corpus, from_documents, relabel_by_frequency,
-                              synthetic_lda_corpus, zipf_corpus,
-                              chunk_documents, pad_corpus)
+from repro.lda.corpus import (Corpus, ShardedCorpus, from_documents,
+                              relabel_by_frequency, synthetic_lda_corpus,
+                              zipf_corpus, chunk_documents, pad_corpus,
+                              shard_stream)
 from repro.lda.model import (LDAConfig, LDAState, SparseLDAState,
                              HybridLayout)
 from repro.lda.trainer import LDATrainer
 
-__all__ = ["Corpus", "from_documents", "relabel_by_frequency",
-           "synthetic_lda_corpus", "zipf_corpus", "chunk_documents",
-           "pad_corpus", "LDAConfig", "LDAState", "SparseLDAState",
-           "HybridLayout", "LDATrainer", "LDAEngine", "FrozenLDAModel",
-           "FoldInBatch"]
+__all__ = ["Corpus", "ShardedCorpus", "from_documents",
+           "relabel_by_frequency", "synthetic_lda_corpus", "zipf_corpus",
+           "chunk_documents", "pad_corpus", "shard_stream", "LDAConfig",
+           "LDAState", "SparseLDAState", "HybridLayout", "LDATrainer",
+           "LDAEngine", "FrozenLDAModel", "FoldInBatch"]

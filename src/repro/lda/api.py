@@ -41,6 +41,17 @@ Canonical checkpoint format (all backends, all formats)
     shapes, padding multiples, and live-state formats (dense <-> hybrid,
     single <-> distributed; pinned bit-equal by tests/test_api.py).
     Legacy single-trainer payloads (padded ``"topics"``) still restore.
+
+    Streaming extension (``corpus_residency="streamed"``, DESIGN.md
+    SS10): a payload saved MID-EPOCH additionally carries the flat keys
+    ``stream_cursor`` (epoch shards already sampled) and
+    ``stream_done_topics`` (their post-sample topics); ``topics_global``
+    then holds the EPOCH-START assignments the open epoch's counts
+    derive from. Epoch-boundary payloads are exactly the canonical
+    format, so streamed and resident engines stay interchangeable; a
+    mid-epoch payload restores only into a single-host streamed engine
+    with the same ``stream_shards`` (and continues bit-identically —
+    tests/test_streaming.py).
 """
 
 from __future__ import annotations
@@ -469,19 +480,40 @@ class _SingleBackend:
         self.trainer = LDATrainer(corpus, config, checkpoint_manager=wrapped,
                                   _from_engine=True)
 
-    # payload conversion (trainer speaks padded "topics")
+    # payload conversion (trainer speaks padded "topics"; the streaming
+    # extension keys ride through both directions unchanged)
+
     def _to_canonical(self, payload: dict[str, Any]) -> dict[str, Any]:
-        return {"topics_global": np.asarray(payload["topics"], np.int32)
-                [:self.corpus.n_tokens],
-                "key": payload["key"], "iteration": payload["iteration"]}
+        from repro.train.lda_step import STREAM_PAYLOAD_KEYS
+        out = {"topics_global": np.asarray(payload["topics"], np.int32)
+               [:self.corpus.n_tokens],
+               "key": payload["key"], "iteration": payload["iteration"]}
+        for k in STREAM_PAYLOAD_KEYS:
+            if k in payload:
+                out[k] = payload[k]
+        return out
 
     def _from_canonical(self, payload: dict[str, Any]) -> dict[str, Any]:
+        from repro.train.lda_step import STREAM_PAYLOAD_KEYS
         tg = _canonical_topics(payload, self.corpus.n_tokens,
                                padded_len=int(self.trainer.word_ids.shape[0]))
         padded = np.zeros(self.trainer.word_ids.shape, np.int32)
         padded[:self.corpus.n_tokens] = tg
-        return {"topics": padded, "key": payload["key"],
-                "iteration": payload["iteration"]}
+        out = {"topics": padded, "key": payload["key"],
+               "iteration": payload["iteration"]}
+        for k in STREAM_PAYLOAD_KEYS:
+            if k in payload:
+                out[k] = payload[k]
+        return out
+
+    def _as_lda_state(self, state):
+        """StreamState (epoch boundary) -> LDAState; LDAState passes
+        through. A mid-epoch StreamState raises the pipeline's
+        actionable boundary error."""
+        from repro.train.lda_step import StreamState
+        if isinstance(state, StreamState):
+            return self.trainer.fused_pipeline().to_lda_state(state)
+        return state
 
     # lifecycle
     def restore_or_init(self):
@@ -491,19 +523,24 @@ class _SingleBackend:
         return self.trainer.state_from_payload(self._from_canonical(payload))
 
     def canonical_payload(self, state) -> dict[str, Any]:
+        from repro.train.lda_step import StreamState
+        if isinstance(state, StreamState):
+            # the streaming pipeline emits canonical payloads natively
+            # (including the mid-epoch stream_* extension keys)
+            return self.trainer.fused_pipeline().stream_payload(state)
         return self._to_canonical(state.host_payload())
 
     def run(self, n_iters: int, state, log_fn, checkpoint_every):
         return self.trainer.run(n_iters, state, log_fn, checkpoint_every)
 
     def evaluate(self, state) -> float:
-        return self.trainer.evaluate(state)
+        return self.trainer.evaluate(self._as_lda_state(state))
 
     def dense_W(self, state) -> np.ndarray:
-        return np.asarray(state.W, np.int32)
+        return np.asarray(self._as_lda_state(state).W, np.int32)
 
     def state_nbytes(self, state) -> int:
-        return self.trainer.live_state_nbytes(state)
+        return self.trainer.live_state_nbytes(self._as_lda_state(state))
 
 
 class _DistBackend:
@@ -533,11 +570,18 @@ class _DistBackend:
         return self.trainer.init_state()
 
     def state_from_canonical(self, payload: dict[str, Any]):
-        # the dist trainer's native payload IS the canonical format
-        return self.trainer.state_from_payload(
-            {"topics_global": _canonical_topics(payload,
-                                                self.corpus.n_tokens),
-             "key": payload["key"], "iteration": payload["iteration"]})
+        # the dist trainer's native payload IS the canonical format; the
+        # stream_* extension keys must ride through so the trainer's
+        # mid-epoch guard fires instead of silently resuming from the
+        # epoch start
+        from repro.train.lda_step import STREAM_PAYLOAD_KEYS
+        native = {"topics_global": _canonical_topics(payload,
+                                                     self.corpus.n_tokens),
+                  "key": payload["key"], "iteration": payload["iteration"]}
+        for k in STREAM_PAYLOAD_KEYS:
+            if k in payload:
+                native[k] = payload[k]
+        return self.trainer.state_from_payload(native)
 
     def canonical_payload(self, state) -> dict[str, Any]:
         return self.trainer.host_payload(state)

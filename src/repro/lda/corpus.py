@@ -20,12 +20,14 @@ import numpy as np
 
 __all__ = [
     "Corpus",
+    "ShardedCorpus",
     "from_documents",
     "relabel_by_frequency",
     "synthetic_lda_corpus",
     "zipf_corpus",
     "chunk_documents",
     "pad_corpus",
+    "shard_stream",
 ]
 
 
@@ -194,6 +196,197 @@ def chunk_documents(corpus: Corpus, n_chunks: int) -> np.ndarray:
         assign[d] = c
         loads[c] += corpus.doc_lengths[d]
     return assign
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardedCorpus:
+    """Word-sorted token shards for out-of-core (streamed) training.
+
+    NOT the distributed trainer's device partition (that is
+    ``repro.lda.distributed.ShardedCorpus``, which splits *documents or
+    token loads* across a mesh): these shards tile the **padded,
+    word-sorted token stream** ``T`` into ``n_shards`` contiguous,
+    equal-length slices so an epoch can stream them through the device
+    one (double-buffered) shard at a time while ``D``/``W`` stay
+    resident. Shard ``s`` covers padded stream positions
+    ``[s·shard_len, (s+1)·shard_len)``; positions past ``n_padded``
+    (the resident path's pad length — also the PRNG draw length that
+    keeps streamed sampling bit-equal to resident) are extra pad slots
+    with mask 0.
+
+    Each shard carries its own slice of the corpus indexes:
+
+      * word-run metadata (``first_word``/``last_word``/``word_offsets``)
+        — the streaming analogue of ``Corpus.word_offsets``, used by the
+        tile scheduler to size per-shard word windows;
+      * an inverted-index slice (``inv_doc_offsets``/``inv_token_idx``)
+        — CSR by document over the shard's REAL token slots, so
+        document-side consumers can walk a shard without the global
+        index. Built LAZILY on first access (it costs ~8 B per padded
+        token of host memory, and the training pipelines never touch
+        it — out-of-core-scale construction must not pay for it).
+    """
+
+    n_shards: int
+    shard_len: int                # L — uniform padded slice length
+    n_padded: int                 # resident padded stream length (u length)
+    n_tokens: int                 # real tokens (== corpus.n_tokens)
+    n_words: int
+    n_docs: int
+    word_ids: np.ndarray          # (S, L) int32 — word-sorted within shard
+    doc_ids: np.ndarray           # (S, L) int32
+    mask: np.ndarray              # (S, L) int32 — 1 = real token
+    first_word: np.ndarray        # (S,) int32 — word-run metadata
+    last_word: np.ndarray         # (S,) int32 (== first-1 for empty shards)
+
+    @property
+    def word_offsets(self) -> np.ndarray:
+        """(S, V+1) int64 — per-shard CSR by word (lazy, cached: O(S·V)
+        host memory that the training pipelines never consume)."""
+        cached = self.__dict__.get("_word_offsets")
+        if cached is None:
+            cached = np.zeros((self.n_shards, self.n_words + 1), np.int64)
+            for s in range(self.n_shards):
+                real = int(self.real_per_shard[s])
+                counts = np.bincount(self.word_ids[s, :real],
+                                     minlength=self.n_words)
+                np.cumsum(counts.astype(np.int64), out=cached[s, 1:])
+            object.__setattr__(self, "_word_offsets", cached)
+        return cached
+
+    @property
+    def inv_doc_offsets(self) -> np.ndarray:
+        """(S, M+1) int64 — per-shard CSR by doc (lazy, cached)."""
+        return self._inverted()[0]
+
+    @property
+    def inv_token_idx(self) -> np.ndarray:
+        """(S, L) int64 — shard-local token positions in doc order (the
+        tail past the shard's real count holds the sentinel L)."""
+        return self._inverted()[1]
+
+    def _inverted(self) -> tuple[np.ndarray, np.ndarray]:
+        cached = self.__dict__.get("_inv_cache")
+        if cached is None:
+            S, L, M = self.n_shards, self.shard_len, self.n_docs
+            offs = np.zeros((S, M + 1), np.int64)
+            idx = np.full((S, L), L, np.int64)
+            for s in range(S):
+                real = int(self.real_per_shard[s])
+                d = self.doc_ids[s, :real]
+                counts = np.bincount(d, minlength=M).astype(np.int64)
+                np.cumsum(counts, out=offs[s, 1:])
+                idx[s, :real] = np.argsort(d, kind="stable")
+            cached = (offs, idx)
+            object.__setattr__(self, "_inv_cache", cached)
+        return cached
+
+    @property
+    def global_lo(self) -> np.ndarray:
+        """(S,) int64 — shard s's start offset in the padded stream."""
+        return np.arange(self.n_shards, dtype=np.int64) * self.shard_len
+
+    @property
+    def real_per_shard(self) -> np.ndarray:
+        """(S,) int64 — REAL (unpadded) tokens per shard."""
+        return np.clip(self.n_tokens - self.global_lo, 0, self.shard_len)
+
+    def token_bytes_resident(self) -> int:
+        """Device bytes of the resident token representation this replaces
+        (word + doc + mask + topics, int32 each, at the padded length)."""
+        return 4 * 4 * self.n_padded
+
+    def token_bytes_streamed(self) -> int:
+        """Device bytes of the double-buffered streaming window (two
+        shards' word + doc + mask + topics buffers plus the staged
+        epoch-uniform slices)."""
+        return 2 * 5 * 4 * self.shard_len
+
+    def validate(self, deep: bool = False) -> None:
+        """Invariant checks — all vectorized (O(tokens) per shard), so
+        ``shard_stream`` can afford to run them at construction even at
+        out-of-core corpus scale. ``deep=True`` additionally checks the
+        LAZY index slices (word_offsets CSR + inverted index), forcing
+        their build."""
+        assert self.word_ids.shape == (self.n_shards, self.shard_len)
+        assert self.n_shards * self.shard_len >= self.n_padded
+        # exact cover: masked slots are exactly the first n_tokens of the
+        # padded stream, in order
+        flat_mask = self.mask.reshape(-1)
+        assert int(flat_mask.sum()) == self.n_tokens
+        assert np.all(np.nonzero(flat_mask)[0] == np.arange(self.n_tokens))
+        for s in range(self.n_shards):
+            real = int(self.real_per_shard[s])
+            w = self.word_ids[s, :real]
+            assert np.all(np.diff(w) >= 0), f"shard {s} not word-sorted"
+            if real:
+                assert self.first_word[s] == w[0]
+                assert self.last_word[s] == w[-1]
+            if not deep:
+                continue
+            counts = np.bincount(w, minlength=self.n_words).astype(np.int64)
+            assert np.array_equal(np.diff(self.word_offsets[s]), counts)
+            # the inverted-index slice covers the shard's real slots once,
+            # grouped by document in CSR order
+            idx = self.inv_token_idx[s, :real]
+            assert np.array_equal(np.sort(idx), np.arange(real))
+            offs = self.inv_doc_offsets[s]
+            assert offs[-1] == real
+            doc_counts = np.diff(offs)
+            expect = np.repeat(np.arange(self.n_docs, dtype=np.int64),
+                               doc_counts)
+            assert np.array_equal(self.doc_ids[s, idx].astype(np.int64),
+                                  expect)
+
+
+def shard_stream(corpus: Corpus, n_shards: int,
+                 multiple: int = 1) -> ShardedCorpus:
+    """Tile the padded word-sorted token stream into epoch shards.
+
+    ``multiple`` is the resident path's pad multiple (the trainer's
+    ``tile_size``): the stream is first padded exactly as ``pad_corpus``
+    would, so streamed PRNG draws (length ``n_padded``) and shard slices
+    line up bit-for-bit with the resident token array. Each shard is
+    padded to the common ``shard_len`` (itself a multiple of
+    ``multiple``) with mask-0 slots carrying the max word id, keeping
+    every shard word-sorted.
+    """
+    if n_shards < 1:
+        raise ValueError(f"n_shards={n_shards} must be >= 1")
+    padded, mask = pad_corpus(corpus, multiple)
+    n_pad = padded.n_tokens
+    shard_len = -(-n_pad // n_shards)
+    shard_len = max(-(-shard_len // multiple) * multiple, multiple)
+    total = n_shards * shard_len
+    pad_word = padded.word_ids[-1] if n_pad else np.int32(0)
+
+    def extend(arr, fill):
+        out = np.full(total, fill, arr.dtype)
+        out[:n_pad] = arr
+        return out.reshape(n_shards, shard_len)
+
+    word_ids = extend(padded.word_ids.astype(np.int32), pad_word)
+    doc_ids = extend(padded.doc_ids.astype(np.int32), 0)
+    mask_sh = extend(mask.astype(np.int32), 0)
+
+    V, M = corpus.n_words, corpus.n_docs
+    first = np.zeros(n_shards, np.int32)
+    last = np.full(n_shards, -1, np.int32)
+    for s in range(n_shards):
+        real = int(np.clip(corpus.n_tokens - s * shard_len, 0, shard_len))
+        if real:
+            first[s] = word_ids[s, 0]
+            last[s] = word_ids[s, real - 1]
+        else:
+            first[s], last[s] = 0, -1
+
+    sc = ShardedCorpus(
+        n_shards=n_shards, shard_len=shard_len, n_padded=n_pad,
+        n_tokens=corpus.n_tokens, n_words=V, n_docs=M,
+        word_ids=word_ids, doc_ids=doc_ids, mask=mask_sh,
+        first_word=first, last_word=last)
+    sc.validate()
+    return sc
 
 
 def pad_corpus(corpus: Corpus, multiple: int) -> tuple[Corpus, np.ndarray]:

@@ -61,7 +61,7 @@ from repro.runtime.compat import shard_map as _shard_map
 from repro.runtime.sharding import batch_axes
 
 __all__ = ["ShardedCorpus", "shard_corpus", "DistLDAState",
-           "DistHybridState", "DistLDATrainer"]
+           "DistHybridState", "DistStreamState", "DistLDATrainer"]
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +196,45 @@ class DistLDAState:
     iteration: jax.Array
 
 
+@dataclasses.dataclass
+class _DistEpochCarry:
+    """Open-epoch device state of the streamed distributed trainer:
+    the epoch's per-word/word-stat arrays (fixed during the epoch) and
+    the accumulated per-device count deltas."""
+    derived: tuple                 # (W_hat, g_vals, g_idx, q_prime, len_tot)
+    deltas: tuple                  # (dD, dW[, d_shared]) — per-device
+    u_host: np.ndarray | None = None  # epoch uniforms, host-staged (S, R·L)
+    stats_parts: list = dataclasses.field(default_factory=list)
+    n_surv: float = 0.0
+    stat_sums: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(4, np.float64))
+
+
+@dataclasses.dataclass
+class DistStreamState:
+    """Streamed multi-device training state (corpus_residency="streamed").
+
+    The token-side state lives HOST-side — ``host_topics`` is
+    (S, R·L) with each device's token slice split into R equal
+    sub-shards — and streams through the devices one sub-shard column
+    block at a time; only the count state stays device-resident:
+    ``counts`` is ``(D, W)`` for the dense format or
+    ``(D_packed, W_head, W_tail, overflow)`` for the hybrid one.
+    """
+    host_topics: np.ndarray
+    counts: tuple
+    key: jax.Array
+    iteration: int
+    cursor: int = 0
+    epoch: _DistEpochCarry | None = None
+
+    @property
+    def topics(self) -> np.ndarray:
+        """Host-side topics view (duck-types the resident states for
+        consumers that only read/block on .topics)."""
+        return self.host_topics
+
+
 @functools.partial(jax.tree_util.register_dataclass,
                    data_fields=["topics", "D", "W_head", "W_tail",
                                 "overflow", "key", "iteration"],
@@ -226,6 +265,88 @@ class DistHybridState:
 # ---------------------------------------------------------------------------
 # the per-shard step (runs inside shard_map)
 # ---------------------------------------------------------------------------
+
+def _word_phase(W, *, cfg: LDAConfig, model_axis: str, n_words: int,
+                g: int, kb0, k_local: int):
+    """Per-word epoch quantities: Ŵ + distributed top-(g+1) + Q'.
+
+    Extracted from the iteration step so the streamed path can compute
+    them ONCE per epoch (they depend only on W, fixed within an epoch)
+    while the resident path keeps calling it per iteration — same ops,
+    same collectives, bit-identical results either way.
+    """
+    colsum = jnp.sum(W, axis=0, dtype=jnp.float32)
+    W_hat = (W.astype(jnp.float32) + cfg.beta) / (colsum + n_words * cfg.beta)
+
+    # --- per-word tops: local top-(g+1) → all_gather over model → re-top
+    loc_vals, loc_idx = jax.lax.top_k(W_hat, min(g + 1, k_local))
+    loc_idx = loc_idx + kb0
+    all_vals = jax.lax.all_gather(loc_vals, model_axis)   # (Pm, V, g+1)
+    all_idx = jax.lax.all_gather(loc_idx, model_axis)
+    cat_vals = jnp.moveaxis(all_vals, 0, 1).reshape(W.shape[0], -1)
+    cat_idx = jnp.moveaxis(all_idx, 0, 1).reshape(W.shape[0], -1)
+    g_vals, g_pos = jax.lax.top_k(cat_vals, g + 1)        # (V, g+1) global
+    g_idx = jnp.take_along_axis(cat_idx, g_pos, axis=1).astype(jnp.int32)
+    wsum = jax.lax.psum(jnp.sum(W_hat, axis=-1), model_axis)
+    q_prime_w = cfg.alpha_ * (wsum - g_vals[:, 0])        # (V,)
+    return W_hat, g_vals, g_idx, q_prime_w
+
+
+def _token_sweep(u, word_ids, doc_ids, d_tok, len_tot, W_hat, g_vals,
+                 g_idx, q_prime_w, *, alpha: float, g: int, kb0,
+                 k_local: int, my, model_axis: str):
+    """Skip phase + combined-sweep phase 2 for one batch of tokens.
+
+    Per-token work only (gathers against the epoch/iteration-start
+    counts and word stats), so the streamed path can run it per token
+    sub-shard and the resident path over the whole slice — identical
+    per-token results. Returns (new_topics, skip, in_m, k1).
+    """
+    # --- per-token skip phase (Eq 8-10); b_i via masked-lookup psum
+    a = g_vals[word_ids]                                  # (N, g+1)
+    ktop = g_idx[word_ids][:, :g]                         # (N, g)
+    rel = ktop - kb0
+    in_blk = (rel >= 0) & (rel < k_local)
+    b_loc = jnp.where(
+        in_blk,
+        jnp.take_along_axis(d_tok, jnp.clip(rel, 0, k_local - 1),
+                            axis=1), 0).astype(jnp.float32)
+    b = jax.lax.psum(b_loc, model_axis)                   # (N, g)
+    len_d = len_tot[doc_ids]
+    m_mass = a[:, 0] * (b[:, 0] + alpha)                  # Eq 8
+    head = jnp.sum(a[:, 1:g] * b[:, 1:g], axis=-1)
+    s_est = head + a[:, g] * (len_d - jnp.sum(b, axis=-1))
+    q_tok = q_prime_w[word_ids]
+    skip = u * (m_mass + s_est + q_tok) < m_mass
+    k1 = g_idx[word_ids][:, 0]
+
+    # --- phase 2: two-level inverse-CDF over model shards (combined sweep)
+    d_rows = d_tok.astype(jnp.float32)                    # (N, K_loc)
+    w_rows = W_hat[word_ids]                              # (N, K_loc)
+    k_global = kb0 + jnp.arange(k_local)[None, :]
+    mass = jnp.where(k_global == k1[:, None], 0.0,
+                     (d_rows + alpha) * w_rows)           # k ≠ K1
+    l_mine = jnp.sum(mass, axis=1)                        # (N,) local mass
+    l_all = jax.lax.all_gather(l_mine, model_axis)        # (Pm, N)
+    pm = l_all.shape[0]        # static axis size (jax.lax.axis_size compat)
+    cum_before = jnp.sum(
+        jnp.where(jnp.arange(pm)[:, None] < my, l_all, 0.0), axis=0)
+    total = m_mass + jnp.sum(l_all, axis=0)
+    x = u * total
+    tgt = x - m_mass - cum_before                         # local CDF target
+    cdf = jnp.cumsum(mass, axis=1)
+    hit = cdf > tgt[:, None]
+    found = jnp.any(hit, axis=1) & (tgt >= 0) & (x >= m_mass) \
+        & (tgt < l_mine)
+    pick = kb0 + jnp.argmax(hit, axis=1).astype(jnp.int32)
+    claimed = jax.lax.psum(found.astype(jnp.int32), model_axis)
+    topic_win = jax.lax.psum(jnp.where(found, pick, 0), model_axis)
+    # fp-edge: zero or multiple claims → fall back to K1 (measure-zero)
+    topic_exact = jnp.where(claimed == 1, topic_win, k1)
+    in_m = x < m_mass
+    new_topics = jnp.where(skip | in_m, k1, topic_exact).astype(jnp.int32)
+    return new_topics, skip, in_m, k1
+
 
 def _dist_step(word_ids, doc_ids, mask, state, *,
                cfg: LDAConfig, data_axes: tuple[str, ...], model_axis: str,
@@ -272,65 +393,17 @@ def _dist_step(word_ids, doc_ids, mask, state, *,
         key = jax.random.fold_in(key, jax.lax.axis_index(ax))
     u = jax.random.uniform(key, (n,), dtype=jnp.float32)
 
-    # --- Ŵ: colsum is per-topic → local to the column block (no comm)
-    colsum = jnp.sum(W, axis=0, dtype=jnp.float32)
-    W_hat = (W.astype(jnp.float32) + cfg.beta) / (colsum + n_words * cfg.beta)
+    # --- Ŵ + per-word tops + Q' (colsum is per-topic → no comm for Ŵ)
+    W_hat, g_vals, g_idx, q_prime_w = _word_phase(
+        W, cfg=cfg, model_axis=model_axis, n_words=n_words, g=g,
+        kb0=kb0, k_local=k_local)
 
-    # --- per-word tops: local top-(g+1) → all_gather over model → re-top
-    loc_vals, loc_idx = jax.lax.top_k(W_hat, min(g + 1, k_local))
-    loc_idx = loc_idx + kb0
-    all_vals = jax.lax.all_gather(loc_vals, model_axis)   # (Pm, V, g+1)
-    all_idx = jax.lax.all_gather(loc_idx, model_axis)
-    cat_vals = jnp.moveaxis(all_vals, 0, 1).reshape(W.shape[0], -1)
-    cat_idx = jnp.moveaxis(all_idx, 0, 1).reshape(W.shape[0], -1)
-    g_vals, g_pos = jax.lax.top_k(cat_vals, g + 1)        # (V, g+1) global
-    g_idx = jnp.take_along_axis(cat_idx, g_pos, axis=1).astype(jnp.int32)
-    wsum = jax.lax.psum(jnp.sum(W_hat, axis=-1), model_axis)
-    q_prime_w = alpha * (wsum - g_vals[:, 0])             # (V,)
-
-    # --- per-token skip phase (Eq 8-10); b_i via masked-lookup psum
-    a = g_vals[word_ids]                                  # (N, g+1)
-    ktop = g_idx[word_ids][:, :g]                         # (N, g)
-    rel = ktop - kb0
-    in_blk = (rel >= 0) & (rel < k_local)
-    b_loc = jnp.where(
-        in_blk,
-        jnp.take_along_axis(d_tok, jnp.clip(rel, 0, k_local - 1),
-                            axis=1), 0).astype(jnp.float32)
-    b = jax.lax.psum(b_loc, model_axis)                   # (N, g)
-    len_d = jax.lax.psum(len_rows, model_axis)[doc_ids]
-    m_mass = a[:, 0] * (b[:, 0] + alpha)                  # Eq 8
-    head = jnp.sum(a[:, 1:g] * b[:, 1:g], axis=-1)
-    s_est = head + a[:, g] * (len_d - jnp.sum(b, axis=-1))
-    q_tok = q_prime_w[word_ids]
-    skip = u * (m_mass + s_est + q_tok) < m_mass
-    k1 = g_idx[word_ids][:, 0]
-
-    # --- phase 2: two-level inverse-CDF over model shards (combined sweep)
-    d_rows = d_tok.astype(jnp.float32)                    # (N, K_loc)
-    w_rows = W_hat[word_ids]                              # (N, K_loc)
-    k_global = kb0 + jnp.arange(k_local)[None, :]
-    mass = jnp.where(k_global == k1[:, None], 0.0,
-                     (d_rows + alpha) * w_rows)           # k ≠ K1
-    l_mine = jnp.sum(mass, axis=1)                        # (N,) local mass
-    l_all = jax.lax.all_gather(l_mine, model_axis)        # (Pm, N)
-    pm = l_all.shape[0]        # static axis size (jax.lax.axis_size compat)
-    cum_before = jnp.sum(
-        jnp.where(jnp.arange(pm)[:, None] < my, l_all, 0.0), axis=0)
-    total = m_mass + jnp.sum(l_all, axis=0)
-    x = u * total
-    tgt = x - m_mass - cum_before                         # local CDF target
-    cdf = jnp.cumsum(mass, axis=1)
-    hit = cdf > tgt[:, None]
-    found = jnp.any(hit, axis=1) & (tgt >= 0) & (x >= m_mass) \
-        & (tgt < l_mine)
-    pick = kb0 + jnp.argmax(hit, axis=1).astype(jnp.int32)
-    claimed = jax.lax.psum(found.astype(jnp.int32), model_axis)
-    topic_win = jax.lax.psum(jnp.where(found, pick, 0), model_axis)
-    # fp-edge: zero or multiple claims → fall back to K1 (measure-zero)
-    topic_exact = jnp.where(claimed == 1, topic_win, k1)
-    in_m = x < m_mass
-    new_topics = jnp.where(skip | in_m, k1, topic_exact).astype(jnp.int32)
+    # --- per-token skip phase + combined-sweep phase 2
+    len_tot = jax.lax.psum(len_rows, model_axis)
+    new_topics, skip, in_m, k1 = _token_sweep(
+        u, word_ids, doc_ids, d_tok, len_tot, W_hat, g_vals, g_idx,
+        q_prime_w, alpha=alpha, g=g, kb0=kb0, k_local=k_local, my=my,
+        model_axis=model_axis)
 
     # --- update: incremental ±1 deltas at changed tokens only (the fused
     # step's delta update, per shard). Each token subtracts its old topic and
@@ -405,10 +478,329 @@ def _dist_step(word_ids, doc_ids, mask, state, *,
 
 
 # ---------------------------------------------------------------------------
+# streamed residency (corpus_residency="streamed", DESIGN.md SS10)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _DistStream:
+    """Per-device sub-shard extension of the device partition: each data
+    shard's (N_loc,) token slice is tiled into ``n_sub`` equal column
+    blocks of ``sub_len`` (extension slots carry mask 0 / the max word
+    id, keeping every block word-sorted)."""
+    n_sub: int
+    sub_len: int
+    n_loc: int                 # the resident per-device length (u length)
+    word_ids: np.ndarray       # (S, n_sub·sub_len) int32
+    doc_ids: np.ndarray        # (S, n_sub·sub_len) int32
+    mask: np.ndarray           # (S, n_sub·sub_len) int32
+    shared_slot: np.ndarray | None
+
+
+def _extend_cols(arr: np.ndarray, total: int, fill) -> np.ndarray:
+    out = np.full((arr.shape[0], total), fill, arr.dtype)
+    out[:, :arr.shape[1]] = arr
+    return out
+
+
+class _StreamedDistMixin:
+    """The streamed-residency half of DistLDATrainer.
+
+    One epoch = one training iteration: every device streams its
+    ``n_sub`` token sub-shards through the SAME per-token sweep the
+    resident step runs (``_token_sweep``), against epoch-start counts
+    and the epoch's word stats (``_word_phase``, computed once per epoch
+    instead of once per iteration — same ops, same bits). The epoch's
+    ±1 count moves accumulate in per-device delta matrices; the close
+    applies them with the identical collectives the resident step uses
+    per iteration (ΔW data-psum, shared-row psum under
+    ``balance="tiles"``) — integer adds commute, so streamed == resident
+    bit for bit (pinned by tests/test_streaming.py).
+    """
+
+    def _build_stream(self) -> None:
+        from repro.train.lda_step import _Prefetcher
+        sc = self.sc
+        n_loc = int(sc.word_ids.shape[1])
+        R = max(int(self.n_stream_shards), 2)
+        L = -(-n_loc // R)
+        total = R * L
+        pad_word = self.corpus.n_words - 1
+        self.stream = _DistStream(
+            n_sub=R, sub_len=L, n_loc=n_loc,
+            word_ids=_extend_cols(sc.word_ids, total, pad_word),
+            doc_ids=_extend_cols(sc.doc_ids, total, 0),
+            mask=_extend_cols(sc.mask, total, 0),
+            shared_slot=None if sc.shared_slot is None else _extend_cols(
+                sc.shared_slot, total,
+                int(sc.shared_rows.shape[1])))
+        self._prefetch = _Prefetcher()
+        self._stream_begin_fn = None
+        self._stream_sub_fn = None
+        self._stream_end_fn = None
+
+    # -- sharding specs ------------------------------------------------------
+
+    def _stream_specs(self):
+        daxes = self.data_axes
+        tok = P(daxes)
+        mcol = None if self.layout is not None else "model"
+        counts = (P(daxes, None, mcol), P(None, mcol)) \
+            if self.layout is None else \
+            (P(daxes, None, None), P(None, None),
+             tuple(P(None, None) for _ in self.layout.tail_caps), P())
+        derived = (P(None, mcol), P(None, None), P(None, None), P(None),
+                   P(daxes, None))
+        deltas = [P(daxes, None, mcol), P(daxes, None, mcol)]
+        if self.stream.shared_slot is not None:
+            deltas.append(P(daxes, None, mcol))
+        return tok, counts, derived, tuple(deltas)
+
+    # -- compiled epoch pieces ----------------------------------------------
+
+    def _get_stream_begin(self):
+        if self._stream_begin_fn is not None:
+            return self._stream_begin_fn
+        cfg, lay, g = self.cfg, self.layout, self.cfg.g
+        n_words, m_loc = self.corpus.n_words, self.sc.m_local
+        n_loc = self.stream.n_loc
+        daxes = self.data_axes
+        n_sh = 0 if self.stream.shared_slot is None \
+            else int(self.sc.shared_rows.shape[1])
+        tok, counts_s, derived_s, deltas_s = self._stream_specs()
+
+        def begin(counts, key, iteration):
+            if lay is None:
+                D, W = counts
+                Wl = W
+                len_rows = jnp.sum(D[0], axis=-1, dtype=jnp.float32)
+            else:
+                d_packed, w_head, w_tail = counts[0][0], counts[1], counts[2]
+                Wl = lay.densify_w(w_head, w_tail)
+                len_rows = jnp.sum(sparse.unpack_pairs(d_packed)[1],
+                                   axis=-1).astype(jnp.float32)
+            k_local = Wl.shape[1]
+            kb0 = jax.lax.axis_index("model") * k_local
+            W_hat, g_vals, g_idx, q_prime = _word_phase(
+                Wl, cfg=cfg, model_axis="model", n_words=n_words, g=g,
+                kb0=kb0, k_local=k_local)
+            len_tot = jax.lax.psum(len_rows, "model")
+            # the epoch's per-device uniforms: the resident step's exact
+            # key folding and (N_loc,) draw, staged to the host once per
+            # epoch instead of regenerated per sub-shard
+            k = jax.random.fold_in(key, iteration)
+            for ax in daxes:
+                k = jax.random.fold_in(k, jax.lax.axis_index(ax))
+            u = jax.random.uniform(k, (n_loc,), dtype=jnp.float32)
+            deltas = [jnp.zeros((m_loc, k_local), jnp.int32)[None],
+                      jnp.zeros((n_words, k_local), jnp.int32)[None]]
+            if n_sh:
+                deltas.append(jnp.zeros((n_sh, k_local), jnp.int32)[None])
+            return ((W_hat, g_vals, g_idx, q_prime, len_tot[None]),
+                    tuple(deltas), u[None])
+
+        sm = _shard_map(begin, mesh=self.mesh,
+                        in_specs=(counts_s, P(), P()),
+                        out_specs=(derived_s, deltas_s, tok),
+                        check_vma=False)
+        self._stream_begin_fn = jax.jit(sm)
+        return self._stream_begin_fn
+
+    def _get_stream_substep(self):
+        if self._stream_sub_fn is not None:
+            return self._stream_sub_fn
+        cfg, lay, g = self.cfg, self.layout, self.cfg.g
+        daxes = self.data_axes
+        st = self.stream
+        has_shared = st.shared_slot is not None
+        tok, counts_s, derived_s, deltas_s = self._stream_specs()
+
+        def substep(u_r, word_r, doc_r, mask_r, topics_r,
+                    d_main, derived, deltas):
+            u = u_r[0]
+            word_r, doc_r, mask_r = word_r[0], doc_r[0], mask_r[0]
+            if has_shared:
+                ss_r = topics_r[1][0]
+                topics = topics_r[0][0]
+            else:
+                topics = topics_r[0]
+            W_hat, g_vals, g_idx, q_prime, len_tot = derived
+            k_local = W_hat.shape[1]
+            my = jax.lax.axis_index("model")
+            kb0 = my * k_local
+            if lay is None:
+                d_tok = d_main[0][doc_r]
+            else:
+                d_tok = sparse.densify_rows(d_main[0][doc_r], lay.n_topics)
+
+            new_topics, skip, in_m, k1 = _token_sweep(
+                u, word_r, doc_r, d_tok, len_tot[0], W_hat, g_vals,
+                g_idx, q_prime, alpha=cfg.alpha_, g=g, kb0=kb0,
+                k_local=k_local, my=my, model_axis="model")
+
+            wgt = mask_r.astype(jnp.int32)
+
+            def _blk(t):
+                rel = t - kb0
+                in_blk = (rel >= 0) & (rel < k_local)
+                return jnp.clip(rel, 0, k_local - 1), \
+                    jnp.where(in_blk, wgt, 0)
+
+            old_rel, w_old = _blk(topics)
+            t_rel, w_new = _blk(new_topics)
+            dD = deltas[0][0].at[doc_r, old_rel].add(-w_old) \
+                             .at[doc_r, t_rel].add(w_new)
+            dW = deltas[1][0].at[word_r, old_rel].add(-w_old) \
+                             .at[word_r, t_rel].add(w_new)
+            out_deltas = [dD[None], dW[None]]
+            if has_shared:
+                n_sh = deltas[2].shape[1]
+                dsh = jnp.zeros((n_sh + 1, k_local), jnp.int32) \
+                    .at[ss_r, old_rel].add(-w_old) \
+                    .at[ss_r, t_rel].add(w_new)[:n_sh]
+                out_deltas.append((deltas[2][0] + dsh)[None])
+
+            fmask = mask_r.astype(jnp.float32)
+            def _tot(v):
+                return jax.lax.psum(jnp.sum(v * fmask), daxes)
+            sums = jnp.stack([
+                _tot(skip.astype(jnp.float32)),
+                _tot((skip | in_m).astype(jnp.float32)),
+                _tot((new_topics == topics).astype(jnp.float32)),
+                _tot((new_topics == k1).astype(jnp.float32))])
+            n_surv = _tot((~skip).astype(jnp.float32))
+            return new_topics[None], tuple(out_deltas), n_surv, sums
+
+        topics_spec = (tok, tok) if has_shared else tok
+        sm = _shard_map(
+            substep, mesh=self.mesh,
+            in_specs=(tok, tok, tok, tok, topics_spec,
+                      counts_s[0], derived_s, deltas_s),
+            out_specs=(tok, deltas_s, P(), P()), check_vma=False)
+        # donate the topics buffer (reused by the returned topics) and
+        # the accumulated deltas
+        self._stream_sub_fn = jax.jit(sm, donate_argnums=(4, 7))
+        return self._stream_sub_fn
+
+    def _get_stream_end(self):
+        if self._stream_end_fn is not None:
+            return self._stream_end_fn
+        cfg, lay = self.cfg, self.layout
+        daxes = self.data_axes
+        has_shared = self.stream.shared_slot is not None
+        tok, counts_s, derived_s, deltas_s = self._stream_specs()
+
+        def end(counts, deltas, *shared_rows):
+            dW_tot = jax.lax.psum(deltas[1][0], daxes)
+            if lay is None:
+                D, W = counts
+                D_new = D[0] + deltas[0][0]
+                if has_shared:
+                    dsh = deltas[2][0]
+                    remote = jax.lax.psum(dsh, daxes) - dsh
+                    D_new = D_new.at[shared_rows[0][0]].add(remote,
+                                                            mode="drop")
+                return (D_new[None], W + dW_tot)
+            d_packed, w_head, w_tail, overflow = counts
+            d_dense = sparse.densify_rows(d_packed[0], lay.n_topics)
+            d_new = d_dense + deltas[0][0]
+            d_repacked, ov = sparse.pack_rows_sorted(d_new, lay.d_capacity)
+            overflow = overflow + jax.lax.psum(ov, daxes)
+            w_full = lay.densify_w(w_head, w_tail) + dW_tot
+            w_head_new, w_tail_new = lay.split_w(w_full)
+            return (d_repacked[None], w_head_new, w_tail_new, overflow)
+
+        in_specs = (counts_s, deltas_s) + \
+            ((P(daxes, None),) if has_shared else ())
+        sm = _shard_map(end, mesh=self.mesh, in_specs=in_specs,
+                        out_specs=counts_s, check_vma=False)
+        # counts alias the outputs; the deltas drop with the epoch carry
+        self._stream_end_fn = jax.jit(sm, donate_argnums=(0,))
+        return self._stream_end_fn
+
+    # -- the epoch loop ------------------------------------------------------
+
+    def _put_substream(self, r: int, host_topics: np.ndarray,
+                       u_host: np.ndarray):
+        st = self.stream
+        cols = slice(r * st.sub_len, (r + 1) * st.sub_len)
+        dev = NamedSharding(self.mesh, P(self.data_axes))
+        # host arrays go straight to the sharded layout — routing through
+        # jnp.asarray first would commit them to device 0 and re-shard
+        put = lambda a: jax.device_put(np.ascontiguousarray(a), dev)
+        topics = put(host_topics[:, cols])
+        if st.shared_slot is not None:
+            topics = (topics, put(st.shared_slot[:, cols]))
+        return (put(u_host[:, cols]), put(st.word_ids[:, cols]),
+                put(st.doc_ids[:, cols]), put(st.mask[:, cols]), topics)
+
+    def _stream_epoch(self, ss: DistStreamState) -> DistStreamState:
+        st = self.stream
+        if ss.epoch is None:
+            derived, deltas, u_dev = self._get_stream_begin()(
+                ss.counts, ss.key, jnp.int32(ss.iteration))
+            u_host = np.zeros((self.sc.n_shards, st.n_sub * st.sub_len),
+                              np.float32)
+            u_host[:, :st.n_loc] = np.asarray(u_dev)
+            ss.epoch = _DistEpochCarry(derived=derived, deltas=deltas,
+                                       u_host=u_host)
+        ep = ss.epoch
+        sub = self._get_stream_substep()
+        d_main = ss.counts[0]
+        self._prefetch.take()
+        current = self._put_substream(ss.cursor, ss.host_topics, ep.u_host)
+        pending = []                # one-deep deferred D2H (no bubbles)
+        while ss.cursor < st.n_sub:
+            r = ss.cursor
+            if r + 1 < st.n_sub:
+                self._prefetch.submit(self._put_substream, r + 1,
+                                      ss.host_topics, ep.u_host)
+            u_r, word_r, doc_r, mask_r, topics_r = current
+            new_t, ep.deltas, n_surv, sums = sub(
+                u_r, word_r, doc_r, mask_r, topics_r, d_main,
+                ep.derived, ep.deltas)
+            ep.stats_parts.append((n_surv, sums))
+            pending.append((r, new_t))
+            if len(pending) > 1:
+                r_prev, t_prev = pending.pop(0)
+                cols = slice(r_prev * st.sub_len, (r_prev + 1) * st.sub_len)
+                ss.host_topics[:, cols] = np.asarray(t_prev)
+            ss.cursor += 1
+            current = self._prefetch.take()
+        for r_prev, t_prev in pending:
+            cols = slice(r_prev * st.sub_len, (r_prev + 1) * st.sub_len)
+            ss.host_topics[:, cols] = np.asarray(t_prev)
+        for n_surv, sums in ep.stats_parts:
+            ep.n_surv += float(n_surv)
+            ep.stat_sums += np.asarray(sums, np.float64)
+        ep.stats_parts = []
+        n_surv_total, sums_total = ep.n_surv, ep.stat_sums
+        end = self._get_stream_end()
+        extra = (self.shared_rows,) if st.shared_slot is not None else ()
+        ss.counts = end(ss.counts, ep.deltas, *extra)
+        ss.iteration += 1
+        ss.cursor = 0
+        ss.epoch = None
+        return ss, n_surv_total, sums_total
+
+    def _stream_run(self, ss: DistStreamState, n_iters: int):
+        denom = float(max(int(self.sc.mask.sum()), 1))
+        rows = []
+        for _ in range(int(n_iters)):
+            ss, _n_surv, sums = self._stream_epoch(ss)
+            rows.append(sums / denom)
+        m = np.asarray(rows, np.float32).reshape(-1, 4)
+        stats = three_branch.ThreeBranchStats(
+            frac_skipped=m[:, 0], frac_m_final=m[:, 1],
+            frac_unchanged=m[:, 2], frac_at_max=m[:, 3],
+            frac_q_branch=np.zeros(len(rows), np.float32))
+        return ss, stats
+
+
+# ---------------------------------------------------------------------------
 # driver
 # ---------------------------------------------------------------------------
 
-class DistLDATrainer:
+class DistLDATrainer(_StreamedDistMixin):
     """shard_map-based multi-device EZLDA trainer.
 
     mesh must carry a 'model' axis (size 1 reproduces the paper's pure
@@ -509,7 +901,20 @@ class DistLDATrainer:
         self._step = jax.jit(self._sm_step)
         self._scan_cache: dict[int, Any] = {}
 
+        from repro.train.lda_step import resolve_residency
+        self.residency, self.n_stream_shards = resolve_residency(
+            config, int(self.sc.word_ids.shape[1]))
         dev = NamedSharding(mesh, tok_spec)
+        if self.residency == "streamed":
+            # out-of-core: token arrays stay HOST-side; each device
+            # streams its own sub-shard sequence (DESIGN.md SS10)
+            self._build_stream()
+            self._step_inputs = None
+            if self.sc.shared_rows is not None:
+                self.shared_rows = jax.device_put(
+                    jnp.asarray(self.sc.shared_rows),
+                    NamedSharding(mesh, P(daxes, None)))
+            return
         self.word_ids = jax.device_put(jnp.asarray(self.sc.word_ids), dev)
         self.doc_ids = jax.device_put(jnp.asarray(self.sc.doc_ids), dev)
         self.mask = jax.device_put(jnp.asarray(self.sc.mask), dev)
@@ -524,28 +929,37 @@ class DistLDATrainer:
         else:
             self._step_inputs = (self.word_ids, self.doc_ids, self.mask)
 
-    def _device_state(self, topics, D, W, key, iteration):
-        """Place (dense host counts, topics) as the configured state format."""
-        put = lambda x, spec: jax.device_put(
-            jnp.asarray(x), NamedSharding(self.mesh, spec))
+    def _put(self, x, spec):
+        return jax.device_put(jnp.asarray(x), NamedSharding(self.mesh, spec))
+
+    def _device_counts(self, D, W) -> tuple:
+        """Place dense host count matrices as the configured format's
+        device-resident count tuple (the streamed state's ``counts``)."""
+        put = self._put
         if self.layout is None:
-            return DistLDAState(
-                topics=put(topics, P(self.data_axes)),
-                D=put(D, P(self.data_axes, None, "model")),
-                W=put(W, P(None, "model")),
-                key=key, iteration=iteration)
+            return (put(D, P(self.data_axes, None, "model")),
+                    put(W, P(None, "model")))
         lay = self.layout
         s_n, m_loc = self.sc.n_shards, self.sc.m_local
         d_flat = jnp.asarray(np.asarray(D).reshape(s_n * m_loc, -1))
         d_packed = sparse.build_sparse_rows(d_flat, lay.d_capacity) \
             .reshape(s_n, m_loc, lay.d_capacity)
         w_head, w_tail = lay.split_w(jnp.asarray(W))
+        return (put(d_packed, P(self.data_axes, None, None)),
+                put(w_head, P(None, None)),
+                tuple(put(b, P(None, None)) for b in w_tail),
+                put(jnp.int32(0), P()))
+
+    def _device_state(self, topics, D, W, key, iteration):
+        """Place (dense host counts, topics) as the configured state format."""
+        counts = self._device_counts(D, W)
+        topics = self._put(topics, P(self.data_axes))
+        if self.layout is None:
+            return DistLDAState(topics=topics, D=counts[0], W=counts[1],
+                                key=key, iteration=iteration)
         return DistHybridState(
-            topics=put(topics, P(self.data_axes)),
-            D=put(d_packed, P(self.data_axes, None, None)),
-            W_head=put(w_head, P(None, None)),
-            W_tail=tuple(put(b, P(None, None)) for b in w_tail),
-            overflow=put(jnp.int32(0), P()),
+            topics=topics, D=counts[0], W_head=counts[1],
+            W_tail=counts[2], overflow=counts[3],
             key=key, iteration=iteration)
 
     def _build_counts(self, t_np: np.ndarray):
@@ -574,13 +988,31 @@ class DistLDATrainer:
     def init_state(self):
         cfg = self.cfg
         key = jax.random.PRNGKey(cfg.seed)
+        # the SAME initial draw as the resident path (bit-for-bit), even
+        # when the topics then live host-side for streaming
         topics = jax.random.randint(
             jax.random.fold_in(key, 7), self.sc.word_ids.shape, 0,
             cfg.n_topics, dtype=jnp.int32)
         D, W = self._build_counts(np.asarray(topics))
+        if self.residency == "streamed":
+            return self._stream_state(np.asarray(topics), D, W, key, 0)
         return self._device_state(topics, D, W, key, jnp.int32(0))
 
-    def step(self, state: DistLDAState):
+    def _stream_state(self, topics_nloc: np.ndarray, D, W, key,
+                      iteration: int) -> DistStreamState:
+        st = self.stream
+        host = _extend_cols(np.asarray(topics_nloc, np.int32),
+                            st.n_sub * st.sub_len, 0)
+        return DistStreamState(host_topics=host,
+                               counts=self._device_counts(D, W),
+                               key=key, iteration=int(iteration))
+
+    def step(self, state):
+        if isinstance(state, DistStreamState):
+            raise ValueError(
+                "a streamed distributed trainer advances by whole epochs "
+                "(every token sub-shard must stream through before the "
+                "counts apply): use run_fused(state, n_iters)")
         return self._step(*self._step_inputs, state)
 
     def run_fused(self, state: DistLDAState, n_iters: int):
@@ -591,6 +1023,8 @@ class DistLDATrainer:
         sync, no per-iteration dispatch. Returns (state, stacked stats)
         where each stats leaf has a leading (n_iters,) axis.
         """
+        if isinstance(state, DistStreamState):
+            return self._stream_run(state, n_iters)
         fn = self._scan_cache.get(n_iters)
         if fn is None:
             sm = self._sm_step
@@ -613,8 +1047,18 @@ class DistLDATrainer:
     # derived state and get rebuilt for whatever chunking the new trainer
     # uses (DESIGN.md §6 "elastic restore").
 
-    def host_payload(self, state: DistLDAState) -> dict:
-        t = np.asarray(state.topics)
+    def host_payload(self, state) -> dict:
+        if isinstance(state, DistStreamState):
+            if state.cursor:
+                raise ValueError(
+                    "streamed distributed states checkpoint at epoch "
+                    f"boundaries only, but {state.cursor} sub-shards of "
+                    "the open epoch are sampled: finish the epoch "
+                    "(run_fused) first. Mid-epoch restore is a single-"
+                    "host streaming feature (docs/API.md)")
+            t = state.host_topics[:, :self.stream.n_loc]
+        else:
+            t = np.asarray(state.topics)
         out = np.zeros(self.corpus.n_tokens, np.int32)
         for s in range(self.sc.n_shards):
             sel = self.sc.mask[s] > 0
@@ -624,6 +1068,11 @@ class DistLDATrainer:
                 "iteration": int(state.iteration)}
 
     def state_from_payload(self, payload: dict):
+        if int(np.asarray(payload.get("stream_cursor", 0))) > 0:
+            raise ValueError(
+                "mid-epoch streaming checkpoints restore on the single-"
+                "host backend only; this distributed trainer needs an "
+                "epoch-boundary payload (no stream_cursor)")
         tg = np.asarray(payload["topics_global"], np.int32)
         if tg.shape[0] != self.corpus.n_tokens:
             raise ValueError(
@@ -637,11 +1086,27 @@ class DistLDATrainer:
             topics[s][sel] = tg[self.sc.global_pos[s][sel]]
         D, W = self._build_counts(topics)
         key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
+        if self.residency == "streamed":
+            return self._stream_state(topics, D, W, key,
+                                      int(payload["iteration"]))
         return self._device_state(topics, D, W, key,
                                   jnp.int32(payload["iteration"]))
 
+    def _counts_view(self, state):
+        """Adapter: a .D/.W(-parts) view over either state flavor."""
+        if not isinstance(state, DistStreamState):
+            return state
+        import types
+        if self.layout is None:
+            return types.SimpleNamespace(D=state.counts[0],
+                                         W=state.counts[1])
+        return types.SimpleNamespace(D=state.counts[0],
+                                     W_head=state.counts[1],
+                                     W_tail=state.counts[2])
+
     def state_nbytes(self, state) -> int:
         """Measured live count-state bytes (all shards' D + the W replica)."""
+        state = self._counts_view(state)
         if self.layout is None:
             return int(state.D.size + state.W.size) * 4
         total = int(state.D.size + state.W_head.size)
@@ -650,6 +1115,7 @@ class DistLDATrainer:
 
     def gather_global(self, state):
         """Global (D, W) count matrices for eval/parity checks."""
+        state = self._counts_view(state)
         if self.layout is None:
             W = np.asarray(state.W)
             D_sh = np.asarray(state.D)
@@ -673,3 +1139,4 @@ class DistLDATrainer:
                 rows, d_rows = rows[sel], d_rows[sel]
             D[rows] += d_rows
         return D, W
+

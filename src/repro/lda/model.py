@@ -30,6 +30,9 @@ class LDAConfig:
     survivor_capacity: int | None = None  # phase-2 chunk size; None=reference
     dense_word_threshold: int | None = None  # tokens>=thr => dense W row; None=K (paper)
     fused: bool = False              # route run() through train/lda_step.py
+    corpus_residency: str = "full"   # token list T: "full" | "streamed" | "auto"
+    stream_shards: int | None = None  # epoch shards when streamed; None=auto
+    device_budget_bytes: int | None = None  # residency budget; None=device-derived
     seed: int = 0
     eval_every: int = 10
 
@@ -69,10 +72,22 @@ class LDAConfig:
         if self.beta <= 0:
             raise ValueError(f"beta={self.beta} must be positive")
         for knob in ("d_capacity", "survivor_capacity",
-                     "dense_word_threshold"):
+                     "dense_word_threshold", "device_budget_bytes"):
             v = getattr(self, knob)
             if v is not None and v < 1:
                 raise ValueError(f"{knob}={v} must be >= 1 (or None for auto)")
+        if self.corpus_residency not in ("full", "streamed", "auto"):
+            raise ValueError(
+                f"unknown corpus_residency {self.corpus_residency!r}: "
+                "expected 'full' (token list device-resident), 'streamed' "
+                "(epoch-sharded out-of-core pipeline, DESIGN.md SS10), or "
+                "'auto' (streamed iff estimated token bytes exceed the "
+                "device budget)")
+        if self.stream_shards is not None and self.stream_shards < 2:
+            raise ValueError(
+                f"stream_shards={self.stream_shards} must be >= 2 (or None "
+                "for the budget-derived count): streaming needs at least "
+                "a resident shard and a prefetched shard")
 
     @property
     def alpha_(self) -> float:

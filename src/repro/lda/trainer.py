@@ -118,9 +118,18 @@ class LDATrainer:
         self.config = config
         self.corpus = corpus
         padded, mask = pad_corpus(corpus, config.tile_size)
-        self.word_ids = jnp.asarray(padded.word_ids)
-        self.doc_ids = jnp.asarray(padded.doc_ids)
-        self.mask = jnp.asarray(mask)
+        from repro.train.lda_step import resolve_residency
+        self.residency, self.n_stream_shards = resolve_residency(
+            config, padded.n_tokens)
+        # Streamed residency keeps the token arrays HOST-side: the
+        # streaming pipeline moves one epoch shard at a time; only the
+        # occasional full-array consumers (init/restore histograms, LLPT
+        # eval) upload them transiently.
+        as_array = np.asarray if self.residency == "streamed" else \
+            jnp.asarray
+        self.word_ids = as_array(padded.word_ids)
+        self.doc_ids = as_array(padded.doc_ids)
+        self.mask = as_array(mask)
         self.n_docs = corpus.n_docs
         self.n_words = corpus.n_words
         self.checkpoint_manager = checkpoint_manager
@@ -150,6 +159,24 @@ class LDATrainer:
         return state.host_payload()
 
     def state_from_payload(self, payload: dict[str, Any]) -> LDAState:
+        if int(np.asarray(payload.get("stream_cursor", 0))) > 0:
+            # mid-epoch streaming payload (docs/API.md checkpoint schema):
+            # only the streaming pipeline can re-open the epoch
+            if self.residency != "streamed":
+                raise ValueError(
+                    "checkpoint was saved mid-epoch by a streamed trainer "
+                    f"(stream_cursor={int(payload['stream_cursor'])}): "
+                    "restore it with corpus_residency='streamed' (and the "
+                    "same stream_shards), or re-save it at an epoch "
+                    "boundary")
+            from repro.train.lda_step import STREAM_PAYLOAD_KEYS
+            pipe = self.fused_pipeline()
+            topics = np.asarray(payload["topics"], np.int32)
+            canonical = {"topics_global": topics[:self.corpus.n_tokens],
+                         "key": payload["key"],
+                         "iteration": payload["iteration"]}
+            canonical.update({k: payload[k] for k in STREAM_PAYLOAD_KEYS})
+            return pipe.state_from_stream_payload(canonical)
         topics = jnp.asarray(payload["topics"], jnp.int32)
         if topics.shape != self.word_ids.shape:
             raise ValueError(
@@ -217,8 +244,22 @@ class LDATrainer:
         """
         if self._fused_pipeline is None:
             from repro.train.lda_step import (FusedPipeline,
-                                              HybridFusedPipeline)
-            if self.config.format == "hybrid":
+                                              HybridFusedPipeline,
+                                              StreamingHybridPipeline,
+                                              StreamingPipeline)
+            if self.residency == "streamed":
+                from repro.lda.corpus import shard_stream
+                stream = shard_stream(self.corpus, self.n_stream_shards,
+                                      multiple=self.config.tile_size)
+                if self.config.format == "hybrid":
+                    self._fused_pipeline = StreamingHybridPipeline(
+                        stream, n_docs=self.n_docs, n_words=self.n_words,
+                        config=self.config, corpus=self.corpus)
+                else:
+                    self._fused_pipeline = StreamingPipeline(
+                        stream, n_docs=self.n_docs, n_words=self.n_words,
+                        config=self.config)
+            elif self.config.format == "hybrid":
                 self._fused_pipeline = HybridFusedPipeline(
                     self.word_ids, self.doc_ids, self.mask,
                     n_docs=self.n_docs, n_words=self.n_words,
@@ -237,8 +278,15 @@ class LDATrainer:
         measures the actual packed buffers (what Table I now reports),
         not an analytic byte model.
         """
+        from repro.train.lda_step import StreamState
         if self.config.format == "hybrid":
-            return self.fused_pipeline().from_lda_state(state).nbytes()
+            fs = self.fused_pipeline().from_lda_state(state)
+            if hasattr(fs, "nbytes"):
+                return fs.nbytes()
+            # streamed hybrid: measure the packed count tuple directly
+            return sum(int(a.nbytes) for a in jax.tree.leaves(fs.counts))
+        if isinstance(state, StreamState):
+            return sum(int(a.nbytes) for a in jax.tree.leaves(state.counts))
         return state.nbytes()
 
     def evaluate(self, state: LDAState) -> float:
@@ -282,9 +330,11 @@ class LDATrainer:
     def run(self, n_iters: int, state: LDAState | None = None,
             log_fn: Callable[[str], None] | None = None,
             checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
-        # The hybrid live state only exists inside the fused pipeline; the
-        # per-iteration step() stays the dense semantics oracle.
-        if self.config.fused or self.config.format == "hybrid":
+        # The hybrid live state only exists inside the fused pipeline, and
+        # a streamed corpus only exists as the pipeline's epoch shards; the
+        # per-iteration step() stays the dense resident semantics oracle.
+        if self.config.fused or self.config.format == "hybrid" \
+                or self.residency == "streamed":
             return self.run_fused(n_iters, state, log_fn, checkpoint_every)
         state = self.restore_or_init() if state is None else state
         history: dict[str, list] = {"iteration": [], "llpt": [],

@@ -79,6 +79,7 @@ by tests/test_fused_step.py.
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, NamedTuple
 
 import jax
@@ -92,7 +93,10 @@ from repro.kernels import sample_fused as _fused
 from repro.kernels.runtime import resolve_interpret
 
 __all__ = ["FusedState", "FusedPipeline", "HybridFusedPipeline",
-           "plan_capacity", "plan_window", "plan_tile_capacity"]
+           "StreamState", "StreamingPipeline", "StreamingHybridPipeline",
+           "plan_capacity", "plan_window", "plan_tile_capacity",
+           "plan_stream_shards", "resolve_residency",
+           "STREAM_BYTES_PER_TOKEN", "STREAM_PAYLOAD_KEYS"]
 
 # Per-tile phase-2 working-set budget (capacity · K · 4 B): the CPU-cache /
 # VMEM analogue of the paper's shared-memory-sized blocks. Equal-token
@@ -238,20 +242,24 @@ class FusedPipeline:
         self.balance = getattr(config, "balance", "none")
         self._span_ema: float | None = None
         self.win_words = n_words
+        self.tile_plan = None
         if self.balance == "tiles":
             if not self._capacity_pinned:
                 # full-survivorship tile size, working-set capped from the
                 # start (the survivor EMA refines it between scans)
                 self.capacity = plan_tile_capacity(
                     self.n_tokens, self.n_tokens, config.n_topics)
-            # initial plan over the STATIC corpus stream at the current
-            # tile size; re-planned live from observed survivor spans
-            self.tile_plan = balance_mod.build_tiles_from_word_ids(
-                np.asarray(word_ids), min(self.capacity, self.n_tokens))
-            self.win_words = plan_window(self.tile_plan.max_words_per_tile,
-                                         n_words)
-        else:
-            self.tile_plan = None
+            self._plan_tiles(word_ids)
+
+    def _plan_tiles(self, word_ids) -> None:
+        """Initial plan over the STATIC corpus stream at the current tile
+        size; re-planned live from observed survivor spans. The streaming
+        subclass overrides this with per-shard plans (one pass over the
+        stream, not two)."""
+        self.tile_plan = balance_mod.build_tiles_from_word_ids(
+            np.asarray(word_ids), min(self.capacity, self.n_tokens))
+        self.win_words = plan_window(self.tile_plan.max_words_per_tile,
+                                     self.n_words)
 
     # -- state conversion --------------------------------------------------
 
@@ -287,33 +295,41 @@ class FusedPipeline:
         return self.balance == "tiles" \
             and win_words * self.WINDOW_VOCAB_FRACTION <= self.n_words
 
-    def _chunk_run(self, v_c, idx):
+    def _chunk_run(self, v_c, idx, n_stream: int | None = None):
         """(first_word, last_word) over a chunk's valid tokens — the live
         per-tile word-run metadata (TilePlan's two-level index, computed
         on the fly for the survivor stream). An all-sentinel chunk yields
-        (n_words-1, 0), whose negative span always passes the fits test."""
-        valid = idx < self.n_tokens
+        (n_words-1, 0), whose negative span always passes the fits test.
+        ``n_stream`` is the length of the token stream the indices refer
+        to: the full resident stream by default, one epoch shard when the
+        streaming pipeline drives this per shard."""
+        valid = idx < (self.n_tokens if n_stream is None else n_stream)
         vmin = jnp.min(jnp.where(valid, v_c, self.n_words - 1))
         vmax = jnp.max(jnp.where(valid, v_c, 0))
         return vmin.astype(jnp.int32), vmax.astype(jnp.int32)
 
-    def _max_chunk_span(self, surv_idx, n_chunks: int, capacity: int):
+    def _max_chunk_span(self, surv_idx, n_chunks: int, capacity: int, *,
+                        word_ids=None, n_stream: int | None = None):
         """Max word span over the scan's survivor tiles (for re-planning).
 
         One (n_chunks·capacity) gather per iteration — O(N) like the
         compaction itself; read back on the host only between scans.
+        Defaults to the resident stream; the streaming pipeline passes its
+        shard-local (word_ids, n_stream).
         """
-        n = self.n_tokens
+        n = self.n_tokens if n_stream is None else n_stream
+        w_arr = self.word_ids if word_ids is None else word_ids
         idx_m = surv_idx.reshape(n_chunks, capacity)
         valid = idx_m < n
-        v = self.word_ids[jnp.minimum(idx_m, n - 1)]
+        v = w_arr[jnp.minimum(idx_m, n - 1)]
         vmin = jnp.min(jnp.where(valid, v, self.n_words - 1), axis=1)
         vmax = jnp.max(jnp.where(valid, v, 0), axis=1)
         span = jnp.where(jnp.any(valid, axis=1), vmax - vmin + 1, 0)
         return jnp.max(span).astype(jnp.int32)
 
     def _dense_chunk_sampler(self, u, word_ids, doc_ids, D, W_hat,
-                             k1_per_word, *, win_words: int):
+                             k1_per_word, *, win_words: int,
+                             n_stream: int | None = None):
         """Build the phase-2 ``sample_chunk(idx)`` closure (both pipelines).
 
         With tiles on, each chunk resolves its live word run and samples
@@ -336,7 +352,7 @@ class FusedPipeline:
                         u_c, d_rows, W_hat[v_c], alpha=alpha,
                         interpret=self._interpret)
                 else:
-                    first, last = self._chunk_run(v_c, idx)
+                    first, last = self._chunk_run(v_c, idx, n_stream)
 
                     def tiled(_):
                         return _fused.sample_fused_tiled(
@@ -355,7 +371,7 @@ class FusedPipeline:
                 return three_branch.exact_three_branch(
                     u_c, v_c, d_c, k1_per_word, D, W_hat,
                     alpha=alpha, tile_size=cfg.tile_size)
-            first, last = self._chunk_run(v_c, idx)
+            first, last = self._chunk_run(v_c, idx, n_stream)
             first = jnp.clip(first, 0, self.n_words - win_words)
 
             def tiled(_):
@@ -683,3 +699,865 @@ class HybridFusedPipeline(FusedPipeline):
             colsum=colsum, overflow=overflow, key=key,
             iteration=iteration + 1)
         return new_state, st, n_surv_total, max_span
+
+
+# ---------------------------------------------------------------------------
+# out-of-core streaming (corpus_residency="streamed", DESIGN.md SS10)
+# ---------------------------------------------------------------------------
+
+# Device bytes per resident token: word + doc + mask + topic, int32 each.
+# The residency auto-policy prices the RESIDENT representation with this.
+STREAM_BYTES_PER_TOKEN = 16
+
+# Device bytes per token of a STREAMED shard window: the resident
+# quadruple plus the staged epoch-uniform slice (f32) that ships with
+# the prefetch. The shard planner prices the double buffer with this.
+STREAM_WINDOW_BYTES_PER_TOKEN = STREAM_BYTES_PER_TOKEN + 4
+
+# Fraction of the device budget the double-buffered token window may use;
+# the rest stays free for D/W/Ŵ, the epoch delta matrices, and dispatch
+# temporaries (budget math in DESIGN.md SS10).
+STREAM_WINDOW_BUDGET_FRACTION = 4
+
+# The canonical checkpoint payload's mid-epoch extension keys
+# (docs/API.md "Checkpoint payload schema"). Every backend that converts
+# payloads must pass these through — a dropped key silently bypasses the
+# mid-epoch restore guards.
+STREAM_PAYLOAD_KEYS = ("stream_cursor", "stream_done_topics")
+
+
+def plan_stream_shards(n_padded_tokens: int, budget_bytes: int | None, *,
+                       multiple: int = 1, floor: int = 4) -> int:
+    """Shard count so TWO shards' token buffers fit the window budget.
+
+    The streaming window holds the resident shard plus the prefetched
+    next shard (double buffer), each carrying 20 B/token (the token
+    quadruple + the staged uniform slice), so the constraint is
+    ``2 · 20B · ceil(N/S) <= budget / STREAM_WINDOW_BUDGET_FRACTION``.
+    With no budget signal the floor (4 shards — the smallest count where
+    streaming beats residency on token bytes) applies.
+    """
+    if n_padded_tokens <= 0:
+        return 1
+    shards = floor
+    if budget_bytes:
+        window = max(budget_bytes // STREAM_WINDOW_BUDGET_FRACTION, 1)
+        shards = max(shards, -(-2 * STREAM_WINDOW_BYTES_PER_TOKEN
+                               * n_padded_tokens // window))
+    # never shard below one pad multiple per shard
+    max_shards = max(n_padded_tokens // max(multiple, 1), 1)
+    return int(min(shards, max_shards))
+
+
+def resolve_residency(config, n_padded_tokens: int,
+                      device=None) -> tuple[str, int]:
+    """(residency, n_shards) for one (config, corpus) pair.
+
+    ``corpus_residency="full"|"streamed"`` are honored as written;
+    ``"auto"`` streams iff the estimated resident token bytes
+    (``16B · N``) exceed the device budget — ``config.device_budget_bytes``
+    when set, else half the device's reported ``bytes_limit``, else no
+    signal and the corpus stays resident (CPU backends report no limit).
+    """
+    mode = config.corpus_residency
+    budget = config.device_budget_bytes
+    if budget is None and mode != "full":
+        # the device-derived budget feeds BOTH the auto policy and the
+        # shard planner, so explicit "streamed" consults it too
+        try:
+            stats = (device or jax.devices()[0]).memory_stats() or {}
+        except Exception:
+            stats = {}
+        limit = stats.get("bytes_limit")
+        budget = int(limit) // 2 if limit else None
+    if mode == "auto":
+        if budget is None:
+            return "full", 1
+        mode = "streamed" if (STREAM_BYTES_PER_TOKEN * n_padded_tokens
+                              > budget) else "full"
+    if mode == "full":
+        return "full", 1
+    if config.stream_shards is not None:
+        return "streamed", max(int(config.stream_shards), 2)
+    return "streamed", max(plan_stream_shards(
+        n_padded_tokens, budget, multiple=config.tile_size), 2)
+
+
+class _Prefetcher:
+    """One-deep host→device prefetch queue (the background stream).
+
+    ``submit`` starts moving the NEXT shard's buffers to the device on a
+    worker thread while the current shard's dispatch runs; ``take``
+    joins and returns the device tuple. jax.device_put is thread-safe;
+    one worker keeps puts ordered.
+    """
+
+    def __init__(self):
+        import concurrent.futures
+        self._ex = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="lda-stream-prefetch")
+        self._fut = None
+
+    def submit(self, fn, *args) -> None:
+        assert self._fut is None, "prefetch queue is one deep"
+        self._fut = self._ex.submit(fn, *args)
+
+    def take(self):
+        fut, self._fut = self._fut, None
+        return None if fut is None else fut.result()
+
+    def close(self) -> None:
+        self.take()
+        self._ex.shutdown(wait=False)
+
+    def __del__(self):
+        # pipelines have no explicit teardown; reclaim the worker thread
+        # when the owner is collected instead of leaking one per pipeline
+        try:
+            self._ex.shutdown(wait=False)
+        except Exception:
+            pass
+
+
+@dataclasses.dataclass
+class _EpochCarry:
+    """Mid-epoch device/host state (exists only while an epoch is open).
+
+    ``derived`` holds the iteration-start quantities every shard of the
+    epoch samples against (Ŵ, word stats — plus the densified count
+    mirrors for the hybrid pipeline); ``deltas`` accumulates the epoch's
+    ±1 count moves so no shard ever observes another shard's updates
+    (that deferral is what keeps streamed == resident bit-equal);
+    ``old_topics`` stashes the epoch-start topics of completed shards so
+    a mid-epoch checkpoint can reconstruct the sampling counts.
+    """
+    key_next: jax.Array
+    u_host: np.ndarray             # the epoch's uniforms, host-staged
+    derived: tuple
+    deltas: tuple
+    old_topics: list
+    # device-side readbacks are DEFERRED (lists of device scalars /
+    # pending topic buffers) so no per-shard host sync ever serializes
+    # the dispatch queue; _flush() realizes them at the epoch close
+    pending_topics: list = dataclasses.field(default_factory=list)
+    stats_parts: list = dataclasses.field(default_factory=list)
+    n_surv: int = 0
+    max_span: int = 0
+    stat_sums: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(4, np.float64))
+
+    def flush_stats(self) -> None:
+        for n_surv, span, sums in self.stats_parts:
+            self.n_surv += int(n_surv)
+            self.max_span = max(self.max_span, int(span))
+            self.stat_sums += np.asarray(sums, np.float64)
+        self.stats_parts = []
+
+
+@dataclasses.dataclass
+class StreamState:
+    """Training state of the streaming pipelines (host-orchestrated).
+
+    Token-side state (topic assignments) lives HOST-side, one array per
+    epoch shard; only the count matrices — ``counts`` is the dense
+    ``(D, W, colsum)`` or the hybrid packed tuple — stay device-resident.
+    ``cursor`` is the number of shards already sampled in the open epoch
+    (0 between epochs); ``epoch`` carries the open epoch's derived
+    quantities and accumulated deltas.
+    """
+    shard_topics: list
+    counts: tuple
+    key: jax.Array
+    iteration: int
+    cursor: int = 0
+    epoch: _EpochCarry | None = None
+
+    @property
+    def topics(self):
+        """Host-side per-shard topics view (duck-types the device states
+        for consumers that only read/block on .topics)."""
+        return self.shard_topics
+
+
+class StreamingPipeline(FusedPipeline):
+    """The fused iteration, streamed one epoch shard at a time.
+
+    Same sampling architecture as FusedPipeline (phase-1 skip, survivor
+    compaction, cond-guarded phase-2 chunks, tile-scheduled dispatch
+    under ``balance="tiles"`` with a TilePlan built per shard) but the
+    token list never lives on the device whole: each iteration is an
+    epoch over ``ShardedCorpus`` shards, with the next shard's
+    (word, doc, mask, topics) buffers prefetched host→device on a
+    background thread while the current shard's dispatch runs.
+
+    Bit-equality with the resident path holds by construction:
+
+      * the per-epoch uniforms are drawn ONCE at the RESIDENT padded
+        length (the identical split + draw the resident iteration
+        makes), staged to the host, and shipped back one shard slice at
+        a time with the prefetch — every token sees the identical draw,
+        the device never holds more than a slice, and the S× per-shard
+        regeneration tax a naive re-draw would pay disappears;
+      * every shard samples against the iteration-START ``D``/``W``/Ŵ —
+        the epoch's ±1 moves accumulate in separate delta matrices and
+        land in one donated apply at epoch end (integer adds commute, so
+        the totals equal the resident path's in-place scatters);
+      * chunking/tiling stay pure performance knobs (the same cond-
+        guarded machinery, run shard-locally).
+
+    Pinned by tests/test_streaming.py across dense × hybrid formats.
+    """
+
+    def __init__(self, stream, *, n_docs: int, n_words: int, config):
+        from repro.lda.corpus import ShardedCorpus
+        if not isinstance(stream, ShardedCorpus):
+            raise ValueError(
+                "StreamingPipeline takes a repro.lda.corpus.ShardedCorpus "
+                "(build one with shard_stream(corpus, n_shards, "
+                "multiple=config.tile_size))")
+        flat = stream.word_ids.reshape(-1)[:stream.n_padded]
+        flat_d = stream.doc_ids.reshape(-1)[:stream.n_padded]
+        flat_m = stream.mask.reshape(-1)[:stream.n_padded]
+        # host-side arrays: the base class only uses them for planning;
+        # nothing here places the full stream on the device
+        super().__init__(flat, flat_d, flat_m, n_docs=n_docs,
+                         n_words=n_words, config=config)
+        self.stream = stream
+        L = stream.shard_len
+        if not self._capacity_pinned:
+            # working-set-bounded dispatch tiles measured fastest for the
+            # per-shard dispatches (fig15's cache argument holds with or
+            # without tile scheduling: a chunk's gathered rows must stay
+            # resident) — benchmarked 0.59 -> 0.81x resident at K=32
+            self.capacity = plan_tile_capacity(
+                self.n_tokens, self.n_tokens, config.n_topics)
+        self.capacity = min(self.capacity, L)
+        if self.balance == "tiles":
+            # per-shard tile planning (the _plan_tiles override deferred
+            # to here): the word window must cover the widest run any
+            # SHARD's tiles span, not the full stream's. Only the spans
+            # are kept — whole plans would be dead host memory at scale.
+            spans = [1]
+            for s in range(stream.n_shards):
+                real = int(stream.real_per_shard[s])
+                if not real:
+                    continue
+                plan = balance_mod.build_tiles_from_word_ids(
+                    stream.word_ids[s][:real], min(self.capacity, real))
+                spans.append(plan.max_words_per_tile)
+            self.win_words = plan_window(max(spans), n_words)
+        self._begin_fn = None
+        self._end_fn = None
+        self._shard_cache: dict[tuple, Callable] = {}
+        self._prefetch = _Prefetcher()
+        self.last_epoch_device_bytes = 0
+
+    def _plan_tiles(self, word_ids) -> None:
+        # no full-stream plan: per-shard plans are built (and win_words
+        # set) once the stream is attached — one pass over the tokens
+        self.win_words = self.n_words
+
+    # -- state conversion ---------------------------------------------------
+
+    def _split_topics(self, topics) -> list:
+        st = self.stream
+        total = st.n_shards * st.shard_len
+        flat = np.zeros(total, np.int32)
+        flat[:len(np.asarray(topics))] = np.asarray(topics, np.int32)
+        return list(flat.reshape(st.n_shards, st.shard_len))
+
+    def _counts_from_lda_state(self, state) -> tuple:
+        colsum = jnp.sum(state.W, axis=0, dtype=jnp.int32)
+        return (jnp.copy(state.D), jnp.copy(state.W), colsum)
+
+    def _counts_from_np(self, D: np.ndarray, W: np.ndarray) -> tuple:
+        return (jnp.asarray(D), jnp.asarray(W),
+                jnp.asarray(W.sum(axis=0, dtype=np.int32)))
+
+    def from_lda_state(self, state) -> StreamState:
+        if isinstance(state, StreamState):
+            return state        # resuming (possibly mid-epoch): no-op
+        key = jax.random.wrap_key_data(jnp.copy(
+            jax.random.key_data(state.key)))
+        return StreamState(
+            shard_topics=self._split_topics(state.topics),
+            counts=self._counts_from_lda_state(state), key=key,
+            iteration=int(state.iteration))
+
+    def _require_boundary(self, ss: StreamState, what: str) -> None:
+        if ss.cursor:
+            raise ValueError(
+                f"{what} needs an epoch boundary but {ss.cursor} of "
+                f"{self.stream.n_shards} shards of the open epoch are "
+                "already sampled: finish the epoch (run_fused) or "
+                "checkpoint through stream_payload()")
+
+    def to_lda_state(self, ss: StreamState):
+        from repro.lda.model import LDAState
+        self._require_boundary(ss, "to_lda_state")
+        topics = np.concatenate(ss.shard_topics)[:self.n_tokens]
+        D, W, colsum = ss.counts
+        return LDAState(topics=jnp.asarray(topics), D=D, W=W, key=ss.key,
+                        iteration=jnp.int32(ss.iteration))
+
+    # -- compiled pieces ----------------------------------------------------
+
+    def _get_begin(self) -> Callable:
+        if self._begin_fn is None:
+            cfg, n = self.config, self.n_tokens
+
+            def begin(counts, key):
+                D, W, colsum = counts
+                key_next, sub = jax.random.split(key)
+                # the epoch's uniforms, drawn ONCE at the resident length
+                # (bit-identical to the resident path's per-iteration u)
+                # and immediately staged to the host: each shard's slice
+                # rides back in with the prefetch, so the device never
+                # holds more than one shard's worth between dispatches
+                # and the S× regeneration tax disappears
+                u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
+                W_hat = esca.compute_w_hat_from_colsum(W, colsum, cfg.beta)
+                stats_w = three_branch.word_stats(W_hat, g=cfg.g,
+                                                  alpha=cfg.alpha_)
+                deltas = (jnp.zeros_like(D), jnp.zeros_like(W),
+                          jnp.zeros_like(colsum))
+                return key_next, u, (W_hat, stats_w), deltas
+
+            self._begin_fn = jax.jit(begin)
+        return self._begin_fn
+
+    def _stage_u(self, u_dev) -> np.ndarray:
+        """Device u → host staging buffer, padded to the stream extent
+        (the extension slots' draws are inert — mask-0 tokens)."""
+        st = self.stream
+        total = st.n_shards * st.shard_len
+        u = np.zeros(total, np.float32)
+        u[:self.n_tokens] = np.asarray(u_dev)
+        return u
+
+    def _apply_epoch(self, counts: tuple, derived: tuple,
+                     deltas: tuple) -> tuple:
+        if self._end_fn is None:
+
+            def end(counts, deltas):
+                return tuple(c + d for c, d in zip(counts, deltas))
+
+            # only counts can alias the outputs; the deltas are freed
+            # naturally when the epoch carry drops
+            self._end_fn = jax.jit(end, donate_argnums=(0,))
+        return self._end_fn(counts, deltas)
+
+    def _get_shard_fn(self, capacity: int, win_words: int) -> Callable:
+        sig = (capacity, win_words)
+        fn = self._shard_cache.get(sig)
+        if fn is not None:
+            return fn
+        cfg = self.config
+        st = self.stream
+        L, n = st.shard_len, self.n_tokens
+        n_chunks = max(1, -(-L // capacity))
+        track_span = self.balance == "tiles"
+
+        def shard_fn(u, lo, topics_s, word_s, doc_s, mask_s, counts,
+                     derived, deltas):
+            D, _W, _colsum = counts
+            W_hat, stats_w = derived
+            dec = three_branch.skip_phase(u, word_s, doc_s, D, stats_w,
+                                          g=cfg.g, alpha=cfg.alpha_)
+            rank, n_surv = three_branch.survivor_rank(dec.skip)
+            surv_idx = three_branch.compact_survivor_indices(
+                rank, dec.skip, n_chunks * capacity)
+            max_span = self._max_chunk_span(
+                surv_idx, n_chunks, capacity, word_ids=word_s,
+                n_stream=L) if track_span else jnp.int32(0)
+            sample_chunk = self._dense_chunk_sampler(
+                u, word_s, doc_s, D, W_hat, stats_w.k[:, 0],
+                win_words=win_words, n_stream=L)
+            new_topics, in_m = three_branch.run_survivor_chunks(
+                surv_idx, n_surv, dec.k1, capacity=capacity,
+                n_chunks=n_chunks, sample_chunk=sample_chunk)
+            deltas = scatter_changed_deltas(
+                topics_s, new_topics, doc_s, word_s, mask_s,
+                capacity=capacity, D=deltas[0], W=deltas[1],
+                colsum=deltas[2])
+            sums = _shard_stat_sums(lo, n, dec, in_m, new_topics, topics_s)
+            return new_topics, deltas, n_surv, max_span, sums
+
+        fn = jax.jit(shard_fn, donate_argnums=(2, 8))
+        self._shard_cache[sig] = fn
+        return fn
+
+    # -- the epoch loop -----------------------------------------------------
+
+    def _put_shard(self, s: int, topics_host, u_host):
+        st = self.stream
+        L = st.shard_len
+        return (jnp.asarray(st.word_ids[s]), jnp.asarray(st.doc_ids[s]),
+                jnp.asarray(st.mask[s]), jnp.asarray(topics_host),
+                jnp.asarray(u_host[s * L:(s + 1) * L]))
+
+    def _open_epoch(self, ss: StreamState) -> StreamState:
+        key_next, u_dev, derived, deltas = self._get_begin()(ss.counts,
+                                                             ss.key)
+        ss.epoch = _EpochCarry(key_next=key_next,
+                               u_host=self._stage_u(u_dev),
+                               derived=derived, deltas=deltas,
+                               old_topics=[])
+        return ss
+
+    def _close_epoch(self, ss: StreamState) -> StreamState:
+        ep = ss.epoch
+        ss.counts = self._apply_epoch(ss.counts, ep.derived, ep.deltas)
+        ss.key = ep.key_next
+        ss.iteration += 1
+        ss.cursor = 0
+        ss.epoch = None
+        return ss
+
+    def _advance(self, ss: StreamState,
+                 max_shards: int | None = None) -> StreamState:
+        """Sample shards ``cursor..stop`` of the open epoch (opening one
+        as needed) without closing it. The shard at ``cursor`` computes
+        while the shard at ``cursor+1`` prefetches — the double buffer.
+        """
+        st = self.stream
+        if ss.epoch is None:
+            ss = self._open_epoch(ss)
+        stop = st.n_shards if max_shards is None \
+            else min(st.n_shards, ss.cursor + max_shards)
+        if ss.cursor >= stop:
+            return ss
+        ep = ss.epoch
+        fn = self._get_shard_fn(self.capacity, self.win_words)
+        self._prefetch.take()       # drop any stale prefetch
+        current = self._put_shard(ss.cursor, ss.shard_topics[ss.cursor],
+                                  ep.u_host)
+        while ss.cursor < stop:
+            s = ss.cursor
+            if s + 1 < stop:
+                self._prefetch.submit(self._put_shard, s + 1,
+                                      ss.shard_topics[s + 1], ep.u_host)
+            word_s, doc_s, mask_s, topics_s, u_s = current
+            new_t, ep.deltas, n_surv, span, sums = fn(
+                u_s, jnp.int32(s * st.shard_len), topics_s, word_s,
+                doc_s, mask_s, ss.counts, ep.derived, ep.deltas)
+            if self.last_epoch_device_bytes == 0:
+                # every buffer shape is static, so one measurement per
+                # pipeline suffices; .nbytes reads metadata only — no
+                # transfer, no sync, no pipeline bubble
+                self.last_epoch_device_bytes = self._device_bytes(
+                    ss, (word_s, doc_s, mask_s, new_t, u_s))
+            ep.old_topics.append(ss.shard_topics[s])
+            ep.stats_parts.append((n_surv, span, sums))
+            # one-deep deferred D2H: shard s's topics read back while
+            # shard s+1's dispatch is already enqueued — no bubble
+            ep.pending_topics.append((s, new_t))
+            if len(ep.pending_topics) > 1:
+                s_prev, t_prev = ep.pending_topics.pop(0)
+                ss.shard_topics[s_prev] = np.asarray(t_prev)
+            ss.cursor += 1
+            current = self._prefetch.take()
+        while ep.pending_topics:
+            s_prev, t_prev = ep.pending_topics.pop(0)
+            ss.shard_topics[s_prev] = np.asarray(t_prev)
+        return ss
+
+    def note_survivors(self, n_surv, decay: float = 0.7) -> None:
+        super().note_survivors(n_surv, decay)
+        if not self._capacity_pinned:
+            self.capacity = plan_tile_capacity(
+                self._surv_ema, self.n_tokens, self.config.n_topics)
+        self.capacity = min(self.capacity, self.stream.shard_len)
+
+    def run_shards(self, ss: StreamState,
+                   n_shards: int = 1) -> StreamState:
+        """Advance up to ``n_shards`` shards of the current epoch WITHOUT
+        closing it — the mid-epoch stepping surface. A state left mid-
+        epoch checkpoints through ``stream_payload`` and resumes through
+        ``state_from_stream_payload`` (or ``run_fused``, whose first
+        epoch finishes the open one) bit-identically."""
+        return self._advance(ss, max_shards=max(int(n_shards), 0))
+
+    def _run_epoch(self, ss: StreamState):
+        """One full epoch (resuming an open one at ``ss.cursor``).
+
+        Returns (state, n_surv_total, max_span, stat_means)."""
+        ss = self._advance(ss)
+        ep = ss.epoch
+        ep.flush_stats()
+        n_surv, span = ep.n_surv, ep.max_span
+        means = ep.stat_sums / max(self.n_tokens, 1)
+        return self._close_epoch(ss), n_surv, span, means
+
+    def step(self, ss: StreamState):
+        ss, stats, n_surv = self.run_fused(ss, 1)
+        squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
+        return ss, squeeze(stats), squeeze(n_surv)
+
+    def run_fused(self, ss: StreamState, n_iters: int, replan: bool = True):
+        """n_iters epochs of shard-streamed training.
+
+        Mirrors FusedPipeline.run_fused's return contract ((state,
+        stacked stats, survivor counts) with a leading (n_iters,) axis)
+        so the boundary-chunked trainer driver cannot tell the paths
+        apart. Between epochs the survivor EMA re-plans the shard-local
+        chunk capacity (and the tile window under ``balance="tiles"``) —
+        the same hysteresis as the resident planner.
+        """
+        surv_rows, span_rows, mean_rows = [], [], []
+        for _ in range(int(n_iters)):
+            ss, n_surv, span, means = self._run_epoch(ss)
+            surv_rows.append(n_surv)
+            span_rows.append(span)
+            mean_rows.append(means)
+        if replan and surv_rows:
+            # feed EPOCH-total survivors (not per-shard) so the EMA sees
+            # the same signal as the resident planner
+            self.note_survivors(np.asarray(surv_rows, np.float64))
+            if self.balance == "tiles":
+                self.note_spans(span_rows)
+        m = np.asarray(mean_rows, np.float32).reshape(-1, 4)
+        stats = three_branch.ThreeBranchStats(
+            frac_skipped=m[:, 0], frac_m_final=m[:, 1],
+            frac_unchanged=m[:, 2], frac_at_max=m[:, 3],
+            frac_q_branch=np.zeros(m.shape[0], np.float32))
+        return ss, stats, np.asarray(surv_rows, np.int64)
+
+    # -- measured memory ----------------------------------------------------
+
+    def _device_bytes(self, ss: StreamState, current: tuple) -> int:
+        """Measured live device bytes at the streaming steady state:
+        resident counts + the open epoch's derived/delta buffers + BOTH
+        token windows (current shard + prefetched shard). In-dispatch
+        temporaries are excluded — exactly as they are for the resident
+        path's accounting (``FusedPipeline`` state + token buffers)."""
+        total = sum(int(a.nbytes) for a in jax.tree.leaves(ss.counts))
+        if ss.epoch is not None:
+            total += sum(int(a.nbytes)
+                         for a in jax.tree.leaves((ss.epoch.derived,
+                                                   ss.epoch.deltas)))
+        total += 2 * sum(int(a.nbytes) for a in current)
+        return total
+
+    # -- checkpoints (mid-epoch capable) ------------------------------------
+
+    def stream_payload(self, ss: StreamState) -> dict:
+        """Canonical checkpoint payload, epoch-boundary or mid-epoch.
+
+        At a boundary this is exactly the engine's canonical payload. A
+        mid-epoch save adds the flat ``stream_cursor`` /
+        ``stream_done_topics`` keys (docs/API.md "Checkpoint payload
+        schema"): ``topics_global`` rewinds to the EPOCH-START topics
+        (what the open epoch's counts derive from) and
+        ``stream_done_topics`` carries the already-sampled shards' new
+        topics, so a restore re-derives counts, Ŵ, and the accumulated
+        deltas and continues bit-identically.
+        """
+        st = self.stream
+        n_real = st.n_tokens
+        key = np.asarray(jax.random.key_data(ss.key))
+        if ss.cursor == 0:
+            topics = np.concatenate(ss.shard_topics)[:n_real]
+            return {"topics_global": topics, "key": key,
+                    "iteration": int(ss.iteration)}
+        start = np.concatenate(
+            list(ss.epoch.old_topics) + ss.shard_topics[ss.cursor:])[:n_real]
+        n_done = int(min(ss.cursor * st.shard_len, n_real))
+        done = np.concatenate(ss.shard_topics[:ss.cursor])[:n_done]
+        return {"topics_global": start, "key": key,
+                "iteration": int(ss.iteration),
+                "stream_cursor": np.int64(ss.cursor),
+                "stream_done_topics": done.astype(np.int32)}
+
+    def _np_counts(self, topics_flat: np.ndarray, lo: int, hi: int):
+        """Host count histograms over padded-stream slots [lo, hi)."""
+        st = self.stream
+        K = self.config.n_topics
+        w = st.word_ids.reshape(-1)[lo:hi]
+        d = st.doc_ids.reshape(-1)[lo:hi]
+        m = st.mask.reshape(-1)[lo:hi].astype(np.int32)
+        t = topics_flat[lo:hi]
+        D = np.zeros((self.n_docs, K), np.int32)
+        W = np.zeros((self.n_words, K), np.int32)
+        np.add.at(D, (d, t), m)
+        np.add.at(W, (w, t), m)
+        return D, W
+
+    def state_from_stream_payload(self, payload: dict) -> StreamState:
+        """Rebuild a StreamState (possibly mid-epoch) from a canonical
+        payload. Everything beyond the payload is derived state: counts
+        from the epoch-start topics, Ŵ/stats by re-running the epoch
+        open, the accumulated deltas from (old, done-new) histograms."""
+        st = self.stream
+        n_real = st.n_tokens
+        tg = np.asarray(payload["topics_global"], np.int32)
+        if tg.shape[0] != n_real:
+            raise ValueError(
+                f"checkpoint topics_global has {tg.shape[0]} entries but "
+                f"the corpus holds {n_real} tokens: the checkpoint belongs "
+                "to a different corpus")
+        total = st.n_shards * st.shard_len
+        flat = np.zeros(total, np.int32)
+        flat[:n_real] = tg
+        D0, W0 = self._np_counts(flat, 0, total)
+        key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
+        ss = StreamState(
+            shard_topics=list(flat.reshape(st.n_shards, st.shard_len)),
+            counts=self._counts_from_np(D0, W0),
+            key=key, iteration=int(payload["iteration"]))
+        cursor = int(payload.get("stream_cursor", 0))
+        if cursor == 0:
+            return ss
+        if not 0 < cursor <= st.n_shards:
+            raise ValueError(
+                f"stream_cursor={cursor} out of range for {st.n_shards} "
+                "shards: the checkpoint was written for a different "
+                "stream sharding (stream_shards must match to resume "
+                "mid-epoch)")
+        n_done = int(min(cursor * st.shard_len, n_real))
+        done = np.asarray(payload["stream_done_topics"], np.int32)
+        if done.shape[0] != n_done:
+            raise ValueError(
+                f"stream_done_topics has {done.shape[0]} entries; cursor "
+                f"{cursor} implies {n_done}: inconsistent mid-epoch payload")
+        ss = self._open_epoch(ss)
+        new_flat = flat.copy()
+        new_flat[:n_done] = done
+        hi = cursor * st.shard_len
+        Dn, Wn = self._np_counts(new_flat, 0, hi)
+        Do, Wo = self._np_counts(flat, 0, hi)
+        ss.epoch.deltas = (jnp.asarray(Dn - Do), jnp.asarray(Wn - Wo),
+                           jnp.asarray((Wn - Wo).sum(axis=0,
+                                                     dtype=np.int32)))
+        ss.epoch.old_topics = list(
+            flat.reshape(st.n_shards, st.shard_len)[:cursor])
+        for s in range(cursor):
+            ss.shard_topics[s] = new_flat.reshape(
+                st.n_shards, st.shard_len)[s]
+        ss.cursor = cursor
+        return ss
+
+
+def _shard_stat_sums(lo, n, dec, in_m, new_topics, old_topics):
+    """Per-shard stat SUMS over slots that exist in the resident stream
+    (global index < n), so the epoch totals divide to the same fractions
+    the resident pipeline reports."""
+    L = new_topics.shape[0]
+    valid = (lo + jnp.arange(L)) < n
+    f32 = jnp.float32
+
+    def s(x):
+        return jnp.sum(jnp.where(valid, x, False).astype(f32))
+
+    return jnp.stack([s(dec.skip), s(dec.skip | in_m),
+                      s(new_topics == old_topics), s(new_topics == dec.k1)])
+
+
+class StreamingHybridPipeline(StreamingPipeline):
+    """Epoch-shard streaming over the hybrid sparse live state.
+
+    The at-rest state between epochs stays packed (packed-ELL D +
+    HybridW + colsum + overflow tripwire — the same tuple
+    SparseLDAState carries); the epoch open densifies it ONCE into the
+    integer mirrors every shard samples against (exactly what the
+    resident HybridFusedPipeline does once per iteration, so the
+    trajectory is bit-equal to it), and the epoch close applies the
+    accumulated deltas and repacks with the same sorted-slot machinery.
+    Note the densified mirrors are epoch-resident here (the resident
+    pipeline holds them only inside its dispatch) — streaming's token
+    savings pay for a transient dense count mirror; the measured
+    accounting in ``_device_bytes`` includes them.
+    """
+
+    def __init__(self, stream, *, n_docs: int, n_words: int, config,
+                 corpus):
+        super().__init__(stream, n_docs=n_docs, n_words=n_words,
+                         config=config)
+        from repro.lda.model import HybridLayout
+        self.layout = HybridLayout.build(corpus, config)
+
+    # -- state conversion ---------------------------------------------------
+
+    def _counts_from_lda_state(self, state) -> tuple:
+        lay = self.layout
+        w_head, w_tail = lay.split_w(state.W)
+        colsum = jnp.sum(state.W, axis=0, dtype=jnp.int32)
+        return (lay.pack_d(state.D), w_head, w_tail, colsum, jnp.int32(0))
+
+    def _counts_from_np(self, D: np.ndarray, W: np.ndarray) -> tuple:
+        lay = self.layout
+        w_head, w_tail = lay.split_w(jnp.asarray(W))
+        colsum = jnp.asarray(W.sum(axis=0, dtype=np.int32))
+        return (lay.pack_d(jnp.asarray(D)), w_head, w_tail, colsum,
+                jnp.int32(0))
+
+    def to_lda_state(self, ss: StreamState):
+        from repro.lda.model import LDAState
+        self._require_boundary(ss, "to_lda_state")
+        d_packed, w_head, w_tail, _colsum, _overflow = ss.counts
+        topics = np.concatenate(ss.shard_topics)[:self.n_tokens]
+        return LDAState(
+            topics=jnp.asarray(topics),
+            D=sparse.densify_rows(d_packed, self.layout.n_topics),
+            W=self.layout.densify_w(w_head, w_tail),
+            key=ss.key, iteration=jnp.int32(ss.iteration))
+
+    def overflow_count(self, ss: StreamState) -> int:
+        """The packed-update tripwire (0 by the capacity-bound design)."""
+        return int(ss.counts[4])
+
+    # -- compiled pieces ----------------------------------------------------
+
+    def _get_begin(self) -> Callable:
+        if self._begin_fn is None:
+            cfg, lay = self.config, self.layout
+            k_total = lay.n_topics
+            n = self.n_tokens
+
+            def begin(counts, key):
+                d_packed, w_head, w_tail, colsum, _overflow = counts
+                key_next, sub = jax.random.split(key)
+                u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
+                d_dense = sparse.densify_rows_sorted(d_packed, k_total)
+                w_parts = [w_head] + [
+                    sparse.densify_rows_sorted(b, k_total) for b in w_tail]
+                w_int = jnp.concatenate(w_parts, axis=0) \
+                    if len(w_parts) > 1 else w_head
+                W_hat = esca.compute_w_hat_from_colsum(w_int, colsum,
+                                                       cfg.beta)
+                stats_w = three_branch.word_stats(W_hat, g=cfg.g,
+                                                  alpha=cfg.alpha_)
+                deltas = (jnp.zeros_like(d_dense), jnp.zeros_like(w_int),
+                          jnp.zeros_like(colsum))
+                return key_next, u, (d_dense, w_int, W_hat, stats_w), \
+                    deltas
+
+            self._begin_fn = jax.jit(begin)
+        return self._begin_fn
+
+    def _apply_epoch(self, counts: tuple, derived: tuple,
+                     deltas: tuple) -> tuple:
+        if self._end_fn is None:
+            lay = self.layout
+
+            def end(colsum, overflow, d_dense, w_int, deltas):
+                dD, dW, dcs = deltas
+                d_new = d_dense + dD
+                w_new = w_int + dW
+                colsum = colsum + dcs
+                d_packed, ov_d = sparse.pack_rows_sorted(d_new,
+                                                         lay.d_capacity)
+                overflow = overflow + ov_d
+                w_head = w_new[:lay.v_dense]
+                new_tail = []
+                for b in range(len(lay.tail_caps)):
+                    start = lay.tail_starts[b]
+                    end_ = lay.tail_starts[b + 1] \
+                        if b + 1 < len(lay.tail_starts) else lay.n_words
+                    bucket, ov_b = sparse.pack_rows_sorted(
+                        w_new[start:end_], lay.tail_caps[b])
+                    new_tail.append(bucket)
+                    overflow = overflow + ov_b
+                return (d_packed, w_head, tuple(new_tail), colsum,
+                        overflow)
+
+            # colsum is the only input whose buffer an output can alias
+            # (the packed outputs have packed shapes); everything else is
+            # freed when the epoch carry drops
+            self._end_fn = jax.jit(end, donate_argnums=(0,))
+        _d_packed, _w_head, _w_tail, colsum, overflow = counts
+        d_dense, w_int, _W_hat, _stats = derived
+        return self._end_fn(colsum, overflow, d_dense, w_int, deltas)
+
+    def _get_shard_fn(self, capacity: int, win_words: int) -> Callable:
+        sig = (capacity, win_words)
+        fn = self._shard_cache.get(sig)
+        if fn is not None:
+            return fn
+        cfg, lay = self.config, self.layout
+        st = self.stream
+        L, n = st.shard_len, self.n_tokens
+        n_chunks = max(1, -(-L // capacity))
+        track_span = self.balance == "tiles"
+        split_tail = cfg.tail_sampler == "sparse" \
+            and lay.v_dense < self.n_words
+
+        def shard_fn(u, lo, topics_s, word_s, doc_s, mask_s, counts,
+                     derived, deltas):
+            d_packed = counts[0]
+            d_dense, _w_int, W_hat, stats_w = derived
+            dec = three_branch.skip_phase(u, word_s, doc_s, d_dense,
+                                          stats_w, g=cfg.g,
+                                          alpha=cfg.alpha_)
+            k1_per_word = stats_w.k[:, 0]
+            use_tiles = self._use_tiles(win_words)
+            dense_chunk = self._dense_chunk_sampler(
+                u, word_s, doc_s, d_dense, W_hat, k1_per_word,
+                win_words=win_words, n_stream=L)
+
+            def sparse_tail_chunk(idx):
+                u_c, v_c, d_c = u[idx], word_s[idx], doc_s[idx]
+                k1 = k1_per_word[v_c]
+                b1 = d_dense[d_c, k1].astype(jnp.float32)
+                if not use_tiles:
+                    t_c, _nq, in_m = kops.sparse_tail_draw(
+                        u_c, d_packed[d_c], W_hat[v_c], k1,
+                        stats_w.a[v_c, 0], b1, stats_w.q_prime[v_c],
+                        alpha=cfg.alpha_, interpret=self._interpret)
+                    return t_c, in_m
+                first, last = self._chunk_run(v_c, idx, L)
+
+                def tiled(_):
+                    t_c, _nq, in_m = kops.sparse_tail_draw_tiled(
+                        u_c, d_packed[d_c], W_hat, v_c, first,
+                        k1_per_word, stats_w.a[:, 0], stats_w.q_prime,
+                        b1, alpha=cfg.alpha_, win_words=win_words,
+                        interpret=self._interpret)
+                    return t_c, in_m
+
+                def untiled(_):
+                    t_c, _nq, in_m = kops.sparse_tail_draw(
+                        u_c, d_packed[d_c], W_hat[v_c], k1,
+                        stats_w.a[v_c, 0], b1, stats_w.q_prime[v_c],
+                        alpha=cfg.alpha_, interpret=self._interpret)
+                    return t_c, in_m
+
+                return jax.lax.cond(last - first < win_words, tiled,
+                                    untiled, None)
+
+            if split_tail:
+                head_mask = word_s < lay.v_dense
+                segments = [(head_mask, dense_chunk),
+                            (~head_mask, sparse_tail_chunk)]
+            else:
+                segments = [(None, dense_chunk)]
+            new_topics = dec.k1
+            in_m_acc = jnp.zeros(L, jnp.bool_)
+            n_surv_total = jnp.int32(0)
+            max_span = jnp.int32(0)
+            for seg_mask, chunk_fn in segments:
+                skip_seg = dec.skip if seg_mask is None \
+                    else dec.skip | ~seg_mask
+                rank, n_surv = three_branch.survivor_rank(skip_seg)
+                surv_idx = three_branch.compact_survivor_indices(
+                    rank, skip_seg, n_chunks * capacity)
+                if track_span:
+                    max_span = jnp.maximum(max_span, self._max_chunk_span(
+                        surv_idx, n_chunks, capacity, word_ids=word_s,
+                        n_stream=L))
+                new_topics, in_m_seg = three_branch.run_survivor_chunks(
+                    surv_idx, n_surv, new_topics, capacity=capacity,
+                    n_chunks=n_chunks, sample_chunk=chunk_fn)
+                in_m_acc = in_m_acc | in_m_seg
+                n_surv_total = n_surv_total + n_surv
+            deltas = scatter_changed_deltas(
+                topics_s, new_topics, doc_s, word_s, mask_s,
+                capacity=capacity, D=deltas[0], W=deltas[1],
+                colsum=deltas[2])
+            sums = _shard_stat_sums(lo, n, dec, in_m_acc, new_topics,
+                                    topics_s)
+            return new_topics, deltas, n_surv_total, max_span, sums
+
+        fn = jax.jit(shard_fn, donate_argnums=(2, 8))
+        self._shard_cache[sig] = fn
+        return fn

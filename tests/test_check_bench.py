@@ -1,0 +1,117 @@
+"""tools/check_bench.py — the CI perf-regression gate.
+
+Pins: committed results stay green; an injected out-of-tolerance metric
+turns the check red; schema drift (missing/mistyped keys, empty cell
+lists, undocumented files) fails; the dry-run mode skips metric gates
+but still enforces schema.
+"""
+
+import copy
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "tools"))
+import check_bench  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+
+
+def _load(name):
+    return json.load(open(os.path.join(RESULTS, name)))
+
+
+def _write(tmp_path, name, doc):
+    path = tmp_path / name
+    path.write_text(json.dumps(doc))
+    return str(path)
+
+
+def _committed():
+    return sorted(f for f in os.listdir(RESULTS)
+                  if f.startswith("BENCH_") and f.endswith(".json")
+                  and f not in check_bench.SCHEMA_ALIASES)
+
+
+def test_committed_results_pass():
+    files = [os.path.join(RESULTS, f) for f in _committed()]
+    assert files, "no committed BENCH files?"
+    assert check_bench.main(files) == 0
+
+
+def test_every_committed_file_has_schema_and_gates():
+    for name in _committed():
+        assert name in check_bench.SCHEMAS, name
+        assert name in check_bench.GATES, name
+
+
+@pytest.mark.parametrize("name,mutate", [
+    ("BENCH_fused_step.json",
+     lambda d: d.update(hybrid_slowdown_factor=1.9)),
+    ("BENCH_fused_step.json",
+     lambda d: d.update(host_syncs_in_scanned_region=3)),
+    ("BENCH_fused_step.json", lambda d: d.update(speedup=1.2)),
+    ("BENCH_balance.json",
+     lambda d: d["throughput"].update(tiled_over_untiled=0.7)),
+    ("BENCH_balance.json", lambda d: [
+        row.update(imbalance=2.5) for row in d["schemes"]
+        if row["scheme"] == "token_tiles"]),
+    ("BENCH_hybrid_state.json", lambda d: [
+        c.update(vs_dense_bytes=0.95) for c in d["cells"]]),
+])
+def test_injected_regression_fails(tmp_path, name, mutate):
+    doc = copy.deepcopy(_load(name))
+    mutate(doc)
+    path = _write(tmp_path, name, doc)
+    assert check_bench.main([path]) == 1
+
+
+def test_within_tolerance_band_passes(tmp_path):
+    """A bound breached by less than the band is tolerated (noise)."""
+    doc = copy.deepcopy(_load("BENCH_fused_step.json"))
+    doc["hybrid_slowdown_factor"] = 1.25 * 1.03     # inside the 5% band
+    assert check_bench.main([_write(tmp_path, "BENCH_fused_step.json",
+                                    doc)]) == 0
+    doc["hybrid_slowdown_factor"] = 1.25 * 1.10     # outside
+    assert check_bench.main([_write(tmp_path, "BENCH_fused_step.json",
+                                    doc)]) == 1
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda d: d.pop("speedup"),                       # missing key
+    lambda d: d.update(speedup="fast"),               # wrong type
+    lambda d: d["corpus"].pop("tokens"),              # nested missing
+    lambda d: d.update(host_syncs_in_scanned_region=True),  # bool!=int
+])
+def test_schema_drift_fails(tmp_path, mutate):
+    doc = copy.deepcopy(_load("BENCH_fused_step.json"))
+    mutate(doc)
+    assert check_bench.main([_write(tmp_path, "BENCH_fused_step.json",
+                                    doc)]) == 1
+
+
+def test_empty_cells_fail(tmp_path):
+    doc = copy.deepcopy(_load("BENCH_hybrid_state.json"))
+    doc["cells"] = []
+    assert check_bench.main([_write(tmp_path, "BENCH_hybrid_state.json",
+                                    doc)]) == 1
+
+
+def test_undocumented_file_fails(tmp_path):
+    assert check_bench.main([_write(tmp_path, "BENCH_mystery.json",
+                                    {"x": 1})]) == 1
+
+
+def test_dry_run_schema_only_mode(tmp_path):
+    """The smoke artifact validates by schema with metric gates off —
+    a dry run's numbers are meaningless, its SHAPE is not."""
+    doc = copy.deepcopy(_load("BENCH_serve_lda.json"))
+    doc["dry_run"] = True
+    doc["best_docs_per_sec"] = 0.0            # would fail the metric gate
+    path = _write(tmp_path, "BENCH_serve_lda_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 0
+    doc.pop("cells")                          # but schema rot still fails
+    path = _write(tmp_path, "BENCH_serve_lda_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 1

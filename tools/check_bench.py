@@ -1,0 +1,258 @@
+"""Benchmark-regression check (the CI perf gate).
+
+Every committed ``results/BENCH_*.json`` is validated two ways:
+
+  1. **Schema** — the file must carry exactly the documented structure
+     (docs/BENCHMARKS.md): required keys, value types, non-empty cell
+     lists. A driver that silently changes its output shape fails CI
+     instead of rotting the docs.
+  2. **Key metrics** — the measured numbers that PRs have claimed as
+     wins are pinned against their documented bounds with a tolerance
+     band (``--tolerance``, default 5% on ratio bounds): e.g. the hybrid
+     live state may not slow the fused step beyond 1.25×, tile
+     scheduling may not cost throughput, streaming must keep its memory
+     win. A regression that would quietly undo a measured speedup turns
+     the build red.
+
+``--dry-run-schema-only PATH`` validates schema without metric gates —
+for the CI smoke artifacts (e.g. ``BENCH_serve_lda_dryrun.json``) whose
+numbers come from a seconds-long dry run and mean nothing.
+
+Usage:
+    python tools/check_bench.py                 # all results/BENCH_*.json
+    python tools/check_bench.py results/BENCH_balance.json
+    python tools/check_bench.py --dry-run-schema-only results/BENCH_serve_lda_dryrun.json
+
+Exits nonzero with a list of failures.
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+NUM = (int, float)
+
+# -- schemas (mirrors docs/BENCHMARKS.md) -----------------------------------
+
+_CORPUS = {"docs": int, "words": int, "tokens": int}
+
+SCHEMAS: dict[str, dict] = {
+    "BENCH_fused_step.json": {
+        "corpus": _CORPUS, "n_topics": int,
+        "warmup_iters": int, "timed_iters": int, "repeats": int,
+        "seed_tokens_per_sec": NUM, "fused_tokens_per_sec": NUM,
+        "speedup": NUM,
+        "hybrid_tokens_per_sec": NUM, "hybrid_slowdown_factor": NUM,
+        "hybrid_state_bytes": int, "dense_state_bytes": int,
+        "host_syncs_in_scanned_region": int,
+        "phase2_impl": str, "survivor_capacity": int,
+    },
+    "BENCH_hybrid_state.json": {
+        "corpus": _CORPUS, "n_topics": int,
+        "d_capacity_bound": int, "dense_state_bytes": int,
+        "cells": [{"d_capacity": int, "dense_word_threshold": int,
+                   "v_dense": int, "tokens_per_sec": NUM,
+                   "state_bytes": int, "vs_dense_bytes": NUM}],
+    },
+    "BENCH_balance.json": {
+        "corpus": {**_CORPUS, "exponent": NUM}, "n_topics": int,
+        "schemes": [{"scheme": str, "max": int, "mean": NUM,
+                     "imbalance": NUM}],
+        "tile_plan": {"tile_size": int, "n_tiles": int,
+                      "max_words_per_tile": int, "max_tiles_per_word": int},
+        "shard_loads": {"doc_chunking": NUM, "token_tiles": NUM},
+        "throughput": {"warmup_iters": int, "timed_iters": int,
+                       "repeats": int, "untiled_tokens_per_sec": NUM,
+                       "tiled_tokens_per_sec": NUM,
+                       "tiled_over_untiled": NUM, "win_words": int,
+                       "tiled_capacity": int, "untiled_capacity": int},
+    },
+    "BENCH_serve_lda.json": {
+        "dry_run": bool,
+        "model": {"n_words": int, "n_topics": int, "g": int},
+        "train": {"docs": int, "tokens": int, "iters": int,
+                  "seconds": NUM},
+        "host_syncs_in_dispatch": int, "repeats": int,
+        "cells": [{"batch_size": int, "n_sweeps": int,
+                   "padded_tokens": int, "docs_per_sec": NUM,
+                   "docs_per_sec_dispatch": NUM, "held_out_llpt": NUM,
+                   "theta_shape": [int]}],
+        "best_docs_per_sec": NUM, "best_cell": dict,
+    },
+    "BENCH_streaming.json": {
+        "corpus": _CORPUS, "n_topics": int, "n_shards": int,
+        "warmup_iters": int, "timed_iters": int, "repeats": int,
+        "resident_tokens_per_sec": NUM, "streamed_tokens_per_sec": NUM,
+        "streamed_over_resident": NUM,
+        "resident_device_bytes": int, "streamed_device_bytes": int,
+        "streamed_bytes_ratio": NUM,
+        "bitwise_equal_to_resident": bool,
+    },
+}
+
+# smoke artifacts reuse a driver's schema but skip the metric gates
+SCHEMA_ALIASES = {"BENCH_serve_lda_dryrun.json": "BENCH_serve_lda.json"}
+
+
+# -- key-metric gates (the bounds PRs have claimed; tolerance on ratios) ----
+
+def _scheme(doc, name):
+    for row in doc["schemes"]:
+        if row["scheme"] == name:
+            return row
+    raise KeyError(f"scheme {name!r} missing")
+
+
+# (metric description, getter, op, bound, toleranced?)
+GATES: dict[str, list] = {
+    "BENCH_fused_step.json": [
+        ("fused/seed speedup", lambda d: d["speedup"], ">=", 2.0, True),
+        ("hybrid_slowdown_factor", lambda d: d["hybrid_slowdown_factor"],
+         "<=", 1.25, True),
+        ("hybrid/dense state bytes", lambda d: d["hybrid_state_bytes"]
+         / d["dense_state_bytes"], "<=", 0.6, True),
+        ("host_syncs_in_scanned_region",
+         lambda d: d["host_syncs_in_scanned_region"], "==", 0, False),
+    ],
+    "BENCH_hybrid_state.json": [
+        ("best vs_dense_bytes", lambda d: min(c["vs_dense_bytes"]
+                                              for c in d["cells"]),
+         "<=", 0.6, True),
+    ],
+    "BENCH_balance.json": [
+        ("token_tiles lane imbalance",
+         lambda d: _scheme(d, "token_tiles")["imbalance"], "<=", 1.2, True),
+        ("token_tiles shard imbalance",
+         lambda d: d["shard_loads"]["token_tiles"], "<=", 1.05, True),
+        ("tiled/untiled throughput",
+         lambda d: d["throughput"]["tiled_over_untiled"], ">=", 1.0, True),
+    ],
+    "BENCH_serve_lda.json": [
+        ("host_syncs_in_dispatch", lambda d: d["host_syncs_in_dispatch"],
+         "==", 0, False),
+        ("best_docs_per_sec", lambda d: d["best_docs_per_sec"], ">", 0.0,
+         False),
+    ],
+    "BENCH_streaming.json": [
+        ("streamed/resident device bytes",
+         lambda d: d["streamed_bytes_ratio"], "<=", 0.6, True),
+        ("streamed/resident throughput",
+         lambda d: d["streamed_over_resident"], ">=", 0.8, True),
+        ("streamed == resident bitwise",
+         lambda d: d["bitwise_equal_to_resident"], "==", True, False),
+        ("stream shard count", lambda d: d["n_shards"], ">=", 4, False),
+    ],
+}
+
+
+# -- validation machinery ----------------------------------------------------
+
+def check_schema(obj, spec, path: str) -> list[str]:
+    errors: list[str] = []
+    if isinstance(spec, dict):
+        if not isinstance(obj, dict):
+            return [f"{path}: expected object, got {type(obj).__name__}"]
+        if not spec:           # free-form object (e.g. best_cell)
+            return []
+        for key, sub in spec.items():
+            if key not in obj:
+                errors.append(f"{path}.{key}: missing")
+            else:
+                errors += check_schema(obj[key], sub, f"{path}.{key}")
+    elif isinstance(spec, list):
+        if not isinstance(obj, list):
+            return [f"{path}: expected array, got {type(obj).__name__}"]
+        if not obj:
+            return [f"{path}: empty array"]
+        for i, item in enumerate(obj):
+            errors += check_schema(item, spec[0], f"{path}[{i}]")
+    elif spec is dict:
+        if not isinstance(obj, dict):
+            errors.append(f"{path}: expected object")
+    else:
+        # bool is an int subclass: keep int gates honest
+        ok = isinstance(obj, spec) and not (
+            spec in (int, NUM) and isinstance(obj, bool))
+        if not ok:
+            errors.append(f"{path}: expected {spec}, got "
+                          f"{type(obj).__name__} ({obj!r})")
+    return errors
+
+
+def check_gates(doc, gates, tolerance: float) -> list[str]:
+    errors = []
+    for desc, getter, op, bound, toleranced in gates:
+        try:
+            value = getter(doc)
+        except Exception as e:                 # missing path == schema rot
+            errors.append(f"{desc}: unreadable ({type(e).__name__}: {e})")
+            continue
+        lo = bound * (1 - tolerance) if toleranced else bound
+        hi = bound * (1 + tolerance) if toleranced else bound
+        ok = {"<=": value <= hi, ">=": value >= lo,
+              ">": value > bound, "==": value == bound}[op]
+        if not ok:
+            band = f" (±{tolerance:.0%} band)" if toleranced else ""
+            errors.append(f"{desc} = {value!r} violates {op} {bound}{band}")
+    return errors
+
+
+def check_file(path: str, tolerance: float,
+               schema_only: bool = False) -> list[str]:
+    name = os.path.basename(path)
+    schema_name = SCHEMA_ALIASES.get(name, name)
+    if schema_name not in SCHEMAS:
+        return [f"{name}: no documented schema — add it to "
+                "docs/BENCHMARKS.md and tools/check_bench.py"]
+    try:
+        doc = json.load(open(path))
+    except (OSError, ValueError) as e:
+        return [f"{name}: unreadable JSON ({e})"]
+    errors = [f"{name}: {e}"
+              for e in check_schema(doc, SCHEMAS[schema_name], "$")]
+    if not errors and not schema_only:
+        errors += [f"{name}: {e}" for e in
+                   check_gates(doc, GATES.get(schema_name, []), tolerance)]
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="validate results/BENCH_*.json against documented "
+                    "schemas and committed key-metric bounds")
+    ap.add_argument("files", nargs="*",
+                    help="BENCH json files (default: results/BENCH_*.json, "
+                         "smoke artifacts excluded)")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="multiplicative band on ratio bounds (default 5%%)")
+    ap.add_argument("--dry-run-schema-only", action="store_true",
+                    help="validate schema only, skip metric gates (CI "
+                         "smoke artifacts)")
+    args = ap.parse_args(argv)
+    files = args.files or sorted(
+        f for f in glob.glob(os.path.join(ROOT, "results", "BENCH_*.json"))
+        if os.path.basename(f) not in SCHEMA_ALIASES)
+    if not files:
+        print("check_bench: no BENCH files found", file=sys.stderr)
+        return 1
+    failures = []
+    for path in files:
+        errs = check_file(path, args.tolerance,
+                          schema_only=args.dry_run_schema_only)
+        failures += errs
+        status = "FAIL" if errs else \
+            ("schema OK" if args.dry_run_schema_only else "OK")
+        print(f"check_bench: {os.path.basename(path)}: {status}")
+    for e in failures:
+        print(f"BENCH-REGRESSION: {e}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
