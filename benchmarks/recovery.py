@@ -1,0 +1,140 @@
+"""Supervised-training overhead + recovery cost (DESIGN.md §11).
+
+Fault tolerance must be near-free when nothing fails: ``fit(supervise=...)``
+wraps the SAME boundary-chunked run as an unsupervised fit (one backend
+call per attempt; the straggler timer rides the driver's ``on_chunk``
+callback), so its steady-state throughput must stay within 5% of the
+unsupervised path (acceptance bar: >= 0.95x, interleaved repeats,
+medians). The second half injects a deterministic mid-run kill through
+``repro.runtime.chaos`` and measures what recovery costs: restart count,
+supervisor recovery seconds per restart (backoff + backend rebuild +
+checkpoint restore), and the bitwise-equality check that the recovered
+state matches an uninterrupted run.
+
+Emits results/BENCH_recovery.json (schema in docs/BENCHMARKS.md, gated
+by tools/check_bench.py).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks._common import bench_corpus
+from repro.lda.api import LDAEngine, SupervisePolicy
+from repro.lda.model import LDAConfig
+from repro.runtime import chaos
+
+N_TOPICS = 32
+WARMUP_ITERS = 15
+TIMED_ITERS = 10
+CHECKPOINT_EVERY = 5
+REPEATS = 3
+RECOVERY_ITERS = 12
+
+
+def _corpus():
+    return bench_corpus(n_docs=400, n_words=1200, mean_doc_len=120,
+                        exponent=1.25)
+
+
+def _cfg(n_iters_per_eval: int) -> LDAConfig:
+    return LDAConfig(n_topics=N_TOPICS, tile_size=8192,
+                     sampler="three_branch", eval_every=n_iters_per_eval)
+
+
+def bench(out_path: str = "results/BENCH_recovery.json") -> dict:
+    c = _corpus()
+    tmp = tempfile.mkdtemp(prefix="bench-recovery-")
+    try:
+        # -- supervised vs unsupervised throughput (same engine, same
+        #    compiled functions, same checkpoint cadence: the measured
+        #    delta is the supervisor wrapper itself) --------------------
+        cfg = _cfg(TIMED_ITERS)
+        eng = LDAEngine(c, cfg, backend="single",
+                        checkpoint_dir=os.path.join(tmp, "throughput"))
+        eng.fit(WARMUP_ITERS)                        # compile + converge
+        policy = SupervisePolicy(checkpoint_every=CHECKPOINT_EVERY)
+        ts_u, ts_s = [], []
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            eng.fit(TIMED_ITERS, checkpoint_every=CHECKPOINT_EVERY)
+            ts_u.append(c.n_tokens * TIMED_ITERS
+                        / (time.perf_counter() - t0))
+            t0 = time.perf_counter()
+            eng.fit(TIMED_ITERS, supervise=policy)
+            ts_s.append(c.n_tokens * TIMED_ITERS
+                        / (time.perf_counter() - t0))
+
+        # -- recovery: killed mid-run, restored, bitwise-checked --------
+        cfg_r = _cfg(RECOVERY_ITERS)
+        ref = LDAEngine(c, cfg_r, backend="single")
+        ref.fit(RECOVERY_ITERS)
+        want = ref.host_payload()
+
+        victim = LDAEngine(c, cfg_r, backend="single",
+                           checkpoint_dir=os.path.join(tmp, "recovery"))
+        kill_at = RECOVERY_ITERS // 2 + 1
+        with chaos.active(chaos.FaultPlan(raise_at_steps=(kill_at,))):
+            hist = victim.fit(RECOVERY_ITERS,
+                              supervise=SupervisePolicy(
+                                  checkpoint_every=CHECKPOINT_EVERY,
+                                  backoff_base=0.0))
+        rep = hist["restart_report"]
+        got = victim.host_payload()
+        bitwise = all(np.array_equal(np.asarray(want[k]),
+                                     np.asarray(got[k]))
+                      for k in ("topics_global", "key", "iteration"))
+
+        result = {
+            "corpus": {"docs": c.n_docs, "words": c.n_words,
+                       "tokens": c.n_tokens},
+            "n_topics": N_TOPICS,
+            "n_iters": TIMED_ITERS,
+            "checkpoint_every": CHECKPOINT_EVERY,
+            "repeats": REPEATS,
+            "unsupervised_tokens_per_sec": float(np.median(ts_u)),
+            "supervised_tokens_per_sec": float(np.median(ts_s)),
+            # acceptance bar: >= 0.95 (supervision is near-free when
+            # nothing fails)
+            "supervised_over_unsupervised":
+                float(np.median(ts_s) / np.median(ts_u)),
+            "recovery_iters": RECOVERY_ITERS,
+            "restarts": int(rep.restarts),
+            "recovery_seconds_per_restart":
+                float(np.mean(rep.recovery_seconds))
+                if rep.recovery_seconds else 0.0,
+            "bitwise_equal_after_recovery": bool(bitwise),
+        }
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def run():
+    """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
+    r = bench()
+    yield ("recovery/unsupervised_tokens_per_sec", 0.0,
+           round(r["unsupervised_tokens_per_sec"], 0))
+    yield ("recovery/supervised_tokens_per_sec", 0.0,
+           round(r["supervised_tokens_per_sec"], 0))
+    yield ("recovery/supervised_over_unsupervised", 0.0,
+           round(r["supervised_over_unsupervised"], 3))
+    yield ("recovery/restarts", 0.0, r["restarts"])
+    yield ("recovery/recovery_seconds_per_restart", 0.0,
+           round(r["recovery_seconds_per_restart"], 4))
+    yield ("recovery/bitwise_equal", 0.0,
+           int(r["bitwise_equal_after_recovery"]))
+
+
+if __name__ == "__main__":
+    print(json.dumps(bench(), indent=2))

@@ -23,10 +23,11 @@ MODULES = [
     "fig19_streaming",     # streamed vs resident tokens/sec + device bytes
     "fused_step",          # seed vs fused steady-state tokens/sec
     "serve_lda",           # FrozenLDAModel fold-in docs/sec
+    "recovery",            # supervised-fit overhead + restart recovery cost
 ]
 
 QUICK_SKIP = {"fig16_scaling", "fig19_streaming", "fused_step",
-              "serve_lda"}                                  # long warmup
+              "serve_lda", "recovery"}                      # long warmup
 
 
 def main(argv=None) -> int:

@@ -55,6 +55,16 @@ class CheckpointManager:
             f.flush()
             os.fsync(f.fileno())
         os.replace(tmp, final)                 # atomic publish
+        # fsync the directory too: the rename itself must be durable, or a
+        # power cut after save() can leave neither tmp nor final on disk
+        try:
+            dirfd = os.open(self.dir, os.O_RDONLY)
+            try:
+                os.fsync(dirfd)
+            finally:
+                os.close(dirfd)
+        except OSError:
+            pass                   # platforms without directory fsync
         self._gc()
         return final
 
@@ -96,10 +106,18 @@ class CheckpointManager:
             return None                        # torn/corrupt file
         return arrs
 
-    def restore_latest(self) -> dict[str, np.ndarray] | None:
-        """Newest valid checkpoint, skipping corrupt ones (fault tolerance)."""
+    def restore_latest(self, log_fn=None) -> dict[str, np.ndarray] | None:
+        """Newest valid checkpoint, skipping corrupt ones (fault tolerance).
+
+        ``log_fn`` (optional) is told about every checkpoint that was
+        skipped as unreadable/corrupt — the supervisor surfaces these so a
+        walk-back is visible, not silent.
+        """
         for step in reversed(self.all_steps()):
             payload = self.restore(step)
             if payload is not None:
                 return payload
+            if log_fn is not None:
+                log_fn(f"checkpoint step {step} unreadable or corrupt; "
+                       "walking back to the previous one")
         return None

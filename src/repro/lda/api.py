@@ -57,6 +57,7 @@ Canonical checkpoint format (all backends, all formats)
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, NamedTuple, Sequence
 
 import jax
@@ -68,8 +69,11 @@ from repro.core import llpt as llpt_mod, three_branch
 from repro.lda.corpus import Corpus, from_documents, relabel_by_frequency
 from repro.lda.model import LDAConfig
 from repro.lda.trainer import run_boundary_chunked
+from repro.runtime.fault import (RestartReport, StepTimer, SupervisePolicy,
+                                 is_oom_error, supervised_loop)
 
-__all__ = ["LDAEngine", "FrozenLDAModel", "FoldInBatch", "FoldInResult"]
+__all__ = ["LDAEngine", "FrozenLDAModel", "FoldInBatch", "FoldInResult",
+           "SupervisePolicy", "RestartReport"]
 
 
 # ---------------------------------------------------------------------------
@@ -530,8 +534,10 @@ class _SingleBackend:
             return self.trainer.fused_pipeline().stream_payload(state)
         return self._to_canonical(state.host_payload())
 
-    def run(self, n_iters: int, state, log_fn, checkpoint_every):
-        return self.trainer.run(n_iters, state, log_fn, checkpoint_every)
+    def run(self, n_iters: int, state, log_fn, checkpoint_every,
+            on_chunk=None):
+        return self.trainer.run(n_iters, state, log_fn, checkpoint_every,
+                                on_chunk=on_chunk)
 
     def evaluate(self, state) -> float:
         return self.trainer.evaluate(self._as_lda_state(state))
@@ -597,7 +603,8 @@ class _DistBackend:
             alpha=self.config.alpha_, beta=self.config.beta,
             tile_size=self.config.tile_size))
 
-    def run(self, n_iters: int, state, log_fn, checkpoint_every):
+    def run(self, n_iters: int, state, log_fn, checkpoint_every,
+            on_chunk=None):
         """Boundary-chunked scan loop: the multi-device mirror of
         LDATrainer.run_fused — same shared driver, so same history
         schema, eval cadence, and checkpoint timing by construction."""
@@ -607,6 +614,8 @@ class _DistBackend:
         def run_chunk(chunk):
             carry["s"], stats = tr.run_fused(carry["s"], chunk)
             jax.block_until_ready(carry["s"].topics)
+            if self.config.selfcheck:
+                tr.selfcheck(carry["s"])
             return stats
 
         history = run_boundary_chunked(
@@ -619,7 +628,8 @@ class _DistBackend:
             save=None if self.manager is None else
             lambda it: self.manager.save(
                 it, self.canonical_payload(carry["s"])),
-            log_fn=log_fn)
+            log_fn=log_fn,
+            on_chunk=on_chunk)
         return carry["s"], history
 
     def dense_W(self, state) -> np.ndarray:
@@ -681,7 +691,20 @@ class LDAEngine:
             checkpoint_manager = CheckpointManager(checkpoint_dir)
         self.checkpoint_manager = checkpoint_manager
 
-        # -- backend selection ----------------------------------------------
+        # -- backend selection (re-runnable: _rebuild_backend re-enters it
+        #    after a supervised restart, picking up device-count changes) --
+        self._backend_arg = backend
+        self._mesh = mesh
+        self._pad_multiple = pad_multiple
+        self._device_count = jax.device_count()
+        self._backend = self._make_backend()
+        self._state = None
+        self.restart_report: RestartReport | None = None
+        self.history: dict[str, list] = {"iteration": [], "llpt": [],
+                                         "tokens_per_sec": [], "stats": []}
+
+    def _make_backend(self):
+        backend, mesh = self._backend_arg, self._mesh
         if backend == "auto":
             # an explicit mesh is an explicit request for shard_map
             backend = "distributed" if (mesh is not None
@@ -691,14 +714,26 @@ class LDAEngine:
         if backend == "single":
             if mesh is not None:
                 raise ValueError("backend='single' does not take a mesh")
-            self._backend = _SingleBackend(corpus, config,
-                                           checkpoint_manager)
-        else:
-            self._backend = _DistBackend(corpus, config, checkpoint_manager,
-                                         mesh, pad_multiple=pad_multiple)
-        self._state = None
-        self.history: dict[str, list] = {"iteration": [], "llpt": [],
-                                         "tokens_per_sec": [], "stats": []}
+            return _SingleBackend(self.corpus, self.config,
+                                  self.checkpoint_manager)
+        return _DistBackend(self.corpus, self.config,
+                            self.checkpoint_manager, mesh,
+                            pad_multiple=self._pad_multiple)
+
+    def _rebuild_backend(self, report: RestartReport | None = None) -> None:
+        """Re-run backend selection (supervised recovery path).
+
+        Counts are derived state and the checkpoint format is canonical,
+        so a restart is elastic: if the visible device count changed, the
+        rebuilt backend re-shards onto whatever is there now.
+        """
+        new_count = jax.device_count()
+        if new_count != self._device_count:
+            if report is not None:
+                report.elastic_reshards.append((self._device_count,
+                                                new_count))
+            self._device_count = new_count
+        self._backend = self._make_backend()
 
     # -- introspection -------------------------------------------------------
 
@@ -725,10 +760,25 @@ class LDAEngine:
     # -- lifecycle -----------------------------------------------------------
 
     def fit(self, n_iters: int, *, log_fn: Callable[[str], None] | None = None,
-            checkpoint_every: int | None = None) -> dict[str, list]:
+            checkpoint_every: int | None = None,
+            supervise: SupervisePolicy | bool | None = None
+            ) -> dict[str, list]:
         """Train for n_iters (resuming from the engine's current state, a
         checkpoint if one exists, or a fresh init). Returns this call's
-        history; ``engine.history`` accumulates across calls."""
+        history; ``engine.history`` accumulates across calls.
+
+        ``supervise=SupervisePolicy(...)`` (or ``True`` for the defaults)
+        turns the call into a supervised run: restartable faults (see
+        ``SupervisePolicy.restartable``) trigger restore-from-newest-valid-
+        checkpoint with bounded exponential backoff instead of crashing,
+        an OOM on the resident path degrades once to streamed residency,
+        and the returned history carries a ``"restart_report"`` entry
+        (also ``engine.restart_report``). Requires a checkpoint manager.
+        """
+        if supervise is not None and supervise is not False:
+            policy = SupervisePolicy() if supervise is True else supervise
+            return self._fit_supervised(n_iters, policy, log_fn=log_fn,
+                                        checkpoint_every=checkpoint_every)
         if self._state is None:
             self._state = self._backend.restore_or_init()
         self._state, hist = self._backend.run(
@@ -736,6 +786,156 @@ class LDAEngine:
         for k, v in hist.items():
             self.history.setdefault(k, []).extend(v)
         return hist
+
+    def _fit_supervised(self, n_iters: int, policy: SupervisePolicy, *,
+                        log_fn: Callable[[str], None] | None = None,
+                        checkpoint_every: int | None = None
+                        ) -> dict[str, list]:
+        """fit() under a restart supervisor (DESIGN.md §11).
+
+        Each attempt restores from the newest VALID checkpoint (corrupt
+        ones are walked past), replays deterministically, and — because
+        restore + replay is bit-identical to never having crashed — the
+        final state matches an uninterrupted run bitwise. With
+        ``policy.checkpoint_shards`` set (single streamed backend only),
+        checkpoints are cut every k shards MID-epoch via the stream
+        payload extension; step keys are scaled to ``it*(S+1)+cursor`` so
+        they stay monotonic against epoch-boundary saves.
+        """
+        import time as _time
+
+        from repro.runtime import chaos
+        from repro.train.lda_step import StreamState
+
+        if self.checkpoint_manager is None:
+            raise ValueError("fit(supervise=...) needs checkpoint_dir or "
+                             "checkpoint_manager: restart recovery is "
+                             "restore-from-checkpoint")
+        shardwise = policy.checkpoint_shards is not None
+        if shardwise and not (
+                self.backend_name == "single"
+                and getattr(self._backend.trainer, "residency", None)
+                == "streamed"):
+            raise ValueError(
+                "SupervisePolicy.checkpoint_shards needs the single "
+                "streamed backend (corpus_residency='streamed'): mid-epoch "
+                "payloads only exist on the streaming pipeline")
+        ckpt_every = checkpoint_every or policy.checkpoint_every
+        report = RestartReport(completed_steps=0, restarts=0,
+                               resumed_from=[])
+        timer = StepTimer(window=policy.straggler_window,
+                          z_threshold=policy.straggler_z)
+        target: dict[str, int | None] = {"v": None}
+        merged: dict[str, list] = {"iteration": [], "llpt": [],
+                                   "tokens_per_sec": [], "stats": []}
+        seen_iters: set[int] = set()
+
+        def merge_hist(hist: dict[str, list]) -> None:
+            # restarts replay iterations; dedup so history stays monotone
+            for i, it in enumerate(hist["iteration"]):
+                if it in seen_iters:
+                    continue
+                seen_iters.add(it)
+                for k in merged:
+                    merged[k].append(hist[k][i])
+
+        def ensure_state() -> None:
+            if self._state is None:
+                payload = self.checkpoint_manager.restore_latest(
+                    log_fn=log_fn)
+                if payload is not None:
+                    self._state = self._backend.state_from_canonical(
+                        payload)
+                    report.resumed_from.append(self.iteration)
+                else:
+                    self._state = self._backend.restore_or_init()
+            if target["v"] is None:
+                target["v"] = self.iteration + n_iters
+
+        def on_chunk(it: int, chunk: int, dt: float) -> None:
+            if timer.record(dt / max(chunk, 1)):
+                report.straggler_steps.append(it)
+
+        def attempt_run() -> None:
+            ensure_state()
+            remaining = target["v"] - self.iteration
+            if remaining <= 0:
+                return
+            self._state, hist = self._backend.run(
+                remaining, self._state, log_fn, ckpt_every,
+                on_chunk=on_chunk)
+            merge_hist(hist)
+
+        def attempt_shardwise() -> None:
+            ensure_state()
+            pipe = self._backend.trainer.fused_pipeline()
+            mgr = self.checkpoint_manager
+            S = pipe.stream.n_shards
+            k = int(policy.checkpoint_shards)
+            # a fresh init (or boundary restore) arrives as LDAState;
+            # from_lda_state converts it and passes StreamState through
+            ss = pipe.from_lda_state(self._state)
+            assert isinstance(ss, StreamState)
+            first = not merged["iteration"]
+            while int(ss.iteration) < target["v"]:
+                if chaos.armed():
+                    chaos.step_range(int(ss.iteration), 1)
+                ep_t0 = _time.perf_counter()
+                while ss.cursor < S:
+                    t0 = _time.perf_counter()
+                    ss = pipe.run_shards(ss, k)
+                    self._state = ss
+                    dt = _time.perf_counter() - t0
+                    step_key = int(ss.iteration) * (S + 1) + ss.cursor
+                    if timer.record(dt / max(min(k, S), 1)):
+                        report.straggler_steps.append(step_key)
+                    if ss.cursor < S:       # boundary save covers cursor==S
+                        mgr.save(step_key, pipe.stream_payload(ss))
+                ss, stats, _ = pipe.run_fused(ss, 1)   # close the epoch
+                self._state = ss
+                dt = _time.perf_counter() - ep_t0
+                it = int(ss.iteration)
+                mgr.save(it * (S + 1), pipe.stream_payload(ss))
+                if it % self.config.eval_every == 0 or first:
+                    first = False
+                    last = {kk: float(np.asarray(v)[-1])
+                            for kk, v in stats._asdict().items()}
+                    merge_hist({"iteration": [it],
+                                "llpt": [self._backend.evaluate(ss)],
+                                "tokens_per_sec":
+                                    [self.corpus.n_tokens / dt],
+                                "stats": [last]})
+                    if log_fn:
+                        log_fn(f"iter={it:4d} llpt={merged['llpt'][-1]:+.4f}"
+                               f" tok/s={self.corpus.n_tokens / dt:,.0f}")
+
+        def recover(exc: BaseException) -> None:
+            self._state = None      # next attempt restores from checkpoint
+            if is_oom_error(exc) and not report.degraded_to_streamed \
+                    and self.config.corpus_residency != "streamed":
+                warnings.warn(
+                    "supervised fit hit an out-of-memory fault on the "
+                    f"resident path ({exc}); degrading once to "
+                    "corpus_residency='streamed' and restoring from the "
+                    "newest checkpoint", RuntimeWarning, stacklevel=2)
+                self.config = dataclasses.replace(
+                    self.config, corpus_residency="streamed")
+                report.degraded_to_streamed = True
+            self._rebuild_backend(report)
+
+        supervised_loop(attempt_shardwise if shardwise else attempt_run,
+                        recover, policy, report)
+        if not shardwise and self.iteration % ckpt_every != 0:
+            self.checkpoint_manager.save(
+                self.iteration, self._backend.canonical_payload(self._state))
+        report.completed_steps = self.iteration
+        report.timer_summary = timer.summary
+        self.restart_report = report
+        for k, v in merged.items():
+            self.history.setdefault(k, []).extend(v)
+        out: dict[str, Any] = dict(merged)
+        out["restart_report"] = report
+        return out
 
     def resume(self) -> "LDAEngine":
         """Restore the newest checkpoint into the engine (explicit resume).

@@ -14,6 +14,7 @@ trainer moves the resulting arrays onto devices.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from typing import Sequence
 
 import numpy as np
@@ -290,6 +291,33 @@ class ShardedCorpus:
     def real_per_shard(self) -> np.ndarray:
         """(S,) int64 — REAL (unpadded) tokens per shard."""
         return np.clip(self.n_tokens - self.global_lo, 0, self.shard_len)
+
+    @staticmethod
+    def slice_checksum(word_ids: np.ndarray, doc_ids: np.ndarray,
+                       mask: np.ndarray) -> int:
+        """crc32 over one shard slice's (word, doc, mask) bytes."""
+        crc = zlib.crc32(np.ascontiguousarray(word_ids))
+        crc = zlib.crc32(np.ascontiguousarray(doc_ids), crc)
+        return zlib.crc32(np.ascontiguousarray(mask), crc)
+
+    @property
+    def shard_checksums(self) -> np.ndarray:
+        """(S,) uint32 — per-shard crc32 over (word, doc, mask) bytes.
+
+        Lazy + cached like the index slices (one pass over the stream,
+        and only the self-checking loaders consume it): the streaming
+        pipelines verify each slice against this on load under
+        ``config.selfcheck`` (or an armed chaos plan), so host-buffer
+        corruption surfaces at the load instead of poisoning counts.
+        """
+        cached = self.__dict__.get("_shard_checksums")
+        if cached is None:
+            cached = np.zeros(self.n_shards, np.uint32)
+            for s in range(self.n_shards):
+                cached[s] = self.slice_checksum(
+                    self.word_ids[s], self.doc_ids[s], self.mask[s])
+            object.__setattr__(self, "_shard_checksums", cached)
+        return cached
 
     def token_bytes_resident(self) -> int:
         """Device bytes of the resident token representation this replaces

@@ -55,8 +55,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import balance as balance_mod
 from repro.core import sparse, three_branch
+from repro.lda import invariants
 from repro.lda.corpus import Corpus, chunk_documents
 from repro.lda.model import HybridLayout, LDAConfig
+from repro.runtime import chaos
 from repro.runtime.compat import shard_map as _shard_map
 from repro.runtime.sharding import batch_axes
 
@@ -533,7 +535,8 @@ class _StreamedDistMixin:
             shared_slot=None if sc.shared_slot is None else _extend_cols(
                 sc.shared_slot, total,
                 int(sc.shared_rows.shape[1])))
-        self._prefetch = _Prefetcher()
+        self._prefetch = _Prefetcher(
+            deadline_s=getattr(self.cfg, "stream_watchdog_seconds", None))
         self._stream_begin_fn = None
         self._stream_sub_fn = None
         self._stream_end_fn = None
@@ -721,6 +724,8 @@ class _StreamedDistMixin:
 
     def _put_substream(self, r: int, host_topics: np.ndarray,
                        u_host: np.ndarray):
+        if chaos.armed():
+            chaos.io_fault(r)
         st = self.stream
         cols = slice(r * st.sub_len, (r + 1) * st.sub_len)
         dev = NamedSharding(self.mesh, P(self.data_axes))
@@ -751,6 +756,8 @@ class _StreamedDistMixin:
         pending = []                # one-deep deferred D2H (no bubbles)
         while ss.cursor < st.n_sub:
             r = ss.cursor
+            if chaos.armed():
+                chaos.shard_event(ss.iteration, r)
             if r + 1 < st.n_sub:
                 self._prefetch.submit(self._put_substream, r + 1,
                                       ss.host_topics, ep.u_host)
@@ -1023,6 +1030,10 @@ class DistLDATrainer(_StreamedDistMixin):
         sync, no per-iteration dispatch. Returns (state, stacked stats)
         where each stats leaf has a leading (n_iters,) axis.
         """
+        if chaos.armed():
+            # host-level chaos surface for the traced _dist_step: the int()
+            # sync only happens with a plan armed, never in production
+            chaos.step_range(int(state.iteration), int(n_iters))
         if isinstance(state, DistStreamState):
             return self._stream_run(state, n_iters)
         fn = self._scan_cache.get(n_iters)
@@ -1139,4 +1150,14 @@ class DistLDATrainer(_StreamedDistMixin):
                 rows, d_rows = rows[sel], d_rows[sel]
             D[rows] += d_rows
         return D, W
+
+    def selfcheck(self, state) -> None:
+        """Count-invariant tripwire on the gathered global counts
+        (``config.selfcheck``; called at chunk boundaries by the engine's
+        distributed backend — a gather per boundary, not per step)."""
+        D, W = self.gather_global(state)
+        invariants.check_dense_counts(
+            D, W, n_tokens=self.corpus.n_tokens,
+            where=f"distributed chunk boundary (iteration "
+                  f"{int(state.iteration)})")
 

@@ -1,0 +1,136 @@
+"""Count-invariant tripwires: cheap structural self-checks on sampler state.
+
+ESCA's whole state is redundant by construction — ``D``, ``W``, and
+``colsum`` are all derived from the token-topic assignment — and the
+streaming pipelines keep a third copy of that redundancy in the deferred
+ΔD/ΔW delta matrices. That redundancy is a free error detector: any
+silent corruption (a bad host buffer, a miscompiled kernel, a logic bug
+in an epoch apply) breaks at least one of the equalities below long
+before it shows up as a bad model.
+
+Enabled with ``LDAConfig(selfcheck=True)``, the checks run at epoch
+close (streamed) or chunk boundaries (resident) on host copies of the
+counts — they cost a D2H transfer plus some numpy sums, so they are
+opt-in. A failure raises :class:`InvariantViolation`, a ``RuntimeError``
+subclass carrying ``(invariant, where, detail)``; the fit supervisor
+(``LDAEngine.fit(supervise=...)``) classifies it as restartable and
+walks back to the newest valid checkpoint.
+
+Invariants:
+
+  * **non_negative_counts** — no count cell ever goes below zero.
+  * **token_conservation** — ``sum(D) == sum(W) == n_real_tokens``
+    (padded tokens carry ``mask == 0`` and contribute nothing).
+  * **colsum_matches_w** — the maintained per-topic total equals the
+    column-sum of ``W``.
+  * **delta_conservation** — mid-epoch ΔD/ΔW/Δcolsum each sum to zero
+    (every token move is a −1 somewhere and a +1 somewhere else).
+  * **packed_overflow** — the hybrid packed state never overflowed a
+    bucket (``overflow == 0``).
+  * **theta_finite** / **finite_llpt** — fold-in θ and evaluation
+    log-likelihood are finite (NaN poisoning trips here, not three
+    epochs later).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["InvariantViolation", "ShardCorruptionError",
+           "check_dense_counts", "check_delta_conservation",
+           "check_packed_counts", "check_theta"]
+
+
+class InvariantViolation(RuntimeError):
+    """A structural invariant of the sampler state failed.
+
+    ``RuntimeError`` subclass so the fit supervisor treats it as
+    restartable: the counts no longer describe the topic assignment, and
+    the only safe continuation is from the newest valid checkpoint.
+    """
+
+    def __init__(self, invariant: str, where: str, detail: str):
+        self.invariant = invariant
+        self.where = where
+        self.detail = detail
+        super().__init__(
+            f"invariant {invariant!r} violated at {where}: {detail} "
+            "— restore from the newest checkpoint")
+
+
+class ShardCorruptionError(RuntimeError):
+    """A streamed shard's bytes failed their crc32 self-check on load."""
+
+
+def check_dense_counts(D, W, colsum=None, *, n_tokens: int,
+                       where: str) -> None:
+    """Dense-count invariants: non-negative, token-conserving, and (when
+    ``colsum`` is maintained) colsum == column-sum of W."""
+    D = np.asarray(D)
+    W = np.asarray(W)
+    if int(D.min(initial=0)) < 0 or int(W.min(initial=0)) < 0:
+        raise InvariantViolation(
+            "non_negative_counts", where,
+            f"min(D)={int(D.min(initial=0))}, min(W)={int(W.min(initial=0))}")
+    td = int(D.sum(dtype=np.int64))
+    tw = int(W.sum(dtype=np.int64))
+    if td != int(n_tokens) or tw != int(n_tokens):
+        raise InvariantViolation(
+            "token_conservation", where,
+            f"sum(D)={td}, sum(W)={tw}, expected {int(n_tokens)}")
+    if colsum is not None:
+        cs = np.asarray(colsum).astype(np.int64)
+        want = W.sum(axis=0, dtype=np.int64)
+        if not np.array_equal(cs, want):
+            bad = int(np.argmax(cs != want))
+            raise InvariantViolation(
+                "colsum_matches_w", where,
+                f"colsum[{bad}]={int(cs[bad])} != sum(W[:, {bad}])="
+                f"{int(want[bad])}")
+
+
+def check_delta_conservation(dD, dW, dcolsum=None, *,
+                             where: str) -> None:
+    """Mid-epoch delta invariants: every deferred ΔD/ΔW/Δcolsum sums to
+    zero — a token moving topics is a −1 and a +1, never a net change."""
+    for name, delta in (("dD", dD), ("dW", dW), ("dcolsum", dcolsum)):
+        if delta is None:
+            continue
+        total = int(np.asarray(delta).sum(dtype=np.int64))
+        if total != 0:
+            raise InvariantViolation(
+                "delta_conservation", where,
+                f"sum({name})={total}, expected 0")
+
+
+def check_packed_counts(colsum, overflow, *, n_tokens: int,
+                        where: str) -> None:
+    """Hybrid packed-state invariants: no bucket overflow, colsum
+    non-negative and token-conserving."""
+    ov = int(np.asarray(overflow))
+    if ov != 0:
+        raise InvariantViolation(
+            "packed_overflow", where,
+            f"{ov} packed-row inserts overflowed their bucket")
+    cs = np.asarray(colsum)
+    if int(cs.min(initial=0)) < 0:
+        raise InvariantViolation(
+            "non_negative_counts", where,
+            f"min(colsum)={int(cs.min(initial=0))}")
+    total = int(cs.sum(dtype=np.int64))
+    if total != int(n_tokens):
+        raise InvariantViolation(
+            "token_conservation", where,
+            f"sum(colsum)={total}, expected {int(n_tokens)}")
+
+
+def check_theta(theta, *, where: str) -> None:
+    """θ must be finite and non-negative (NaN/Inf poisoning tripwire)."""
+    th = np.asarray(theta)
+    if not np.isfinite(th).all():
+        bad = int((~np.isfinite(th)).sum())
+        raise InvariantViolation(
+            "theta_finite", where, f"{bad} non-finite entries in theta")
+    if float(th.min(initial=0.0)) < 0.0:
+        raise InvariantViolation(
+            "theta_finite", where, f"min(theta)={float(th.min()):.3g} < 0")

@@ -33,6 +33,8 @@ class LDAConfig:
     corpus_residency: str = "full"   # token list T: "full" | "streamed" | "auto"
     stream_shards: int | None = None  # epoch shards when streamed; None=auto
     device_budget_bytes: int | None = None  # residency budget; None=device-derived
+    selfcheck: bool = False          # count-invariant tripwires (invariants.py)
+    stream_watchdog_seconds: float | None = None  # prefetch deadline; None=off
     seed: int = 0
     eval_every: int = 10
 
@@ -88,6 +90,11 @@ class LDAConfig:
                 f"stream_shards={self.stream_shards} must be >= 2 (or None "
                 "for the budget-derived count): streaming needs at least "
                 "a resident shard and a prefetched shard")
+        if self.stream_watchdog_seconds is not None \
+                and self.stream_watchdog_seconds <= 0:
+            raise ValueError(
+                f"stream_watchdog_seconds={self.stream_watchdog_seconds} "
+                "must be > 0 (or None to wait on prefetch indefinitely)")
 
     @property
     def alpha_(self) -> float:

@@ -24,8 +24,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import esca, llpt as llpt_mod
+from repro.lda import invariants
 from repro.lda.corpus import Corpus, pad_corpus
 from repro.lda.model import LDAConfig, LDAState
+from repro.runtime import chaos
 
 __all__ = ["LDATrainer", "chunk_to_boundary", "run_boundary_chunked"]
 
@@ -54,7 +56,8 @@ def run_boundary_chunked(n_iters: int, start_iter: int, *, n_tokens: int,
                          eval_every: int, checkpoint_every: int | None,
                          run_chunk: Callable, evaluate: Callable,
                          save: Callable | None,
-                         log_fn: Callable[[str], None] | None) -> dict:
+                         log_fn: Callable[[str], None] | None,
+                         on_chunk: Callable | None = None) -> dict:
     """The ONE boundary-chunked driver both backends run fit() through.
 
     ``run_chunk(chunk) -> stacked stats`` advances the caller's carried
@@ -64,6 +67,11 @@ def run_boundary_chunked(n_iters: int, start_iter: int, *, n_tokens: int,
     and checkpoint timing live only here, so the single and distributed
     backends cannot drift apart (the engine's same-history-shape
     contract).
+
+    ``on_chunk(it, chunk, dt)`` (optional) observes every chunk's wall
+    time — the fit supervisor's straggler detector rides here without
+    changing the chunking or paying extra host syncs. Being the one
+    driver, this is also where step-indexed chaos faults fire.
     """
     history: dict[str, list] = {"iteration": [], "llpt": [],
                                 "tokens_per_sec": [], "stats": []}
@@ -72,10 +80,16 @@ def run_boundary_chunked(n_iters: int, start_iter: int, *, n_tokens: int,
         chunk = chunk_to_boundary(start_iter + done, done, n_iters - done,
                                   eval_every, checkpoint_every)
         t0 = time.perf_counter()
+        # inside the timed window: an injected slow step shows up in its
+        # own chunk's wall time (the straggler detector's test surface)
+        if chaos.armed():
+            chaos.step_range(start_iter + done, chunk)
         stats = run_chunk(chunk)
         dt = time.perf_counter() - t0
         done += chunk
         it = start_iter + done
+        if on_chunk is not None:
+            on_chunk(it, chunk, dt)
         if it % eval_every == 0 or done == chunk:
             score = evaluate()
             last = {k: float(np.asarray(v)[-1])
@@ -290,16 +304,22 @@ class LDATrainer:
         return state.nbytes()
 
     def evaluate(self, state: LDAState) -> float:
-        return float(llpt_mod.llpt(
+        score = float(llpt_mod.llpt(
             self.word_ids, self.doc_ids, self.mask, state.D, state.W,
             alpha=self.config.alpha_, beta=self.config.beta,
             tile_size=self.config.tile_size))
+        if self.config.selfcheck and not np.isfinite(score):
+            raise invariants.InvariantViolation(
+                "finite_llpt", f"evaluate (iteration "
+                f"{int(state.iteration)})", f"llpt={score!r}")
+        return score
 
     # -- loop -------------------------------------------------------------
 
     def run_fused(self, n_iters: int, state: LDAState | None = None,
                   log_fn: Callable[[str], None] | None = None,
-                  checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
+                  checkpoint_every: int | None = None, *,
+                  on_chunk: Callable | None = None) -> tuple[LDAState, dict]:
         """Fused loop: eval-free stretches run as ONE scanned dispatch.
 
         Iterations between eval/checkpoint boundaries never touch the host;
@@ -308,10 +328,13 @@ class LDATrainer:
         state = self.restore_or_init() if state is None else state
         pipe = self.fused_pipeline()
         carry = {"fs": pipe.from_lda_state(state)}
+        selfcheck = self.config.selfcheck
 
         def run_chunk(chunk):
             carry["fs"], stats, _ = pipe.run_fused(carry["fs"], chunk)
             jax.block_until_ready(carry["fs"].topics)
+            if selfcheck:
+                pipe.selfcheck(carry["fs"])
             return stats
 
         history = run_boundary_chunked(
@@ -324,27 +347,37 @@ class LDATrainer:
             save=None if self.checkpoint_manager is None else
             lambda it: self.checkpoint_manager.save(
                 it, pipe.to_lda_state(carry["fs"]).host_payload()),
-            log_fn=log_fn)
+            log_fn=log_fn, on_chunk=on_chunk)
         return pipe.to_lda_state(carry["fs"]), history
 
     def run(self, n_iters: int, state: LDAState | None = None,
             log_fn: Callable[[str], None] | None = None,
-            checkpoint_every: int | None = None) -> tuple[LDAState, dict]:
+            checkpoint_every: int | None = None, *,
+            on_chunk: Callable | None = None) -> tuple[LDAState, dict]:
         # The hybrid live state only exists inside the fused pipeline, and
         # a streamed corpus only exists as the pipeline's epoch shards; the
         # per-iteration step() stays the dense resident semantics oracle.
         if self.config.fused or self.config.format == "hybrid" \
                 or self.residency == "streamed":
-            return self.run_fused(n_iters, state, log_fn, checkpoint_every)
+            return self.run_fused(n_iters, state, log_fn, checkpoint_every,
+                                  on_chunk=on_chunk)
         state = self.restore_or_init() if state is None else state
         history: dict[str, list] = {"iteration": [], "llpt": [],
                                     "tokens_per_sec": [], "stats": []}
         start_iter = int(state.iteration)
         for i in range(start_iter, start_iter + n_iters):
             t0 = time.perf_counter()
+            if chaos.armed():
+                chaos.step_range(i, 1)
             state, stats = self.step(state)
             jax.block_until_ready(state.topics)
             dt = time.perf_counter() - t0
+            if self.config.selfcheck:
+                invariants.check_dense_counts(
+                    state.D, state.W, n_tokens=self.corpus.n_tokens,
+                    where=f"step (iteration {i + 1})")
+            if on_chunk is not None:
+                on_chunk(i + 1, 1, dt)
             if (i + 1) % self.config.eval_every == 0 or i == start_iter:
                 score = self.evaluate(state)
                 history["iteration"].append(i + 1)

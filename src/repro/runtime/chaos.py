@@ -1,0 +1,192 @@
+"""Deterministic fault injection: the chaos harness behind the recovery tests.
+
+Fault tolerance that is never exercised is a rumor. This module gives every
+recovery path in the stack a deterministic, CPU-testable trigger: a
+``FaultPlan`` names *where* faults fire (step indices, epoch shards,
+prefetch attempts) and the training loops carry opt-in hooks —
+``armed()`` is a single module-global check, so an un-armed run pays one
+``is None`` per hook site and never syncs, sleeps, or raises.
+
+Hook sites (all behind ``armed()``):
+
+  * ``step_range(start, n)`` — iteration-boundary faults, called by the
+    boundary-chunked drivers before each scanned chunk (and by the
+    stepwise oracle loop per iteration): raise-at-step, simulated OOM,
+    slow-step stragglers.
+  * ``shard_event(iteration, shard)`` — mid-epoch faults inside the
+    streaming epoch loops (single-host ``StreamingPipeline._advance`` and
+    the distributed ``_stream_epoch``): kills a run with an epoch open.
+  * ``io_fault(shard)`` / ``corrupt_arrays(shard, arrays)`` — inside the
+    shard slice load (``_put_shard`` / ``_put_substream``), i.e. on the
+    prefetch worker thread: injected I/O errors exercise the prefetcher's
+    retry/backoff, injected bit flips exercise the shard crc32 self-check.
+
+Faults fire ONCE per plan by default (``repeat=False``): after the
+supervisor restarts from a checkpoint the same plan stays installed but
+the fault does not re-fire, so every chaos test converges
+deterministically. Attempt-counted faults (``io_fault_attempts`` /
+``corrupt_attempts``) fire for the first N *load attempts* of a shard —
+set N at or below the prefetcher's retry budget to exercise in-place
+retry, above it to force a supervised restart.
+
+``SimulatedOOM`` deliberately prints as ``RESOURCE_EXHAUSTED`` so the
+engine's OOM classifier (``repro.runtime.fault.is_oom_error``) treats real
+and injected device exhaustion identically.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+from typing import Callable, Mapping
+
+__all__ = ["FaultPlan", "InjectedFault", "SimulatedOOM", "active", "armed",
+           "clear", "corrupt_arrays", "install", "io_fault", "shard_event",
+           "step_range"]
+
+
+class InjectedFault(RuntimeError):
+    """Default exception for raise-at-step faults (a 'node died')."""
+
+
+class SimulatedOOM(RuntimeError):
+    """Injected device-memory exhaustion.
+
+    The message carries ``RESOURCE_EXHAUSTED`` — the substring XLA's real
+    allocator failures carry — so one classifier handles both.
+    """
+
+    def __init__(self, where: str = "chaos"):
+        super().__init__(
+            f"RESOURCE_EXHAUSTED: simulated out-of-memory ({where})")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """Where and how faults fire. Indices are absolute training steps
+    (iterations) or epoch-shard indices; see the module docstring for
+    which hook consumes which field."""
+
+    raise_at_steps: tuple = ()         # InjectedFault at a step boundary
+    raise_at_shards: tuple = ()        # (iteration, shard) mid-epoch kills
+    oom_at_steps: tuple = ()           # SimulatedOOM at a step boundary
+    io_fault_shards: tuple = ()        # OSError from the shard slice load
+    io_fault_attempts: int = 1         # consecutive failing load attempts
+    corrupt_shards: tuple = ()         # flip one bit in the shard's bytes
+    corrupt_attempts: int = 1          # consecutive corrupted load attempts
+    slow_steps: Mapping[int, float] = \
+        dataclasses.field(default_factory=dict)   # step -> extra seconds
+    repeat: bool = False               # re-fire after a restart?
+    exc_factory: Callable[[str], Exception] = InjectedFault
+
+    def __post_init__(self):
+        self._fired: set = set()
+        self._attempts: dict = {}
+
+    def _should_fire(self, key) -> bool:
+        if self.repeat:
+            return True
+        if key in self._fired:
+            return False
+        self._fired.add(key)
+        return True
+
+    def _attempt_count(self, key) -> int:
+        n = self._attempts.get(key, 0) + 1
+        self._attempts[key] = n
+        return n
+
+
+_PLAN: FaultPlan | None = None
+
+
+def install(plan: FaultPlan) -> None:
+    global _PLAN
+    _PLAN = plan
+
+
+def clear() -> None:
+    global _PLAN
+    _PLAN = None
+
+
+def armed() -> bool:
+    """True iff a FaultPlan is installed (the hooks' fast-path guard)."""
+    return _PLAN is not None
+
+
+@contextlib.contextmanager
+def active(plan: FaultPlan):
+    """``with chaos.active(FaultPlan(...)):`` — install for one block."""
+    install(plan)
+    try:
+        yield plan
+    finally:
+        clear()
+
+
+# -- hooks (each is a no-op when no plan is installed) -----------------------
+
+def step_range(start: int, n: int) -> None:
+    """Fire any step-indexed fault whose step falls in [start, start+n).
+
+    Called at chunk granularity: a scanned stretch of ``n`` iterations is
+    one dispatch, so a fault 'at step k' fires at the chunk boundary that
+    covers k — exactly where a real mid-chunk death would be observed
+    from (the in-flight device state is lost either way).
+    """
+    plan = _PLAN
+    if plan is None:
+        return
+    for step in range(int(start), int(start) + int(n)):
+        extra = plan.slow_steps.get(step)
+        if extra is not None and plan._should_fire(("slow", step)):
+            time.sleep(float(extra))
+        if step in plan.oom_at_steps and plan._should_fire(("oom", step)):
+            raise SimulatedOOM(f"step {step}")
+        if step in plan.raise_at_steps \
+                and plan._should_fire(("raise", step)):
+            raise plan.exc_factory(
+                f"chaos: injected failure at step {step}")
+
+
+def shard_event(iteration: int, shard: int) -> None:
+    """Fire a mid-epoch kill planned for (iteration, shard)."""
+    plan = _PLAN
+    if plan is None:
+        return
+    key = (int(iteration), int(shard))
+    if key in plan.raise_at_shards \
+            and plan._should_fire(("raise_shard", key)):
+        raise plan.exc_factory(
+            f"chaos: injected failure at iteration {key[0]}, "
+            f"shard {key[1]} (mid-epoch)")
+
+
+def io_fault(shard: int) -> None:
+    """Raise OSError for the first ``io_fault_attempts`` loads of a shard."""
+    plan = _PLAN
+    if plan is None:
+        return
+    s = int(shard)
+    if s in plan.io_fault_shards \
+            and plan._attempt_count(("io", s)) <= plan.io_fault_attempts:
+        raise OSError(f"chaos: injected prefetch I/O error (shard {s})")
+
+
+def corrupt_arrays(shard: int, arrays: tuple) -> tuple:
+    """Flip one bit in a COPY of the shard's first array for the first
+    ``corrupt_attempts`` loads — the backing store stays clean, so a
+    retry or a supervised restart reloads good bytes."""
+    plan = _PLAN
+    if plan is None:
+        return arrays
+    s = int(shard)
+    if s in plan.corrupt_shards \
+            and plan._attempt_count(("corrupt", s)) \
+            <= plan.corrupt_attempts:
+        first = arrays[0].copy()
+        first.flat[0] ^= 1
+        return (first,) + tuple(arrays[1:])
+    return arrays

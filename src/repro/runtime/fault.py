@@ -6,11 +6,14 @@ valid checkpoint — possibly on a *different* device count (elastic). The
 pieces here are deliberately runtime-agnostic (no TPU APIs): the same logic
 drives the CPU tests and a real launcher.
 
-``run_with_restarts`` is the supervision loop: it executes step functions,
-checkpoints on cadence, and on failure rebuilds the trainer from the newest
-valid checkpoint (CheckpointManager skips torn files). Combined with the
-trainers' layout-independent payloads this gives checkpoint/restart +
-elastic-rescale in one mechanism.
+``SupervisePolicy`` is the knob surface a supervisor runs under: checkpoint
+cadence (iterations, or mid-epoch shard groups for the streamed single-host
+backend), a max-restart budget, bounded exponential backoff between
+restarts, which exception types count as restartable, and the straggler
+detector's window/threshold. ``supervised_loop`` is the generic
+retry-with-recovery skeleton; ``run_with_restarts`` (the original
+trainer-level supervision loop, contract unchanged) is now one instance of
+it, and ``LDAEngine.fit(supervise=...)`` is the other.
 
 ``StepTimer`` is the straggler monitor: per-step wall-times with a robust
 z-score flag. In the static-tile design intra-step stragglers cannot exist
@@ -27,7 +30,10 @@ from typing import Any, Callable
 
 import numpy as np
 
-__all__ = ["StepTimer", "run_with_restarts", "RestartReport"]
+from repro.runtime.chaos import SimulatedOOM
+
+__all__ = ["RestartReport", "StepTimer", "SupervisePolicy", "backoff_delay",
+           "is_oom_error", "run_with_restarts", "supervised_loop"]
 
 
 class StepTimer:
@@ -55,11 +61,105 @@ class StepTimer:
                 "p99": float(np.percentile(t, 99)) if len(t) else 0.0}
 
 
+@dataclasses.dataclass(frozen=True)
+class SupervisePolicy:
+    """How a supervised run checkpoints, restarts, and backs off.
+
+    ``checkpoint_every`` is in iterations. ``checkpoint_shards`` (single-host
+    streamed backend only) switches the cadence to mid-epoch: a checkpoint
+    after every N stream shards, using the rewind-to-epoch-start
+    ``stream_cursor`` payloads. ``restartable`` is the tuple of exception
+    types the supervisor absorbs (anything else propagates immediately);
+    it covers ``InvariantViolation``/``ShardCorruptionError`` (RuntimeError),
+    prefetch I/O faults (OSError) and watchdog expiry (TimeoutError).
+    ``sleep_fn`` exists so tests can supervise without wall-clock delays.
+    """
+
+    checkpoint_every: int = 1
+    checkpoint_shards: int | None = None
+    max_restarts: int = 3
+    backoff_base: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_max: float = 5.0
+    restartable: tuple = (RuntimeError, OSError, TimeoutError)
+    straggler_window: int = 50
+    straggler_z: float = 4.0
+    sleep_fn: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        if self.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+        if self.checkpoint_shards is not None and self.checkpoint_shards < 1:
+            raise ValueError("checkpoint_shards must be >= 1 when set")
+        if self.max_restarts < 0:
+            raise ValueError("max_restarts must be >= 0")
+        if self.backoff_base < 0 or self.backoff_max < 0:
+            raise ValueError("backoff must be >= 0")
+
+
+def backoff_delay(policy: SupervisePolicy, restarts: int) -> float:
+    """Bounded exponential backoff: base · factor^(restarts−1), capped."""
+    if restarts <= 0:
+        return 0.0
+    return min(policy.backoff_max,
+               policy.backoff_base * policy.backoff_factor ** (restarts - 1))
+
+
+def is_oom_error(exc: BaseException) -> bool:
+    """Classify device-memory exhaustion, real or injected.
+
+    XLA allocator failures surface as RuntimeError/XlaRuntimeError whose
+    message carries ``RESOURCE_EXHAUSTED`` (or ``out of memory`` from some
+    backends); :class:`~repro.runtime.chaos.SimulatedOOM` matches by type.
+    """
+    if isinstance(exc, SimulatedOOM):
+        return True
+    msg = str(exc)
+    return "RESOURCE_EXHAUSTED" in msg or "out of memory" in msg.lower()
+
+
 @dataclasses.dataclass
 class RestartReport:
+    """What supervision observed: restarts taken, where each attempt resumed
+    from, per-fault messages, recovery wall-times, straggler step indices,
+    and whether the run degraded from resident to streamed after an OOM."""
+
     completed_steps: int
     restarts: int
     resumed_from: list[int]
+    faults: list[str] = dataclasses.field(default_factory=list)
+    recovery_seconds: list[float] = dataclasses.field(default_factory=list)
+    straggler_steps: list[int] = dataclasses.field(default_factory=list)
+    elastic_reshards: list[tuple] = dataclasses.field(default_factory=list)
+    degraded_to_streamed: bool = False
+    timer_summary: dict = dataclasses.field(default_factory=dict)
+
+
+def supervised_loop(run_attempt: Callable[[], Any],
+                    recover: Callable[[BaseException], None],
+                    policy: SupervisePolicy,
+                    report: RestartReport) -> Any:
+    """Generic restart skeleton: run, and on a restartable failure back off,
+    recover, retry — up to ``policy.max_restarts`` times.
+
+    ``run_attempt`` does one full attempt (restore-or-init through to the
+    target step) and returns its result. ``recover(exc)`` rolls whatever
+    state the caller owns back to restorable (rebuild a backend, drop a
+    poisoned in-memory state). ``report`` is mutated in place: restarts,
+    fault messages, and recovery wall-times.
+    """
+    while True:
+        try:
+            return run_attempt()
+        except policy.restartable as e:
+            report.restarts += 1
+            report.faults.append(f"{type(e).__name__}: {e}")
+            if report.restarts > policy.max_restarts:
+                raise
+            policy.sleep_fn(backoff_delay(policy, report.restarts))
+            t0 = time.perf_counter()
+            recover(e)
+            report.recovery_seconds.append(time.perf_counter() - t0)
 
 
 def run_with_restarts(make_trainer: Callable[[], Any],
@@ -67,7 +167,8 @@ def run_with_restarts(make_trainer: Callable[[], Any],
                       manager,
                       checkpoint_every: int = 10,
                       max_restarts: int = 3,
-                      fail_at: Callable[[int], bool] | None = None
+                      fail_at: Callable[[int], bool] | None = None,
+                      policy: SupervisePolicy | None = None
                       ) -> tuple[Any, RestartReport]:
     """Supervised training loop with checkpoint/restart.
 
@@ -77,31 +178,41 @@ def run_with_restarts(make_trainer: Callable[[], Any],
     ``host_payload(state) -> dict``, ``state_from_payload(dict) -> state``.
 
     ``fail_at(step)`` (tests/chaos) raising inside the loop simulates a node
-    failure at that step boundary.
+    failure at that step boundary. Passing ``policy`` overrides the default
+    (zero-backoff, RuntimeError-only) restart behavior; its
+    ``checkpoint_every``/``max_restarts`` then take precedence over the
+    positional arguments.
     """
-    restarts = 0
-    resumed_from: list[int] = []
-    while True:
+    if policy is None:
+        policy = SupervisePolicy(checkpoint_every=checkpoint_every,
+                                 max_restarts=max_restarts,
+                                 backoff_base=0.0,
+                                 restartable=(RuntimeError,))
+    report = RestartReport(0, 0, [])
+    timer = StepTimer(policy.straggler_window, policy.straggler_z)
+
+    def attempt():
         trainer = make_trainer()
         payload = manager.restore_latest()
         if payload is not None:
             state = trainer.state_from_payload(payload)
-            resumed_from.append(int(payload["iteration"]))
+            report.resumed_from.append(int(payload["iteration"]))
         else:
             state = trainer.init_state()
-        try:
-            while int(state.iteration) < n_steps:
-                step_idx = int(state.iteration)
-                if fail_at is not None and fail_at(step_idx):
-                    raise RuntimeError(f"injected failure at step {step_idx}")
-                state, _ = trainer.step(state)
-                done = int(state.iteration)
-                if done % checkpoint_every == 0 or done == n_steps:
-                    manager.save(done, trainer.host_payload(state))
-            return state, RestartReport(int(state.iteration), restarts,
-                                        resumed_from)
-        except RuntimeError:
-            restarts += 1
-            if restarts > max_restarts:
-                raise
-            time.sleep(0)          # scheduler backoff placeholder
+        while int(state.iteration) < n_steps:
+            step_idx = int(state.iteration)
+            if fail_at is not None and fail_at(step_idx):
+                raise RuntimeError(f"injected failure at step {step_idx}")
+            t0 = time.perf_counter()
+            state, _ = trainer.step(state)
+            if timer.record(time.perf_counter() - t0):
+                report.straggler_steps.append(step_idx)
+            done = int(state.iteration)
+            if done % policy.checkpoint_every == 0 or done == n_steps:
+                manager.save(done, trainer.host_payload(state))
+        return state
+
+    state = supervised_loop(attempt, lambda e: None, policy, report)
+    report.completed_steps = int(state.iteration)
+    report.timer_summary = timer.summary
+    return state, report

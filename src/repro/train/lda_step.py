@@ -79,7 +79,10 @@ by tests/test_fused_step.py.
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import time
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
@@ -91,9 +94,12 @@ from repro.core import esca, sparse, three_branch
 from repro.kernels import ops as kops
 from repro.kernels import sample_fused as _fused
 from repro.kernels.runtime import resolve_interpret
+from repro.lda import invariants
+from repro.runtime import chaos
 
 __all__ = ["FusedState", "FusedPipeline", "HybridFusedPipeline",
-           "StreamState", "StreamingPipeline", "StreamingHybridPipeline",
+           "PrefetchTimeout", "StreamState", "StreamingPipeline",
+           "StreamingHybridPipeline",
            "plan_capacity", "plan_window", "plan_tile_capacity",
            "plan_stream_shards", "resolve_residency",
            "STREAM_BYTES_PER_TOKEN", "STREAM_PAYLOAD_KEYS"]
@@ -283,6 +289,21 @@ class FusedPipeline:
         from repro.lda.model import LDAState
         return LDAState(topics=fstate.topics, D=fstate.D, W=fstate.W,
                         key=fstate.key, iteration=fstate.iteration)
+
+    def _n_real_tokens(self) -> int:
+        n = getattr(self, "_n_real", None)
+        if n is None:
+            n = int(np.asarray(self.mask).astype(np.int64).sum())
+            self._n_real = n
+        return n
+
+    def selfcheck(self, fstate) -> None:
+        """Count-invariant tripwire on the live state (``config.selfcheck``):
+        host-side, so callers run it at chunk boundaries, not per step."""
+        invariants.check_dense_counts(
+            fstate.D, fstate.W, fstate.colsum,
+            n_tokens=self._n_real_tokens(),
+            where=f"chunk boundary (iteration {int(fstate.iteration)})")
 
     # -- tile helpers (traced) ---------------------------------------------
 
@@ -576,6 +597,12 @@ class HybridFusedPipeline(FusedPipeline):
     def to_lda_state(self, fstate):
         return self.layout.to_dense(fstate)
 
+    def selfcheck(self, fstate) -> None:
+        invariants.check_packed_counts(
+            fstate.colsum, fstate.overflow,
+            n_tokens=self._n_real_tokens(),
+            where=f"chunk boundary (iteration {int(fstate.iteration)})")
+
     # -- the fused iteration body (traced; no host interaction) ------------
 
     def _iteration(self, hs, *, capacity: int, win_words: int):
@@ -749,6 +776,11 @@ def plan_stream_shards(n_padded_tokens: int, budget_bytes: int | None, *,
     return int(min(shards, max_shards))
 
 
+# one warning per process: auto-residency consults memory_stats() on every
+# trainer build, and a backend without it (CPU) would otherwise warn each time
+_MEMSTATS_WARNED = False
+
+
 def resolve_residency(config, n_padded_tokens: int,
                       device=None) -> tuple[str, int]:
     """(residency, n_shards) for one (config, corpus) pair.
@@ -766,7 +798,18 @@ def resolve_residency(config, n_padded_tokens: int,
         # shard planner, so explicit "streamed" consults it too
         try:
             stats = (device or jax.devices()[0]).memory_stats() or {}
-        except Exception:
+        except Exception as e:
+            global _MEMSTATS_WARNED
+            if not _MEMSTATS_WARNED:
+                _MEMSTATS_WARNED = True
+                warnings.warn(
+                    "resolve_residency: device memory_stats() failed "
+                    f"({type(e).__name__}: {e}); no device budget is "
+                    "available, so corpus_residency='auto' resolves to "
+                    "'full' and 'streamed' falls back to the minimum "
+                    "shard count — set LDAConfig.device_budget_bytes to "
+                    "make the residency decision explicit",
+                    RuntimeWarning, stacklevel=2)
             stats = {}
         limit = stats.get("bytes_limit")
         budget = int(limit) // 2 if limit else None
@@ -783,6 +826,12 @@ def resolve_residency(config, n_padded_tokens: int,
         n_padded_tokens, budget, multiple=config.tile_size), 2)
 
 
+class PrefetchTimeout(TimeoutError):
+    """The prefetch watchdog expired: a shard's host→device transfer did
+    not complete within ``LDAConfig.stream_watchdog_seconds``. Raised
+    from ``take()`` so the supervisor can restart instead of hanging."""
+
+
 class _Prefetcher:
     """One-deep host→device prefetch queue (the background stream).
 
@@ -790,24 +839,60 @@ class _Prefetcher:
     worker thread while the current shard's dispatch runs; ``take``
     joins and returns the device tuple. jax.device_put is thread-safe;
     one worker keeps puts ordered.
+
+    Failure handling: the worker retries a failed load ``retries`` times
+    with exponential backoff before the exception is allowed to surface
+    (a transient I/O hiccup never reaches the training loop), and
+    ``take`` enforces an optional watchdog ``deadline_s`` — a hung
+    transfer becomes a :class:`PrefetchTimeout` instead of a silent
+    stall. Failures propagate ONLY from ``take`` (inside the epoch
+    loop, where the supervisor can act); ``close`` drains and suppresses
+    them — teardown of an already-failed pipeline must not raise again.
     """
 
-    def __init__(self):
-        import concurrent.futures
+    def __init__(self, *, retries: int = 2, backoff_s: float = 0.05,
+                 deadline_s: float | None = None):
         self._ex = concurrent.futures.ThreadPoolExecutor(
             max_workers=1, thread_name_prefix="lda-stream-prefetch")
         self._fut = None
+        self.retries = max(int(retries), 0)
+        self.backoff_s = float(backoff_s)
+        self.deadline_s = deadline_s
+
+    def _attempt(self, fn, args):
+        for attempt in range(self.retries + 1):
+            try:
+                return fn(*args)
+            except Exception:
+                if attempt == self.retries:
+                    raise
+                time.sleep(self.backoff_s * (2 ** attempt))
 
     def submit(self, fn, *args) -> None:
         assert self._fut is None, "prefetch queue is one deep"
-        self._fut = self._ex.submit(fn, *args)
+        self._fut = self._ex.submit(self._attempt, fn, args)
 
     def take(self):
         fut, self._fut = self._fut, None
-        return None if fut is None else fut.result()
+        if fut is None:
+            return None
+        try:
+            return fut.result(timeout=self.deadline_s)
+        except concurrent.futures.TimeoutError:
+            fut.cancel()
+            raise PrefetchTimeout(
+                f"prefetch exceeded its {self.deadline_s}s watchdog "
+                "deadline (stream_watchdog_seconds): transfer thread hung "
+                "or host I/O stalled") from None
 
     def close(self) -> None:
-        self.take()
+        fut, self._fut = self._fut, None
+        if fut is not None:
+            fut.cancel()
+            try:
+                fut.result(timeout=1.0)
+            except Exception:
+                pass        # teardown never re-raises a pending failure
         self._ex.shutdown(wait=False)
 
     def __del__(self):
@@ -949,7 +1034,8 @@ class StreamingPipeline(FusedPipeline):
         self._begin_fn = None
         self._end_fn = None
         self._shard_cache: dict[tuple, Callable] = {}
-        self._prefetch = _Prefetcher()
+        self._prefetch = _Prefetcher(
+            deadline_s=getattr(config, "stream_watchdog_seconds", None))
         self.last_epoch_device_bytes = 0
 
     def _plan_tiles(self, word_ids) -> None:
@@ -1089,11 +1175,36 @@ class StreamingPipeline(FusedPipeline):
 
     # -- the epoch loop -----------------------------------------------------
 
-    def _put_shard(self, s: int, topics_host, u_host):
+    def _load_shard_slices(self, s: int) -> tuple:
+        """Host-side (word, doc, mask) slices for one shard, self-checked.
+
+        Under ``config.selfcheck`` (or an armed chaos plan) the slice
+        bytes are verified against the stream's per-shard crc32 before
+        they reach the device — silent host-buffer corruption surfaces
+        as a restartable :class:`ShardCorruptionError` at the load, not
+        as a poisoned model three epochs later.
+        """
         st = self.stream
-        L = st.shard_len
-        return (jnp.asarray(st.word_ids[s]), jnp.asarray(st.doc_ids[s]),
-                jnp.asarray(st.mask[s]), jnp.asarray(topics_host),
+        arrays = (st.word_ids[s], st.doc_ids[s], st.mask[s])
+        if chaos.armed():
+            chaos.io_fault(s)
+            arrays = chaos.corrupt_arrays(s, arrays)
+        if getattr(self.config, "selfcheck", False) or chaos.armed():
+            want = int(st.shard_checksums[s])
+            got = int(st.slice_checksum(*arrays))
+            if got != want:
+                raise invariants.ShardCorruptionError(
+                    f"stream shard {s} failed its crc32 self-check "
+                    f"(expected {want:#010x}, got {got:#010x}): host "
+                    "shard bytes corrupted in flight — restore from the "
+                    "newest checkpoint")
+        return arrays
+
+    def _put_shard(self, s: int, topics_host, u_host):
+        word_s, doc_s, mask_s = self._load_shard_slices(s)
+        L = self.stream.shard_len
+        return (jnp.asarray(word_s), jnp.asarray(doc_s),
+                jnp.asarray(mask_s), jnp.asarray(topics_host),
                 jnp.asarray(u_host[s * L:(s + 1) * L]))
 
     def _open_epoch(self, ss: StreamState) -> StreamState:
@@ -1107,12 +1218,34 @@ class StreamingPipeline(FusedPipeline):
 
     def _close_epoch(self, ss: StreamState) -> StreamState:
         ep = ss.epoch
+        if getattr(self.config, "selfcheck", False):
+            self._selfcheck_deltas(ep.deltas, ss.iteration)
         ss.counts = self._apply_epoch(ss.counts, ep.derived, ep.deltas)
         ss.key = ep.key_next
         ss.iteration += 1
         ss.cursor = 0
         ss.epoch = None
+        if getattr(self.config, "selfcheck", False):
+            self._selfcheck_counts(ss)
         return ss
+
+    # -- count-invariant tripwires (config.selfcheck, invariants.py) --------
+
+    def _selfcheck_deltas(self, deltas: tuple, iteration: int) -> None:
+        dD, dW, dcs = deltas
+        invariants.check_delta_conservation(
+            dD, dW, dcs, where=f"epoch {iteration} close (deltas)")
+
+    def _selfcheck_counts(self, ss: StreamState) -> None:
+        D, W, colsum = ss.counts
+        invariants.check_dense_counts(
+            D, W, colsum, n_tokens=self.stream.n_tokens,
+            where=f"epoch {ss.iteration} close (counts)")
+
+    def selfcheck(self, ss) -> None:
+        # the epoch close already ran the tripwires on this state; the
+        # chunk-boundary call the resident pipelines need is a no-op here
+        pass
 
     def _advance(self, ss: StreamState,
                  max_shards: int | None = None) -> StreamState:
@@ -1134,6 +1267,8 @@ class StreamingPipeline(FusedPipeline):
                                   ep.u_host)
         while ss.cursor < stop:
             s = ss.cursor
+            if chaos.armed():
+                chaos.shard_event(ss.iteration, s)
             if s + 1 < stop:
                 self._prefetch.submit(self._put_shard, s + 1,
                                       ss.shard_topics[s + 1], ep.u_host)
@@ -1405,6 +1540,12 @@ class StreamingHybridPipeline(StreamingPipeline):
     def overflow_count(self, ss: StreamState) -> int:
         """The packed-update tripwire (0 by the capacity-bound design)."""
         return int(ss.counts[4])
+
+    def _selfcheck_counts(self, ss: StreamState) -> None:
+        _d_packed, _w_head, _w_tail, colsum, overflow = ss.counts
+        invariants.check_packed_counts(
+            colsum, overflow, n_tokens=self.stream.n_tokens,
+            where=f"epoch {ss.iteration} close (packed counts)")
 
     # -- compiled pieces ----------------------------------------------------
 

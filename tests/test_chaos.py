@@ -1,0 +1,463 @@
+"""Chaos/recovery regression suite (DESIGN.md §11).
+
+Every test injects a deterministic fault through ``repro.runtime.chaos``
+and pins the recovery contract: a supervised ``fit`` must converge to a
+state BITWISE equal to the uninterrupted run (restore + deterministic
+replay — counts are derived from topics, so a checkpoint fully determines
+the future), transient faults must be absorbed in place (no restart),
+and detection tripwires (crc32 shard checks, count invariants) must fire
+as restartable errors rather than poisoning the model.
+
+All tests run on CPU; the forged multi-device case is ``slow``.
+"""
+
+import subprocess
+import sys
+import textwrap
+import time
+import warnings
+
+import numpy as np
+import pytest
+
+import repro.train.lda_step as lda_step
+from repro.lda import invariants
+from repro.lda.api import LDAEngine, SupervisePolicy
+from repro.lda.corpus import relabel_by_frequency, synthetic_lda_corpus
+from repro.lda.model import LDAConfig
+from repro.runtime import chaos
+from repro.runtime.fault import backoff_delay, is_oom_error
+from repro.train.lda_step import PrefetchTimeout, _Prefetcher
+
+pytestmark = pytest.mark.chaos
+
+KEYS = ("topics_global", "key", "iteration")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    c = synthetic_lda_corpus(7, n_docs=50, n_words=60, n_topics=6,
+                             mean_doc_len=25)
+    c, _ = relabel_by_frequency(c)
+    return c
+
+
+def _cfg(**kw):
+    kw.setdefault("n_topics", 8)
+    kw.setdefault("tile_size", 256)
+    kw.setdefault("eval_every", 4)
+    kw.setdefault("seed", 3)
+    return LDAConfig(**kw)
+
+
+def _ref(corpus, cfg, n_iters):
+    e = LDAEngine(corpus, cfg, backend="single")
+    e.fit(n_iters)
+    return e.host_payload()
+
+
+def _same(a, b):
+    return all(np.array_equal(np.asarray(a[k]), np.asarray(b[k]))
+               for k in KEYS)
+
+
+def _policy(**kw):
+    kw.setdefault("checkpoint_every", 3)
+    kw.setdefault("backoff_base", 0.0)
+    return SupervisePolicy(**kw)
+
+
+# -- supervised restart → bitwise-identical state ---------------------------
+
+@pytest.mark.parametrize("format", ["dense", "hybrid"])
+def test_killed_at_step_resident_bitwise(corpus, tmp_path, format):
+    cfg = _cfg(format=format)
+    ref = _ref(corpus, cfg, 10)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    with chaos.active(chaos.FaultPlan(raise_at_steps=(7,))):
+        hist = e.fit(10, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.restarts == 1 and rep.completed_steps == 10
+    assert rep.resumed_from == [6]
+    assert "InjectedFault" in rep.faults[0]
+    assert len(rep.recovery_seconds) == 1
+    assert _same(ref, e.host_payload())
+
+
+@pytest.mark.parametrize("format", ["dense", "hybrid"])
+def test_mid_epoch_kill_streamed_bitwise(corpus, tmp_path, format):
+    """Killed with an epoch OPEN: the newest checkpoint is a mid-epoch
+    stream payload; resume re-derives counts + deltas and continues
+    bit-identically (the PR5 stream-payload contract, now exercised
+    through the supervisor)."""
+    cfg = _cfg(format=format, corpus_residency="streamed", stream_shards=4)
+    ref = _ref(corpus, cfg, 8)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    pol = _policy(checkpoint_shards=1)
+    with chaos.active(chaos.FaultPlan(raise_at_shards=((5, 2),))):
+        hist = e.fit(8, supervise=pol)
+    rep = hist["restart_report"]
+    assert rep.restarts == 1
+    assert rep.resumed_from == [5]      # restored INTO the open epoch 5
+    assert _same(ref, e.host_payload())
+
+
+def test_checkpoint_shards_needs_streamed_single(corpus, tmp_path):
+    e = LDAEngine(corpus, _cfg(), backend="single",
+                  checkpoint_dir=str(tmp_path))
+    with pytest.raises(ValueError, match="streamed"):
+        e.fit(4, supervise=_policy(checkpoint_shards=1))
+
+
+def test_supervise_needs_manager(corpus):
+    e = LDAEngine(corpus, _cfg(), backend="single")
+    with pytest.raises(ValueError, match="checkpoint"):
+        e.fit(4, supervise=True)
+
+
+def test_max_restarts_exhausted_propagates(corpus, tmp_path):
+    e = LDAEngine(corpus, _cfg(), backend="single",
+                  checkpoint_dir=str(tmp_path))
+    plan = chaos.FaultPlan(raise_at_steps=(2,), repeat=True)
+    with chaos.active(plan), pytest.raises(chaos.InjectedFault):
+        e.fit(6, supervise=_policy(max_restarts=2))
+
+
+def test_nonrestartable_fault_propagates(corpus, tmp_path):
+    """Exception types outside policy.restartable must not be absorbed."""
+    e = LDAEngine(corpus, _cfg(), backend="single",
+                  checkpoint_dir=str(tmp_path))
+    plan = chaos.FaultPlan(raise_at_steps=(2,),
+                           exc_factory=lambda m: KeyboardInterrupt(m))
+    with chaos.active(plan), pytest.raises(KeyboardInterrupt):
+        e.fit(6, supervise=_policy())
+
+
+def test_invariant_violation_is_restartable(corpus, tmp_path):
+    """A tripped invariant restarts from the newest checkpoint (the state
+    is presumed poisoned) and still converges bitwise."""
+    cfg = _cfg()
+    ref = _ref(corpus, cfg, 8)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    plan = chaos.FaultPlan(
+        raise_at_steps=(5,),
+        exc_factory=lambda m: invariants.InvariantViolation(
+            "injected", "chaos hook", m))
+    with chaos.active(plan):
+        hist = e.fit(8, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.restarts == 1
+    assert "InvariantViolation" in rep.faults[0]
+    assert _same(ref, e.host_payload())
+
+
+# -- transient faults absorbed in place (no restart) ------------------------
+
+def test_prefetch_io_fault_retried_in_place(corpus, tmp_path):
+    """One failing load attempt of a PREFETCHED shard stays below the
+    prefetcher's retry budget: absorbed on the worker thread."""
+    cfg = _cfg(corpus_residency="streamed", stream_shards=4)
+    ref = _ref(corpus, cfg, 6)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    with chaos.active(chaos.FaultPlan(io_fault_shards=(1,),
+                                      io_fault_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    assert hist["restart_report"].restarts == 0
+    assert _same(ref, e.host_payload())
+
+
+def test_prefetch_io_fault_inline_restarts(corpus, tmp_path):
+    """Shard 0 loads INLINE (it is the epoch's first 'current' shard, not
+    prefetched), so its I/O fault skips the worker-thread retry and must
+    go through the supervisor."""
+    cfg = _cfg(corpus_residency="streamed", stream_shards=4)
+    ref = _ref(corpus, cfg, 6)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    with chaos.active(chaos.FaultPlan(io_fault_shards=(0,),
+                                      io_fault_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.restarts == 1 and "OSError" in rep.faults[0]
+    assert _same(ref, e.host_payload())
+
+
+def test_corrupt_prefetched_shard_retried_in_place(corpus, tmp_path):
+    """A bit flip in a prefetched shard's buffer trips the crc32 check ON
+    THE WORKER THREAD; the retry reloads clean bytes — no restart."""
+    cfg = _cfg(corpus_residency="streamed", stream_shards=4)
+    ref = _ref(corpus, cfg, 6)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    with chaos.active(chaos.FaultPlan(corrupt_shards=(2,),
+                                      corrupt_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    assert hist["restart_report"].restarts == 0
+    assert _same(ref, e.host_payload())
+
+
+def test_corrupt_inline_shard_restarts(corpus, tmp_path):
+    cfg = _cfg(corpus_residency="streamed", stream_shards=4)
+    ref = _ref(corpus, cfg, 6)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    with chaos.active(chaos.FaultPlan(corrupt_shards=(0,),
+                                      corrupt_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.restarts == 1 and "crc32" in rep.faults[0]
+    assert _same(ref, e.host_payload())
+
+
+# -- graceful degradation ---------------------------------------------------
+
+def test_oom_degrades_resident_to_streamed(corpus, tmp_path):
+    """Injected RESOURCE_EXHAUSTED on the resident path: ONE degradation
+    to streamed residency (with a warning), then bitwise convergence —
+    streamed == resident is the PR5 bit-equality contract."""
+    cfg = _cfg(corpus_residency="full", stream_shards=4)
+    ref = _ref(corpus, cfg, 8)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    with chaos.active(chaos.FaultPlan(oom_at_steps=(5,))), \
+            pytest.warns(RuntimeWarning, match="streamed"):
+        hist = e.fit(8, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.degraded_to_streamed and rep.restarts == 1
+    assert "RESOURCE_EXHAUSTED" in rep.faults[0]
+    assert e.config.corpus_residency == "streamed"
+    assert e.trainer.residency == "streamed"
+    assert _same(ref, e.host_payload())
+
+
+def test_second_oom_streamed_propagates(corpus, tmp_path):
+    """Degradation happens ONCE: an OOM while already streamed is not
+    absorbed forever — the budget (max_restarts) still bounds it."""
+    cfg = _cfg(corpus_residency="streamed", stream_shards=4)
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    plan = chaos.FaultPlan(oom_at_steps=(2,), repeat=True)
+    with chaos.active(plan), pytest.raises(chaos.SimulatedOOM):
+        e.fit(6, supervise=_policy(max_restarts=1))
+
+
+# -- straggler detection ----------------------------------------------------
+
+def test_slow_step_flagged_as_straggler(corpus, tmp_path):
+    cfg = _cfg(eval_every=1)        # chunk == 1 step → per-step timing
+    e = LDAEngine(corpus, cfg, backend="single", checkpoint_dir=str(tmp_path))
+    plan = chaos.FaultPlan(slow_steps={14: 0.5})
+    with chaos.active(plan):
+        hist = e.fit(16, supervise=_policy(straggler_window=16,
+                                           straggler_z=4.0))
+    rep = hist["restart_report"]
+    assert rep.restarts == 0
+    assert 15 in rep.straggler_steps    # on_chunk reports the POST-step it
+    assert rep.timer_summary["n"] >= 16
+
+
+# -- invariants + selfcheck -------------------------------------------------
+
+def test_selfcheck_clean_runs(corpus, tmp_path):
+    for cfg in (_cfg(selfcheck=True),
+                _cfg(selfcheck=True, format="hybrid"),
+                _cfg(selfcheck=True, corpus_residency="streamed",
+                     stream_shards=4)):
+        e = LDAEngine(corpus, cfg, backend="single")
+        e.fit(4)                     # no InvariantViolation on a clean run
+        assert int(e.iteration) == 4
+
+
+def test_invariants_catch_bad_counts():
+    D = np.full((3, 4), 2, np.int32)
+    W = np.full((5, 4), 2, np.int32)        # sums differ: 24 vs 40
+    with pytest.raises(invariants.InvariantViolation, match="conserv"):
+        invariants.check_dense_counts(D, W, n_tokens=24, where="unit")
+    with pytest.raises(invariants.InvariantViolation, match="negative"):
+        invariants.check_dense_counts(np.array([[-1, 25]], np.int32),
+                                      np.full((3, 2), 4, np.int32),
+                                      n_tokens=24, where="unit")
+    ok = np.full((6, 4), 1, np.int32)
+    invariants.check_dense_counts(ok, ok, ok.sum(axis=0), n_tokens=24,
+                                  where="unit")
+    with pytest.raises(invariants.InvariantViolation, match="colsum"):
+        invariants.check_dense_counts(ok, ok, ok.sum(axis=0) + 1,
+                                      n_tokens=24, where="unit")
+
+
+def test_invariants_delta_conservation():
+    dD = np.array([[1, -1], [0, 0]], np.int32)
+    invariants.check_delta_conservation(dD, dD, where="unit")
+    with pytest.raises(invariants.InvariantViolation):
+        invariants.check_delta_conservation(
+            dD, np.array([[1, 0], [0, 0]], np.int32), where="unit")
+
+
+def test_invariants_theta():
+    invariants.check_theta(np.array([[0.5, 0.5]]), where="unit")
+    with pytest.raises(invariants.InvariantViolation, match="finite"):
+        invariants.check_theta(np.array([[np.nan, 1.0]]), where="unit")
+
+
+# -- prefetcher unit tests --------------------------------------------------
+
+def test_prefetcher_close_suppresses_pending_failure():
+    """Teardown of an already-failed pipeline must not raise again — the
+    failure belongs to take(), inside the loop, where a supervisor can
+    act on it."""
+    p = _Prefetcher(retries=0)
+
+    def boom():
+        raise OSError("pending failure")
+
+    p.submit(boom)
+    time.sleep(0.05)
+    p.close()                        # no raise
+
+
+def test_prefetcher_take_propagates_failure():
+    p = _Prefetcher(retries=0)
+
+    def boom():
+        raise OSError("surfaced at take")
+
+    p.submit(boom)
+    with pytest.raises(OSError, match="surfaced"):
+        p.take()
+    p.close()
+
+
+def test_prefetcher_retries_transient_failure():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise OSError("transient")
+        return 7
+
+    p = _Prefetcher(retries=2, backoff_s=0.0)
+    p.submit(flaky)
+    assert p.take() == 7 and calls["n"] == 3
+    p.close()
+
+
+def test_prefetcher_watchdog_times_out():
+    p = _Prefetcher(deadline_s=0.05)
+    p.submit(time.sleep, 5.0)
+    with pytest.raises(PrefetchTimeout, match="watchdog"):
+        p.take()
+    p.close()
+
+
+def test_watchdog_config_reaches_pipeline(corpus):
+    cfg = _cfg(corpus_residency="streamed", stream_shards=4,
+               stream_watchdog_seconds=30.0)
+    e = LDAEngine(corpus, cfg, backend="single")
+    assert e.trainer.fused_pipeline()._prefetch.deadline_s == 30.0
+
+
+# -- residency warning ------------------------------------------------------
+
+def test_resolve_residency_warns_once_without_memstats(monkeypatch):
+    class _Dev:
+        def memory_stats(self):
+            raise RuntimeError("backend reports no memory stats")
+
+    monkeypatch.setattr(lda_step, "_MEMSTATS_WARNED", False)
+    cfg = _cfg(corpus_residency="auto")
+    with warnings.catch_warnings(record=True) as rec:
+        warnings.simplefilter("always")
+        assert lda_step.resolve_residency(cfg, 4096, device=_Dev()) \
+            == ("full", 1)
+        lda_step.resolve_residency(cfg, 4096, device=_Dev())
+    hits = [w for w in rec if issubclass(w.category, RuntimeWarning)]
+    assert len(hits) == 1            # one warning per process, not per call
+    assert "device_budget_bytes" in str(hits[0].message)
+
+
+# -- policy / classifier units ----------------------------------------------
+
+def test_supervise_policy_validation():
+    for bad in (dict(checkpoint_every=0), dict(checkpoint_shards=0),
+                dict(max_restarts=-1), dict(backoff_base=-1.0)):
+        with pytest.raises(ValueError):
+            SupervisePolicy(**bad)
+
+
+def test_backoff_delay_schedule():
+    pol = SupervisePolicy(backoff_base=0.1, backoff_factor=2.0,
+                          backoff_max=0.5)
+    assert backoff_delay(pol, 0) == 0.0
+    assert backoff_delay(pol, 1) == pytest.approx(0.1)
+    assert backoff_delay(pol, 2) == pytest.approx(0.2)
+    assert backoff_delay(pol, 3) == pytest.approx(0.4)
+    assert backoff_delay(pol, 5) == 0.5          # capped
+
+
+def test_is_oom_error_classifier():
+    assert is_oom_error(chaos.SimulatedOOM("unit"))
+    assert is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: out of memory "
+                                     "while trying to allocate"))
+    assert is_oom_error(RuntimeError("CUDA error: out of memory"))
+    assert not is_oom_error(ValueError("shape mismatch"))
+
+
+def test_chaos_hooks_noop_when_unarmed():
+    chaos.clear()
+    assert not chaos.armed()
+    chaos.step_range(0, 100)
+    chaos.shard_event(0, 0)
+    chaos.io_fault(0)
+    arrays = (np.arange(4),)
+    assert chaos.corrupt_arrays(0, arrays) is arrays
+
+
+def test_fault_plan_fires_once_by_default():
+    plan = chaos.FaultPlan(raise_at_steps=(3,))
+    with chaos.active(plan):
+        with pytest.raises(chaos.InjectedFault):
+            chaos.step_range(0, 10)
+        chaos.step_range(0, 10)      # second pass: already fired
+    assert not chaos.armed()         # active() cleared the plan
+
+
+# -- forged multi-device supervised recovery --------------------------------
+
+@pytest.mark.slow
+def test_distributed_supervised_recovery_bitwise(tmp_path):
+    """8 forged CPU devices: a supervised distributed fit killed at step 6
+    restores from its canonical checkpoint and converges bitwise with the
+    uninterrupted distributed run (elastic canonical payloads)."""
+    body = f"""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import numpy as np
+    from repro.lda.api import LDAEngine, SupervisePolicy
+    from repro.lda.corpus import synthetic_lda_corpus, relabel_by_frequency
+    from repro.lda.model import LDAConfig
+    from repro.runtime import chaos
+
+    corpus = synthetic_lda_corpus(7, n_docs=50, n_words=60, n_topics=6,
+                                  mean_doc_len=25)
+    corpus, _ = relabel_by_frequency(corpus)
+    cfg = LDAConfig(n_topics=8, tile_size=256, eval_every=4, seed=3)
+
+    ref = LDAEngine(corpus, cfg, backend="distributed", pad_multiple=256)
+    assert ref.backend_name == "distributed"
+    ref.fit(10)
+    want = ref.host_payload()
+
+    eng = LDAEngine(corpus, cfg, backend="distributed", pad_multiple=256,
+                    checkpoint_dir={str(tmp_path)!r})
+    pol = SupervisePolicy(checkpoint_every=3, backoff_base=0.0)
+    with chaos.active(chaos.FaultPlan(raise_at_steps=(6,))):
+        hist = eng.fit(10, supervise=pol)
+    rep = hist["restart_report"]
+    assert rep.restarts == 1, rep
+    got = eng.host_payload()
+    for k in ("topics_global", "key", "iteration"):
+        assert np.array_equal(np.asarray(want[k]), np.asarray(got[k])), k
+    print("OK", rep.restarts)
+    """
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, timeout=900, cwd=".")
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,111 @@
+"""CheckpointManager recovery under on-disk damage (DESIGN.md §11).
+
+Complements tests/test_checkpoint_fault.py: these tests damage the files
+themselves — truncation, torn zip containers, checksum mismatches, empty
+directories — and pin that ``restore_latest`` walks back to the newest
+VALID checkpoint (reporting every skip through ``log_fn``) instead of
+crashing or silently restoring garbage.
+"""
+
+import os
+
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.checkpoint.manager import _checksum
+
+
+def _save_steps(m, steps):
+    for s in steps:
+        m.save(s, {"x": np.arange(8) + s, "iteration": np.int64(s)})
+
+
+def _path(tmp_path, step):
+    return os.path.join(str(tmp_path), f"step_{step:08d}.npz")
+
+
+def test_empty_dir_restores_none(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    assert m.restore_latest() is None
+    assert m.all_steps() == []
+
+
+def test_truncated_newest_walks_back(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    _save_steps(m, (1, 2, 3))
+    with open(_path(tmp_path, 3), "r+b") as f:
+        f.truncate(10)          # not even a zip header survives
+    back = m.restore_latest()
+    assert int(back["iteration"]) == 2
+
+
+def test_torn_zip_walks_back(tmp_path):
+    """A torn external copy: valid-looking prefix, missing central
+    directory — np.load raises BadZipFile, restore must absorb it."""
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    _save_steps(m, (1, 2))
+    p = _path(tmp_path, 2)
+    size = os.path.getsize(p)
+    with open(p, "r+b") as f:
+        f.truncate(size // 2)
+    assert int(m.restore_latest()["iteration"]) == 1
+
+
+def test_checksum_mismatch_rejected(tmp_path):
+    """A well-formed npz whose payload doesn't match its checksum (bit
+    rot, partial overwrite) restores as None, not as wrong data."""
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    _save_steps(m, (1,))
+    good = {"x": np.arange(8) + 2, "iteration": np.int64(2)}
+    arrs = dict(good)
+    arrs["__checksum__"] = np.frombuffer(
+        _checksum({"x": np.zeros(8)}).encode(), dtype=np.uint8)
+    np.savez(_path(tmp_path, 2), **arrs)
+    assert m.restore(2) is None
+    assert int(m.restore_latest()["iteration"]) == 1
+
+
+def test_all_corrupt_restores_none(tmp_path):
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    _save_steps(m, (1, 2))
+    for s in (1, 2):
+        with open(_path(tmp_path, s), "r+b") as f:
+            f.truncate(5)
+    assert m.restore_latest() is None
+
+
+def test_walk_back_reports_skips_via_log_fn(tmp_path):
+    """The supervisor surfaces every skipped checkpoint — a walk-back is
+    visible, not silent."""
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    _save_steps(m, (1, 2, 3))
+    for s in (2, 3):
+        with open(_path(tmp_path, s), "r+b") as f:
+            f.truncate(12)
+    lines = []
+    back = m.restore_latest(log_fn=lines.append)
+    assert int(back["iteration"]) == 1
+    assert len(lines) == 2
+    assert any("step 3" in ln for ln in lines)
+    assert any("step 2" in ln for ln in lines)
+    assert all("walking back" in ln for ln in lines)
+
+
+def test_save_survives_reopen(tmp_path):
+    """save() fsyncs file AND directory; a fresh manager over the same
+    directory (a restarted process) sees the same newest payload."""
+    m = CheckpointManager(str(tmp_path), keep_n=2)
+    _save_steps(m, (1, 2, 3))
+    m2 = CheckpointManager(str(tmp_path), keep_n=2)
+    assert m2.all_steps() == [2, 3]
+    assert int(m2.restore_latest()["iteration"]) == 3
+
+
+def test_orphan_tmp_swept_and_ignored(tmp_path):
+    m = CheckpointManager(str(tmp_path))
+    orphan = os.path.join(str(tmp_path), ".tmp-deadbeef")
+    with open(orphan, "wb") as f:
+        f.write(b"half a checkpoint")
+    _save_steps(m, (1,))
+    assert not os.path.exists(orphan)
+    assert int(m.restore_latest()["iteration"]) == 1

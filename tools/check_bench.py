@@ -94,6 +94,16 @@ SCHEMAS: dict[str, dict] = {
         "streamed_bytes_ratio": NUM,
         "bitwise_equal_to_resident": bool,
     },
+    "BENCH_recovery.json": {
+        "corpus": _CORPUS, "n_topics": int,
+        "n_iters": int, "checkpoint_every": int, "repeats": int,
+        "unsupervised_tokens_per_sec": NUM,
+        "supervised_tokens_per_sec": NUM,
+        "supervised_over_unsupervised": NUM,
+        "recovery_iters": int, "restarts": int,
+        "recovery_seconds_per_restart": NUM,
+        "bitwise_equal_after_recovery": bool,
+    },
 }
 
 # smoke artifacts reuse a driver's schema but skip the metric gates
@@ -147,6 +157,14 @@ GATES: dict[str, list] = {
         ("streamed == resident bitwise",
          lambda d: d["bitwise_equal_to_resident"], "==", True, False),
         ("stream shard count", lambda d: d["n_shards"], ">=", 4, False),
+    ],
+    "BENCH_recovery.json": [
+        ("supervised/unsupervised throughput",
+         lambda d: d["supervised_over_unsupervised"], ">=", 0.95, True),
+        ("recovery exercised a restart", lambda d: d["restarts"], ">=", 1,
+         False),
+        ("recovered == uninterrupted bitwise",
+         lambda d: d["bitwise_equal_after_recovery"], "==", True, False),
     ],
 }
 
