@@ -28,7 +28,7 @@ def run():
     corpus, _ = relabel_by_frequency(corpus)
     rows = []
     finals = {}
-    for sampler in ("two_branch", "three_branch"):
+    for sampler in ("two_branch", "three_branch", "warp"):
         # three-branch runs the COMPACTED path so skipped tokens save real
         # work (capacity sized for the converged survivor fraction)
         cap = corpus.n_tokens // 8 if sampler == "three_branch" else None
@@ -56,4 +56,7 @@ def run():
                          round(float(stats["frac_skipped"]), 4)))
     rows.append(("fig10/llpt_gap_two_vs_three", 0.0,
                  round(abs(finals["two_branch"] - finals["three_branch"]), 4)))
+    # the MH engine must land on the same plateau as the exact sampler
+    rows.append(("fig10/llpt_gap_exact_vs_warp", 0.0,
+                 round(abs(finals["three_branch"] - finals["warp"]), 4)))
     return rows

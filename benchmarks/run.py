@@ -24,10 +24,11 @@ MODULES = [
     "fused_step",          # seed vs fused steady-state tokens/sec
     "serve_lda",           # FrozenLDAModel fold-in docs/sec
     "recovery",            # supervised-fit overhead + restart recovery cost
+    "warp_sampler",        # warp MH vs exact tokens/sec + convergence/sec
 ]
 
 QUICK_SKIP = {"fig16_scaling", "fig19_streaming", "fused_step",
-              "serve_lda", "recovery"}                      # long warmup
+              "serve_lda", "recovery", "warp_sampler"}      # long warmup
 
 
 def main(argv=None) -> int:

@@ -1,0 +1,211 @@
+"""Warp vs exact sampler: steady-state tokens/sec + convergence per second.
+
+The warp engine's claim (DESIGN.md SS12): replacing the exact three-branch
+draw with an O(1)-per-proposal Metropolis–Hastings cycle buys raw sampling
+throughput at large K, where the exact sampler's surviving tokens pay
+O(K)/O(L) branch work. The price is proposals-per-token: a 2-cycle chain
+tracks the exact conditional loosely at K=256 and tightens as ``mh_cycles``
+grows. This benchmark measures BOTH sides of that trade on the Zipf bench
+corpus — the regime real corpora live in, where the three-branch skip
+plateaus (~14%) and cannot hide the per-token branch cost:
+
+  * steady-state tokens/sec for the exact sampler and for warp at each
+    ``mh_cycles`` in the sweep, interleaved repeats (CPU frequency drift
+    must not bias the ratios), warp stretches under
+    ``jax.transfer_guard("disallow")`` — the proposal snapshot build and
+    the scanned MH iterations are all device-side, zero host syncs;
+  * convergence vs WALL CLOCK from cold start: (seconds, LLPT) curves for
+    every config, the per-cell final-plateau gap vs exact, and
+    ``min_llpt_gap`` across the sweep — the evidence that the chain
+    approaches the exact sampler's plateau as cycles grow, i.e. the gap
+    is proposal-budget mixing lag, not a wrong stationary distribution
+    (tests/test_warp_sampler.py pins the distribution itself).
+
+The committed gates (tools/check_bench.py): the DEFAULT config's
+throughput ratio stays >= 2x at K >= 256, and the best sweep cell lands
+within 0.15 nats/token of the exact plateau.
+
+``--dry-run`` shrinks everything to a seconds-long smoke (the CI hook) but
+still writes the same JSON schema.
+
+Emits results/BENCH_warp_sampler.json.
+Run:  PYTHONPATH=src python benchmarks/warp_sampler.py [--dry-run]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __name__ == "__main__":                      # runnable as a script
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from benchmarks._common import bench_corpus
+from repro.lda.api import LDAEngine
+from repro.lda.model import LDAConfig
+
+DEFAULT_CYCLES = 2        # LDAConfig.mh_cycles default — the throughput gate
+
+
+def _pipe(corpus, cfg):
+    tr = LDAEngine(corpus, cfg, backend="single").trainer
+    pipe = tr.fused_pipeline()
+    return tr, pipe, pipe.from_lda_state(tr.init_state())
+
+
+def _throughput_fn(corpus, cfg, *, warmup, timed, guard):
+    """Returns a closure measuring one timed stretch (tokens/sec)."""
+    _, pipe, fs = _pipe(corpus, cfg)
+    fs, _, _ = pipe.run_fused(fs, warmup)
+    jax.block_until_ready(fs.topics)
+    fs, _, _ = pipe.run_fused(fs, timed, replan=False)   # compile, excluded
+    jax.block_until_ready(fs.topics)
+    state = {"fs": fs}
+
+    def one():
+        t0 = time.perf_counter()
+        if guard:
+            with jax.transfer_guard("disallow"):         # proves zero syncs
+                state["fs"], _, _ = pipe.run_fused(state["fs"], timed,
+                                                   replan=False)
+                jax.block_until_ready(state["fs"].topics)
+        else:
+            state["fs"], _, _ = pipe.run_fused(state["fs"], timed,
+                                               replan=False)
+            jax.block_until_ready(state["fs"].topics)
+        return corpus.n_tokens * timed / (time.perf_counter() - t0)
+
+    return one
+
+
+def _convergence(corpus, cfg, *, n_iters, eval_every):
+    """(seconds, llpt) curve from cold start, evals outside the clock.
+
+    The first ``eval_every`` stretch is the compile call and is excluded
+    from the clock (identically for every config), so curve[0] sits at
+    seconds=0 after one stretch of iterations.
+    """
+    tr, pipe, fs = _pipe(corpus, cfg)
+    curve, elapsed = [], 0.0
+    fs, _, _ = pipe.run_fused(fs, eval_every)            # compile, excluded
+    jax.block_until_ready(fs.topics)
+    curve.append({"seconds": 0.0,
+                  "llpt": float(tr.evaluate(pipe.to_lda_state(fs)))})
+    for _ in range(n_iters // eval_every):
+        t0 = time.perf_counter()
+        fs, _, _ = pipe.run_fused(fs, eval_every, replan=False)
+        jax.block_until_ready(fs.topics)
+        elapsed += time.perf_counter() - t0
+        curve.append({"seconds": round(elapsed, 4),
+                      "llpt": float(tr.evaluate(pipe.to_lda_state(fs)))})
+    return curve
+
+
+def bench(out_path: str = "results/BENCH_warp_sampler.json",
+          dry_run: bool = False) -> dict:
+    if dry_run:
+        n_docs, n_words, doc_len, k = 60, 150, 40, 32
+        warmup, timed, repeats = 2, 2, 1
+        conv_iters, eval_every = 4, 2
+        cycle_sweep = (2,)
+    else:
+        n_docs, n_words, doc_len, k = 400, 1200, 120, 256
+        warmup, timed, repeats = 40, 10, 3
+        conv_iters, eval_every = 60, 10
+        cycle_sweep = (2, 4, 8, 16)
+    corpus = bench_corpus(n_docs=n_docs, n_words=n_words,
+                          mean_doc_len=doc_len)
+
+    def cfg_for(sampler, cycles=DEFAULT_CYCLES):
+        return LDAConfig(n_topics=k, tile_size=8192, sampler=sampler,
+                         mh_cycles=cycles)
+
+    # -- throughput: interleaved repeats over [exact, warp×sweep] ---------
+    runners = {"exact": _throughput_fn(corpus, cfg_for("three_branch"),
+                                       warmup=warmup, timed=timed,
+                                       guard=False)}
+    for c in cycle_sweep:
+        runners[c] = _throughput_fn(corpus, cfg_for("warp", c),
+                                    warmup=warmup, timed=timed, guard=True)
+    samples = {name: [] for name in runners}
+    for _ in range(repeats):
+        for name, fn in runners.items():
+            samples[name].append(fn())
+    exact_ts = float(np.median(samples["exact"]))
+
+    # -- convergence vs wall clock ----------------------------------------
+    exact_curve = _convergence(corpus, cfg_for("three_branch"),
+                               n_iters=conv_iters, eval_every=eval_every)
+    exact_final = exact_curve[-1]["llpt"]
+
+    cells = []
+    for c in cycle_sweep:
+        curve = _convergence(corpus, cfg_for("warp", c),
+                             n_iters=conv_iters, eval_every=eval_every)
+        ts = float(np.median(samples[c]))
+        cells.append({
+            "mh_cycles": c,
+            "tokens_per_sec": ts,
+            "warp_over_exact": ts / exact_ts,
+            "final_llpt": curve[-1]["llpt"],
+            "final_llpt_gap": abs(curve[-1]["llpt"] - exact_final),
+            "curve": curve,
+        })
+
+    default_cell = next(c for c in cells
+                        if c["mh_cycles"] == min(cycle_sweep))
+    result = {
+        "dry_run": dry_run,
+        "corpus": {"docs": corpus.n_docs, "words": corpus.n_words,
+                   "tokens": corpus.n_tokens},
+        "n_topics": k,
+        "warmup_iters": warmup,
+        "timed_iters": timed,
+        "repeats": repeats,
+        "conv_iters": conv_iters,
+        "eval_every": eval_every,
+        "exact_tokens_per_sec": exact_ts,
+        "exact_final_llpt": exact_final,
+        "exact_curve": exact_curve,
+        "cells": cells,
+        "warp_tokens_per_sec": default_cell["tokens_per_sec"],
+        "warp_over_exact": default_cell["warp_over_exact"],
+        "min_llpt_gap": min(c["final_llpt_gap"] for c in cells),
+        "host_syncs_in_scanned_region": 0,       # transfer_guard held
+    }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def run():
+    """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
+    r = bench()
+    ts = r["exact_tokens_per_sec"]
+    yield ("warp_sampler/exact", round(1e6 / ts, 4), f"tok_s={ts:.0f}")
+    for c in r["cells"]:
+        ts = c["tokens_per_sec"]
+        yield (f"warp_sampler/warp_c{c['mh_cycles']}", round(1e6 / ts, 4),
+               f"tok_s={ts:.0f} ratio={c['warp_over_exact']:.2f} "
+               f"llpt_gap={c['final_llpt_gap']:.3f}")
+    yield ("warp_sampler/warp_over_exact", 0, round(r["warp_over_exact"], 2))
+    yield ("warp_sampler/min_llpt_gap", 0, round(r["min_llpt_gap"], 4))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="seconds-long smoke with tiny sizes (CI)")
+    ap.add_argument("--out", default="results/BENCH_warp_sampler.json")
+    args = ap.parse_args()
+    res = bench(out_path=args.out, dry_run=args.dry_run)
+    print(json.dumps(res, indent=2))

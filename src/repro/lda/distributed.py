@@ -836,6 +836,14 @@ class DistLDATrainer(_StreamedDistMixin):
                 f"mesh axes {tuple(mesh.shape)} lack a 'model' axis: the "
                 "distributed trainer needs one (size 1 reproduces the "
                 "paper's pure data-parallel scheme)")
+        if config.sampler == "warp":
+            raise ValueError(
+                "sampler='warp' is single-backend only in this release: "
+                "the MH doc proposal gathers topics of arbitrary same-doc "
+                "tokens, and dissected documents would need remote topic "
+                "gathers every proposal cycle. Use backend='single' for "
+                "the warp engine, or sampler='three_branch' on this "
+                "distributed trainer")
         self.cfg = config
         self.mesh = mesh
         self.data_axes = batch_axes(mesh)

@@ -27,6 +27,11 @@ Invariants:
     (every token move is a −1 somewhere and a +1 somewhere else).
   * **packed_overflow** — the hybrid packed state never overflowed a
     bucket (``overflow == 0``).
+  * **alias_tables_valid** — the warp sampler's Walker alias tables
+    (core/mh.py) are well-formed: keep-probabilities in [0, 1], alias
+    redirects in range, and the table-implied draw distribution
+    reconstructs the q the tables were built from (a corrupted table
+    silently biases every word proposal of the scan).
   * **theta_finite** / **finite_llpt** — fold-in θ and evaluation
     log-likelihood are finite (NaN poisoning trips here, not three
     epochs later).
@@ -37,8 +42,9 @@ from __future__ import annotations
 import numpy as np
 
 __all__ = ["InvariantViolation", "ShardCorruptionError",
-           "check_dense_counts", "check_delta_conservation",
-           "check_packed_counts", "check_theta"]
+           "check_alias_tables", "check_dense_counts",
+           "check_delta_conservation", "check_packed_counts",
+           "check_theta"]
 
 
 class InvariantViolation(RuntimeError):
@@ -122,6 +128,45 @@ def check_packed_counts(colsum, overflow, *, n_tokens: int,
         raise InvariantViolation(
             "token_conservation", where,
             f"sum(colsum)={total}, expected {int(n_tokens)}")
+
+
+def check_alias_tables(prob, alias, q=None, *, where: str,
+                       atol: float = 1e-4) -> None:
+    """Warp-sampler alias-table invariants (core/mh.AliasTables).
+
+    A Walker table is valid iff every keep-probability lies in [0, 1],
+    every alias redirect is a real topic, and — the load-bearing one —
+    the distribution the table draws from reconstructs the proposal ``q``
+    it was built for: mass(k) = Σ_j [prob[j]·(j==k) +
+    (1−prob[j])·(alias[j]==k)] / K == q[k] per row.
+    """
+    p = np.asarray(prob, np.float64)
+    a = np.asarray(alias, np.int64)
+    R, K = p.shape
+    if not np.isfinite(p).all() or float(p.min(initial=0.0)) < 0.0 \
+            or float(p.max(initial=0.0)) > 1.0 + 1e-6:
+        raise InvariantViolation(
+            "alias_tables_valid", where,
+            f"keep-probabilities outside [0, 1]: min={p.min(initial=0):.3g}"
+            f", max={p.max(initial=0):.3g}")
+    if int(a.min(initial=0)) < 0 or int(a.max(initial=0)) >= K:
+        raise InvariantViolation(
+            "alias_tables_valid", where,
+            f"alias redirects outside [0, {K}): min={int(a.min(initial=0))}"
+            f", max={int(a.max(initial=0))}")
+    if q is not None:
+        recon = p / K
+        flat = recon.reshape(-1)
+        np.add.at(flat, (np.arange(R)[:, None] * K + a).reshape(-1),
+                  ((1.0 - p) / K).reshape(-1))
+        err = float(np.abs(recon - np.asarray(q, np.float64)).max(
+            initial=0.0))
+        if err > atol:
+            raise InvariantViolation(
+                "alias_tables_valid", where,
+                f"table mass deviates from q by {err:.3g} (> {atol:g}): "
+                "the word proposal no longer draws the distribution the "
+                "acceptance ratio corrects for")
 
 
 def check_theta(theta, *, where: str) -> None:

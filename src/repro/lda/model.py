@@ -19,9 +19,10 @@ class LDAConfig:
     n_topics: int
     alpha: float | None = None       # paper: 50/K when None
     beta: float = 0.01               # paper SS II-B
-    sampler: str = "three_branch"    # "two_branch" | "three_branch"
+    sampler: str = "three_branch"    # "two_branch" | "three_branch" | "warp"
     impl: str = "xla"                # "xla" | "pallas"
     g: int = 2                       # Eq 10 tail-bound terms (paper uses 2)
+    mh_cycles: int = 2               # warp: MH proposal cycles per token
     tile_size: int = 8192            # token tile (balance.py); pow2
     format: str = "dense"            # live-state layout: "dense" | "hybrid"
     tail_sampler: str = "exact"      # hybrid tail phase-2: "exact" | "sparse"
@@ -45,12 +46,16 @@ class LDAConfig:
         # never deep inside a backend __init__ or a traced function.
         if self.n_topics < 1:
             raise ValueError(f"n_topics={self.n_topics} must be >= 1")
-        if self.sampler not in ("two_branch", "three_branch"):
-            raise ValueError(f"unknown sampler {self.sampler!r}: "
-                             "expected 'two_branch' or 'three_branch'")
+        if self.sampler not in ("two_branch", "three_branch", "warp"):
+            raise ValueError(
+                f"unknown sampler {self.sampler!r}: valid options are "
+                "'two_branch' (ESCA baseline), 'three_branch' (exact EZLDA "
+                "skip sampler), or 'warp' (WarpLDA-style Metropolis-"
+                "Hastings, DESIGN.md SS12)")
         if self.impl not in ("xla", "pallas"):
-            raise ValueError(f"unknown impl {self.impl!r}: "
-                             "expected 'xla' or 'pallas'")
+            raise ValueError(
+                f"unknown impl {self.impl!r}: valid options are 'xla' "
+                "(pure-XLA reference) or 'pallas' (tiled kernels)")
         if self.format not in ("dense", "hybrid"):
             raise ValueError(f"unknown state format {self.format!r}: "
                              "expected 'dense' or 'hybrid'")
@@ -59,11 +64,16 @@ class LDAConfig:
                              "expected 'exact' or 'sparse'")
         if self.balance not in ("none", "tiles"):
             raise ValueError(
-                f"unknown balance {self.balance!r}: expected 'none' or "
-                "'tiles' (hierarchical tile-scheduled workload balancing, "
-                "paper SSV-A / DESIGN.md SS9)")
+                f"unknown balance {self.balance!r}: valid options are "
+                "'none' or 'tiles' (hierarchical tile-scheduled workload "
+                "balancing, paper SSV-A / DESIGN.md SS9)")
         if self.g < 1:
             raise ValueError(f"g={self.g} must be >= 1 (paper uses 2)")
+        if self.mh_cycles < 1:
+            raise ValueError(
+                f"mh_cycles={self.mh_cycles} must be >= 1: each cycle of "
+                "the warp sampler issues one doc and one word proposal, "
+                "and an MH chain with zero proposals never moves")
         if self.tile_size < 1:
             raise ValueError(f"tile_size={self.tile_size} must be >= 1")
         if self.eval_every < 1:

@@ -213,7 +213,25 @@ class LDATrainer:
 
     def _make_sampler(self) -> Callable:
         cfg = self.config
-        if cfg.impl == "pallas":
+        if cfg.sampler == "warp":
+            # WarpLDA-style MH engine (core/mh.py, DESIGN.md SS12). The
+            # stepwise reference path rebuilds the alias tables from the
+            # LIVE Ŵ every iteration (zero staleness); the fused pipeline
+            # is where the scan-start snapshot + Pallas tile build live —
+            # impl="pallas" therefore routes through run()/run_fused.
+            from repro.core import mh
+            index = mh.build_doc_index(self.doc_ids, self.mask,
+                                       self.n_docs)
+            self.doc_index = index
+
+            def sampler(key, state):
+                W_hat = esca.compute_w_hat(state.W, cfg.beta)
+                tables = mh.build_alias_tables(W_hat)
+                return mh.sample_warp(
+                    key, self.word_ids, self.doc_ids, state.topics,
+                    state.D, W_hat, tables, index, alpha=cfg.alpha_,
+                    n_cycles=cfg.mh_cycles, mask=self.mask)
+        elif cfg.impl == "pallas":
             from repro.kernels import ops as kops
             def sampler(key, state):
                 W_hat = esca.compute_w_hat(state.W, cfg.beta)

@@ -90,9 +90,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import balance as balance_mod
-from repro.core import esca, sparse, three_branch
+from repro.core import esca, mh, sparse, three_branch
 from repro.kernels import ops as kops
 from repro.kernels import sample_fused as _fused
+from repro.kernels import sample_warp as _warp
 from repro.kernels.runtime import resolve_interpret
 from repro.lda import invariants
 from repro.runtime import chaos
@@ -159,6 +160,41 @@ def scatter_changed_deltas(topics, new_topics, doc_ids, word_ids, mask, *,
                             lambda carry: carry, carry)
 
     return jax.lax.fori_loop(0, n_chunks, upd_body, (D, W, colsum))
+
+
+def build_warp_proposal(W, colsum, beta: float):
+    """Scan-start warp proposal state from the live integer counts.
+
+    Returns ``(w_til, tables, squeue, lqueue, n_small)``: the Ŵ snapshot
+    the tables are built from (W̃ — the acceptance ratio keeps gathering
+    this as q̃ even after the live counts move on), the Walker alias
+    tables over it, and the Vose queue metadata the Pallas kernel needs
+    to run the identical pairing loop per tile (core/mh.alias_queues is
+    sort-based, so it runs here — once per scan — not in the kernel).
+    Built OUTSIDE the donated scan and held fixed across its iterations:
+    staleness is sound for MH (DESIGN.md SS12), and one O(V·K) build
+    amortizes over every proposal of the scan.
+    """
+    w_til = esca.compute_w_hat_from_colsum(W, colsum, beta)
+    k_total = w_til.shape[1]
+    q = w_til / jnp.sum(w_til, axis=1, keepdims=True)
+    squeue, lqueue, n_small = mh.alias_queues(q * k_total)
+    prob, alias = mh.run_vose(q * k_total, squeue, lqueue, n_small)
+    tables = mh.AliasTables(prob=prob, alias=alias, q=q)
+    return w_til, tables, squeue, lqueue, n_small
+
+
+def warp_stats(mask, acc_any, new_topics, old_topics,
+               n_cycles: int) -> mh.WarpStats:
+    """Per-iteration MH statistics over the REAL (unmasked) tokens."""
+    f32 = jnp.float32
+    m = (mask > 0).astype(f32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    return mh.WarpStats(
+        frac_accepted=jnp.sum(acc_any.astype(f32) * m) / denom,
+        frac_unchanged=jnp.sum(
+            (new_topics == old_topics).astype(f32) * m) / denom,
+        n_proposals=jnp.float32(2 * n_cycles))
 
 
 def branch_stats(skip, in_m_acc, new_topics, old_topics, k1):
@@ -244,6 +280,13 @@ class FusedPipeline:
         self._surv_ema: float | None = None
         self._step_cache: dict[tuple, Callable] = {}
         self._interpret = resolve_interpret(None)
+        # -- warp MH engine (sampler="warp", DESIGN.md SS12) ---------------
+        self.sampler = getattr(config, "sampler", "three_branch")
+        self._proposal_fn: Callable | None = None
+        if self.sampler == "warp":
+            # static doc→token index for the positional doc proposal;
+            # host-built once (the corpus layout never moves)
+            self.doc_index = mh.build_doc_index(doc_ids, mask, n_docs)
         # -- tile-scheduled balancing (paper §V-A, DESIGN.md SS9) ----------
         self.balance = getattr(config, "balance", "none")
         self._span_ema: float | None = None
@@ -304,6 +347,30 @@ class FusedPipeline:
             fstate.D, fstate.W, fstate.colsum,
             n_tokens=self._n_real_tokens(),
             where=f"chunk boundary (iteration {int(fstate.iteration)})")
+
+    # -- warp proposal state (built once per scan, outside the donation) ---
+
+    def _build_proposal(self, fstate) -> tuple:
+        """Alias tables + queues over the SCAN-START W̃ (see
+        build_warp_proposal). Under ``config.selfcheck`` the freshly built
+        tables run the alias invariants before the scan consumes them."""
+        if self._proposal_fn is None:
+            beta = self.config.beta
+            self._proposal_fn = jax.jit(
+                lambda W, colsum: build_warp_proposal(W, colsum, beta))
+        prop = self._proposal_fn(*self._proposal_counts(fstate))
+        if getattr(self.config, "selfcheck", False):
+            tables = prop[1]
+            invariants.check_alias_tables(
+                tables.prob, tables.alias, tables.q,
+                where=f"warp proposal build (iteration "
+                      f"{int(fstate.iteration)})")
+        return prop
+
+    def _proposal_counts(self, fstate) -> tuple:
+        """(W, colsum) the proposal builds from; the hybrid pipeline
+        overrides this with its packed-state densification."""
+        return fstate.W, fstate.colsum
 
     # -- tile helpers (traced) ---------------------------------------------
 
@@ -415,6 +482,120 @@ class FusedPipeline:
 
         return sample_chunk
 
+    def _warp_chunk_sampler(self, topics, t_doc, t_word, u_draw, u_acc,
+                            word_ids, doc_ids, D, W_hat, prop, *,
+                            win_words: int, n_stream: int | None = None):
+        """Phase-2 ``sample_chunk(idx)`` closure for the warp MH engine.
+
+        The XLA path runs the accept/reject cycle with direct scalar
+        gathers — O(1) per token, no (capacity, K) row materialization
+        anywhere, which is where the ≥2x over the exact sampler comes
+        from. The Pallas path ships the chunk's word-run window (live Ŵ,
+        stale W̃, Vose queues) into the tile kernel, which rebuilds the
+        window's alias tables in VMEM and replays the SAME uniforms —
+        bit-equal to the XLA chain by table row-independence (pinned by
+        tests/test_warp_sampler.py). A chunk whose span outgrows the
+        window cond-falls back to the full-vocabulary window.
+        """
+        cfg = self.config
+        alpha, n_cycles = cfg.alpha_, cfg.mh_cycles
+        w_til, tables, squeue, lqueue, n_small = prop
+        use_tiles = self._use_tiles(win_words)
+
+        def xla_chain(idx):
+            v_c, d_c = word_ids[idx], doc_ids[idx]
+            s, n_acc = mh.mh_chain(
+                topics[idx], t_doc[:, idx], t_word[:, idx],
+                u_acc[:, :, idx],
+                lookup_d=lambda k: D[d_c, k].astype(jnp.float32),
+                lookup_w=lambda k: W_hat[v_c, k],
+                lookup_q=lambda k: tables.q[v_c, k],
+                alpha=alpha)
+            return s, n_acc > 0
+
+        if cfg.impl != "pallas":
+            return xla_chain
+
+        def sample_chunk(idx):
+            v_c, d_c = word_ids[idx], doc_ids[idx]
+            args = (topics[idx], D[d_c], t_doc[:, idx], u_draw[:, :, idx],
+                    u_acc[:, :, idx], W_hat, w_til, squeue, lqueue,
+                    n_small, v_c)
+
+            def full(_):
+                return _warp.sample_warp_tiled(
+                    *args, jnp.int32(0), alpha=alpha, n_cycles=n_cycles,
+                    win_words=self.n_words, interpret=self._interpret)
+
+            if not use_tiles:
+                s, n_acc = full(None)
+                return s, n_acc > 0
+            first, last = self._chunk_run(v_c, idx, n_stream)
+
+            def tiled(_):
+                return _warp.sample_warp_tiled(
+                    *args, first, alpha=alpha, n_cycles=n_cycles,
+                    win_words=win_words, interpret=self._interpret)
+
+            s, n_acc = jax.lax.cond(last - first < win_words, tiled,
+                                    full, None)
+            return s, n_acc > 0
+
+        return sample_chunk
+
+    def _warp_iteration(self, fstate: FusedState, prop, *, capacity: int,
+                        win_words: int):
+        """One warp MH iteration: proposals → chain → delta update.
+
+        Slots into the identical survivor-compaction machinery as the
+        exact iteration — here "skip" is just the padding mask (MH has no
+        phase-1 convergence skip; every real token runs its chain), so
+        the chunking/tiling stay pure performance knobs and the delta
+        scatter still shrinks with the unchanged fraction. PRNG
+        discipline mirrors LDATrainer.step + mh.sample_warp (split once,
+        then 3-way), so a 1-iteration scan is bit-equal to the stepwise
+        reference path.
+        """
+        cfg = self.config
+        n, n_cycles = self.n_tokens, cfg.mh_cycles
+        word_ids, doc_ids, mask = self.word_ids, self.doc_ids, self.mask
+        topics, D, W, colsum, key, iteration = fstate
+        w_til, tables, _squeue, _lqueue, _n_small = prop
+
+        key, sub = jax.random.split(key)
+        kd, kw, ka = jax.random.split(sub, 3)
+        W_hat = esca.compute_w_hat_from_colsum(W, colsum, cfg.beta)
+        t_doc = mh.doc_proposals(kd, topics, doc_ids, self.doc_index,
+                                 n_topics=cfg.n_topics, alpha=cfg.alpha_,
+                                 n_cycles=n_cycles)
+        t_word, u_draw = mh.word_proposals(kw, word_ids, tables,
+                                           n_cycles=n_cycles)
+        u_acc = jax.random.uniform(ka, (n_cycles, 2, n),
+                                   dtype=jnp.float32)
+
+        skip = mask == 0
+        rank, n_surv = three_branch.survivor_rank(skip)
+        n_chunks = max(1, -(-n // capacity))
+        surv_idx = three_branch.compact_survivor_indices(
+            rank, skip, n_chunks * capacity)
+        max_span = self._max_chunk_span(surv_idx, n_chunks, capacity) \
+            if self.balance == "tiles" else jnp.int32(0)
+
+        sample_chunk = self._warp_chunk_sampler(
+            topics, t_doc, t_word, u_draw, u_acc, word_ids, doc_ids, D,
+            W_hat, prop, win_words=win_words)
+        new_topics, acc_any = three_branch.run_survivor_chunks(
+            surv_idx, n_surv, topics,
+            capacity=capacity, n_chunks=n_chunks, sample_chunk=sample_chunk)
+
+        D, W, colsum = scatter_changed_deltas(
+            topics, new_topics, doc_ids, word_ids, mask,
+            capacity=capacity, D=D, W=W, colsum=colsum)
+        st = warp_stats(mask, acc_any, new_topics, topics, n_cycles)
+        new_state = FusedState(topics=new_topics, D=D, W=W, colsum=colsum,
+                               key=key, iteration=iteration + 1)
+        return new_state, st, n_surv, max_span
+
     # -- the fused iteration body (traced; no host interaction) ------------
 
     def _iteration(self, fstate: FusedState, *, capacity: int,
@@ -459,28 +640,50 @@ class FusedPipeline:
     # -- compiled entry points --------------------------------------------
 
     def _get_fn(self, n_iters: int) -> Callable:
-        """(state) -> (state, stats, n_surv, max_span) for a scan."""
+        """(state[, prop]) -> (state, stats, n_surv, max_span) for a scan.
+
+        With ``sampler="warp"`` the compiled scan takes the scan-start
+        proposal state as a second (undonated) argument — the tables stay
+        fixed across the scan's iterations (the staleness argument,
+        DESIGN.md SS12) while the counts keep moving under donation.
+        """
         sig = (n_iters, self.capacity, self.win_words)
         fn = self._step_cache.get(sig)
         if fn is None:
             capacity, win = self.capacity, self.win_words
+            if self.sampler == "warp":
 
-            def multi(fstate):
-                def body(carry, _):
-                    st, stats, n_surv, span = self._iteration(
-                        carry, capacity=capacity, win_words=win)
-                    return st, (stats, n_surv, span)
-                fstate, (stats, n_surv, span) = jax.lax.scan(
-                    body, fstate, None, length=n_iters)
-                return fstate, stats, n_surv, span
+                def multi(fstate, prop):
+                    def body(carry, _):
+                        st, stats, n_surv, span = self._warp_iteration(
+                            carry, prop, capacity=capacity, win_words=win)
+                        return st, (stats, n_surv, span)
+                    fstate, (stats, n_surv, span) = jax.lax.scan(
+                        body, fstate, None, length=n_iters)
+                    return fstate, stats, n_surv, span
+            else:
+
+                def multi(fstate):
+                    def body(carry, _):
+                        st, stats, n_surv, span = self._iteration(
+                            carry, capacity=capacity, win_words=win)
+                        return st, (stats, n_surv, span)
+                    fstate, (stats, n_surv, span) = jax.lax.scan(
+                        body, fstate, None, length=n_iters)
+                    return fstate, stats, n_surv, span
 
             fn = jax.jit(multi, donate_argnums=(0,))
             self._step_cache[sig] = fn
         return fn
 
+    def _dispatch(self, fn: Callable, fstate):
+        if self.sampler == "warp":
+            return fn(fstate, self._build_proposal(fstate))
+        return fn(fstate)
+
     def step(self, fstate: FusedState):
         """One fused iteration — a single donated dispatch."""
-        fstate, stats, n_surv, _ = self._get_fn(1)(fstate)
+        fstate, stats, n_surv, _ = self._dispatch(self._get_fn(1), fstate)
         squeeze = lambda t: jax.tree.map(lambda x: x[0], t)
         return fstate, squeeze(stats), squeeze(n_surv)
 
@@ -495,7 +698,8 @@ class FusedPipeline:
         and possibly re-bucket the chunk capacity / re-tile the window for
         the NEXT scan.
         """
-        fstate, stats, n_surv, span = self._get_fn(int(n_iters))(fstate)
+        fstate, stats, n_surv, span = self._dispatch(
+            self._get_fn(int(n_iters)), fstate)
         if replan:
             self.note_survivors(n_surv)
             if self.balance == "tiles":
@@ -603,6 +807,93 @@ class HybridFusedPipeline(FusedPipeline):
             n_tokens=self._n_real_tokens(),
             where=f"chunk boundary (iteration {int(fstate.iteration)})")
 
+    def _proposal_counts(self, hs) -> tuple:
+        # warp tables build over the DENSIFIED W (exact integers) — one
+        # eager densify per scan, not per iteration
+        w_parts = [hs.W_head] + [
+            sparse.densify_rows_sorted(b, self.layout.n_topics)
+            for b in hs.W_tail]
+        w_int = jnp.concatenate(w_parts, axis=0) if len(w_parts) > 1 \
+            else hs.W_head
+        return w_int, hs.colsum
+
+    def _repack_counts(self, d_new, w_new, overflow):
+        """Updated dense matrices -> sorted repack (scatter-free; the
+        overflow tripwire stays 0 because capacities are row-nnz upper
+        bounds). Shared by the exact and warp iteration bodies."""
+        lay = self.layout
+        d_packed, ov_d = sparse.pack_rows_sorted(d_new, lay.d_capacity)
+        overflow = overflow + ov_d
+        w_head = w_new[:lay.v_dense]             # HybridW dense-head part
+        new_tail = []
+        for b in range(len(lay.tail_caps)):
+            start = lay.tail_starts[b]
+            end = lay.tail_starts[b + 1] if b + 1 < len(lay.tail_starts) \
+                else lay.n_words
+            bucket, ov_b = sparse.pack_rows_sorted(w_new[start:end],
+                                                   lay.tail_caps[b])
+            new_tail.append(bucket)
+            overflow = overflow + ov_b
+        return d_packed, w_head, tuple(new_tail), overflow
+
+    def _warp_iteration(self, hs, prop, *, capacity: int, win_words: int):
+        """The warp MH iteration over the hybrid packed state: densify
+        once (exact integers), run the dense warp machinery bit-for-bit,
+        repack once. The T partition never splits — the MH chain reads
+        rows of the densified matrices directly, so head and tail words
+        route identically (``tail_sampler`` is an exact-sampler knob)."""
+        cfg, lay = self.config, self.layout
+        n, n_cycles = self.n_tokens, cfg.mh_cycles
+        word_ids, doc_ids, mask = self.word_ids, self.doc_ids, self.mask
+        k_total = lay.n_topics
+        topics, d_packed, w_head, w_tail, colsum, overflow, key, iteration \
+            = hs
+        _w_til, tables, _squeue, _lqueue, _n_small = prop
+
+        key, sub = jax.random.split(key)
+        kd, kw, ka = jax.random.split(sub, 3)
+        d_dense = sparse.densify_rows_sorted(d_packed, k_total)
+        w_parts = [w_head] + [sparse.densify_rows_sorted(b, k_total)
+                              for b in w_tail]
+        w_int = jnp.concatenate(w_parts, axis=0) if len(w_parts) > 1 \
+            else w_head
+        w_hat = esca.compute_w_hat_from_colsum(w_int, colsum, cfg.beta)
+        t_doc = mh.doc_proposals(kd, topics, doc_ids, self.doc_index,
+                                 n_topics=cfg.n_topics, alpha=cfg.alpha_,
+                                 n_cycles=n_cycles)
+        t_word, u_draw = mh.word_proposals(kw, word_ids, tables,
+                                           n_cycles=n_cycles)
+        u_acc = jax.random.uniform(ka, (n_cycles, 2, n),
+                                   dtype=jnp.float32)
+
+        skip = mask == 0
+        rank, n_surv = three_branch.survivor_rank(skip)
+        n_chunks = max(1, -(-n // capacity))
+        surv_idx = three_branch.compact_survivor_indices(
+            rank, skip, n_chunks * capacity)
+        max_span = self._max_chunk_span(surv_idx, n_chunks, capacity) \
+            if self.balance == "tiles" else jnp.int32(0)
+
+        sample_chunk = self._warp_chunk_sampler(
+            topics, t_doc, t_word, u_draw, u_acc, word_ids, doc_ids,
+            d_dense, w_hat, prop, win_words=win_words)
+        new_topics, acc_any = three_branch.run_survivor_chunks(
+            surv_idx, n_surv, topics,
+            capacity=capacity, n_chunks=n_chunks, sample_chunk=sample_chunk)
+
+        d_new, w_new, colsum = scatter_changed_deltas(
+            topics, new_topics, doc_ids, word_ids, mask, capacity=capacity,
+            D=d_dense, W=w_int, colsum=colsum)
+        d_packed, w_head, w_tail, overflow = self._repack_counts(
+            d_new, w_new, overflow)
+        st = warp_stats(mask, acc_any, new_topics, topics, n_cycles)
+        from repro.lda.model import SparseLDAState
+        new_state = SparseLDAState(
+            topics=new_topics, D=d_packed, W_head=w_head, W_tail=w_tail,
+            colsum=colsum, overflow=overflow, key=key,
+            iteration=iteration + 1)
+        return new_state, st, n_surv, max_span
+
     # -- the fused iteration body (traced; no host interaction) ------------
 
     def _iteration(self, hs, *, capacity: int, win_words: int):
@@ -703,21 +994,8 @@ class HybridFusedPipeline(FusedPipeline):
             topics, new_topics, doc_ids, word_ids, mask, capacity=capacity,
             D=d_dense, W=w_int, colsum=colsum)
 
-        # updated matrices -> sorted repack (scatter-free; the overflow
-        # tripwire stays 0 because capacities are row-nnz upper bounds)
-        d_packed, ov_d = sparse.pack_rows_sorted(d_new, lay.d_capacity)
-        overflow = overflow + ov_d
-        w_head = w_new[:v_dense]                 # HybridW dense-head part
-        new_tail = []
-        for b in range(len(w_tail)):
-            start = lay.tail_starts[b]
-            end = lay.tail_starts[b + 1] if b + 1 < len(lay.tail_starts) \
-                else lay.n_words
-            bucket, ov_b = sparse.pack_rows_sorted(w_new[start:end],
-                                                   lay.tail_caps[b])
-            new_tail.append(bucket)
-            overflow = overflow + ov_b
-        w_tail = tuple(new_tail)
+        d_packed, w_head, w_tail, overflow = self._repack_counts(
+            d_new, w_new, overflow)
 
         st = branch_stats(dec.skip, in_m_acc, new_topics, topics, dec.k1)
         from repro.lda.model import SparseLDAState
@@ -995,6 +1273,16 @@ class StreamingPipeline(FusedPipeline):
 
     def __init__(self, stream, *, n_docs: int, n_words: int, config):
         from repro.lda.corpus import ShardedCorpus
+        if getattr(config, "sampler", "three_branch") == "warp":
+            raise ValueError(
+                "sampler='warp' does not support corpus_residency="
+                "'streamed' in this release: the MH doc proposal gathers "
+                "topics of ARBITRARY same-doc tokens, which breaks the "
+                "epoch-shard locality the streaming pipeline is built on "
+                "(a shard would need every other shard's topics resident). "
+                "Use corpus_residency='full' (or 'auto' on a device that "
+                "fits the token list), or sampler='three_branch' for "
+                "streamed training")
         if not isinstance(stream, ShardedCorpus):
             raise ValueError(
                 "StreamingPipeline takes a repro.lda.corpus.ShardedCorpus "

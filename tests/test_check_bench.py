@@ -60,6 +60,11 @@ def test_every_committed_file_has_schema_and_gates():
         if row["scheme"] == "token_tiles"]),
     ("BENCH_hybrid_state.json", lambda d: [
         c.update(vs_dense_bytes=0.95) for c in d["cells"]]),
+    ("BENCH_warp_sampler.json", lambda d: d.update(warp_over_exact=1.2)),
+    ("BENCH_warp_sampler.json",
+     lambda d: d.update(host_syncs_in_scanned_region=2)),
+    ("BENCH_warp_sampler.json", lambda d: d.update(min_llpt_gap=0.5)),
+    ("BENCH_warp_sampler.json", lambda d: d.update(n_topics=64)),
 ])
 def test_injected_regression_fails(tmp_path, name, mutate):
     doc = copy.deepcopy(_load(name))

@@ -1,0 +1,307 @@
+"""``sampler="warp"`` tests (paper §III fast-sampler context, DESIGN.md SS12).
+
+The load-bearing properties:
+  1. Alias tables are *valid* (reconstruction: prob/K + redirected mass
+     == q row for row) and *deterministic* (hypothesis-driven: the same
+     counts build bitwise-identical tables across two builds, and
+     ``word_stats`` is likewise build-stable — satellite for the shared
+     snapshot machinery). Row independence: tables of a sliced window
+     equal the slice of global tables, which is what lets the Pallas
+     kernel build per-tile tables that match the global build.
+  2. The f32 MH chain matches a float64 NumPy oracle: per-proposal
+     acceptance ratios agree to f32 tolerance and final topics agree
+     exactly away from predicate boundaries.
+  3. Stationarity: warp and the exact three-branch sampler converge to
+     statistically indistinguishable held-in LLPT plateaus.
+  4. Path equivalences, all bitwise: fused(1-iter scans) == stepwise;
+     pallas == xla (window engaged and cond-fallback); hybrid == dense.
+  5. Config surface: unknown sampler/impl/balance name the valid
+     options; mh_cycles >= 1; streamed + distributed reject warp with
+     actionable errors.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from _hyp import given, settings, st
+from repro.core import mh, three_branch
+from repro.lda import invariants
+from repro.lda.corpus import relabel_by_frequency, zipf_corpus
+from repro.lda.model import LDAConfig
+from repro.lda.trainer import LDATrainer
+
+jax.config.update("jax_platform_name", "cpu")
+
+BASE = dict(n_topics=16, tile_size=512, sampler="warp", seed=1)
+
+
+def _rand_weights(rng, V, K):
+    # count-shaped weights with the spiky rows real W_hat rows have
+    w = rng.integers(0, 50, (V, K)).astype(np.float32)
+    w[rng.random((V, K)) < 0.6] = 0.0
+    return w + 0.1
+
+
+# ---------------------------------------------------------------------------
+# 1. alias tables: validity, determinism, row independence
+# ---------------------------------------------------------------------------
+
+def test_alias_tables_reconstruct():
+    rng = np.random.default_rng(0)
+    tables = mh.build_alias_tables(jnp.asarray(_rand_weights(rng, 40, 16)))
+    invariants.check_alias_tables(tables.prob, tables.alias, tables.q,
+                                  where="test reconstruction")
+
+
+def test_check_alias_tables_rejects_corruption():
+    rng = np.random.default_rng(1)
+    tables = mh.build_alias_tables(jnp.asarray(_rand_weights(rng, 10, 8)))
+    prob = np.asarray(tables.prob).copy()
+    alias = np.asarray(tables.alias).copy()
+    q = np.asarray(tables.q)
+    with pytest.raises(invariants.InvariantViolation):
+        bad = prob.copy(); bad[3, 2] = 2.0
+        invariants.check_alias_tables(bad, alias, q, where="t")
+    with pytest.raises(invariants.InvariantViolation):
+        bad = alias.copy(); bad[0, 0] = 99
+        invariants.check_alias_tables(prob, bad, q, where="t")
+    with pytest.raises(invariants.InvariantViolation):
+        bad = q.copy(); bad[5] = np.roll(bad[5], 1)
+        invariants.check_alias_tables(prob, alias, bad, where="t")
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_alias_and_word_stats_build_determinism(seed):
+    """Same key counts ⇒ bitwise-identical proposal snapshots, twice over.
+
+    Both scan-start snapshot builds — ``word_stats`` for the exact
+    sampler, the alias tables for warp — must be pure functions of the
+    counts, or the resume/replay machinery (PR 6) and the pallas/xla
+    equivalences below stop being bitwise statements.
+    """
+    rng = np.random.default_rng(seed)
+    V = int(rng.integers(4, 40))
+    K = int(rng.integers(2, 24))
+    w = _rand_weights(rng, V, K)
+    t1 = mh.build_alias_tables(jnp.asarray(w.copy()))
+    t2 = mh.build_alias_tables(jnp.asarray(w.copy()))
+    for a, b in zip(t1, t2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    s1 = three_branch.word_stats(jnp.asarray(w.copy()), g=2, alpha=0.1)
+    s2 = three_branch.word_stats(jnp.asarray(w.copy()), g=2, alpha=0.1)
+    for a, b in zip(s1, s2):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    invariants.check_alias_tables(t1.prob, t1.alias, t1.q, where="hyp")
+
+
+def test_alias_window_equals_global_slice():
+    """Row independence — the property the tile-local kernel build rests
+    on: tables built from a window of rows == slice of global tables."""
+    rng = np.random.default_rng(3)
+    w = _rand_weights(rng, 50, 16)
+    full = mh.build_alias_tables(jnp.asarray(w))
+    win = mh.build_alias_tables(jnp.asarray(w[17:33]))
+    assert np.array_equal(np.asarray(full.prob)[17:33], np.asarray(win.prob))
+    assert np.array_equal(np.asarray(full.alias)[17:33], np.asarray(win.alias))
+
+
+def test_onehot_vose_bit_equal_scatter():
+    """The Pallas kernel runs the one-hot Vose variant; it must produce
+    the same bits as the scatter variant the host build uses."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(_rand_weights(rng, 30, 12))
+    q = w / jnp.sum(w, axis=1, keepdims=True)
+    scaled = q * w.shape[1]
+    squeue, lqueue, n_small = mh.alias_queues(scaled)
+    p1, a1 = mh.run_vose(scaled, squeue, lqueue, n_small)
+    p2, a2 = mh.run_vose(scaled, squeue, lqueue, n_small, onehot=True)
+    assert np.array_equal(np.asarray(p1), np.asarray(p2))
+    assert np.array_equal(np.asarray(a1), np.asarray(a2))
+
+
+# ---------------------------------------------------------------------------
+# 2. float64 acceptance-ratio oracle
+# ---------------------------------------------------------------------------
+
+def test_mh_chain_matches_float64_oracle():
+    rng = np.random.default_rng(7)
+    V, K, M, n, C = 30, 12, 20, 600, 3
+    D = rng.integers(0, 40, (M, K)).astype(np.int32)
+    W_hat = _rand_weights(rng, V, K)
+    tables = mh.build_alias_tables(jnp.asarray(W_hat))
+    d_ids = rng.integers(0, M, n).astype(np.int32)
+    w_ids = rng.integers(0, V, n).astype(np.int32)
+    s0 = rng.integers(0, K, n).astype(np.int32)
+    t_doc = rng.integers(0, K, (C, n)).astype(np.int32)
+    t_word = rng.integers(0, K, (C, n)).astype(np.int32)
+    u_acc = rng.random((C, 2, n)).astype(np.float32)
+
+    Dj, Wj = jnp.asarray(D), jnp.asarray(W_hat)
+    dj, wj = jnp.asarray(d_ids), jnp.asarray(w_ids)
+    s_jax, _, ratios_f32 = mh.mh_chain(
+        jnp.asarray(s0), jnp.asarray(t_doc), jnp.asarray(t_word),
+        jnp.asarray(u_acc),
+        lookup_d=lambda k: Dj[dj, k].astype(jnp.float32),
+        lookup_w=lambda k: Wj[wj, k],
+        lookup_q=lambda k: tables.q[wj, k],
+        alpha=0.1, return_ratios=True)
+    s_ref, ratios_f64 = mh.reference_chain_numpy(
+        s0, t_doc, t_word, u_acc, d_ids, w_ids, D, W_hat,
+        np.asarray(tables.q), alpha=0.1)
+
+    rel = np.abs(np.asarray(ratios_f32, np.float64) - ratios_f64) \
+        / np.maximum(ratios_f64, 1e-30)
+    assert float(rel.max()) < 1e-4
+
+    # topics must agree exactly wherever every predicate is decided by a
+    # margin f32 rounding cannot flip
+    margin = np.min(np.abs(u_acc.astype(np.float64) - ratios_f64), axis=(0, 1))
+    safe = margin > 1e-4
+    assert safe.mean() > 0.9
+    assert np.array_equal(np.asarray(s_jax)[safe], s_ref[safe])
+
+
+# ---------------------------------------------------------------------------
+# 3. stationarity: warp vs exact LLPT plateau
+# ---------------------------------------------------------------------------
+
+def _final_llpt(corpus, sampler, seed):
+    cfg = LDAConfig(n_topics=16, tile_size=512, eval_every=100,
+                    sampler=sampler, fused=True, seed=seed)
+    tr = LDATrainer(corpus, cfg)
+    pipe = tr.fused_pipeline()
+    fs = pipe.from_lda_state(tr.init_state())
+    init = tr.evaluate(pipe.to_lda_state(fs))
+    fs, _, _ = pipe.run_fused(fs, 100)
+    return init, tr.evaluate(pipe.to_lda_state(fs))
+
+
+@pytest.mark.slow
+def test_warp_stationary_distribution_matches_exact(small_corpus):
+    gaps = []
+    for seed in (0, 1):
+        init_w, warp = _final_llpt(small_corpus, "warp", seed)
+        _, exact = _final_llpt(small_corpus, "three_branch", seed)
+        assert warp > init_w + 0.2        # actually converged, not stuck
+        gaps.append(abs(warp - exact))
+    # measured ~0.04-0.07 nats/token on this corpus; 0.15 flags a chain
+    # targeting the wrong stationary distribution without being flaky
+    assert max(gaps) < 0.15, gaps
+
+
+# ---------------------------------------------------------------------------
+# 4. path equivalences, all bitwise
+# ---------------------------------------------------------------------------
+
+def test_fused_warp_equals_stepwise_bitwise(small_corpus):
+    tr_s = LDATrainer(small_corpus, LDAConfig(**BASE))
+    tr_f = LDATrainer(small_corpus, LDAConfig(**BASE, fused=True))
+    pipe = tr_f.fused_pipeline()
+    fs = pipe.from_lda_state(tr_f.init_state())
+    st_ref = tr_s.init_state()
+    for _ in range(3):
+        fs, _, _ = pipe.step(fs)
+        st_ref, _ = tr_s.step(st_ref)
+    assert np.array_equal(np.asarray(fs.topics), np.asarray(st_ref.topics))
+    assert np.array_equal(np.asarray(fs.D), np.asarray(st_ref.D))
+    pipe.selfcheck(fs)
+
+
+@pytest.fixture(scope="module")
+def wide_corpus():
+    # V large enough that the plan_window(64..128) tile window satisfies
+    # win·4 <= V and the tiled kernel path actually engages
+    c = zipf_corpus(seed=7, n_docs=100, n_words=600, mean_doc_len=50)
+    c, _ = relabel_by_frequency(c)
+    return c
+
+
+def _run5(corpus, **over):
+    cfg = LDAConfig(**{**BASE, "fused": True, **over})
+    tr = LDATrainer(corpus, cfg)
+    pipe = tr.fused_pipeline()
+    fs = pipe.from_lda_state(tr.init_state())
+    fs, stats, _ = pipe.run_fused(fs, 5)
+    return pipe, fs, stats
+
+
+def test_pallas_warp_equals_xla_bitwise(wide_corpus):
+    _, fx, _ = _run5(wide_corpus, survivor_capacity=64)
+    pp, fp, _ = _run5(wide_corpus, survivor_capacity=64, impl="pallas")
+    assert np.array_equal(np.asarray(fp.topics), np.asarray(fx.topics))
+    assert np.array_equal(np.asarray(fp.W), np.asarray(fx.W))
+
+    pt, ft, _ = _run5(wide_corpus, survivor_capacity=64, impl="pallas",
+                      balance="tiles")
+    assert pt._use_tiles(pt.win_words)    # window engaged, not fallback
+    assert np.array_equal(np.asarray(ft.topics), np.asarray(fx.topics))
+
+
+def test_pallas_warp_window_fallback(small_corpus):
+    # V=80 forces win == V: the cond must fall back to the full-vocab
+    # window and still be bit-equal
+    _, fx, _ = _run5(small_corpus)
+    pp, fp, _ = _run5(small_corpus, impl="pallas", balance="tiles")
+    assert not pp._use_tiles(pp.win_words)
+    assert np.array_equal(np.asarray(fp.topics), np.asarray(fx.topics))
+
+
+def test_hybrid_warp_equals_dense_bitwise(small_corpus):
+    _, fd, _ = _run5(small_corpus)
+    ph, fh, _ = _run5(small_corpus, format="hybrid")
+    ph.selfcheck(fh)
+    assert np.array_equal(np.asarray(fh.topics), np.asarray(fd.topics))
+
+
+def test_warp_selfcheck_runs_alias_invariants(small_corpus):
+    _run5(small_corpus, selfcheck=True)
+
+
+# ---------------------------------------------------------------------------
+# 5. config surface + stats
+# ---------------------------------------------------------------------------
+
+def test_warp_stats_surface(small_corpus):
+    tr = LDATrainer(small_corpus, LDAConfig(**BASE, mh_cycles=3))
+    state = tr.init_state()
+    state, stats = tr.step(state)
+    assert stats["n_proposals"] == pytest.approx(6.0)
+    assert 0.0 < stats["frac_accepted"] <= 1.0
+    assert 0.0 <= stats["frac_unchanged"] <= 1.0
+
+
+@pytest.mark.parametrize("knob,value,expect", [
+    ("sampler", "bogus", ["two_branch", "three_branch", "warp"]),
+    ("impl", "cuda", ["xla", "pallas"]),
+    ("balance", "lpt", ["none", "tiles"]),
+])
+def test_config_rejects_unknown_with_valid_options(knob, value, expect):
+    with pytest.raises(ValueError) as e:
+        LDAConfig(n_topics=8, **{knob: value})
+    msg = str(e.value)
+    assert "valid options" in msg
+    for option in expect:
+        assert option in msg
+
+
+def test_config_rejects_nonpositive_mh_cycles():
+    with pytest.raises(ValueError, match="mh_cycles"):
+        LDAConfig(n_topics=8, mh_cycles=0)
+
+
+def test_streamed_rejects_warp(small_corpus):
+    tr = LDATrainer(small_corpus, LDAConfig(
+        **BASE, fused=True, corpus_residency="streamed", stream_shards=2))
+    with pytest.raises(ValueError, match="streamed"):
+        tr.fused_pipeline()
+
+
+def test_distributed_rejects_warp(small_corpus):
+    from repro.lda.distributed import DistLDATrainer
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(ValueError, match="single-backend|backend='single'"):
+        DistLDATrainer(small_corpus, LDAConfig(**BASE), mesh)

@@ -94,6 +94,21 @@ SCHEMAS: dict[str, dict] = {
         "streamed_bytes_ratio": NUM,
         "bitwise_equal_to_resident": bool,
     },
+    "BENCH_warp_sampler.json": {
+        "dry_run": bool,
+        "corpus": _CORPUS, "n_topics": int,
+        "warmup_iters": int, "timed_iters": int, "repeats": int,
+        "conv_iters": int, "eval_every": int,
+        "exact_tokens_per_sec": NUM, "exact_final_llpt": NUM,
+        "exact_curve": [{"seconds": NUM, "llpt": NUM}],
+        "cells": [{"mh_cycles": int, "tokens_per_sec": NUM,
+                   "warp_over_exact": NUM, "final_llpt": NUM,
+                   "final_llpt_gap": NUM,
+                   "curve": [{"seconds": NUM, "llpt": NUM}]}],
+        "warp_tokens_per_sec": NUM, "warp_over_exact": NUM,
+        "min_llpt_gap": NUM,
+        "host_syncs_in_scanned_region": int,
+    },
     "BENCH_recovery.json": {
         "corpus": _CORPUS, "n_topics": int,
         "n_iters": int, "checkpoint_every": int, "repeats": int,
@@ -107,7 +122,10 @@ SCHEMAS: dict[str, dict] = {
 }
 
 # smoke artifacts reuse a driver's schema but skip the metric gates
-SCHEMA_ALIASES = {"BENCH_serve_lda_dryrun.json": "BENCH_serve_lda.json"}
+SCHEMA_ALIASES = {
+    "BENCH_serve_lda_dryrun.json": "BENCH_serve_lda.json",
+    "BENCH_warp_sampler_dryrun.json": "BENCH_warp_sampler.json",
+}
 
 
 # -- key-metric gates (the bounds PRs have claimed; tolerance on ratios) ----
@@ -157,6 +175,16 @@ GATES: dict[str, list] = {
         ("streamed == resident bitwise",
          lambda d: d["bitwise_equal_to_resident"], "==", True, False),
         ("stream shard count", lambda d: d["n_shards"], ">=", 4, False),
+    ],
+    "BENCH_warp_sampler.json": [
+        ("warp/exact tokens-per-sec at default mh_cycles",
+         lambda d: d["warp_over_exact"], ">=", 2.0, True),
+        ("measured at K >= 256", lambda d: d["n_topics"], ">=", 256,
+         False),
+        ("host_syncs_in_scanned_region",
+         lambda d: d["host_syncs_in_scanned_region"], "==", 0, False),
+        ("best-cell LLPT plateau gap vs exact",
+         lambda d: d["min_llpt_gap"], "<=", 0.15, True),
     ],
     "BENCH_recovery.json": [
         ("supervised/unsupervised throughput",
