@@ -194,7 +194,23 @@ class FrozenLDAModel:
 
         W is derived state: it is rebuilt from (corpus, topics_global) by
         one histogram, so any checkpoint any backend wrote can be served.
+
+        Mid-epoch STREAMED payloads are rejected: their ``topics_global``
+        is rewound to the epoch start (the open epoch's sampled shards
+        live only in ``stream_done_topics``), so the histogram here would
+        silently serve a model that is up to one epoch older than the
+        checkpoint's iteration claims.
         """
+        if payload.get("stream_cursor") is not None:
+            raise ValueError(
+                "from_payload got a MID-EPOCH streamed checkpoint "
+                f"(stream_cursor={int(payload['stream_cursor'])}): its "
+                "topics_global is rewound to the epoch start, so freezing "
+                "it would serve stale counts. Resume and finish the epoch "
+                "first (engine.restore(payload); engine.fit(1)) and "
+                "freeze a boundary state with engine.export(), or publish "
+                "a bounded-staleness view through engine.publish_serving()"
+                " instead")
         topics = np.asarray(
             _canonical_topics(payload, corpus.n_tokens), np.int32)
         W = np.zeros((corpus.n_words, config.n_topics), np.int32)
@@ -545,6 +561,19 @@ class _SingleBackend:
     def dense_W(self, state) -> np.ndarray:
         return np.asarray(self._as_lda_state(state).W, np.int32)
 
+    def serving_W(self, state) -> tuple:
+        """``(W, cursor, n_shards)``: a bounded-staleness serving view of
+        ANY state — a mid-epoch StreamState exports ``W0 + ΔW`` (epoch-
+        start counts plus the sampled shards' moves), boundary and dense
+        states export exact counts at cursor 0."""
+        from repro.train.lda_step import StreamState
+        if isinstance(state, StreamState):
+            return self.trainer.fused_pipeline().serving_counts(state)
+        return self.dense_W(state), 0, 1
+
+    def live_serving_W(self):
+        return self.trainer.live_serving_W()
+
     def state_nbytes(self, state) -> int:
         return self.trainer.live_state_nbytes(self._as_lda_state(state))
 
@@ -610,6 +639,7 @@ class _DistBackend:
         schema, eval cadence, and checkpoint timing by construction."""
         tr = self.trainer
         carry = {"s": state}
+        self._live = carry
 
         def run_chunk(chunk):
             carry["s"], stats = tr.run_fused(carry["s"], chunk)
@@ -618,23 +648,37 @@ class _DistBackend:
                 tr.selfcheck(carry["s"])
             return stats
 
-        history = run_boundary_chunked(
-            n_iters, int(state.iteration),
-            n_tokens=self.corpus.n_tokens,
-            eval_every=self.config.eval_every,
-            checkpoint_every=checkpoint_every,
-            run_chunk=run_chunk,
-            evaluate=lambda: self.evaluate(carry["s"]),
-            save=None if self.manager is None else
-            lambda it: self.manager.save(
-                it, self.canonical_payload(carry["s"])),
-            log_fn=log_fn,
-            on_chunk=on_chunk)
+        try:
+            history = run_boundary_chunked(
+                n_iters, int(state.iteration),
+                n_tokens=self.corpus.n_tokens,
+                eval_every=self.config.eval_every,
+                checkpoint_every=checkpoint_every,
+                run_chunk=run_chunk,
+                evaluate=lambda: self.evaluate(carry["s"]),
+                save=None if self.manager is None else
+                lambda it: self.manager.save(
+                    it, self.canonical_payload(carry["s"])),
+                log_fn=log_fn,
+                on_chunk=on_chunk)
+        finally:
+            self._live = None
         return carry["s"], history
 
     def dense_W(self, state) -> np.ndarray:
         _, W = self.trainer.gather_global(state)
         return np.asarray(W, np.int32)
+
+    def serving_W(self, state) -> tuple:
+        # distributed live states publish at chunk boundaries, which are
+        # always epoch boundaries for the dist pipeline — exact counts
+        return self.dense_W(state), 0, 1
+
+    def live_serving_W(self):
+        live = getattr(self, "_live", None)
+        if live is None:
+            return None
+        return self.serving_W(live["s"])
 
     def state_nbytes(self, state) -> int:
         return self.trainer.state_nbytes(state)
@@ -702,6 +746,8 @@ class LDAEngine:
         self.restart_report: RestartReport | None = None
         self.history: dict[str, list] = {"iteration": [], "llpt": [],
                                          "tokens_per_sec": [], "stats": []}
+        self._subscribers: list[Callable] = []
+        self._serving_seq = 0
 
     def _make_backend(self):
         backend, mesh = self._backend_arg, self._mesh
@@ -782,7 +828,10 @@ class LDAEngine:
         if self._state is None:
             self._state = self._backend.restore_or_init()
         self._state, hist = self._backend.run(
-            n_iters, self._state, log_fn, checkpoint_every)
+            n_iters, self._state, log_fn, checkpoint_every,
+            on_chunk=(self._publish_live if self._subscribers else None))
+        if self._subscribers:
+            self.publish_serving()      # final state after the run
         for k, v in hist.items():
             self.history.setdefault(k, []).extend(v)
         return hist
@@ -855,6 +904,7 @@ class LDAEngine:
         def on_chunk(it: int, chunk: int, dt: float) -> None:
             if timer.record(dt / max(chunk, 1)):
                 report.straggler_steps.append(it)
+            self._publish_live(it, chunk, dt)
 
         def attempt_run() -> None:
             ensure_state()
@@ -891,8 +941,14 @@ class LDAEngine:
                         report.straggler_steps.append(step_key)
                     if ss.cursor < S:       # boundary save covers cursor==S
                         mgr.save(step_key, pipe.stream_payload(ss))
+                    if self._subscribers:   # mid-epoch bounded-staleness view
+                        Wv, cur, n_sh = pipe.serving_counts(ss)
+                        self._notify(Wv, cur, n_sh, int(ss.iteration))
                 ss, stats, _ = pipe.run_fused(ss, 1)   # close the epoch
                 self._state = ss
+                if self._subscribers:       # exact epoch-boundary view
+                    Wv, cur, n_sh = pipe.serving_counts(ss)
+                    self._notify(Wv, cur, n_sh, int(ss.iteration))
                 dt = _time.perf_counter() - ep_t0
                 it = int(ss.iteration)
                 mgr.save(it * (S + 1), pipe.stream_payload(ss))
@@ -971,6 +1027,57 @@ class LDAEngine:
         return self
 
     # -- serving -------------------------------------------------------------
+
+    def subscribe(self, fn: Callable) -> Callable[[], None]:
+        """Register ``fn(ServingSnapshot)``; returns an unsubscribe
+        callable.
+
+        Subscribers receive one snapshot per publish point: every chunk
+        boundary during ``fit()`` (plus a final one when the run
+        returns), every ``run_shards`` group under shard-wise
+        supervision (a MID-epoch bounded-staleness view, cursor > 0),
+        and every explicit ``publish_serving()``. ``repro.serve.attach``
+        wires a snapshot stream into a running ``LDAService``.
+        """
+        self._subscribers.append(fn)
+
+        def unsubscribe() -> None:
+            try:
+                self._subscribers.remove(fn)
+            except ValueError:
+                pass
+        return unsubscribe
+
+    def publish_serving(self):
+        """Snapshot the CURRENT state — exact counts at a boundary, the
+        ``W0 + ΔW`` bounded-staleness view mid-epoch — deliver it to all
+        subscribers, and return it (a ``ServingSnapshot``)."""
+        W, cursor, n_shards = self._backend.serving_W(self.state)
+        return self._notify(W, cursor, n_shards, self.iteration)
+
+    def _notify(self, W, cursor, n_shards, iteration):
+        from repro.serve.refresh import ServingSnapshot
+        self._serving_seq += 1
+        snap = ServingSnapshot(
+            W=np.ascontiguousarray(W, np.int32), alpha=self.config.alpha_,
+            beta=self.config.beta, g=self.config.g,
+            iteration=int(iteration), cursor=int(cursor),
+            n_shards=int(n_shards), seq=self._serving_seq,
+            word_map=self.word_map, tile_size=self.config.tile_size)
+        for fn in list(self._subscribers):
+            fn(snap)
+        return snap
+
+    def _publish_live(self, iteration: int, chunk: int = 1,
+                      dt: float = 0.0) -> None:
+        """``on_chunk``-shaped publish hook: snapshot the backend's live
+        in-run state (quiescent at chunk boundaries) if anyone listens."""
+        if not self._subscribers:
+            return
+        view = self._backend.live_serving_W()
+        if view is None:
+            return
+        self._notify(view[0], view[1], view[2], iteration)
 
     def export(self) -> FrozenLDAModel:
         """Freeze the current state into the serving artifact."""

@@ -11,7 +11,29 @@ import numpy as np
 
 from repro.core import sparse
 
-__all__ = ["LDAConfig", "LDAState", "SparseLDAState", "HybridLayout"]
+__all__ = ["LDAConfig", "LDAState", "SparseLDAState", "HybridLayout",
+           "head_rows_for_coverage"]
+
+
+def head_rows_for_coverage(row_mass, coverage: float = 0.9) -> int:
+    """Smallest H such that rows [0, H) hold >= ``coverage`` of the mass.
+
+    Under the engine's frequency relabeling, row mass (a word's token
+    count — ``W.sum(axis=1)`` gives exactly this) is non-increasing in
+    the row id, so the head prefix is the heaviest hot set of its size.
+    The serving tier uses this to size its pinned hot-word cache
+    (``repro.serve.cache``) to a target hit rate on traffic that matches
+    the training distribution. Always returns at least 1; a
+    non-positive total mass returns 1 (nothing to cover).
+    """
+    if not 0.0 < coverage <= 1.0:
+        raise ValueError(f"coverage={coverage} must be in (0, 1]")
+    m = np.asarray(row_mass, np.float64).ravel()
+    total = float(m.sum())
+    if m.size == 0 or total <= 0.0:
+        return 1
+    cum = np.cumsum(m)
+    return int(np.searchsorted(cum, coverage * total, side="left")) + 1
 
 
 @dataclasses.dataclass(frozen=True)

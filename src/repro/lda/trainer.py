@@ -347,6 +347,7 @@ class LDATrainer:
         pipe = self.fused_pipeline()
         carry = {"fs": pipe.from_lda_state(state)}
         selfcheck = self.config.selfcheck
+        self._live = carry      # chunk-boundary handle for live_serving_W
 
         def run_chunk(chunk):
             carry["fs"], stats, _ = pipe.run_fused(carry["fs"], chunk)
@@ -355,18 +356,42 @@ class LDATrainer:
                 pipe.selfcheck(carry["fs"])
             return stats
 
-        history = run_boundary_chunked(
-            n_iters, int(state.iteration),
-            n_tokens=self.corpus.n_tokens,
-            eval_every=self.config.eval_every,
-            checkpoint_every=checkpoint_every,
-            run_chunk=run_chunk,
-            evaluate=lambda: self.evaluate(pipe.to_lda_state(carry["fs"])),
-            save=None if self.checkpoint_manager is None else
-            lambda it: self.checkpoint_manager.save(
-                it, pipe.to_lda_state(carry["fs"]).host_payload()),
-            log_fn=log_fn, on_chunk=on_chunk)
+        try:
+            history = run_boundary_chunked(
+                n_iters, int(state.iteration),
+                n_tokens=self.corpus.n_tokens,
+                eval_every=self.config.eval_every,
+                checkpoint_every=checkpoint_every,
+                run_chunk=run_chunk,
+                evaluate=lambda: self.evaluate(
+                    pipe.to_lda_state(carry["fs"])),
+                save=None if self.checkpoint_manager is None else
+                lambda it: self.checkpoint_manager.save(
+                    it, pipe.to_lda_state(carry["fs"]).host_payload()),
+                log_fn=log_fn, on_chunk=on_chunk)
+        finally:
+            self._live = None
         return pipe.to_lda_state(carry["fs"]), history
+
+    def live_serving_W(self):
+        """``(W, cursor, n_shards)`` of the LIVE in-run state, or None
+        outside a run. Mid-epoch streamed states export the bounded-
+        staleness ``W0 + ΔW`` view (``serving_counts``); boundary and
+        dense states export exact counts at cursor 0. Read at chunk
+        boundaries only (the ``on_chunk`` hook) — that is the one point
+        where the live carry is quiescent."""
+        from repro.train.lda_step import StreamState
+        live = getattr(self, "_live", None)
+        if live is None:
+            return None
+        fs = live.get("fs", live.get("state"))
+        if fs is None:
+            return None
+        if isinstance(fs, StreamState):
+            return self.fused_pipeline().serving_counts(fs)
+        if not hasattr(fs, "W"):        # hybrid packed: densify
+            fs = self.fused_pipeline().to_lda_state(fs)
+        return np.asarray(fs.W, np.int32), 0, 1
 
     def run(self, n_iters: int, state: LDAState | None = None,
             log_fn: Callable[[str], None] | None = None,
@@ -383,11 +408,24 @@ class LDATrainer:
         history: dict[str, list] = {"iteration": [], "llpt": [],
                                     "tokens_per_sec": [], "stats": []}
         start_iter = int(state.iteration)
+        live: dict = {"state": state}
+        self._live = live
+        try:
+            state, history = self._run_stepwise(
+                state, history, start_iter, n_iters, live,
+                log_fn, checkpoint_every, on_chunk)
+        finally:
+            self._live = None
+        return state, history
+
+    def _run_stepwise(self, state, history, start_iter, n_iters, live,
+                      log_fn, checkpoint_every, on_chunk):
         for i in range(start_iter, start_iter + n_iters):
             t0 = time.perf_counter()
             if chaos.armed():
                 chaos.step_range(i, 1)
             state, stats = self.step(state)
+            live["state"] = state
             jax.block_until_ready(state.topics)
             dt = time.perf_counter() - t0
             if self.config.selfcheck:

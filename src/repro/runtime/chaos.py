@@ -20,6 +20,11 @@ Hook sites (all behind ``armed()``):
     shard slice load (``_put_shard`` / ``_put_substream``), i.e. on the
     prefetch worker thread: injected I/O errors exercise the prefetcher's
     retry/backoff, injected bit flips exercise the shard crc32 self-check.
+  * ``replica_event(rid)`` — the serving tier's worker loop
+    (``repro.serve.service``) polls it once per picked-up batch:
+    ``kill_replicas`` makes the worker die holding a batch (exercising
+    the re-queue + surviving-replica path), ``slow_replicas`` injects a
+    one-shot straggler sleep (exercising work-stealing re-routing).
 
 Faults fire ONCE per plan by default (``repeat=False``): after the
 supervisor restarts from a checkpoint the same plan stays installed but
@@ -42,8 +47,8 @@ import time
 from typing import Callable, Mapping
 
 __all__ = ["FaultPlan", "InjectedFault", "SimulatedOOM", "active", "armed",
-           "clear", "corrupt_arrays", "install", "io_fault", "shard_event",
-           "step_range"]
+           "clear", "corrupt_arrays", "install", "io_fault",
+           "replica_event", "shard_event", "step_range"]
 
 
 class InjectedFault(RuntimeError):
@@ -77,6 +82,9 @@ class FaultPlan:
     corrupt_attempts: int = 1          # consecutive corrupted load attempts
     slow_steps: Mapping[int, float] = \
         dataclasses.field(default_factory=dict)   # step -> extra seconds
+    kill_replicas: tuple = ()          # serving replica ids to kill
+    slow_replicas: Mapping[int, float] = \
+        dataclasses.field(default_factory=dict)   # rid -> extra seconds
     repeat: bool = False               # re-fire after a restart?
     exc_factory: Callable[[str], Exception] = InjectedFault
 
@@ -162,6 +170,28 @@ def shard_event(iteration: int, shard: int) -> None:
         raise plan.exc_factory(
             f"chaos: injected failure at iteration {key[0]}, "
             f"shard {key[1]} (mid-epoch)")
+
+
+def replica_event(rid: int) -> str | None:
+    """Serving-replica fault poll, once per picked-up micro-batch.
+
+    A planned straggler (``slow_replicas[rid]`` seconds) sleeps HERE —
+    on the replica's worker thread, holding its batch — and returns
+    None; a planned kill returns ``"kill"`` and lets the caller die
+    holding the batch (the service re-queues it). Both fire once per
+    plan unless ``repeat``.
+    """
+    plan = _PLAN
+    if plan is None:
+        return None
+    r = int(rid)
+    extra = plan.slow_replicas.get(r)
+    if extra is not None and plan._should_fire(("slow_replica", r)):
+        time.sleep(float(extra))
+    if r in plan.kill_replicas \
+            and plan._should_fire(("kill_replica", r)):
+        return "kill"
+    return None
 
 
 def io_fault(shard: int) -> None:

@@ -1,0 +1,26 @@
+"""The serving tier (DESIGN.md SS13): an always-on fold-in service.
+
+Layers, bottom up:
+
+  * ``cache``   — hot-word stats cache: pinned head, on-demand tail,
+    bitwise-equal to full tables, tear-free refresh;
+  * ``replicas`` — device-pinned replicas, each with its own donated
+    packed fold-in dispatch (token packing + alias warm start);
+  * ``service`` — micro-batching front, backpressure, work-stealing
+    dispatch, graceful drain;
+  * ``refresh`` — bounded-staleness snapshots from the live trainer;
+  * ``metrics`` — latency/queue/fill/cache/staleness observability.
+"""
+
+from repro.serve.cache import HotWordCache
+from repro.serve.metrics import LatencyHistogram, ServeMetrics
+from repro.serve.refresh import ServingSnapshot, attach
+from repro.serve.replicas import Replica, ReplicaDead, ReplicaSet
+from repro.serve.service import (LDAService, ServeConfig, ServiceClosed,
+                                 ServiceOverloaded)
+
+__all__ = [
+    "HotWordCache", "LDAService", "LatencyHistogram", "Replica",
+    "ReplicaDead", "ReplicaSet", "ServeConfig", "ServeMetrics",
+    "ServiceClosed", "ServiceOverloaded", "ServingSnapshot", "attach",
+]

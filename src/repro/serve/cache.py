@@ -1,0 +1,245 @@
+"""Hot-word stats cache: pin the skewed head of the query vocabulary.
+
+A serving replica needs four per-word tables to answer a fold-in batch —
+Ŵ rows, the three-branch word stats (top-(g+1)/Q'/ΣŴ), and the alias
+tables for the warm-start proposal. All of them are ROW-LOCAL functions of
+(W[v], colsum): Ŵ[v] is an elementwise expression, ``word_stats`` is a
+per-row top-k + row sum, and ``build_alias_tables`` is documented (and
+property-tested) row-independent. That locality is the whole cache design:
+
+  * the top-``hot_words`` rows (the engine's frequency relabeling puts the
+    most frequent words at the smallest ids, so "hot" == ``id < H``) are
+    built ONCE per model snapshot and pinned device-resident;
+  * a batch's tail words are gathered on demand — the host slices
+    ``W[tail]``, one jitted builder derives their rows with the SAME ops
+    the full-table build would run, and the batch samples against
+    ``concat(hot, tail)`` with word ids remapped to that local table —
+    bitwise-identical to sampling against the full V-row tables (pinned
+    by tests/test_serve_service.py);
+  * hit-rate accounting is token-granular (``hits`` = tokens whose word is
+    pinned), feeding the Zipf-head claim the benchmark gates at ≥ 0.8.
+
+Refresh is tear-free by construction: every table lives inside one
+immutable ``_CacheState``; ``assemble`` reads the state pointer ONCE per
+batch and ``refresh`` swaps in a fully-built replacement, so an in-flight
+batch always samples a single consistent snapshot (the same double-buffer
+discipline the replica set applies one level up).
+
+Tail blocks always carry the same (fixed) padded row count, so the cache
+never adds a data-dependent dimension to the fold-in jit signature.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import mh, three_branch
+
+__all__ = ["AssembledBatch", "HotWordCache", "WordTables"]
+
+
+class WordTables(NamedTuple):
+    """Device-resident per-word serving tables for a (sub)vocabulary.
+
+    ``w_hat`` (R, K) f32; ``stats`` a ``three_branch.WordStats`` with R
+    rows; ``alias`` an ``mh.AliasTables`` with R rows, or None when the
+    warm-start proposal is disabled.
+    """
+    w_hat: jax.Array
+    stats: three_branch.WordStats
+    alias: mh.AliasTables | None
+
+    @property
+    def n_rows(self) -> int:
+        return int(self.w_hat.shape[0])
+
+    def as_args(self) -> tuple:
+        """Flat jit-argument tuple (stable order; alias args optional)."""
+        flat = (self.w_hat,) + tuple(self.stats)
+        if self.alias is not None:
+            flat += (self.alias.prob, self.alias.alias)
+        return flat
+
+
+class AssembledBatch(NamedTuple):
+    """One batch's sampling tables + locally remapped word ids.
+
+    ``tables`` is the device-resident pinned block; ``tail_args`` is the
+    batch's padded tail slice of every table as HOST arrays in
+    ``WordTables.as_args()`` order (empty when every token is hot). The
+    fold-in jit concatenates the two blocks ON DEVICE — handing the raw
+    host arrays to the jit call keeps per-batch assembly free of eager
+    dispatches entirely.
+    """
+    local_ids: np.ndarray       # (N,) int32 into the local tables
+    tables: WordTables          # rows [0, H), device-resident
+    tail_args: tuple            # padded tail rows, host, as_args() order
+    n_rows: int                 # static row count (jit signature part)
+    hits: int                   # tokens resolved from the pinned head
+    misses: int                 # tokens that needed a tail gather
+
+
+@dataclasses.dataclass(frozen=True)
+class _CacheState:
+    """One model snapshot's tables — immutable, swapped as a unit."""
+    W: np.ndarray               # (V, K) int32 host counts
+    colsum: jax.Array           # (K,) device colsum (global, all rows)
+    hot: WordTables             # rows [0, H), device-resident
+    host_tail: tuple | None     # rows [H, V) of every table, HOST arrays
+    tail_memo: dict             # last tail assembly (content-keyed)
+
+
+def _next_pow2(n: int, floor: int = 8) -> int:
+    p = floor
+    while p < n:
+        p *= 2
+    return p
+
+
+class HotWordCache:
+    """Pinned head + on-demand tail assembly for one replica.
+
+    ``hot_words=H`` pins rows [0, H); ``hot_words >= n_words`` degenerates
+    to the full-table (uncached) layout, which is how replicas without a
+    cache are configured — one code path, one fold-in kernel.
+    """
+
+    def __init__(self, model, *, hot_words: int | None = None,
+                 warm_start: bool = True, device=None):
+        V = model.n_words
+        self.n_words = V
+        self.hot_words = max(1, min(int(hot_words or V), V))
+        self.warm_start = bool(warm_start)
+        self.device = device
+        # FIXED tail pad: a data-dependent pad would put the assembled
+        # row count — a static part of the fold-in jit signature — at the
+        # mercy of each batch's unique-tail-word count, recompiling the
+        # kernel mid-traffic; padding every tail to the full tail span
+        # costs only a bounded host gather
+        self.tail_pad = _next_pow2(max(V - self.hot_words, 1), floor=8)
+        g, alpha, beta = model.g, float(model.alpha), float(model.beta)
+
+        def build(W_rows, colsum):
+            # verbatim FrozenLDAModel.__post_init__ math: Ŵ from the
+            # GLOBAL colsum and V, so a row's value never depends on
+            # which rows ride in the slice
+            w_hat = (W_rows.astype(jnp.float32) + jnp.float32(beta)) \
+                / (colsum.astype(jnp.float32)
+                   + jnp.float32(V * beta))
+            stats = three_branch.word_stats(w_hat, g=g, alpha=alpha)
+            alias = mh.build_alias_tables(w_hat) if self.warm_start \
+                else jnp.zeros((0,), jnp.float32)
+            return w_hat, stats, alias
+
+        self._builder = jax.jit(build)
+        self._state = self._build_state(np.asarray(model.W, np.int32))
+        self.hits = 0
+        self.misses = 0
+
+    # -- snapshot construction / refresh -------------------------------------
+
+    def _on_device(self):
+        if self.device is None:
+            return contextlib.nullcontext()
+        return jax.default_device(self.device)
+
+    def _build_rows(self, W_rows: np.ndarray, colsum) -> WordTables:
+        w_hat, stats, alias = self._builder(jnp.asarray(W_rows), colsum)
+        return WordTables(w_hat, stats,
+                          alias if self.warm_start else None)
+
+    def _build_state(self, W: np.ndarray) -> _CacheState:
+        colsum = W.sum(axis=0, dtype=np.int64)
+        with self._on_device():
+            colsum_dev = jnp.asarray(colsum)
+            hot = self._build_rows(W[:self.hot_words], colsum_dev)
+            jax.block_until_ready(hot.w_hat)
+            host_tail = None
+            if not self.is_full:
+                # tail tables are derived ONCE per snapshot — with the
+                # same row-local builder the hot block uses, so a later
+                # slice is bitwise the full-table row — then parked on
+                # the HOST: per-batch work is a gather + upload, never a
+                # recompute, and device memory holds only H + one
+                # batch's tail
+                tail = self._build_rows(W[self.hot_words:], colsum_dev)
+                host_tail = tuple(np.asarray(a)
+                                  for a in tail.as_args())
+        return _CacheState(W=W, colsum=colsum_dev, hot=hot,
+                           host_tail=host_tail, tail_memo={})
+
+    def refresh(self, W: np.ndarray) -> None:
+        """Adopt a new model snapshot: build the full replacement state
+        OFF the serving path, then swap the pointer — atomic under the
+        GIL, so concurrent ``assemble`` calls see old-or-new, never a
+        mix."""
+        self._state = self._build_state(np.asarray(W, np.int32))
+
+    @property
+    def is_full(self) -> bool:
+        return self.hot_words >= self.n_words
+
+    @property
+    def hit_rate(self) -> float | None:
+        tok = self.hits + self.misses
+        return self.hits / tok if tok else None
+
+    # -- per-batch assembly ---------------------------------------------------
+
+    def assemble(self, word_ids: np.ndarray) -> AssembledBatch:
+        """Sampling tables + local ids for one batch's token word ids.
+
+        Hot word v < H keeps id v; each distinct tail word gets
+        H + its rank among the batch's (sorted, unique) tail words. The
+        tail block is padded to the FIXED ``tail_pad`` row count (pad
+        rows are zero, never referenced by a token) so the assembled row
+        count — part of the fold-in jit signature — is one constant.
+        """
+        state = self._state                      # ONE read: no tearing
+        ids = np.asarray(word_ids, np.int64)
+        H = self.hot_words
+        if self.is_full:
+            self.hits += int(ids.size)
+            return AssembledBatch(ids.astype(np.int32), state.hot, (),
+                                  state.hot.n_rows, int(ids.size), 0)
+        hot_mask = ids < H
+        n_hot = int(hot_mask.sum())
+        n_tail_tok = int(ids.size) - n_hot
+        self.hits += n_hot
+        self.misses += n_tail_tok
+        tail_words = np.unique(ids[~hot_mask])
+        if tail_words.size == 0:
+            return AssembledBatch(ids.astype(np.int32), state.hot, (), H,
+                                  n_hot, 0)
+        pad = self.tail_pad
+        tail_args = self._assemble_tail(state, tail_words, pad)
+        local = ids.copy()
+        local[~hot_mask] = H + np.searchsorted(tail_words, ids[~hot_mask])
+        return AssembledBatch(local.astype(np.int32), state.hot,
+                              tail_args, H + pad, n_hot, n_tail_tok)
+
+    def _assemble_tail(self, state: _CacheState, tail_words: np.ndarray,
+                       pad: int) -> tuple:
+        memo_key = (tail_words.tobytes(), pad)
+        hit = state.tail_memo.get(memo_key)
+        if hit is not None:
+            return hit
+        idx = tail_words - self.hot_words       # rows into the host tail
+
+        def gather(arr: np.ndarray) -> np.ndarray:
+            out = np.zeros((pad,) + arr.shape[1:], arr.dtype)
+            out[:idx.size] = arr[idx]           # pad rows: never gathered
+            return out
+
+        tail_args = tuple(gather(a) for a in state.host_tail)
+        # one-entry memo: consecutive batches over a Zipf stream often
+        # repeat the exact tail set; older assemblies are dead weight
+        state.tail_memo.clear()
+        state.tail_memo[memo_key] = tail_args
+        return tail_args

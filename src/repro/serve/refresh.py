@@ -1,0 +1,96 @@
+"""Bounded-staleness model refresh: live trainer → serving artifact.
+
+The streamed trainer already holds everything a fresh serving view needs,
+on device, mid-epoch: the epoch-start counts and the accumulated ΔW of the
+shards sampled so far (``StreamingPipeline`` keeps the epoch's ±1 moves in
+separate delta matrices precisely so no shard observes another's updates).
+``StreamingPipeline.serving_counts`` exports ``W0 + ΔW`` — a bounded-
+staleness W whose staleness is ``(n_shards - cursor) / n_shards`` epochs:
+the un-sampled shards' moves are the only thing missing. At an epoch
+boundary (``cursor == 0``) the export IS the post-apply counts, so a swap
+there is bitwise-equal to freezing a boundary checkpoint — the acceptance
+criterion tests/test_serve_service.py pins.
+
+``ServingSnapshot`` is the publish unit (plain host arrays + staleness
+coordinates); ``LDAEngine.subscribe`` delivers one per publish point
+(chunk boundaries, and every ``run_shards`` group under shard-wise
+supervision), and ``attach(engine, service)`` wires that straight into
+``LDAService.refresh`` — the double-buffered swap: each replica's new
+tables are built OFF the serving path, then a pointer assignment retires
+the old ones once in-flight batches drop their references. Replicas never
+stall; no request observes a torn W.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["ServingSnapshot", "attach"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingSnapshot:
+    """One published serving view of a (possibly mid-epoch) model.
+
+    ``cursor``/``n_shards`` locate the view inside the open epoch
+    (``cursor == 0`` ⇒ an exact epoch-boundary state); ``seq`` is the
+    publisher's monotone sequence number — a service drops snapshots that
+    arrive out of order, so a slow build can never roll serving back.
+    """
+    W: np.ndarray                       # (V, K) int32 topic-word counts
+    alpha: float
+    beta: float
+    g: int
+    iteration: int
+    cursor: int = 0
+    n_shards: int = 1
+    seq: int = 0
+    word_map: np.ndarray | None = None
+    tile_size: int = 8192
+
+    @property
+    def staleness_steps(self) -> float:
+        """How many epochs behind a just-closed epoch this view is:
+        0 at a boundary, (S - cursor)/S with cursor of S shards open."""
+        if self.cursor == 0:
+            return 0.0
+        return (self.n_shards - self.cursor) / self.n_shards
+
+    def freeze(self):
+        """A standalone FrozenLDAModel of this view (tests, cold starts)."""
+        from repro.lda.api import FrozenLDAModel
+        return FrozenLDAModel(W=np.asarray(self.W, np.int32),
+                              alpha=self.alpha, beta=self.beta, g=self.g,
+                              word_map=self.word_map,
+                              tile_size=self.tile_size)
+
+    @classmethod
+    def from_engine(cls, engine, seq: int = 0) -> "ServingSnapshot":
+        """Snapshot an engine's CURRENT state (boundary or mid-epoch)."""
+        W, cursor, n_shards = engine._backend.serving_W(engine.state)
+        return cls(W=W, alpha=engine.config.alpha_,
+                   beta=engine.config.beta, g=engine.config.g,
+                   iteration=engine.iteration, cursor=cursor,
+                   n_shards=n_shards, seq=seq, word_map=engine.word_map,
+                   tile_size=engine.config.tile_size)
+
+
+def attach(engine, service, *,
+           on_snapshot: Callable[[Any], None] | None = None) -> Callable:
+    """Subscribe ``service`` to ``engine``'s publish stream.
+
+    Every snapshot the engine publishes (``fit`` chunk boundaries,
+    shard-wise supervised groups, explicit ``publish_serving()`` calls)
+    becomes a ``service.refresh(snapshot)`` swap. Returns the engine's
+    unsubscribe callable.
+    """
+
+    def deliver(snap: ServingSnapshot) -> None:
+        service.refresh(snap)
+        if on_snapshot is not None:
+            on_snapshot(snap)
+
+    return engine.subscribe(deliver)

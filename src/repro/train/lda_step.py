@@ -1662,6 +1662,28 @@ class StreamingPipeline(FusedPipeline):
         total += 2 * sum(int(a.nbytes) for a in current)
         return total
 
+    # -- the serving export hook (bounded-staleness view, serve/refresh.py) --
+
+    def serving_counts(self, ss: StreamState) -> tuple:
+        """(W, cursor, n_shards): a dense host W of the CURRENT view.
+
+        Mid-epoch this is ``W0 + ΔW`` — the epoch-start counts plus the
+        already-sampled shards' accumulated moves, both device-resident
+        anyway, so the export costs one add + one D2H. The un-sampled
+        shards' moves are the only thing missing: staleness is bounded by
+        ``(n_shards - cursor)/n_shards`` of one epoch. Integer adds make
+        the cursor==n_shards view bitwise-equal to the counts the epoch
+        close is about to apply, and the boundary view (cursor==0) IS the
+        exact counts — which is why a serving swap at a boundary equals
+        freezing a boundary checkpoint (pinned in
+        tests/test_serve_service.py).
+        """
+        if ss.epoch is None or ss.cursor == 0:
+            return (np.asarray(ss.counts[1], np.int32), 0,
+                    self.stream.n_shards)
+        W = np.asarray(ss.counts[1] + ss.epoch.deltas[1], np.int32)
+        return W, int(ss.cursor), self.stream.n_shards
+
     # -- checkpoints (mid-epoch capable) ------------------------------------
 
     def stream_payload(self, ss: StreamState) -> dict:
@@ -1828,6 +1850,18 @@ class StreamingHybridPipeline(StreamingPipeline):
     def overflow_count(self, ss: StreamState) -> int:
         """The packed-update tripwire (0 by the capacity-bound design)."""
         return int(ss.counts[4])
+
+    def serving_counts(self, ss: StreamState) -> tuple:
+        """Hybrid serving export: the epoch-resident densified W mirror
+        plus the accumulated ΔW mid-epoch; densify the packed state at a
+        boundary. Same staleness/bitwise contract as the dense pipeline."""
+        if ss.epoch is None or ss.cursor == 0:
+            _d, w_head, w_tail, _cs, _ov = ss.counts
+            W = self.layout.densify_w(w_head, w_tail)
+            return np.asarray(W, np.int32), 0, self.stream.n_shards
+        _d_dense, w_int, _W_hat, _stats = ss.epoch.derived
+        W = np.asarray(w_int + ss.epoch.deltas[1], np.int32)
+        return W, int(ss.cursor), self.stream.n_shards
 
     def _selfcheck_counts(self, ss: StreamState) -> None:
         _d_packed, _w_head, _w_tail, colsum, overflow = ss.counts

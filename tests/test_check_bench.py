@@ -65,6 +65,15 @@ def test_every_committed_file_has_schema_and_gates():
      lambda d: d.update(host_syncs_in_scanned_region=2)),
     ("BENCH_warp_sampler.json", lambda d: d.update(min_llpt_gap=0.5)),
     ("BENCH_warp_sampler.json", lambda d: d.update(n_topics=64)),
+    ("BENCH_serve_service.json",
+     lambda d: d.update(speedup_vs_batch=2.0)),
+    ("BENCH_serve_service.json",
+     lambda d: d["half_load"].update(p99_over_p50=9.0)),
+    ("BENCH_serve_service.json", lambda d: d.update(cache_hit_rate=0.5)),
+    ("BENCH_serve_service.json",
+     lambda d: d["completion"].update(rate=0.97)),
+    ("BENCH_serve_service.json",
+     lambda d: d["quality"].update(delta_bits=0.4)),
 ])
 def test_injected_regression_fails(tmp_path, name, mutate):
     doc = copy.deepcopy(_load(name))
@@ -119,4 +128,15 @@ def test_dry_run_schema_only_mode(tmp_path):
     assert check_bench.main(["--dry-run-schema-only", path]) == 0
     doc.pop("cells")                          # but schema rot still fails
     path = _write(tmp_path, "BENCH_serve_lda_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 1
+
+
+def test_serve_service_dryrun_alias(tmp_path):
+    doc = copy.deepcopy(_load("BENCH_serve_service.json"))
+    doc["dry_run"] = True
+    doc["speedup_vs_batch"] = 0.1             # would fail the metric gate
+    path = _write(tmp_path, "BENCH_serve_service_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 0
+    doc["serve"].pop("warmed_signatures")     # schema rot still fails
+    path = _write(tmp_path, "BENCH_serve_service_dryrun.json", doc)
     assert check_bench.main(["--dry-run-schema-only", path]) == 1

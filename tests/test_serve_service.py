@@ -1,0 +1,453 @@
+"""Serving-tier tests (repro/serve): micro-batching service, replicas,
+hot-word cache, bounded-staleness refresh, chaos fault drills.
+
+The load-bearing properties:
+  1. The service answers a concurrent single-doc stream: every accepted
+     future resolves to a finite (K,) θ row, metrics account for it.
+  2. The hot-word cache is BITWISE-equal to full tables: every per-word
+     quantity (ŵ, the three-branch stats, the alias tables) is row-local,
+     so slice-then-build == build-then-slice, and a cached fold-in under
+     the same key reproduces the uncached one bit for bit.
+  3. Bounded-staleness refresh at an epoch boundary is bitwise-equal to
+     freezing a boundary checkpoint — the acceptance pin: a service that
+     followed the live trainer's publishes answers exactly like a service
+     built fresh from the final export, θ and LLPT.
+  4. Chaos drills (-m chaos): a replica killed holding a batch loses no
+     accepted request (re-queued, answered by the survivor); a straggler
+     replica delays only its own batch (work stealing re-routes the
+     rest); refresh under traffic never serves a torn W.
+  5. Backpressure is real: with the dispatch backlog bounded and the
+     pending queue full, submit() sheds load with ServiceOverloaded.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import synthetic_lda_corpus
+from repro.lda.model import LDAConfig, head_rows_for_coverage
+from repro.runtime import chaos
+from repro.serve import (HotWordCache, LDAService, LatencyHistogram,
+                         Replica, ReplicaDead, ServeConfig, ServeMetrics,
+                         ServiceOverloaded, ServingSnapshot, attach)
+from repro.serve.replicas import pack_docs
+
+jax.config.update("jax_platform_name", "cpu")
+
+V, K = 40, 8
+
+
+@pytest.fixture(scope="module")
+def engine():
+    corpus = synthetic_lda_corpus(0, n_docs=50, n_words=V, n_topics=4,
+                                  mean_doc_len=14)
+    eng = LDAEngine(corpus,
+                    LDAConfig(n_topics=K, tile_size=256, eval_every=50,
+                              corpus_residency="streamed", stream_shards=4),
+                    backend="single")
+    eng.fit(3)
+    return eng
+
+
+@pytest.fixture(scope="module")
+def model(engine):
+    return engine.export()
+
+
+@pytest.fixture(scope="module")
+def qdocs():
+    rng = np.random.default_rng(7)
+    return [rng.integers(0, V, size=rng.integers(4, 20)).tolist()
+            for _ in range(48)]
+
+
+def small_cfg(**kw):
+    base = dict(max_batch=16, buckets=(4, 8, 16), max_delay_ms=1.0,
+                n_replicas=2, n_sweeps=2, token_floor=64, seed=0)
+    base.update(kw)
+    return ServeConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# config validation & sizing helpers
+# ---------------------------------------------------------------------------
+
+def test_serve_config_validation():
+    with pytest.raises(ValueError, match="powers of two"):
+        ServeConfig(buckets=(3, 8))
+    with pytest.raises(ValueError, match="ascending"):
+        ServeConfig(buckets=(16, 8))
+    with pytest.raises(ValueError, match="largest bucket"):
+        ServeConfig(max_batch=64, buckets=(8, 16))
+    with pytest.raises(ValueError, match="hot_coverage"):
+        ServeConfig(hot_coverage=1.5)
+    with pytest.raises(ValueError, match="not both"):
+        ServeConfig(hot_words=8, hot_coverage=0.8)
+    with pytest.raises(ValueError, match="n_sweeps"):
+        ServeConfig(n_sweeps=0)
+
+
+def test_head_rows_for_coverage():
+    assert head_rows_for_coverage([5, 3, 1, 1], 0.8) == 2
+    assert head_rows_for_coverage([5, 3, 1, 1], 1.0) == 4
+    assert head_rows_for_coverage([0, 0], 0.9) == 1   # nothing to cover
+    with pytest.raises(ValueError, match="coverage"):
+        head_rows_for_coverage([1, 1], 0.0)
+
+
+def test_pack_docs_validation_and_shape(model):
+    with pytest.raises(ValueError, match="word id"):
+        pack_docs([[V + 3]], n_words=V, word_map=model.word_map,
+                  doc_buckets=(4, 8), token_floor=16)
+    packed = pack_docs([[0, 1, 2], [3, 4]], n_words=V,
+                       word_map=model.word_map, doc_buckets=(4, 8),
+                       token_floor=16)
+    assert packed.n_docs == 4 and packed.n_real_docs == 2
+    assert packed.word_ids.shape[0] == 16          # pow2 token pad
+    assert int(packed.mask.sum()) == 5             # real tokens only
+
+
+# ---------------------------------------------------------------------------
+# 1. the service answers a concurrent stream
+# ---------------------------------------------------------------------------
+
+def test_service_answers_stream(model, qdocs):
+    with LDAService(model, small_cfg(hot_coverage=0.8)) as svc:
+        assert 1 <= svc.hot_words <= V
+        futs = [svc.submit(d) for d in qdocs]
+        single = svc.infer(qdocs[0], timeout=60)
+        thetas = [f.result(timeout=60) for f in futs]
+        for th in thetas + [single]:
+            assert th.shape == (K,)
+            assert np.all(np.isfinite(th))
+            assert abs(float(th.sum()) - 1.0) < 1e-4
+        st = svc.stats()
+        assert st["completed"] == len(qdocs) + 1
+        assert st["failed"] == 0 and st["rejected"] == 0
+        assert st["batches"] >= 1 and 0 < st["batch_fill"] <= 1
+        assert 0 < st["cache_hit_rate"] <= 1
+        assert st["latency"]["n"] == len(qdocs) + 1
+        assert st["latency"]["p50_ms"] <= st["latency"]["p99_ms"]
+        assert st["alive_replicas"] == 2
+
+
+def test_service_rejects_after_close(model, qdocs):
+    svc = LDAService(model, small_cfg())
+    svc.close()
+    from repro.serve import ServiceClosed
+    with pytest.raises(ServiceClosed):
+        svc.submit(qdocs[0])
+
+
+def test_transform_deterministic_under_pinned_key(model, qdocs):
+    key = jax.random.PRNGKey(11)
+    with LDAService(model, small_cfg()) as svc:
+        a = svc.transform(qdocs[:6], key=key, timeout=60)
+        b = svc.transform(qdocs[:6], key=key, timeout=60)
+    with LDAService(model, small_cfg()) as svc2:
+        c = svc2.transform(qdocs[:6], key=key, timeout=60)
+    assert np.array_equal(a, b)       # same service, same key
+    assert np.array_equal(a, c)       # independent service, same key
+
+
+# ---------------------------------------------------------------------------
+# 2. hot-word cache: bitwise vs full tables, hit accounting
+# ---------------------------------------------------------------------------
+
+def test_cache_bitwise_equal_to_full_tables(model, qdocs):
+    packed = pack_docs(qdocs[:8], n_words=V, word_map=model.word_map,
+                       doc_buckets=(8,), token_floor=64)
+    key = jax.random.PRNGKey(3)
+    full = Replica(0, model, device=None, hot_words=V, warm_start=True)
+    hot = Replica(1, model, device=None, hot_words=6, warm_start=True)
+    th_full, ll_full, acc_full = full.infer_packed(packed, key, n_sweeps=2)
+    th_hot, ll_hot, acc_hot = hot.infer_packed(packed, key, n_sweeps=2)
+    assert np.array_equal(th_full, th_hot)
+    assert ll_full == ll_hot
+    assert acc_full["cache_misses"] == 0          # full pin: all hits
+    assert acc_hot["cache_misses"] > 0            # tail actually gathered
+    assert 0 < hot.cache.hit_rate < 1
+    assert full.cache.is_full and not hot.cache.is_full
+
+
+def test_cache_refresh_is_tear_free_pointer_swap(model):
+    cache = HotWordCache(model, hot_words=6)
+    state0 = cache._state
+    W2 = np.asarray(model.W) + np.eye(V, K, dtype=np.int32)
+    cache.refresh(W2)
+    assert cache._state is not state0             # swapped, not mutated
+    ids = np.arange(10, dtype=np.int64)
+    asm = cache.assemble(ids)
+    assert asm.local_ids.shape == ids.shape
+
+
+def test_dead_replica_raises(model, qdocs):
+    rep = Replica(0, model, device=None, hot_words=V)
+    rep.kill()
+    packed = pack_docs(qdocs[:2], n_words=V, word_map=model.word_map,
+                       doc_buckets=(4,), token_floor=16)
+    with pytest.raises(ReplicaDead):
+        rep.infer_packed(packed, jax.random.PRNGKey(0), n_sweeps=1)
+
+
+# ---------------------------------------------------------------------------
+# 3. bounded-staleness refresh: the bitwise acceptance pin
+# ---------------------------------------------------------------------------
+
+def test_refresh_boundary_bitwise_equals_frozen_checkpoint(tmp_path, qdocs):
+    """A service that followed the live trainer's publish stream answers
+    — after the epoch-boundary swap — EXACTLY like a service frozen from
+    the boundary checkpoint: θ bitwise, LLPT bitwise."""
+    corpus = synthetic_lda_corpus(1, n_docs=40, n_words=V, n_topics=4,
+                                  mean_doc_len=12)
+    from repro.lda.api import SupervisePolicy
+    eng = LDAEngine(corpus,
+                    LDAConfig(n_topics=K, tile_size=256, eval_every=50,
+                              corpus_residency="streamed",
+                              stream_shards=4),
+                    backend="single", checkpoint_dir=str(tmp_path))
+    eng.fit(1)
+    svc = LDAService(eng.export(), small_cfg(n_replicas=1))
+    snaps = []
+    unsub = attach(eng, svc, on_snapshot=snaps.append)
+    # shard-wise supervision publishes MID-epoch views and the boundary
+    eng.fit(2, supervise=SupervisePolicy(checkpoint_shards=2))
+    unsub()
+    assert any(s.cursor > 0 for s in snaps), "no mid-epoch publish"
+    assert any(s.cursor == 0 for s in snaps), "no boundary publish"
+    assert [s.seq for s in snaps] == sorted(s.seq for s in snaps)
+    mid = [s for s in snaps if s.cursor > 0][0]
+    assert 0 < mid.staleness_steps < 1
+    last = snaps[-1]
+    assert last.cursor == 0                       # ends on a boundary
+
+    # boundary snapshot == boundary checkpoint == engine export
+    assert np.array_equal(last.W, eng.export().W)
+
+    key = jax.random.PRNGKey(23)
+    th_refreshed = svc.transform(qdocs[:4], key=key, timeout=60)
+    with LDAService(last.freeze(), small_cfg(n_replicas=1)) as ref:
+        th_frozen = ref.transform(qdocs[:4], key=key, timeout=60)
+    assert np.array_equal(th_refreshed, th_frozen)
+
+    # replica-level: refresh-swap vs fresh-freeze, θ AND llpt bitwise
+    packed = pack_docs(qdocs[:4], n_words=V, word_map=eng.word_map,
+                       doc_buckets=(4,), token_floor=64)
+    swapped = Replica(0, eng.export(), device=None, hot_words=6)
+    swapped.refresh(np.asarray(last.W))
+    fresh = Replica(1, last.freeze(), device=None, hot_words=6)
+    th_a, ll_a, _ = swapped.infer_packed(packed, key, n_sweeps=2)
+    th_b, ll_b, _ = fresh.infer_packed(packed, key, n_sweeps=2)
+    assert np.array_equal(th_a, th_b) and ll_a == ll_b
+    svc.close()
+
+
+def test_refresh_rejects_incompatible_and_stale(model, engine):
+    with LDAService(model, small_cfg()) as svc:
+        good = ServingSnapshot(W=np.asarray(model.W), alpha=model.alpha,
+                               beta=model.beta, g=model.g, iteration=1,
+                               seq=1, word_map=model.word_map)
+        assert svc.refresh(good) is True
+        assert svc.refresh(good) is False         # same seq: stale, no-op
+        wrong_shape = ServingSnapshot(W=np.zeros((V + 1, K), np.int32),
+                                      alpha=model.alpha, beta=model.beta,
+                                      g=model.g, iteration=1, seq=2)
+        with pytest.raises(ValueError, match="shape"):
+            svc.refresh(wrong_shape)
+        wrong_alpha = ServingSnapshot(W=np.asarray(model.W),
+                                      alpha=model.alpha + 1.0,
+                                      beta=model.beta, g=model.g,
+                                      iteration=1, seq=3)
+        with pytest.raises(ValueError, match="alpha"):
+            svc.refresh(wrong_alpha)
+        assert svc.stats()["refreshes"] == 1
+
+
+def test_engine_publish_subscribe_surface(engine):
+    seen = []
+    unsub = engine.subscribe(seen.append)
+    snap = engine.publish_serving()
+    assert seen and seen[-1] is snap
+    assert snap.cursor == 0 and snap.n_shards >= 1
+    assert np.array_equal(snap.W, engine.export().W)
+    n = len(seen)
+    unsub()
+    engine.publish_serving()
+    assert len(seen) == n                          # unsubscribed
+
+
+def test_from_engine_snapshot(engine):
+    snap = ServingSnapshot.from_engine(engine, seq=5)
+    assert snap.seq == 5
+    assert np.array_equal(snap.W, engine.export().W)
+    m = snap.freeze()
+    assert m.n_words == V and m.n_topics == K
+
+
+# ---------------------------------------------------------------------------
+# 4. chaos drills
+# ---------------------------------------------------------------------------
+
+@pytest.mark.chaos
+def test_chaos_replica_kill_mid_request_completes_all(model, qdocs):
+    with LDAService(model, small_cfg(n_replicas=2)) as svc:
+        svc.infer(qdocs[0], timeout=60)            # warm both paths
+        with chaos.active(chaos.FaultPlan(kill_replicas=(0,))):
+            futs = [svc.submit(d) for d in qdocs]
+            thetas = [f.result(timeout=60) for f in futs]
+        assert all(t.shape == (K,) for t in thetas)
+        st = svc.stats()
+        assert st["alive_replicas"] == 1           # the kill landed
+        assert st["requeued_batches"] >= 1         # batch was re-queued
+        assert st["failed"] == 0                   # survivor answered all
+
+
+@pytest.mark.chaos
+def test_chaos_slow_replica_delays_only_its_own_batch(model, qdocs):
+    with LDAService(model, small_cfg(n_replicas=2)) as svc:
+        groups = [qdocs[i * 4:(i + 1) * 4] for i in range(6)]
+        for g in groups:            # warm every exact batch signature
+            for f in svc.submit_batch(g):
+                f.result(timeout=60)
+        done: dict[int, float] = {}
+        lock = threading.Lock()
+        with chaos.active(chaos.FaultPlan(slow_replicas={0: 0.8})):
+            t0 = time.perf_counter()
+
+            def arm(i, futs):
+                left = [len(futs)]
+
+                def cb(_):
+                    with lock:
+                        left[0] -= 1
+                        if left[0] == 0:
+                            done[i] = time.perf_counter() - t0
+                for f in futs:
+                    f.add_done_callback(cb)
+
+            batches = [svc.submit_batch(g) for g in groups]
+            for i, futs in enumerate(batches):
+                arm(i, futs)
+            for futs in batches:
+                for f in futs:
+                    f.result(timeout=60)
+        # exactly one batch rode the sleeping replica; work stealing
+        # drained the rest on the other one well inside the sleep
+        slow = [t for t in done.values() if t >= 0.8]
+        fast = [t for t in done.values() if t < 0.5]
+        assert len(slow) == 1
+        assert len(fast) == len(done) - 1
+        assert svc.stats()["failed"] == 0
+
+
+@pytest.mark.chaos
+def test_chaos_refresh_during_traffic_never_tears(model, engine, qdocs):
+    W0 = np.asarray(model.W, np.int32)
+    W1 = W0 + np.ones_like(W0)                     # a visibly different W
+    with LDAService(model, small_cfg(n_replicas=2)) as svc:
+        stop = threading.Event()
+        errs: list[Exception] = []
+
+        def refresher():
+            seq = 1
+            while not stop.is_set():
+                Wv = W0 if seq % 2 == 0 else W1
+                try:
+                    svc.refresh(ServingSnapshot(
+                        W=Wv, alpha=model.alpha, beta=model.beta,
+                        g=model.g, iteration=0, seq=seq))
+                except Exception as e:             # never expected
+                    errs.append(e)
+                    return
+                seq += 1
+
+        th = threading.Thread(target=refresher)
+        th.start()
+        try:
+            for _ in range(10):
+                futs = [svc.submit(d) for d in qdocs[:16]]
+                for f in futs:
+                    t = f.result(timeout=60)
+                    assert np.all(np.isfinite(t))
+        finally:
+            stop.set()
+            th.join()
+        assert not errs
+        st = svc.stats()
+        assert st["failed"] == 0
+        assert st["refreshes"] >= 2
+
+        # settle on W1 and pin: the swapped service must equal a fresh
+        # freeze of W1 — if any request had seen a torn half-swapped
+        # table set the pointer-swap discipline would be broken
+        svc.refresh(ServingSnapshot(W=W1, alpha=model.alpha,
+                                    beta=model.beta, g=model.g,
+                                    iteration=0, seq=10 ** 6))
+        key = jax.random.PRNGKey(5)
+        got = svc.transform(qdocs[:4], key=key, timeout=60)
+    import dataclasses
+    m1 = dataclasses.replace(model, W=W1)
+    with LDAService(m1, small_cfg(n_replicas=2)) as ref:
+        want = ref.transform(qdocs[:4], key=key, timeout=60)
+    assert np.array_equal(got, want)
+
+
+@pytest.mark.chaos
+def test_backpressure_sheds_load_when_saturated(model, qdocs):
+    cfg = small_cfg(n_replicas=1, queue_limit=4, max_delay_ms=0.5)
+    with LDAService(model, cfg) as svc:
+        svc.infer(qdocs[0], timeout=60)            # warm
+        with chaos.active(chaos.FaultPlan(slow_replicas={0: 1.0})):
+            saw_overload = False
+            futs = []
+            for i in range(200):
+                try:
+                    futs.append(svc.submit(qdocs[i % len(qdocs)]))
+                except ServiceOverloaded:
+                    saw_overload = True
+                    break
+                time.sleep(0.002)
+            assert saw_overload, "bounded queue never shed load"
+            for f in futs:                          # accepted work drains
+                f.result(timeout=60)
+        assert svc.stats()["rejected"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# 5. metrics
+# ---------------------------------------------------------------------------
+
+def test_latency_histogram_percentiles():
+    h = LatencyHistogram()
+    for v in [0.001] * 98 + [0.5, 1.0]:
+        h.record(v)
+    assert h.n == 100
+    p50, p99 = h.percentile(0.50), h.percentile(0.99)
+    assert 0.0008 < p50 < 0.0013                   # log-bucket tolerance
+    assert p99 >= 0.45
+    assert h.percentile(1.0) == h.max == 1.0
+    snap = h.snapshot_ms()
+    assert snap["n"] == 100 and snap["p50_ms"] <= snap["p99_ms"]
+
+
+def test_serve_metrics_snapshot_accounting():
+    m = ServeMetrics()
+    m.record_request(0.010)
+    m.record_request(0.020)
+    m.record_batch(n_real=2, n_slots=4, queue_depth=3)
+    m.record_cache(hits=8, misses=2)
+    m.record_refresh(staleness_steps=0.5, seq=4)
+    m.record_rejected()
+    s = m.snapshot()
+    assert s["completed"] == 2 and s["rejected"] == 1
+    assert s["batch_fill"] == 0.5
+    assert s["queue_depth_peak"] == 3
+    assert s["cache_hit_rate"] == 0.8
+    assert s["refreshes"] == 1 and s["snapshot_seq"] == 4
+    assert s["staleness_steps"] == 0.5
+    assert s["latency"]["n"] == 2

@@ -231,3 +231,35 @@ def test_from_state_constructor(engine):
     m = FrozenLDAModel.from_state(engine.state, engine.config,
                                   word_map=engine.word_map)
     assert np.array_equal(m.W, np.asarray(engine.state.W))
+
+
+# ---------------------------------------------------------------------------
+# 6. mid-epoch streamed payloads are not servable
+# ---------------------------------------------------------------------------
+
+def test_from_payload_rejects_mid_epoch_streamed_checkpoint(raw_corpus):
+    """A mid-epoch stream payload's ``topics_global`` is rewound to the
+    epoch start (the open epoch's samples live in stream_done_topics), so
+    freezing it would silently serve counts up to one epoch stale —
+    from_payload must refuse, naming both recovery recipes."""
+    from repro.lda.trainer import LDATrainer
+    cfg = LDAConfig(n_topics=8, tile_size=256,
+                    corpus_residency="streamed", stream_shards=4)
+    tr = LDATrainer(raw_corpus, cfg, _from_engine=True)
+    pipe = tr.fused_pipeline()
+    ss = pipe.run_shards(pipe.from_lda_state(tr.init_state()), 2)
+    assert ss.cursor == 2                      # genuinely mid-epoch
+    payload = pipe.stream_payload(ss)
+    with pytest.raises(ValueError, match="MID-EPOCH") as exc:
+        FrozenLDAModel.from_payload(payload, raw_corpus, cfg)
+    msg = str(exc.value)
+    assert "engine.export()" in msg            # recipe 1: finish + freeze
+    assert "publish_serving" in msg            # recipe 2: bounded staleness
+
+    # the SAME pipeline's epoch-boundary payload freezes fine
+    ss, _, _ = pipe.run_fused(ss, 1)           # finish the open epoch
+    assert ss.cursor == 0
+    m = FrozenLDAModel.from_payload(pipe.stream_payload(ss), raw_corpus,
+                                    cfg)
+    assert m.n_words == raw_corpus.n_words
+    assert int(m.W.sum()) == raw_corpus.n_tokens

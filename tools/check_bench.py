@@ -109,6 +109,30 @@ SCHEMAS: dict[str, dict] = {
         "min_llpt_gap": NUM,
         "host_syncs_in_scanned_region": int,
     },
+    "BENCH_serve_service.json": {
+        "dry_run": bool,
+        "model": {"n_words": int, "n_topics": int, "g": int},
+        "train": {"docs": int, "tokens": int, "iters": int,
+                  "seconds": NUM},
+        "serve": {"n_replicas": int, "n_sweeps": int, "warm_start": bool,
+                  "hot_words": int, "max_batch": int, "max_delay_ms": NUM,
+                  "buckets": [int], "warmed_signatures": int},
+        "stream": {"zipf_exponent": NUM, "mean_doc_len": int,
+                   "n_docs": int},
+        "batch_mode_best_docs_per_sec": NUM, "batch_mode_source": str,
+        "saturation": {"docs": int, "seconds": NUM, "docs_per_sec": NUM,
+                       "docs_per_sec_overall": NUM, "ramp_docs": int,
+                       "batch_fill": NUM},
+        "speedup_vs_batch": NUM,
+        "half_load": {"offered_docs_per_sec": NUM, "completed": int,
+                      "p50_ms": NUM, "p95_ms": NUM, "p99_ms": NUM,
+                      "p99_over_p50": NUM},
+        "cache_hit_rate": NUM,
+        "completion": {"submitted": int, "completed": int, "failed": int,
+                       "rejected": int, "rate": NUM},
+        "quality": {"llpt_serve": NUM, "llpt_batch5": NUM,
+                    "delta_bits": NUM},
+    },
     "BENCH_recovery.json": {
         "corpus": _CORPUS, "n_topics": int,
         "n_iters": int, "checkpoint_every": int, "repeats": int,
@@ -124,6 +148,7 @@ SCHEMAS: dict[str, dict] = {
 # smoke artifacts reuse a driver's schema but skip the metric gates
 SCHEMA_ALIASES = {
     "BENCH_serve_lda_dryrun.json": "BENCH_serve_lda.json",
+    "BENCH_serve_service_dryrun.json": "BENCH_serve_service.json",
     "BENCH_warp_sampler_dryrun.json": "BENCH_warp_sampler.json",
 }
 
@@ -185,6 +210,18 @@ GATES: dict[str, list] = {
          lambda d: d["host_syncs_in_scanned_region"], "==", 0, False),
         ("best-cell LLPT plateau gap vs exact",
          lambda d: d["min_llpt_gap"], "<=", 0.15, True),
+    ],
+    "BENCH_serve_service.json": [
+        ("service/batch saturation speedup",
+         lambda d: d["speedup_vs_batch"], ">=", 3.0, True),
+        ("half-load p99/p50 latency ratio",
+         lambda d: d["half_load"]["p99_over_p50"], "<=", 5.0, True),
+        ("cache hit rate on Zipf stream",
+         lambda d: d["cache_hit_rate"], ">=", 0.8, True),
+        ("every submitted request completed",
+         lambda d: d["completion"]["rate"], "==", 1.0, False),
+        ("serve-vs-batch LLPT gap (bits)",
+         lambda d: d["quality"]["delta_bits"], "<=", 0.1, True),
     ],
     "BENCH_recovery.json": [
         ("supervised/unsupervised throughput",
