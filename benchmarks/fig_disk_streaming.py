@@ -1,0 +1,208 @@
+"""Disk-native training (paged model state): device bytes and tokens/sec.
+
+No single paper figure — EZLDA assumes both the token list T AND the
+(V, K) word-topic matrix W fit on the device. BENCH_streaming.json
+breaks the T cap (``corpus_residency="streamed"``); this driver breaks
+the remaining V·K cap (``corpus_residency="disk"``, DESIGN.md SS14):
+the corpus trains straight from a ``CorpusStore`` directory (shards are
+read host->device per epoch, never materialized whole in host RAM) and
+W lives host-side, paged through per-shard row windows sized by the
+manifest's word runs — LightLDA-style model streaming. Measured against
+the fully resident fused path on the same corpus:
+
+  * MEASURED live device bytes at the training steady state
+    (acceptance bar: disk <= 0.45x resident). Resident = token arrays +
+    FusedState (topics, D, full W, colsum); disk = count state (D,
+    colsum — no W) + the open epoch's derived/delta buffers + BOTH
+    double-buffered shard windows (tokens + the (page_rows, K) W/dW
+    blocks). In-dispatch temporaries are excluded on BOTH sides;
+  * steady-state training tokens/sec, interleaved repeats, medians
+    (acceptance bar: disk >= 0.7x resident — the shard prefetch plus
+    the one-deep dW drain must hide the extra W-window traffic);
+  * a bitwise disk-vs-resident parity check on the trained topics AND
+    an exact-equality check of the shard-folded paged LLPT against the
+    resident evaluate() (the invariants tests/test_streaming.py pins).
+
+The corpus is sized model-dominated (the regime W-paging exists for):
+~120k Zipf tokens against a (V=101636, K=64) model — the NYTimes
+vocabulary size (Table I) under a CPU-tractable token sample — so W
+(~26 MB) is the largest resident buffer by an order of magnitude, as it
+is at the paper's corpus scales whenever K grows past the device
+budget. The Zipf tail keeps each shard's word run a small slice of V
+(page_rows/V ~ 0.06): paging W by the manifest's word runs is what
+makes the disk path's device footprint independent of V.
+
+``--dry-run`` shrinks everything to a seconds-long smoke (the CI hook)
+but still writes the same JSON schema.
+
+Emits results/BENCH_disk_streaming.json (schema in docs/BENCHMARKS.md,
+gated by tools/check_bench.py).
+Run:  PYTHONPATH=src python benchmarks/fig_disk_streaming.py [--dry-run]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+import time
+
+if __name__ == "__main__":                      # runnable as a script
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from benchmarks._common import bench_corpus
+from repro.lda.api import LDAEngine
+from repro.lda.corpus import shard_stream
+from repro.lda.model import LDAConfig
+
+
+def _device_nbytes(tree) -> int:
+    total = 0
+    for a in jax.tree.leaves(tree):
+        try:
+            total += int(a.nbytes)
+        except (AttributeError, NotImplementedError, TypeError):
+            pass                     # PRNG keys / scalars: negligible
+    return total
+
+
+def _trainers(corpus, store_path: str, k: int, tile: int):
+    cfg_r = LDAConfig(n_topics=k, tile_size=tile, sampler="three_branch",
+                      corpus_residency="full")
+    cfg_d = LDAConfig(n_topics=k, tile_size=tile, sampler="three_branch",
+                      corpus_residency="disk", corpus_path=store_path)
+    tr_r = LDAEngine(corpus, cfg_r, backend="single").trainer
+    tr_d = LDAEngine(None, cfg_d, backend="single").trainer
+    return tr_r, tr_d
+
+
+def bench(out_path: str = "results/BENCH_disk_streaming.json",
+          dry_run: bool = False) -> dict:
+    if dry_run:
+        n_docs, n_words, doc_len, k = 60, 400, 40, 8
+        n_shards, tile = 4, 64
+        warmup, timed, repeats = 2, 2, 1
+    else:
+        # model-dominated: W is (101636, 64) = 26 MB vs ~2 MB of token
+        # buffers; 8 shards of 16k tokens keep the per-shard dispatch
+        # large enough to hide the W-window traffic while the max word
+        # run stays near V/18
+        n_docs, n_words, doc_len, k = 600, 101636, 200, 64
+        n_shards, tile = 8, 8192
+        warmup, timed, repeats = 20, 10, 3
+
+    c = bench_corpus(n_docs=n_docs, n_words=n_words, mean_doc_len=doc_len,
+                     exponent=1.25)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        store_path = os.path.join(tmp, "store")
+        store = shard_stream(c, n_shards, multiple=tile).to_store(store_path)
+        store_bytes = sum(
+            os.path.getsize(os.path.join(store_path, f))
+            for f in os.listdir(store_path))
+
+        tr_r, tr_d = _trainers(c, store_path, k, tile)
+        pipe_r, pipe_d = tr_r.fused_pipeline(), tr_d.fused_pipeline()
+
+        # -- parity on THIS corpus (cheap: few iterations) -----------------
+        fr = pipe_r.from_lda_state(tr_r.init_state())
+        fr, _, _ = pipe_r.run_fused(fr, 3)
+        ss = tr_d.init_state()           # already a StreamState (disk)
+        ss, _, _ = pipe_d.run_fused(ss, 3)
+        bitwise = bool(np.array_equal(
+            np.asarray(fr.topics)[:c.n_tokens],
+            np.concatenate(ss.shard_topics)[:c.n_tokens]))
+        # paged shard-folded LLPT == resident evaluate(), exactly
+        eval_equal = (tr_d._evaluate_stream(ss)
+                      == tr_r.evaluate(pipe_r.to_lda_state(fr)))
+
+        # -- warm both paths to the converged regime -----------------------
+        fr, _, _ = pipe_r.run_fused(fr, warmup)
+        ss, _, _ = pipe_d.run_fused(ss, warmup)
+        fr, _, _ = pipe_r.run_fused(fr, timed, replan=False)    # compile
+        ss, _, _ = pipe_d.run_fused(ss, timed, replan=False)
+        jax.block_until_ready(fr.topics)
+
+        # -- measured device bytes at the steady state ---------------------
+        resident_bytes = (_device_nbytes((tr_r.word_ids, tr_r.doc_ids,
+                                          tr_r.mask))
+                          + _device_nbytes(tuple(fr)))
+        disk_bytes = int(pipe_d.last_epoch_device_bytes)
+
+        # -- throughput: interleaved repeats, medians ----------------------
+        ts_r, ts_d = [], []
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            fr, _, _ = pipe_r.run_fused(fr, timed, replan=False)
+            jax.block_until_ready(fr.topics)
+            ts_r.append(c.n_tokens * timed / (time.perf_counter() - t0))
+            t0 = time.perf_counter()
+            ss, _, _ = pipe_d.run_fused(ss, timed, replan=False)
+            # block on the final epoch-close dispatch: both sides' clocks
+            # must include ALL their device work
+            jax.block_until_ready(ss.counts)
+            ts_d.append(c.n_tokens * timed / (time.perf_counter() - t0))
+
+        result = {
+            "dry_run": dry_run,
+            "corpus": {"docs": c.n_docs, "words": c.n_words,
+                       "tokens": c.n_tokens},
+            "n_topics": k,
+            "n_shards": store.n_shards,
+            "shard_len": store.shard_len,
+            # the W page window vs the full vocabulary (the V·K win)
+            "paged_rows": int(pipe_d._page_rows),
+            "vocab_rows": c.n_words,
+            "store_bytes": int(store_bytes),
+            "warmup_iters": warmup,
+            "timed_iters": timed,
+            "repeats": repeats,
+            "resident_tokens_per_sec": float(np.median(ts_r)),
+            "disk_tokens_per_sec": float(np.median(ts_d)),
+            # acceptance bar: >= 0.7 (prefetch + dW drain hide the traffic)
+            "disk_over_resident": float(np.median(ts_d) / np.median(ts_r)),
+            "resident_device_bytes": int(resident_bytes),
+            "disk_device_bytes": int(disk_bytes),
+            # acceptance bar: <= 0.45 (no resident W, paged row windows)
+            "disk_bytes_ratio": float(disk_bytes / resident_bytes),
+            "bitwise_equal_to_resident": bitwise,
+            "eval_equal_to_resident": bool(eval_equal),
+        }
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+def run():
+    """benchmarks/run.py entry: CSV rows (name, us_per_call, derived)."""
+    r = bench()
+    yield ("fig_disk/resident_tokens_per_sec", 0.0,
+           round(r["resident_tokens_per_sec"], 0))
+    yield ("fig_disk/disk_tokens_per_sec", 0.0,
+           round(r["disk_tokens_per_sec"], 0))
+    yield ("fig_disk/disk_over_resident", 0.0,
+           round(r["disk_over_resident"], 3))
+    yield ("fig_disk/disk_bytes_ratio", 0.0,
+           round(r["disk_bytes_ratio"], 4))
+    yield ("fig_disk/paged_rows_over_vocab", 0.0,
+           round(r["paged_rows"] / r["vocab_rows"], 4))
+    yield ("fig_disk/bitwise_equal", 0.0,
+           int(r["bitwise_equal_to_resident"]))
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dry-run", action="store_true",
+                    help="seconds-long smoke with tiny sizes (CI)")
+    ap.add_argument("--out", default="results/BENCH_disk_streaming.json")
+    args = ap.parse_args()
+    print(json.dumps(bench(out_path=args.out, dry_run=args.dry_run),
+                     indent=2))

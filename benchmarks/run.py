@@ -21,14 +21,16 @@ MODULES = [
     "fig17_breakdown",
     "fig18_hw_generations",
     "fig19_streaming",     # streamed vs resident tokens/sec + device bytes
+    "fig_disk_streaming",  # disk store + paged W vs resident (V·K cap)
     "fused_step",          # seed vs fused steady-state tokens/sec
     "serve_lda",           # FrozenLDAModel fold-in docs/sec
     "recovery",            # supervised-fit overhead + restart recovery cost
     "warp_sampler",        # warp MH vs exact tokens/sec + convergence/sec
 ]
 
-QUICK_SKIP = {"fig16_scaling", "fig19_streaming", "fused_step",
-              "serve_lda", "recovery", "warp_sampler"}      # long warmup
+QUICK_SKIP = {"fig16_scaling", "fig19_streaming", "fig_disk_streaming",
+              "fused_step", "serve_lda", "recovery",
+              "warp_sampler"}                               # long warmup
 
 
 def main(argv=None) -> int:

@@ -106,15 +106,36 @@ class CheckpointManager:
             return None                        # torn/corrupt file
         return arrs
 
-    def restore_latest(self, log_fn=None) -> dict[str, np.ndarray] | None:
+    def restore_latest(self, log_fn=None,
+                       validate=None) -> dict[str, np.ndarray] | None:
         """Newest valid checkpoint, skipping corrupt ones (fault tolerance).
 
         ``log_fn`` (optional) is told about every checkpoint that was
         skipped as unreadable/corrupt — the supervisor surfaces these so a
         walk-back is visible, not silent.
+
+        ``validate`` (optional) is a semantic gate on top of the checksum:
+        ``validate(payload) -> bool`` (False or an exception rejects). Use
+        it to walk past checkpoints that are intact on disk but unusable
+        in the current run — e.g. a mid-epoch stream payload whose
+        ``stream_n_shards`` no longer matches the CorpusStore manifest's
+        shard grid after a re-shard (its cursor is manifest-relative and
+        meaningless on the new grid; the previous epoch-boundary
+        checkpoint restores anywhere).
         """
         for step in reversed(self.all_steps()):
             payload = self.restore(step)
+            if payload is not None and validate is not None:
+                try:
+                    if not validate(payload):
+                        payload = None
+                except Exception:
+                    payload = None
+                if payload is None and log_fn is not None:
+                    log_fn(f"checkpoint step {step} is intact but failed "
+                           "semantic validation; walking back to the "
+                           "previous one")
+                    continue
             if payload is not None:
                 return payload
             if log_fn is not None:

@@ -45,15 +45,22 @@ def compute_w_hat(W: jax.Array, beta: float) -> jax.Array:
 
 
 def compute_w_hat_from_colsum(W: jax.Array, colsum: jax.Array,
-                              beta: float) -> jax.Array:
+                              beta: float,
+                              n_words: int | None = None) -> jax.Array:
     """compute_w_hat with an incrementally maintained column sum.
 
     ``colsum`` is the int32 per-topic token count Σ_v W[v][k], kept up to
     date by delta_update_colsum. Counts are < 2^24 in any corpus we fit in
     int32 D/W, so the f32 cast is exact and this is bit-identical to
     compute_w_hat — while skipping its O(V·K) reduction per iteration.
+
+    ``n_words`` overrides the vocabulary size in the denominator for
+    callers that pass a paged ROW WINDOW of W rather than the full
+    matrix (the streamed W-paging path): the math is row-wise, so the
+    window's rows come out bitwise equal to the same rows of the
+    full-matrix call.
     """
-    V = W.shape[0]
+    V = W.shape[0] if n_words is None else n_words
     return (W.astype(jnp.float32) + beta) / \
         (colsum.astype(jnp.float32) + V * beta)
 

@@ -5,6 +5,14 @@
     phi[v][k]   = (W[v][k] + beta) / (colsum_W[k] + V*beta)   (= W_hat)
 
 LLPT must increase and plateau as training proceeds (paper SS II-B).
+
+Split into two dispatches — ``token_ll`` (per-token log2 likelihoods)
+and ``reduce_ll`` (the masked mean) — so the out-of-core evaluator
+(DESIGN.md SS14) can fold ``token_ll`` over disk shards with a PAGED W
+row window and still feed the one same compiled reduction the resident
+path uses: identical per-token values through the identical reduce ==
+bitwise-identical score, without ever materializing the full token
+list or the full W on device.
 """
 
 from __future__ import annotations
@@ -14,19 +22,29 @@ import functools
 import jax
 import jax.numpy as jnp
 
-__all__ = ["llpt"]
+__all__ = ["llpt", "token_ll", "reduce_ll"]
 
 
-@functools.partial(jax.jit, static_argnames=("alpha", "beta", "tile_size"))
-def llpt(word_ids: jax.Array, doc_ids: jax.Array, mask: jax.Array,
-         D: jax.Array, W: jax.Array, *, alpha: float, beta: float,
-         tile_size: int = 8192) -> jax.Array:
+@functools.partial(jax.jit,
+                   static_argnames=("alpha", "beta", "n_words", "tile_size"))
+def token_ll(word_ids: jax.Array, doc_ids: jax.Array, D: jax.Array,
+             W: jax.Array, colsum: jax.Array, *, alpha: float, beta: float,
+             n_words: int, tile_size: int = 8192) -> jax.Array:
+    """(n,) per-token log2 p(token) — the summand of Eq 5.
+
+    ``W`` may be the full (V, K) matrix (with global ``word_ids``) or a
+    paged row window (with window-LOCAL ``word_ids``): phi rows only
+    ever enter through ``phi[v_t]`` gathers, so the values are
+    identical either way. ``n_words`` is always the TRUE vocabulary
+    size V (the phi denominator), and ``colsum`` the f32 per-topic
+    total Σ_v W[v][k] — exact in f32 for any corpus that fits int32
+    counts, so passing the maintained int colsum cast to f32 matches
+    ``jnp.sum(W, axis=0)`` of the full matrix bitwise.
+    """
     M, K = D.shape
-    V = W.shape[0]
     doc_len = jnp.sum(D, axis=-1, dtype=jnp.float32)                 # (M,)
     theta = (D.astype(jnp.float32) + alpha) / (doc_len[:, None] + K * alpha)
-    colsum = jnp.sum(W, axis=0, dtype=jnp.float32)                   # (K,)
-    phi = (W.astype(jnp.float32) + beta) / (colsum + V * beta)       # (V,K)
+    phi = (W.astype(jnp.float32) + beta) / (colsum + n_words * beta)
 
     n = word_ids.shape[0]
 
@@ -35,7 +53,27 @@ def llpt(word_ids: jax.Array, doc_ids: jax.Array, mask: jax.Array,
         p = jnp.sum(theta[d_t] * phi[v_t], axis=-1)                  # (t,)
         return jnp.log2(jnp.maximum(p, 1e-30))
 
-    ll = jax.lax.map(tile_fn, (word_ids, doc_ids),
-                     batch_size=min(tile_size, n) if n else None)
+    return jax.lax.map(tile_fn, (word_ids, doc_ids),
+                       batch_size=min(tile_size, n) if n else None)
+
+
+@jax.jit
+def reduce_ll(ll: jax.Array, mask: jax.Array) -> jax.Array:
+    """Masked mean of per-token log likelihoods — Eq 5's 1/N Σ."""
     m = mask.astype(jnp.float32)
     return jnp.sum(ll * m) / jnp.maximum(jnp.sum(m), 1.0)
+
+
+@jax.jit
+def _colsum_f32(W: jax.Array) -> jax.Array:
+    return jnp.sum(W, axis=0, dtype=jnp.float32)                     # (K,)
+
+
+def llpt(word_ids: jax.Array, doc_ids: jax.Array, mask: jax.Array,
+         D: jax.Array, W: jax.Array, *, alpha: float, beta: float,
+         tile_size: int = 8192) -> jax.Array:
+    V = W.shape[0]
+    ll = token_ll(jnp.asarray(word_ids), jnp.asarray(doc_ids),
+                  jnp.asarray(D), jnp.asarray(W), _colsum_f32(W),
+                  alpha=alpha, beta=beta, n_words=V, tile_size=tile_size)
+    return reduce_ll(ll, jnp.asarray(mask))

@@ -488,7 +488,7 @@ class _SingleBackend:
 
     name = "single"
 
-    def __init__(self, corpus: Corpus, config: LDAConfig,
+    def __init__(self, corpus: Corpus | None, config: LDAConfig,
                  manager: CheckpointManager | None):
         from repro.lda.trainer import LDATrainer
         self.corpus = corpus
@@ -499,6 +499,10 @@ class _SingleBackend:
                                         self._from_canonical)
         self.trainer = LDATrainer(corpus, config, checkpoint_manager=wrapped,
                                   _from_engine=True)
+        # disk residency has no resident corpus; token geometry comes
+        # from the CorpusStore manifest via the trainer
+        self._n_tokens = self.trainer.n_real_tokens
+        self._n_padded = self.trainer.n_padded_tokens
 
     # payload conversion (trainer speaks padded "topics"; the streaming
     # extension keys ride through both directions unchanged)
@@ -506,7 +510,7 @@ class _SingleBackend:
     def _to_canonical(self, payload: dict[str, Any]) -> dict[str, Any]:
         from repro.train.lda_step import STREAM_PAYLOAD_KEYS
         out = {"topics_global": np.asarray(payload["topics"], np.int32)
-               [:self.corpus.n_tokens],
+               [:self._n_tokens],
                "key": payload["key"], "iteration": payload["iteration"]}
         for k in STREAM_PAYLOAD_KEYS:
             if k in payload:
@@ -515,10 +519,10 @@ class _SingleBackend:
 
     def _from_canonical(self, payload: dict[str, Any]) -> dict[str, Any]:
         from repro.train.lda_step import STREAM_PAYLOAD_KEYS
-        tg = _canonical_topics(payload, self.corpus.n_tokens,
-                               padded_len=int(self.trainer.word_ids.shape[0]))
-        padded = np.zeros(self.trainer.word_ids.shape, np.int32)
-        padded[:self.corpus.n_tokens] = tg
+        tg = _canonical_topics(payload, self._n_tokens,
+                               padded_len=self._n_padded)
+        padded = np.zeros(self._n_padded, np.int32)
+        padded[:self._n_tokens] = tg
         out = {"topics": padded, "key": payload["key"],
                "iteration": payload["iteration"]}
         for k in STREAM_PAYLOAD_KEYS:
@@ -556,6 +560,12 @@ class _SingleBackend:
                                 on_chunk=on_chunk)
 
     def evaluate(self, state) -> float:
+        from repro.train.lda_step import StreamState
+        if isinstance(state, StreamState) \
+                and self.trainer.residency == "disk":
+            # paged shard-fold LLPT: never densifies W (bitwise equal to
+            # the resident evaluate — pinned in tests/test_streaming.py)
+            return self.trainer._evaluate_stream(state)
         return self.trainer.evaluate(self._as_lda_state(state))
 
     def dense_W(self, state) -> np.ndarray:
@@ -575,6 +585,11 @@ class _SingleBackend:
         return self.trainer.live_serving_W()
 
     def state_nbytes(self, state) -> int:
+        from repro.train.lda_step import StreamState
+        if isinstance(state, StreamState):
+            # measure the LIVE streamed representation (counts tuple);
+            # _as_lda_state would densify W and misreport paged modes
+            return self.trainer.live_state_nbytes(state)
         return self.trainer.live_state_nbytes(self._as_lda_state(state))
 
 
@@ -704,7 +719,7 @@ class LDAEngine:
     regardless of backend, live-state format, mesh, or padding.
     """
 
-    def __init__(self, corpus: Corpus | Sequence[Sequence[int]],
+    def __init__(self, corpus: Corpus | Sequence[Sequence[int]] | None,
                  config: LDAConfig, *, backend: str = "auto", mesh=None,
                  checkpoint_dir: str | None = None,
                  checkpoint_manager: CheckpointManager | None = None,
@@ -716,20 +731,41 @@ class LDAEngine:
             raise ValueError("pass checkpoint_dir OR checkpoint_manager, "
                              "not both")
         # -- corpus prep (the engine owns it) -------------------------------
-        if not isinstance(corpus, Corpus):
-            docs = [np.asarray(d, np.int64) for d in corpus]
-            if n_words is None:
-                n_words = int(max((int(d.max()) for d in docs if d.size),
-                                  default=-1)) + 1
-            corpus = from_documents(docs, n_words)
-        self.word_map: np.ndarray | None = None
-        counts = np.asarray(corpus.word_token_counts)
-        if counts.size and np.any(np.diff(counts) > 0):
-            # the hybrid layout REQUIRES the frequency relabeling and every
-            # other path tolerates it, so prep applies it uniformly; the
-            # map is kept so serving can speak the original vocabulary
-            corpus, self.word_map = relabel_by_frequency(corpus)
-        self.corpus = corpus
+        if config.corpus_residency == "disk":
+            # Disk-native: the CorpusStore at config.corpus_path is the
+            # corpus. It was written from an already-prepped (frequency-
+            # relabeled, word-sorted) stream, so re-prepping here would
+            # silently disagree with the shard files on disk.
+            if corpus is not None:
+                raise ValueError(
+                    "corpus_residency='disk' trains from the CorpusStore "
+                    f"at corpus_path={config.corpus_path!r}: pass "
+                    "corpus=None (the store already holds the prepped "
+                    "token stream; write one with "
+                    "ShardedCorpus.to_store())")
+            self.word_map = None
+            self.corpus = None
+        elif corpus is None:
+            raise ValueError(
+                "corpus=None needs corpus_residency='disk' with "
+                "corpus_path set: otherwise the engine has no tokens "
+                "to train on")
+        else:
+            if not isinstance(corpus, Corpus):
+                docs = [np.asarray(d, np.int64) for d in corpus]
+                if n_words is None:
+                    n_words = int(max((int(d.max()) for d in docs if d.size),
+                                      default=-1)) + 1
+                corpus = from_documents(docs, n_words)
+            self.word_map = None
+            counts = np.asarray(corpus.word_token_counts)
+            if counts.size and np.any(np.diff(counts) > 0):
+                # the hybrid layout REQUIRES the frequency relabeling and
+                # every other path tolerates it, so prep applies it
+                # uniformly; the map is kept so serving can speak the
+                # original vocabulary
+                corpus, self.word_map = relabel_by_frequency(corpus)
+            self.corpus = corpus
         self.config = config
         if checkpoint_dir is not None:
             checkpoint_manager = CheckpointManager(checkpoint_dir)
@@ -752,11 +788,23 @@ class LDAEngine:
     def _make_backend(self):
         backend, mesh = self._backend_arg, self._mesh
         if backend == "auto":
-            # an explicit mesh is an explicit request for shard_map
-            backend = "distributed" if (mesh is not None
-                                        or jax.device_count() > 1) \
-                else "single"
+            # an explicit mesh is an explicit request for shard_map;
+            # disk residency is single-backend by construction, so auto
+            # never routes it to shard_map even on multi-device hosts
+            if self.config.corpus_residency == "disk" and mesh is None:
+                backend = "single"
+            else:
+                backend = "distributed" if (mesh is not None
+                                            or jax.device_count() > 1) \
+                    else "single"
         self.backend_name = backend
+        if self.config.corpus_residency == "disk" \
+                and backend == "distributed":
+            raise ValueError(
+                "corpus_residency='disk' needs the single backend: the "
+                "paged streaming pipeline owns the device transfer "
+                "schedule, which shard_map's static partitioning cannot "
+                "express (pass backend='single')")
         if backend == "single":
             if mesh is not None:
                 raise ValueError("backend='single' does not take a mesh")
@@ -864,11 +912,12 @@ class LDAEngine:
         if shardwise and not (
                 self.backend_name == "single"
                 and getattr(self._backend.trainer, "residency", None)
-                == "streamed"):
+                in ("streamed", "disk")):
             raise ValueError(
                 "SupervisePolicy.checkpoint_shards needs the single "
-                "streamed backend (corpus_residency='streamed'): mid-epoch "
-                "payloads only exist on the streaming pipeline")
+                "streamed or disk backend (corpus_residency='streamed' "
+                "or 'disk'): mid-epoch payloads only exist on the "
+                "streaming pipeline")
         ckpt_every = checkpoint_every or policy.checkpoint_every
         report = RestartReport(completed_steps=0, restarts=0,
                                resumed_from=[])
@@ -956,19 +1005,20 @@ class LDAEngine:
                     first = False
                     last = {kk: float(np.asarray(v)[-1])
                             for kk, v in stats._asdict().items()}
+                    n_tok = self._backend.trainer.n_real_tokens
                     merge_hist({"iteration": [it],
                                 "llpt": [self._backend.evaluate(ss)],
-                                "tokens_per_sec":
-                                    [self.corpus.n_tokens / dt],
+                                "tokens_per_sec": [n_tok / dt],
                                 "stats": [last]})
                     if log_fn:
                         log_fn(f"iter={it:4d} llpt={merged['llpt'][-1]:+.4f}"
-                               f" tok/s={self.corpus.n_tokens / dt:,.0f}")
+                               f" tok/s={n_tok / dt:,.0f}")
 
         def recover(exc: BaseException) -> None:
             self._state = None      # next attempt restores from checkpoint
             if is_oom_error(exc) and not report.degraded_to_streamed \
-                    and self.config.corpus_residency != "streamed":
+                    and self.config.corpus_residency \
+                    not in ("streamed", "disk"):
                 warnings.warn(
                     "supervised fit hit an out-of-memory fault on the "
                     f"resident path ({exc}); degrading once to "

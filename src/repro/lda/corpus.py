@@ -366,6 +366,46 @@ class ShardedCorpus:
             assert np.array_equal(self.doc_ids[s, idx].astype(np.int64),
                                   expect)
 
+    def to_store(self, path: str):
+        """Write this stream out as an on-disk corpus store (manifest +
+        per-shard npz files, DESIGN.md SS14) and return the opened
+        ``repro.lda.storage.CorpusStore``. The round-trip through
+        ``from_store`` is bitwise."""
+        from repro.lda import storage  # lazy: storage imports this module
+
+        return storage.write_store(self, path)
+
+    @staticmethod
+    def from_store(path_or_store) -> "ShardedCorpus":
+        """Load a corpus store fully back into a host-RAM stream.
+
+        The inverse of :meth:`to_store` — every shard is read (and
+        crc32-verified) through ``CorpusStore.read_shard``. This is the
+        convenience path for corpora that DO fit in host RAM; the
+        out-of-core path hands the ``CorpusStore`` itself to the
+        streaming pipelines (``corpus_residency="disk"``) and never
+        materializes these arrays.
+        """
+        from repro.lda import storage  # lazy: storage imports this module
+
+        store = (path_or_store
+                 if isinstance(path_or_store, storage.CorpusStore)
+                 else storage.CorpusStore.open(path_or_store))
+        S, L = store.n_shards, store.shard_len
+        word_ids = np.zeros((S, L), np.int32)
+        doc_ids = np.zeros((S, L), np.int32)
+        mask = np.zeros((S, L), np.int32)
+        for s in range(S):
+            word_ids[s], doc_ids[s], mask[s] = store.read_shard(s)
+        out = ShardedCorpus(
+            n_shards=S, shard_len=L, n_padded=store.n_padded,
+            n_tokens=store.n_tokens, n_words=store.n_words,
+            n_docs=store.n_docs, word_ids=word_ids, doc_ids=doc_ids,
+            mask=mask, first_word=np.asarray(store.first_word, np.int32),
+            last_word=np.asarray(store.last_word, np.int32))
+        out.validate()
+        return out
+
 
 def shard_stream(corpus: Corpus, n_shards: int,
                  multiple: int = 1) -> ShardedCorpus:

@@ -53,7 +53,8 @@ class LDAConfig:
     survivor_capacity: int | None = None  # phase-2 chunk size; None=reference
     dense_word_threshold: int | None = None  # tokens>=thr => dense W row; None=K (paper)
     fused: bool = False              # route run() through train/lda_step.py
-    corpus_residency: str = "full"   # token list T: "full" | "streamed" | "auto"
+    corpus_residency: str = "full"   # T: "full" | "streamed" | "auto" | "disk"
+    corpus_path: str | None = None   # CorpusStore directory (residency "disk")
     stream_shards: int | None = None  # epoch shards when streamed; None=auto
     device_budget_bytes: int | None = None  # residency budget; None=device-derived
     selfcheck: bool = False          # count-invariant tripwires (invariants.py)
@@ -110,18 +111,39 @@ class LDAConfig:
             v = getattr(self, knob)
             if v is not None and v < 1:
                 raise ValueError(f"{knob}={v} must be >= 1 (or None for auto)")
-        if self.corpus_residency not in ("full", "streamed", "auto"):
+        if self.corpus_residency not in ("full", "streamed", "auto",
+                                         "disk"):
             raise ValueError(
                 f"unknown corpus_residency {self.corpus_residency!r}: "
                 "expected 'full' (token list device-resident), 'streamed' "
-                "(epoch-sharded out-of-core pipeline, DESIGN.md SS10), or "
+                "(epoch-sharded out-of-core pipeline, DESIGN.md SS10), "
                 "'auto' (streamed iff estimated token bytes exceed the "
-                "device budget)")
+                "device budget), or 'disk' (disk-native CorpusStore with "
+                "paged W, DESIGN.md SS14)")
+        if self.corpus_residency == "disk" and self.corpus_path is None:
+            raise ValueError(
+                "corpus_residency='disk' needs corpus_path: point it at a "
+                "CorpusStore directory (write one with "
+                "ShardedCorpus.to_store(path))")
+        if self.corpus_path is not None \
+                and self.corpus_residency != "disk":
+            raise ValueError(
+                f"corpus_path={self.corpus_path!r} is only consumed by "
+                "corpus_residency='disk' (got "
+                f"{self.corpus_residency!r}): set both or neither, so a "
+                "config never silently trains from a different corpus "
+                "than the one named")
         if self.stream_shards is not None and self.stream_shards < 2:
             raise ValueError(
                 f"stream_shards={self.stream_shards} must be >= 2 (or None "
                 "for the budget-derived count): streaming needs at least "
                 "a resident shard and a prefetched shard")
+        if self.corpus_residency == "disk" and self.stream_shards is not None:
+            raise ValueError(
+                f"stream_shards={self.stream_shards} conflicts with "
+                "corpus_residency='disk': the shard grid is fixed by the "
+                "CorpusStore manifest — leave stream_shards None (re-shard "
+                "by rewriting the store)")
         if self.stream_watchdog_seconds is not None \
                 and self.stream_watchdog_seconds <= 0:
             raise ValueError(

@@ -118,7 +118,7 @@ class LDATrainer:
     emits a DeprecationWarning.
     """
 
-    def __init__(self, corpus: Corpus, config: LDAConfig,
+    def __init__(self, corpus: Corpus | None, config: LDAConfig,
                  checkpoint_manager: Any | None = None, *,
                  _from_engine: bool = False):
         if not _from_engine:
@@ -128,8 +128,35 @@ class LDATrainer:
                 "door — it wraps this trainer with unified checkpoints "
                 "and the serving export path",
                 DeprecationWarning, stacklevel=2)
-        corpus.validate()
         self.config = config
+        self.checkpoint_manager = checkpoint_manager
+        self._fused_pipeline = None
+        if config.corpus_residency == "disk":
+            # Disk-native residency (DESIGN.md SS14): the CorpusStore's
+            # shard files ARE the corpus — tokens never materialize in
+            # host RAM as one array, and W pages per shard. The trainer
+            # holds only the store handle plus shape metadata.
+            from repro.lda.storage import CorpusStore
+            self.store = CorpusStore.open(config.corpus_path)
+            if self.store.shard_len % config.tile_size != 0:
+                raise ValueError(
+                    f"CorpusStore shard_len {self.store.shard_len} is not "
+                    f"a multiple of tile_size {config.tile_size}: rewrite "
+                    "the store from a stream sharded with "
+                    "multiple=tile_size, or change tile_size")
+            self.corpus = None
+            self.word_ids = self.doc_ids = self.mask = None
+            self.n_docs = self.store.n_docs
+            self.n_words = self.store.n_words
+            self.n_real_tokens = self.store.n_tokens
+            self.n_padded_tokens = self.store.n_padded
+            from repro.train.lda_step import resolve_residency
+            self.residency, self.n_stream_shards = resolve_residency(
+                config, self.store.n_padded)
+            self._sampler = None
+            return
+        self.store = None
+        corpus.validate()
         self.corpus = corpus
         padded, mask = pad_corpus(corpus, config.tile_size)
         from repro.train.lda_step import resolve_residency
@@ -146,15 +173,31 @@ class LDATrainer:
         self.mask = as_array(mask)
         self.n_docs = corpus.n_docs
         self.n_words = corpus.n_words
-        self.checkpoint_manager = checkpoint_manager
+        self.n_real_tokens = corpus.n_tokens
+        self.n_padded_tokens = int(padded.word_ids.shape[0])
         self._sampler = self._make_sampler()
-        self._fused_pipeline = None
 
     # -- state ------------------------------------------------------------
 
     def init_state(self) -> LDAState:
         key = jax.random.PRNGKey(self.config.seed)
         key, sub = jax.random.split(key)
+        if self.residency == "disk":
+            # Same draw as init_counts — one split, one randint over the
+            # padded slot count — so a disk trainer with the same seed
+            # starts bitwise equal to a resident one. The counts are then
+            # folded shard-by-shard on the host (int adds == the device
+            # scatter exactly) by state_from_stream_payload.
+            topics = jax.random.randint(
+                sub, (self.n_padded_tokens,), 0, self.config.n_topics,
+                dtype=jnp.int32)
+            pipe = self.fused_pipeline()
+            return pipe.state_from_stream_payload({
+                "topics_global":
+                    np.asarray(topics)[:self.n_real_tokens],
+                "key": np.asarray(jax.random.key_data(key)),
+                "iteration": 0,
+            })
         topics, D, W = esca.init_counts(
             sub, self.word_ids, self.doc_ids, self.mask,
             n_docs=self.n_docs, n_words=self.n_words,
@@ -173,6 +216,19 @@ class LDATrainer:
         return state.host_payload()
 
     def state_from_payload(self, payload: dict[str, Any]) -> LDAState:
+        if self.residency == "disk":
+            # Disk-native: every restore (boundary or mid-epoch) re-enters
+            # through the streaming pipeline — there is no resident token
+            # array to histogram against.
+            from repro.train.lda_step import STREAM_PAYLOAD_KEYS
+            pipe = self.fused_pipeline()
+            topics = np.asarray(payload["topics"], np.int32)
+            canonical = {"topics_global": topics[:self.n_real_tokens],
+                         "key": payload["key"],
+                         "iteration": payload["iteration"]}
+            canonical.update({k: payload[k] for k in STREAM_PAYLOAD_KEYS
+                              if k in payload})
+            return pipe.state_from_stream_payload(canonical)
         if int(np.asarray(payload.get("stream_cursor", 0))) > 0:
             # mid-epoch streaming payload (docs/API.md checkpoint schema):
             # only the streaming pipeline can re-open the epoch
@@ -189,7 +245,8 @@ class LDATrainer:
             canonical = {"topics_global": topics[:self.corpus.n_tokens],
                          "key": payload["key"],
                          "iteration": payload["iteration"]}
-            canonical.update({k: payload[k] for k in STREAM_PAYLOAD_KEYS})
+            canonical.update({k: payload[k] for k in STREAM_PAYLOAD_KEYS
+                              if k in payload})
             return pipe.state_from_stream_payload(canonical)
         topics = jnp.asarray(payload["topics"], jnp.int32)
         if topics.shape != self.word_ids.shape:
@@ -258,6 +315,11 @@ class LDATrainer:
 
     def step(self, state: LDAState) -> tuple[LDAState, dict[str, Any]]:
         cfg = self.config
+        if self._sampler is None:
+            raise ValueError(
+                "the stepwise reference path needs the token arrays "
+                "resident; corpus_residency='disk' trains only through "
+                "run()/run_fused (the streaming pipeline)")
         key, sub = jax.random.split(state.key)
         new_topics, stats = self._sampler(sub, state)
         D, W = esca.update_counts(
@@ -279,7 +341,20 @@ class LDATrainer:
                                               HybridFusedPipeline,
                                               StreamingHybridPipeline,
                                               StreamingPipeline)
-            if self.residency == "streamed":
+            if self.residency == "disk":
+                # The CorpusStore IS the stream: same shard grid surface
+                # as a ShardedCorpus, but reads come from the file layer
+                # and the pipelines page W per shard.
+                if self.config.format == "hybrid":
+                    self._fused_pipeline = StreamingHybridPipeline(
+                        self.store, n_docs=self.n_docs,
+                        n_words=self.n_words, config=self.config,
+                        corpus=self.store.corpus_meta())
+                else:
+                    self._fused_pipeline = StreamingPipeline(
+                        self.store, n_docs=self.n_docs,
+                        n_words=self.n_words, config=self.config)
+            elif self.residency == "streamed":
                 from repro.lda.corpus import shard_stream
                 stream = shard_stream(self.corpus, self.n_stream_shards,
                                       multiple=self.config.tile_size)
@@ -322,6 +397,9 @@ class LDATrainer:
         return state.nbytes()
 
     def evaluate(self, state: LDAState) -> float:
+        from repro.train.lda_step import StreamState
+        if isinstance(state, StreamState) and self.residency == "disk":
+            return self._evaluate_stream(state)
         score = float(llpt_mod.llpt(
             self.word_ids, self.doc_ids, self.mask, state.D, state.W,
             alpha=self.config.alpha_, beta=self.config.beta,
@@ -330,6 +408,18 @@ class LDATrainer:
             raise invariants.InvariantViolation(
                 "finite_llpt", f"evaluate (iteration "
                 f"{int(state.iteration)})", f"llpt={score!r}")
+        return score
+
+    def _evaluate_stream(self, ss) -> float:
+        """LLPT folded over the stream's shards with a paged W window —
+        bitwise equal to evaluate() on the densified state (DESIGN.md
+        SS14): identical per-token values through the identical compiled
+        reduce."""
+        score = float(self.fused_pipeline().eval_llpt(ss))
+        if self.config.selfcheck and not np.isfinite(score):
+            raise invariants.InvariantViolation(
+                "finite_llpt", f"evaluate (iteration "
+                f"{int(ss.iteration)})", f"llpt={score!r}")
         return score
 
     # -- loop -------------------------------------------------------------
@@ -356,22 +446,47 @@ class LDATrainer:
                 pipe.selfcheck(carry["fs"])
             return stats
 
+        if self.residency == "disk":
+            # Never densify for eval or save: LLPT folds over the store's
+            # shards with a paged W window, and checkpoints carry the
+            # global topic stream instead of a padded resident array.
+            evaluate = lambda: self._evaluate_stream(carry["fs"])  # noqa: E731
+            save_payload = lambda: self._stream_host_payload(  # noqa: E731
+                carry["fs"])
+        else:
+            evaluate = lambda: self.evaluate(  # noqa: E731
+                pipe.to_lda_state(carry["fs"]))
+            save_payload = lambda: pipe.to_lda_state(  # noqa: E731
+                carry["fs"]).host_payload()
         try:
             history = run_boundary_chunked(
                 n_iters, int(state.iteration),
-                n_tokens=self.corpus.n_tokens,
+                n_tokens=self.n_real_tokens,
                 eval_every=self.config.eval_every,
                 checkpoint_every=checkpoint_every,
                 run_chunk=run_chunk,
-                evaluate=lambda: self.evaluate(
-                    pipe.to_lda_state(carry["fs"])),
+                evaluate=evaluate,
                 save=None if self.checkpoint_manager is None else
                 lambda it: self.checkpoint_manager.save(
-                    it, pipe.to_lda_state(carry["fs"]).host_payload()),
+                    it, save_payload()),
                 log_fn=log_fn, on_chunk=on_chunk)
         finally:
             self._live = None
+        if self.residency == "disk":
+            return carry["fs"], history
         return pipe.to_lda_state(carry["fs"]), history
+
+    def _stream_host_payload(self, ss) -> dict[str, Any]:
+        """Trainer checkpoint payload for a live stream state.
+
+        Same schema as ``LDAState.host_payload`` — ``topics`` is the
+        GLOBAL (unpadded) token stream here; disk restores re-slice it
+        through ``state_from_stream_payload`` — plus the stream-cursor
+        keys when saved mid-epoch."""
+        pipe = self.fused_pipeline()
+        payload = pipe.stream_payload(ss)
+        payload["topics"] = payload.pop("topics_global")
+        return payload
 
     def live_serving_W(self):
         """``(W, cursor, n_shards)`` of the LIVE in-run state, or None
@@ -401,7 +516,7 @@ class LDATrainer:
         # a streamed corpus only exists as the pipeline's epoch shards; the
         # per-iteration step() stays the dense resident semantics oracle.
         if self.config.fused or self.config.format == "hybrid" \
-                or self.residency == "streamed":
+                or self.residency in ("streamed", "disk"):
             return self.run_fused(n_iters, state, log_fn, checkpoint_every,
                                   on_chunk=on_chunk)
         state = self.restore_or_init() if state is None else state

@@ -17,9 +17,12 @@ Hook sites (all behind ``armed()``):
     streaming epoch loops (single-host ``StreamingPipeline._advance`` and
     the distributed ``_stream_epoch``): kills a run with an epoch open.
   * ``io_fault(shard)`` / ``corrupt_arrays(shard, arrays)`` — inside the
-    shard slice load (``_put_shard`` / ``_put_substream``), i.e. on the
-    prefetch worker thread: injected I/O errors exercise the prefetcher's
-    retry/backoff, injected bit flips exercise the shard crc32 self-check.
+    shard load on the prefetch worker thread: the in-memory slice path
+    (``_put_shard`` / ``_put_substream``) and the disk-native file layer
+    (``repro.lda.storage.CorpusStore.read_shard`` with ``_chaos=True``,
+    between the ``np.load`` and the crc32 verify). Injected I/O errors
+    exercise the prefetcher's retry/backoff; injected bit flips exercise
+    the shard crc32 self-check (``ShardCorruptionError`` on disk reads).
   * ``replica_event(rid)`` — the serving tier's worker loop
     (``repro.serve.service``) polls it once per picked-up batch:
     ``kill_replicas`` makes the worker die holding a batch (exercising

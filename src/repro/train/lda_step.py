@@ -263,14 +263,18 @@ class FusedPipeline:
     """
 
     def __init__(self, word_ids: jax.Array, doc_ids: jax.Array,
-                 mask: jax.Array, *, n_docs: int, n_words: int, config):
+                 mask: jax.Array, *, n_docs: int, n_words: int, config,
+                 n_tokens: int | None = None):
         self.config = config
         self.word_ids = word_ids
         self.doc_ids = doc_ids
         self.mask = mask
         self.n_docs = n_docs
         self.n_words = n_words
-        self.n_tokens = int(word_ids.shape[0])
+        # disk-native streaming passes the padded length explicitly and
+        # NO host token arrays (the file layer is the source of truth)
+        self.n_tokens = int(n_tokens if n_tokens is not None
+                            else word_ids.shape[0])
         cap = getattr(config, "survivor_capacity", None)
         self.capacity = int(cap) if cap else self.n_tokens
         self.capacity = min(max(self.capacity, 1), self.n_tokens)
@@ -1028,7 +1032,8 @@ STREAM_WINDOW_BUDGET_FRACTION = 4
 # (docs/API.md "Checkpoint payload schema"). Every backend that converts
 # payloads must pass these through — a dropped key silently bypasses the
 # mid-epoch restore guards.
-STREAM_PAYLOAD_KEYS = ("stream_cursor", "stream_done_topics")
+STREAM_PAYLOAD_KEYS = ("stream_cursor", "stream_done_topics",
+                       "stream_n_shards")
 
 
 def plan_stream_shards(n_padded_tokens: int, budget_bytes: int | None, *,
@@ -1070,6 +1075,10 @@ def resolve_residency(config, n_padded_tokens: int,
     signal and the corpus stays resident (CPU backends report no limit).
     """
     mode = config.corpus_residency
+    if mode == "disk":
+        # disk-native: the CorpusStore's manifest fixes the shard count,
+        # so there is nothing for the budget probe to plan (DESIGN.md SS14)
+        return "disk", 0
     budget = config.device_budget_bytes
     if budget is None and mode != "full":
         # the device-derived budget feeds BOTH the auto policy and the
@@ -1204,6 +1213,11 @@ class _EpochCarry:
     # the dispatch queue; _flush() realizes them at the epoch close
     pending_topics: list = dataclasses.field(default_factory=list)
     stats_parts: list = dataclasses.field(default_factory=list)
+    # paged-W mode only: the epoch's full-vocabulary dW accumulates
+    # HOST-side (int64-safe int32 adds), fed by one-deep deferred
+    # readbacks of each shard's (page_rows, K) scatter window
+    dw_host: np.ndarray | None = None
+    pending_dw: list = dataclasses.field(default_factory=list)
     n_surv: int = 0
     max_span: int = 0
     stat_sums: np.ndarray = dataclasses.field(
@@ -1234,6 +1248,11 @@ class StreamState:
     iteration: int
     cursor: int = 0
     epoch: _EpochCarry | None = None
+    # paged-W mode only: the full (V, K) word-topic matrix lives HERE,
+    # host-side; ``counts`` then carries only (D, colsum) (dense) or
+    # (d_packed, colsum, overflow) (hybrid) and the device never holds
+    # more than the active shard's W row window
+    w_host: np.ndarray | None = None
 
     @property
     def topics(self):
@@ -1273,6 +1292,7 @@ class StreamingPipeline(FusedPipeline):
 
     def __init__(self, stream, *, n_docs: int, n_words: int, config):
         from repro.lda.corpus import ShardedCorpus
+        from repro.lda.storage import CorpusStore
         if getattr(config, "sampler", "three_branch") == "warp":
             raise ValueError(
                 "sampler='warp' does not support corpus_residency="
@@ -1283,18 +1303,31 @@ class StreamingPipeline(FusedPipeline):
                 "Use corpus_residency='full' (or 'auto' on a device that "
                 "fits the token list), or sampler='three_branch' for "
                 "streamed training")
-        if not isinstance(stream, ShardedCorpus):
+        # PAGED (disk-native) mode: the stream is a CorpusStore — token
+        # bytes come from the file layer shard by shard, and W pages
+        # through a per-shard row window instead of sitting device-
+        # resident (DESIGN.md SS14)
+        self.paged = isinstance(stream, CorpusStore)
+        if not self.paged and not isinstance(stream, ShardedCorpus):
             raise ValueError(
                 "StreamingPipeline takes a repro.lda.corpus.ShardedCorpus "
                 "(build one with shard_stream(corpus, n_shards, "
-                "multiple=config.tile_size))")
-        flat = stream.word_ids.reshape(-1)[:stream.n_padded]
-        flat_d = stream.doc_ids.reshape(-1)[:stream.n_padded]
-        flat_m = stream.mask.reshape(-1)[:stream.n_padded]
-        # host-side arrays: the base class only uses them for planning;
-        # nothing here places the full stream on the device
-        super().__init__(flat, flat_d, flat_m, n_docs=n_docs,
-                         n_words=n_words, config=config)
+                "multiple=config.tile_size)) or a repro.lda.storage."
+                "CorpusStore (corpus_residency='disk')")
+        if self.paged:
+            # no host token arrays at all: the base class only ever uses
+            # them for planning, and paged planning is manifest-driven
+            super().__init__(None, None, None, n_docs=n_docs,
+                             n_words=n_words, config=config,
+                             n_tokens=stream.n_padded)
+        else:
+            flat = stream.word_ids.reshape(-1)[:stream.n_padded]
+            flat_d = stream.doc_ids.reshape(-1)[:stream.n_padded]
+            flat_m = stream.mask.reshape(-1)[:stream.n_padded]
+            # host-side arrays: the base class only uses them for
+            # planning; nothing here places the full stream on the device
+            super().__init__(flat, flat_d, flat_m, n_docs=n_docs,
+                             n_words=n_words, config=config)
         self.stream = stream
         L = stream.shard_len
         if not self._capacity_pinned:
@@ -1305,7 +1338,20 @@ class StreamingPipeline(FusedPipeline):
             self.capacity = plan_tile_capacity(
                 self.n_tokens, self.n_tokens, config.n_topics)
         self.capacity = min(self.capacity, L)
-        if self.balance == "tiles":
+        if self.paged:
+            # W page geometry from the manifest's word runs: every shard's
+            # [first_word, last_word] run must fit one uniform window of
+            # ``page_rows`` Ŵ rows (uniform so the shard jit compiles
+            # once; the window BASE rides in as a traced scalar). Empty
+            # trailing shards (last == first - 1) span 0 — clamped to 1.
+            spans = np.maximum(
+                np.asarray(stream.last_word, np.int64)
+                - np.asarray(stream.first_word, np.int64) + 1, 1)
+            self._page_rows = int(min(max(int(spans.max()), 1), n_words))
+            self._page_base = np.minimum(
+                np.maximum(np.asarray(stream.first_word, np.int64), 0),
+                max(n_words - self._page_rows, 0))
+        if self.balance == "tiles" and not self.paged:
             # per-shard tile planning (the _plan_tiles override deferred
             # to here): the word window must cover the widest run any
             # SHARD's tiles span, not the full stream's. Only the spans
@@ -1342,9 +1388,17 @@ class StreamingPipeline(FusedPipeline):
 
     def _counts_from_lda_state(self, state) -> tuple:
         colsum = jnp.sum(state.W, axis=0, dtype=jnp.int32)
+        if self.paged:
+            # W does NOT join the device-resident counts: it lives
+            # host-side (StreamState.w_host) and pages through per-shard
+            # row windows
+            return (jnp.copy(state.D), colsum)
         return (jnp.copy(state.D), jnp.copy(state.W), colsum)
 
     def _counts_from_np(self, D: np.ndarray, W: np.ndarray) -> tuple:
+        if self.paged:
+            return (jnp.asarray(D),
+                    jnp.asarray(W.sum(axis=0, dtype=np.int32)))
         return (jnp.asarray(D), jnp.asarray(W),
                 jnp.asarray(W.sum(axis=0, dtype=np.int32)))
 
@@ -1353,10 +1407,13 @@ class StreamingPipeline(FusedPipeline):
             return state        # resuming (possibly mid-epoch): no-op
         key = jax.random.wrap_key_data(jnp.copy(
             jax.random.key_data(state.key)))
-        return StreamState(
+        ss = StreamState(
             shard_topics=self._split_topics(state.topics),
             counts=self._counts_from_lda_state(state), key=key,
             iteration=int(state.iteration))
+        if self.paged:
+            ss.w_host = np.asarray(state.W, np.int32).copy()
+        return ss
 
     def _require_boundary(self, ss: StreamState, what: str) -> None:
         if ss.cursor:
@@ -1370,6 +1427,14 @@ class StreamingPipeline(FusedPipeline):
         from repro.lda.model import LDAState
         self._require_boundary(ss, "to_lda_state")
         topics = np.concatenate(ss.shard_topics)[:self.n_tokens]
+        if self.paged:
+            D, _colsum = ss.counts
+            # densifying to an LDAState is the one paged export that
+            # re-uploads the full W — callers that only need a score or
+            # a checkpoint use eval_llpt / stream_payload instead
+            return LDAState(topics=jnp.asarray(topics), D=D,
+                            W=jnp.asarray(ss.w_host), key=ss.key,
+                            iteration=jnp.int32(ss.iteration))
         D, W, colsum = ss.counts
         return LDAState(topics=jnp.asarray(topics), D=D, W=W, key=ss.key,
                         iteration=jnp.int32(ss.iteration))
@@ -1379,8 +1444,20 @@ class StreamingPipeline(FusedPipeline):
     def _get_begin(self) -> Callable:
         if self._begin_fn is None:
             cfg, n = self.config, self.n_tokens
+            paged = self.paged
 
             def begin(counts, key):
+                if paged:
+                    # paged counts carry no W: Ŵ and the word stats are
+                    # recomputed per shard from the prefetched row window
+                    # (row-identical math — see the paged shard_fn), so
+                    # the epoch open is just the key split + the u draw,
+                    # in the exact resident order
+                    D, colsum = counts
+                    key_next, sub = jax.random.split(key)
+                    u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
+                    deltas = (jnp.zeros_like(D), jnp.zeros_like(colsum))
+                    return key_next, u, (), deltas
                 D, W, colsum = counts
                 key_next, sub = jax.random.split(key)
                 # the epoch's uniforms, drawn ONCE at the resident length
@@ -1431,6 +1508,47 @@ class StreamingPipeline(FusedPipeline):
         L, n = st.shard_len, self.n_tokens
         n_chunks = max(1, -(-L // capacity))
         track_span = self.balance == "tiles"
+        if self.paged:
+            P, V = self._page_rows, self.n_words
+
+            def paged_fn(u, base, lo, topics_s, word_s, doc_s, mask_s,
+                         w_win, counts, derived, deltas):
+                D, colsum = counts
+                # iteration-START Ŵ + word stats, recomputed from the
+                # shard's prefetched W row window: both are row-wise, so
+                # the window rows are bitwise the rows the resident epoch
+                # open computes, and every downstream gather goes through
+                # window-LOCAL word ids (clip only rebases the inert pad
+                # slots of empty trailing shards)
+                W_hat = esca.compute_w_hat_from_colsum(
+                    w_win, colsum, cfg.beta, n_words=V)
+                stats_w = three_branch.word_stats(W_hat, g=cfg.g,
+                                                  alpha=cfg.alpha_)
+                word_l = jnp.clip(word_s - base, 0, P - 1).astype(jnp.int32)
+                dec = three_branch.skip_phase(u, word_l, doc_s, D, stats_w,
+                                              g=cfg.g, alpha=cfg.alpha_)
+                rank, n_surv = three_branch.survivor_rank(dec.skip)
+                surv_idx = three_branch.compact_survivor_indices(
+                    rank, dec.skip, n_chunks * capacity)
+                sample_chunk = self._dense_chunk_sampler(
+                    u, word_l, doc_s, D, W_hat, stats_w.k[:, 0],
+                    win_words=V, n_stream=L)
+                new_topics, in_m = three_branch.run_survivor_chunks(
+                    surv_idx, n_surv, dec.k1, capacity=capacity,
+                    n_chunks=n_chunks, sample_chunk=sample_chunk)
+                dD, dw_win, dcs = scatter_changed_deltas(
+                    topics_s, new_topics, doc_s, word_l, mask_s,
+                    capacity=capacity, D=deltas[0],
+                    W=jnp.zeros((P, cfg.n_topics), jnp.int32),
+                    colsum=deltas[1])
+                sums = _shard_stat_sums(lo, n, dec, in_m, new_topics,
+                                        topics_s)
+                return (new_topics, (dD, dcs), dw_win, n_surv,
+                        jnp.int32(0), sums)
+
+            fn = jax.jit(paged_fn, donate_argnums=(3, 7, 10))
+            self._shard_cache[sig] = fn
+            return fn
 
         def shard_fn(u, lo, topics_s, word_s, doc_s, mask_s, counts,
                      derived, deltas):
@@ -1471,8 +1589,14 @@ class StreamingPipeline(FusedPipeline):
         they reach the device — silent host-buffer corruption surfaces
         as a restartable :class:`ShardCorruptionError` at the load, not
         as a poisoned model three epochs later.
+
+        In paged (disk-native) mode the load IS a file read:
+        ``CorpusStore.read_shard`` owns the crc32 check (unconditional
+        there) and the chaos fault hooks, so this method only routes.
         """
         st = self.stream
+        if self.paged:
+            return st.read_shard(s, _chaos=True)
         arrays = (st.word_ids[s], st.doc_ids[s], st.mask[s])
         if chaos.armed():
             chaos.io_fault(s)
@@ -1488,12 +1612,19 @@ class StreamingPipeline(FusedPipeline):
                     "newest checkpoint")
         return arrays
 
-    def _put_shard(self, s: int, topics_host, u_host):
+    def _put_shard(self, s: int, topics_host, u_host, w_host=None):
         word_s, doc_s, mask_s = self._load_shard_slices(s)
         L = self.stream.shard_len
-        return (jnp.asarray(word_s), jnp.asarray(doc_s),
-                jnp.asarray(mask_s), jnp.asarray(topics_host),
-                jnp.asarray(u_host[s * L:(s + 1) * L]))
+        out = (jnp.asarray(word_s), jnp.asarray(doc_s),
+               jnp.asarray(mask_s), jnp.asarray(topics_host),
+               jnp.asarray(u_host[s * L:(s + 1) * L]))
+        if self.paged:
+            # the shard's W row window rides the same worker-thread put
+            # as the token buffers: the device only ever holds the
+            # active + prefetched windows, never the full (V, K) matrix
+            b = int(self._page_base[s])
+            out = out + (jnp.asarray(w_host[b:b + self._page_rows]),)
+        return out
 
     def _open_epoch(self, ss: StreamState) -> StreamState:
         key_next, u_dev, derived, deltas = self._get_begin()(ss.counts,
@@ -1502,13 +1633,31 @@ class StreamingPipeline(FusedPipeline):
                                u_host=self._stage_u(u_dev),
                                derived=derived, deltas=deltas,
                                old_topics=[])
+        if self.paged:
+            ss.epoch.dw_host = np.zeros(
+                (self.n_words, self.config.n_topics), np.int32)
         return ss
+
+    def _drain_dw(self, ep: _EpochCarry) -> None:
+        """Realize deferred per-shard dW window readbacks into the
+        host-side full-vocabulary accumulator (paged mode only)."""
+        while ep.pending_dw:
+            b, dw = ep.pending_dw.pop(0)
+            ep.dw_host[b:b + self._page_rows] += np.asarray(dw)
 
     def _close_epoch(self, ss: StreamState) -> StreamState:
         ep = ss.epoch
+        if self.paged:
+            self._drain_dw(ep)
         if getattr(self.config, "selfcheck", False):
-            self._selfcheck_deltas(ep.deltas, ss.iteration)
+            self._selfcheck_deltas(ep.deltas, ss.iteration,
+                                   dw_host=ep.dw_host)
         ss.counts = self._apply_epoch(ss.counts, ep.derived, ep.deltas)
+        if self.paged:
+            # the epoch's W moves land host-side: int32 adds are exact
+            # and commutative, so this equals the device-resident apply
+            # row for row
+            ss.w_host += ep.dw_host
         ss.key = ep.key_next
         ss.iteration += 1
         ss.cursor = 0
@@ -1519,12 +1668,28 @@ class StreamingPipeline(FusedPipeline):
 
     # -- count-invariant tripwires (config.selfcheck, invariants.py) --------
 
-    def _selfcheck_deltas(self, deltas: tuple, iteration: int) -> None:
+    def _selfcheck_deltas(self, deltas: tuple, iteration: int,
+                          dw_host=None) -> None:
+        if self.paged:
+            # selfcheck is the one paged path that re-uploads the full
+            # dW (a debug mode; the training path never does)
+            dD, dcs = deltas
+            invariants.check_delta_conservation(
+                dD, jnp.asarray(dw_host), dcs,
+                where=f"epoch {iteration} close (deltas)")
+            return
         dD, dW, dcs = deltas
         invariants.check_delta_conservation(
             dD, dW, dcs, where=f"epoch {iteration} close (deltas)")
 
     def _selfcheck_counts(self, ss: StreamState) -> None:
+        if self.paged:
+            D, colsum = ss.counts
+            invariants.check_dense_counts(
+                D, jnp.asarray(ss.w_host), colsum,
+                n_tokens=self.stream.n_tokens,
+                where=f"epoch {ss.iteration} close (counts)")
+            return
         D, W, colsum = ss.counts
         invariants.check_dense_counts(
             D, W, colsum, n_tokens=self.stream.n_tokens,
@@ -1552,24 +1717,44 @@ class StreamingPipeline(FusedPipeline):
         fn = self._get_shard_fn(self.capacity, self.win_words)
         self._prefetch.take()       # drop any stale prefetch
         current = self._put_shard(ss.cursor, ss.shard_topics[ss.cursor],
-                                  ep.u_host)
+                                  ep.u_host, ss.w_host)
         while ss.cursor < stop:
             s = ss.cursor
             if chaos.armed():
                 chaos.shard_event(ss.iteration, s)
             if s + 1 < stop:
                 self._prefetch.submit(self._put_shard, s + 1,
-                                      ss.shard_topics[s + 1], ep.u_host)
-            word_s, doc_s, mask_s, topics_s, u_s = current
-            new_t, ep.deltas, n_surv, span, sums = fn(
-                u_s, jnp.int32(s * st.shard_len), topics_s, word_s,
-                doc_s, mask_s, ss.counts, ep.derived, ep.deltas)
+                                      ss.shard_topics[s + 1], ep.u_host,
+                                      ss.w_host)
+            if self.paged:
+                word_s, doc_s, mask_s, topics_s, u_s, w_win = current
+                new_t, ep.deltas, dw_win, n_surv, span, sums = fn(
+                    u_s, jnp.int32(int(self._page_base[s])),
+                    jnp.int32(s * st.shard_len), topics_s, word_s,
+                    doc_s, mask_s, w_win, ss.counts, ep.derived,
+                    ep.deltas)
+                # the shard's dW window reads back one-deep deferred,
+                # exactly like the topics — no per-shard host sync
+                ep.pending_dw.append((int(self._page_base[s]), dw_win))
+                if len(ep.pending_dw) > 1:
+                    b_prev, dw_prev = ep.pending_dw.pop(0)
+                    ep.dw_host[b_prev:b_prev + self._page_rows] += \
+                        np.asarray(dw_prev)
+            else:
+                word_s, doc_s, mask_s, topics_s, u_s = current
+                w_win = dw_win = None
+                new_t, ep.deltas, n_surv, span, sums = fn(
+                    u_s, jnp.int32(s * st.shard_len), topics_s, word_s,
+                    doc_s, mask_s, ss.counts, ep.derived, ep.deltas)
             if self.last_epoch_device_bytes == 0:
                 # every buffer shape is static, so one measurement per
                 # pipeline suffices; .nbytes reads metadata only — no
                 # transfer, no sync, no pipeline bubble
+                window = (word_s, doc_s, mask_s, new_t, u_s)
+                if self.paged:
+                    window = window + (w_win, dw_win)
                 self.last_epoch_device_bytes = self._device_bytes(
-                    ss, (word_s, doc_s, mask_s, new_t, u_s))
+                    ss, window)
             ep.old_topics.append(ss.shard_topics[s])
             ep.stats_parts.append((n_surv, span, sums))
             # one-deep deferred D2H: shard s's topics read back while
@@ -1583,6 +1768,8 @@ class StreamingPipeline(FusedPipeline):
         while ep.pending_topics:
             s_prev, t_prev = ep.pending_topics.pop(0)
             ss.shard_topics[s_prev] = np.asarray(t_prev)
+        if self.paged:
+            self._drain_dw(ep)
         return ss
 
     def note_survivors(self, n_surv, decay: float = 0.7) -> None:
@@ -1591,6 +1778,17 @@ class StreamingPipeline(FusedPipeline):
             self.capacity = plan_tile_capacity(
                 self._surv_ema, self.n_tokens, self.config.n_topics)
         self.capacity = min(self.capacity, self.stream.shard_len)
+
+    def note_spans(self, spans) -> None:
+        if self.paged:
+            # paged dispatch already gathers through the shard's window-
+            # local ids; the tiled kernels stay off (win_words == V), so
+            # span feedback must never shrink the window
+            return
+        super().note_spans(spans)
+
+    def _n_real_tokens(self) -> int:
+        return self.stream.n_tokens
 
     def run_shards(self, ss: StreamState,
                    n_shards: int = 1) -> StreamState:
@@ -1678,6 +1876,15 @@ class StreamingPipeline(FusedPipeline):
         freezing a boundary checkpoint (pinned in
         tests/test_serve_service.py).
         """
+        if self.paged:
+            # paged W already lives host-side; mid-epoch the deferred dW
+            # windows were drained when _advance returned, so w + dw IS
+            # the current view — no device traffic at all
+            if ss.epoch is None or ss.cursor == 0:
+                return (ss.w_host.astype(np.int32, copy=True), 0,
+                        self.stream.n_shards)
+            return ((ss.w_host + ss.epoch.dw_host).astype(np.int32),
+                    int(ss.cursor), self.stream.n_shards)
         if ss.epoch is None or ss.cursor == 0:
             return (np.asarray(ss.counts[1], np.int32), 0,
                     self.stream.n_shards)
@@ -1712,20 +1919,33 @@ class StreamingPipeline(FusedPipeline):
         return {"topics_global": start, "key": key,
                 "iteration": int(ss.iteration),
                 "stream_cursor": np.int64(ss.cursor),
-                "stream_done_topics": done.astype(np.int32)}
+                "stream_done_topics": done.astype(np.int32),
+                "stream_n_shards": np.int64(st.n_shards)}
 
     def _np_counts(self, topics_flat: np.ndarray, lo: int, hi: int):
-        """Host count histograms over padded-stream slots [lo, hi)."""
+        """Host count histograms over padded-stream slots [lo, hi).
+
+        Folds shard by shard, so in paged mode the token arrays come
+        through ``read_shard`` one slice at a time (never the whole
+        stream in host RAM) — the masked int adds are order-independent,
+        so the fold equals the flat histogram exactly. Both call sites
+        pass shard-aligned ranges.
+        """
         st = self.stream
+        L = st.shard_len
         K = self.config.n_topics
-        w = st.word_ids.reshape(-1)[lo:hi]
-        d = st.doc_ids.reshape(-1)[lo:hi]
-        m = st.mask.reshape(-1)[lo:hi].astype(np.int32)
-        t = topics_flat[lo:hi]
         D = np.zeros((self.n_docs, K), np.int32)
         W = np.zeros((self.n_words, K), np.int32)
-        np.add.at(D, (d, t), m)
-        np.add.at(W, (w, t), m)
+        for s in range(lo // L, min(-(-hi // L), st.n_shards)):
+            if self.paged:
+                w, d, m = st.read_shard(s)
+            else:
+                w, d, m = st.word_ids[s], st.doc_ids[s], st.mask[s]
+            a = s * L
+            sl = slice(max(lo - a, 0), min(hi - a, L))
+            t = topics_flat[a + sl.start:a + sl.stop]
+            np.add.at(D, (d[sl], t), m[sl].astype(np.int32))
+            np.add.at(W, (w[sl], t), m[sl].astype(np.int32))
         return D, W
 
     def state_from_stream_payload(self, payload: dict) -> StreamState:
@@ -1741,6 +1961,13 @@ class StreamingPipeline(FusedPipeline):
                 f"checkpoint topics_global has {tg.shape[0]} entries but "
                 f"the corpus holds {n_real} tokens: the checkpoint belongs "
                 "to a different corpus")
+        sn = payload.get("stream_n_shards")
+        if sn is not None and int(sn) != st.n_shards:
+            raise ValueError(
+                f"checkpoint was saved mid-epoch with {int(sn)} stream "
+                f"shards but this pipeline streams {st.n_shards}: the "
+                "shard grid must match to resume mid-epoch (re-save the "
+                "checkpoint at an epoch boundary to re-shard)")
         total = st.n_shards * st.shard_len
         flat = np.zeros(total, np.int32)
         flat[:n_real] = tg
@@ -1750,6 +1977,8 @@ class StreamingPipeline(FusedPipeline):
             shard_topics=list(flat.reshape(st.n_shards, st.shard_len)),
             counts=self._counts_from_np(D0, W0),
             key=key, iteration=int(payload["iteration"]))
+        if self.paged:
+            ss.w_host = W0
         cursor = int(payload.get("stream_cursor", 0))
         if cursor == 0:
             return ss
@@ -1771,9 +2000,15 @@ class StreamingPipeline(FusedPipeline):
         hi = cursor * st.shard_len
         Dn, Wn = self._np_counts(new_flat, 0, hi)
         Do, Wo = self._np_counts(flat, 0, hi)
-        ss.epoch.deltas = (jnp.asarray(Dn - Do), jnp.asarray(Wn - Wo),
-                           jnp.asarray((Wn - Wo).sum(axis=0,
-                                                     dtype=np.int32)))
+        if self.paged:
+            ss.epoch.deltas = (jnp.asarray(Dn - Do),
+                               jnp.asarray((Wn - Wo).sum(axis=0,
+                                                         dtype=np.int32)))
+            ss.epoch.dw_host = (Wn - Wo).astype(np.int32)
+        else:
+            ss.epoch.deltas = (jnp.asarray(Dn - Do), jnp.asarray(Wn - Wo),
+                               jnp.asarray((Wn - Wo).sum(axis=0,
+                                                         dtype=np.int32)))
         ss.epoch.old_topics = list(
             flat.reshape(st.n_shards, st.shard_len)[:cursor])
         for s in range(cursor):
@@ -1781,6 +2016,61 @@ class StreamingPipeline(FusedPipeline):
                 st.n_shards, st.shard_len)[s]
         ss.cursor = cursor
         return ss
+
+    # -- out-of-core evaluation (Eq 5 folded over shards, DESIGN.md SS14) ---
+
+    def _eval_parts(self, ss: StreamState) -> tuple:
+        """(D, W_full_or_None, colsum) for the shard-folded evaluator;
+        W is None exactly when it pages (paged mode)."""
+        if self.paged:
+            D, colsum = ss.counts
+            return D, None, colsum
+        D, W, colsum = ss.counts
+        return D, W, colsum
+
+    def eval_llpt(self, ss: StreamState) -> float:
+        """LLPT (Eq 5) without ever uploading the full token list.
+
+        Folds ``core.llpt.token_ll`` over the epoch shards — in paged
+        mode each dispatch sees only the shard's token slice plus its W
+        row window (window-local ids; phi rows enter through gathers, so
+        per-token values are identical to the full-matrix call) — then
+        feeds the assembled per-token vector through the SAME compiled
+        ``reduce_ll`` the resident ``llpt`` uses. Same values through
+        the same reduction ⇒ bitwise-equal score (pinned in
+        tests/test_streaming.py).
+        """
+        from repro.core import llpt as llpt_mod
+        self._require_boundary(ss, "eval_llpt")
+        st, cfg = self.stream, self.config
+        L = st.shard_len
+        D, W_full, colsum = self._eval_parts(ss)
+        colsum32 = jnp.asarray(colsum).astype(jnp.float32)
+        parts = []
+        for s in range(st.n_shards):
+            if self.paged:
+                w_s, d_s, _m = st.read_shard(s)
+                b = int(self._page_base[s])
+                w_win = jnp.asarray(ss.w_host[b:b + self._page_rows])
+                v = jnp.asarray(
+                    np.clip(w_s - b, 0, self._page_rows - 1)
+                    .astype(np.int32))
+            else:
+                w_s, d_s = st.word_ids[s], st.doc_ids[s]
+                w_win = W_full
+                v = jnp.asarray(w_s)
+            ll = llpt_mod.token_ll(
+                v, jnp.asarray(d_s), D, w_win, colsum32,
+                alpha=cfg.alpha_, beta=cfg.beta, n_words=self.n_words,
+                tile_size=cfg.tile_size)
+            parts.append(np.asarray(ll))
+        ll_all = np.concatenate(parts)[:self.n_tokens]
+        # by the stream invariant the real tokens are exactly the first
+        # n_tokens padded slots, so the resident mask is synthesizable
+        mask = (np.arange(self.n_tokens, dtype=np.int64)
+                < st.n_tokens).astype(np.int32)
+        return float(llpt_mod.reduce_ll(jnp.asarray(ll_all),
+                                        jnp.asarray(mask)))
 
 
 def _shard_stat_sums(lo, n, dec, in_m, new_topics, old_topics):
@@ -1825,22 +2115,36 @@ class StreamingHybridPipeline(StreamingPipeline):
 
     def _counts_from_lda_state(self, state) -> tuple:
         lay = self.layout
-        w_head, w_tail = lay.split_w(state.W)
         colsum = jnp.sum(state.W, axis=0, dtype=jnp.int32)
+        if self.paged:
+            # paged hybrid NEVER packs W: the host mirror (w_host) is
+            # the at-rest W, so only the document side stays packed on
+            # device (DESIGN.md SS14)
+            return (lay.pack_d(state.D), colsum, jnp.int32(0))
+        w_head, w_tail = lay.split_w(state.W)
         return (lay.pack_d(state.D), w_head, w_tail, colsum, jnp.int32(0))
 
     def _counts_from_np(self, D: np.ndarray, W: np.ndarray) -> tuple:
         lay = self.layout
-        w_head, w_tail = lay.split_w(jnp.asarray(W))
         colsum = jnp.asarray(W.sum(axis=0, dtype=np.int32))
+        if self.paged:
+            return (lay.pack_d(jnp.asarray(D)), colsum, jnp.int32(0))
+        w_head, w_tail = lay.split_w(jnp.asarray(W))
         return (lay.pack_d(jnp.asarray(D)), w_head, w_tail, colsum,
                 jnp.int32(0))
 
     def to_lda_state(self, ss: StreamState):
         from repro.lda.model import LDAState
         self._require_boundary(ss, "to_lda_state")
-        d_packed, w_head, w_tail, _colsum, _overflow = ss.counts
         topics = np.concatenate(ss.shard_topics)[:self.n_tokens]
+        if self.paged:
+            d_packed, _colsum, _overflow = ss.counts
+            return LDAState(
+                topics=jnp.asarray(topics),
+                D=sparse.densify_rows(d_packed, self.layout.n_topics),
+                W=jnp.asarray(ss.w_host),
+                key=ss.key, iteration=jnp.int32(ss.iteration))
+        d_packed, w_head, w_tail, _colsum, _overflow = ss.counts
         return LDAState(
             topics=jnp.asarray(topics),
             D=sparse.densify_rows(d_packed, self.layout.n_topics),
@@ -1849,12 +2153,15 @@ class StreamingHybridPipeline(StreamingPipeline):
 
     def overflow_count(self, ss: StreamState) -> int:
         """The packed-update tripwire (0 by the capacity-bound design)."""
-        return int(ss.counts[4])
+        return int(ss.counts[2] if self.paged else ss.counts[4])
 
     def serving_counts(self, ss: StreamState) -> tuple:
         """Hybrid serving export: the epoch-resident densified W mirror
         plus the accumulated ΔW mid-epoch; densify the packed state at a
-        boundary. Same staleness/bitwise contract as the dense pipeline."""
+        boundary. Same staleness/bitwise contract as the dense pipeline.
+        Paged mode serves straight from the host mirror (format-free)."""
+        if self.paged:
+            return StreamingPipeline.serving_counts(self, ss)
         if ss.epoch is None or ss.cursor == 0:
             _d, w_head, w_tail, _cs, _ov = ss.counts
             W = self.layout.densify_w(w_head, w_tail)
@@ -1864,10 +2171,22 @@ class StreamingHybridPipeline(StreamingPipeline):
         return W, int(ss.cursor), self.stream.n_shards
 
     def _selfcheck_counts(self, ss: StreamState) -> None:
-        _d_packed, _w_head, _w_tail, colsum, overflow = ss.counts
+        if self.paged:
+            _d_packed, colsum, overflow = ss.counts
+        else:
+            _d_packed, _w_head, _w_tail, colsum, overflow = ss.counts
         invariants.check_packed_counts(
             colsum, overflow, n_tokens=self.stream.n_tokens,
             where=f"epoch {ss.iteration} close (packed counts)")
+
+    def _eval_parts(self, ss: StreamState) -> tuple:
+        if self.paged:
+            d_packed, colsum, _ov = ss.counts
+            return (sparse.densify_rows(d_packed, self.layout.n_topics),
+                    None, colsum)
+        d_packed, w_head, w_tail, colsum, _ov = ss.counts
+        return (sparse.densify_rows(d_packed, self.layout.n_topics),
+                self.layout.densify_w(w_head, w_tail), colsum)
 
     # -- compiled pieces ----------------------------------------------------
 
@@ -1876,8 +2195,20 @@ class StreamingHybridPipeline(StreamingPipeline):
             cfg, lay = self.config, self.layout
             k_total = lay.n_topics
             n = self.n_tokens
+            paged = self.paged
 
             def begin(counts, key):
+                if paged:
+                    # only the document side densifies; W pages per
+                    # shard from the host mirror
+                    d_packed, colsum, _overflow = counts
+                    key_next, sub = jax.random.split(key)
+                    u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
+                    d_dense = sparse.densify_rows_sorted(d_packed,
+                                                         k_total)
+                    deltas = (jnp.zeros_like(d_dense),
+                              jnp.zeros_like(colsum))
+                    return key_next, u, (d_dense,), deltas
                 d_packed, w_head, w_tail, colsum, _overflow = counts
                 key_next, sub = jax.random.split(key)
                 u = jax.random.uniform(sub, (n,), dtype=jnp.float32)
@@ -1900,6 +2231,20 @@ class StreamingHybridPipeline(StreamingPipeline):
 
     def _apply_epoch(self, counts: tuple, derived: tuple,
                      deltas: tuple) -> tuple:
+        if self.paged:
+            if self._end_fn is None:
+                lay = self.layout
+
+                def end_paged(colsum, overflow, d_dense, deltas):
+                    dD, dcs = deltas
+                    d_packed, ov_d = sparse.pack_rows_sorted(
+                        d_dense + dD, lay.d_capacity)
+                    return d_packed, colsum + dcs, overflow + ov_d
+
+                self._end_fn = jax.jit(end_paged, donate_argnums=(0,))
+            _d_packed, colsum, overflow = counts
+            (d_dense,) = derived
+            return self._end_fn(colsum, overflow, d_dense, deltas)
         if self._end_fn is None:
             lay = self.layout
 
@@ -1944,6 +2289,73 @@ class StreamingHybridPipeline(StreamingPipeline):
         track_span = self.balance == "tiles"
         split_tail = cfg.tail_sampler == "sparse" \
             and lay.v_dense < self.n_words
+        if self.paged:
+            P, V = self._page_rows, self.n_words
+
+            def paged_fn(u, base, lo, topics_s, word_s, doc_s, mask_s,
+                         w_win, counts, derived, deltas):
+                d_packed = counts[0]
+                colsum = counts[1]
+                (d_dense,) = derived
+                W_hat = esca.compute_w_hat_from_colsum(
+                    w_win, colsum, cfg.beta, n_words=V)
+                stats_w = three_branch.word_stats(W_hat, g=cfg.g,
+                                                  alpha=cfg.alpha_)
+                # window-LOCAL ids feed every Ŵ/stats gather; the
+                # head/tail split keys on GLOBAL ids (the layout's
+                # dense-word threshold lives in vocabulary space)
+                word_l = jnp.clip(word_s - base, 0, P - 1).astype(jnp.int32)
+                dec = three_branch.skip_phase(u, word_l, doc_s, d_dense,
+                                              stats_w, g=cfg.g,
+                                              alpha=cfg.alpha_)
+                k1_per_word = stats_w.k[:, 0]
+                dense_chunk = self._dense_chunk_sampler(
+                    u, word_l, doc_s, d_dense, W_hat, k1_per_word,
+                    win_words=V, n_stream=L)
+
+                def sparse_tail_chunk(idx):
+                    u_c, v_c, d_c = u[idx], word_l[idx], doc_s[idx]
+                    k1 = k1_per_word[v_c]
+                    b1 = d_dense[d_c, k1].astype(jnp.float32)
+                    t_c, _nq, in_m = kops.sparse_tail_draw(
+                        u_c, d_packed[d_c], W_hat[v_c], k1,
+                        stats_w.a[v_c, 0], b1, stats_w.q_prime[v_c],
+                        alpha=cfg.alpha_, interpret=self._interpret)
+                    return t_c, in_m
+
+                if split_tail:
+                    head_mask = word_s < lay.v_dense
+                    segments = [(head_mask, dense_chunk),
+                                (~head_mask, sparse_tail_chunk)]
+                else:
+                    segments = [(None, dense_chunk)]
+                new_topics = dec.k1
+                in_m_acc = jnp.zeros(L, jnp.bool_)
+                n_surv_total = jnp.int32(0)
+                for seg_mask, chunk_fn in segments:
+                    skip_seg = dec.skip if seg_mask is None \
+                        else dec.skip | ~seg_mask
+                    rank, n_surv = three_branch.survivor_rank(skip_seg)
+                    surv_idx = three_branch.compact_survivor_indices(
+                        rank, skip_seg, n_chunks * capacity)
+                    new_topics, in_m_seg = three_branch.run_survivor_chunks(
+                        surv_idx, n_surv, new_topics, capacity=capacity,
+                        n_chunks=n_chunks, sample_chunk=chunk_fn)
+                    in_m_acc = in_m_acc | in_m_seg
+                    n_surv_total = n_surv_total + n_surv
+                dD, dw_win, dcs = scatter_changed_deltas(
+                    topics_s, new_topics, doc_s, word_l, mask_s,
+                    capacity=capacity, D=deltas[0],
+                    W=jnp.zeros((P, cfg.n_topics), jnp.int32),
+                    colsum=deltas[1])
+                sums = _shard_stat_sums(lo, n, dec, in_m_acc, new_topics,
+                                        topics_s)
+                return (new_topics, (dD, dcs), dw_win, n_surv_total,
+                        jnp.int32(0), sums)
+
+            fn = jax.jit(paged_fn, donate_argnums=(3, 7, 10))
+            self._shard_cache[sig] = fn
+            return fn
 
         def shard_fn(u, lo, topics_s, word_s, doc_s, mask_s, counts,
                      derived, deltas):

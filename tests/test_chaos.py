@@ -206,6 +206,106 @@ def test_corrupt_inline_shard_restarts(corpus, tmp_path):
     assert _same(ref, e.host_payload())
 
 
+# -- disk-native storage faults (DESIGN.md SS14) ----------------------------
+
+def _disk_cfg(corpus, tmp_path, **kw):
+    from repro.lda.corpus import shard_stream
+    store = shard_stream(corpus, 4, multiple=256).to_store(
+        str(tmp_path / "store"))
+    return _cfg(corpus_residency="disk", corpus_path=store.path, **kw)
+
+
+def test_disk_io_fault_retried_in_place(corpus, tmp_path):
+    """A transient read fault in the FILE layer (CorpusStore.read_shard,
+    prefetched shard) stays below the prefetcher's retry budget:
+    absorbed on the worker thread, zero restarts, bitwise output."""
+    cfg = _disk_cfg(corpus, tmp_path)
+    ref = _ref(corpus, _cfg(), 6)
+    e = LDAEngine(None, cfg, backend="single",
+                  checkpoint_dir=str(tmp_path / "ck"))
+    with chaos.active(chaos.FaultPlan(io_fault_shards=(1,),
+                                      io_fault_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    assert hist["restart_report"].restarts == 0
+    assert _same(ref, e.host_payload())
+
+
+def test_disk_io_fault_persistent_escalates_to_restart(corpus, tmp_path):
+    """A PERSISTENT read fault outlives every in-place retry: the
+    supervisor restarts from the newest checkpoint and the run still
+    converges bitwise (5 failing attempts exhaust one 3-attempt retry
+    round — restart — then fail 2 of the next round's 3 and clear)."""
+    cfg = _disk_cfg(corpus, tmp_path)
+    ref = _ref(corpus, _cfg(), 6)
+    e = LDAEngine(None, cfg, backend="single",
+                  checkpoint_dir=str(tmp_path / "ck"))
+    with chaos.active(chaos.FaultPlan(io_fault_shards=(1,),
+                                      io_fault_attempts=5)):
+        hist = e.fit(6, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.restarts == 1 and "OSError" in rep.faults[0]
+    assert _same(ref, e.host_payload())
+
+
+def test_disk_corrupt_shard_crc_retried_in_place(corpus, tmp_path):
+    """A bit flip between the file read and the device put trips the
+    crc32 self-check inside read_shard ON THE WORKER THREAD; the retry
+    reloads clean bytes from disk — no restart."""
+    cfg = _disk_cfg(corpus, tmp_path)
+    ref = _ref(corpus, _cfg(), 6)
+    e = LDAEngine(None, cfg, backend="single",
+                  checkpoint_dir=str(tmp_path / "ck"))
+    with chaos.active(chaos.FaultPlan(corrupt_shards=(2,),
+                                      corrupt_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    assert hist["restart_report"].restarts == 0
+    assert _same(ref, e.host_payload())
+
+
+def test_disk_corrupt_inline_shard_restarts(corpus, tmp_path):
+    """Shard 0 loads INLINE (the epoch's first 'current' shard), so its
+    crc failure skips the worker-thread retry and goes through the
+    supervisor as a restartable ShardCorruptionError."""
+    cfg = _disk_cfg(corpus, tmp_path)
+    ref = _ref(corpus, _cfg(), 6)
+    e = LDAEngine(None, cfg, backend="single",
+                  checkpoint_dir=str(tmp_path / "ck"))
+    with chaos.active(chaos.FaultPlan(corrupt_shards=(0,),
+                                      corrupt_attempts=1)):
+        hist = e.fit(6, supervise=_policy())
+    rep = hist["restart_report"]
+    assert rep.restarts == 1 and "crc32" in rep.faults[0]
+    assert _same(ref, e.host_payload())
+
+
+def test_disk_mid_epoch_kill_shardwise_bitwise(corpus, tmp_path):
+    """Killed with an epoch open while training FROM DISK with paged W:
+    the newest checkpoint is a mid-epoch stream payload with a manifest-
+    relative cursor; resume re-pages and continues bit-identically."""
+    cfg = _disk_cfg(corpus, tmp_path)
+    ref = _ref(corpus, _cfg(), 8)
+    e = LDAEngine(None, cfg, backend="single",
+                  checkpoint_dir=str(tmp_path / "ck"))
+    pol = _policy(checkpoint_shards=1)
+    with chaos.active(chaos.FaultPlan(raise_at_shards=((5, 2),))):
+        hist = e.fit(8, supervise=pol)
+    rep = hist["restart_report"]
+    assert rep.restarts == 1
+    assert rep.resumed_from == [5]      # restored INTO the open epoch 5
+    assert _same(ref, e.host_payload())
+
+
+def test_disk_hybrid_mid_epoch_kill_shardwise_bitwise(corpus, tmp_path):
+    cfg = _disk_cfg(corpus, tmp_path, format="hybrid")
+    ref = _ref(corpus, _cfg(format="hybrid"), 8)
+    e = LDAEngine(None, cfg, backend="single",
+                  checkpoint_dir=str(tmp_path / "ck"))
+    with chaos.active(chaos.FaultPlan(raise_at_shards=((5, 2),))):
+        hist = e.fit(8, supervise=_policy(checkpoint_shards=1))
+    assert hist["restart_report"].restarts == 1
+    assert _same(ref, e.host_payload())
+
+
 # -- graceful degradation ---------------------------------------------------
 
 def test_oom_degrades_resident_to_streamed(corpus, tmp_path):

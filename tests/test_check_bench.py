@@ -60,6 +60,16 @@ def test_every_committed_file_has_schema_and_gates():
         if row["scheme"] == "token_tiles"]),
     ("BENCH_hybrid_state.json", lambda d: [
         c.update(vs_dense_bytes=0.95) for c in d["cells"]]),
+    ("BENCH_disk_streaming.json", lambda d: d.update(disk_bytes_ratio=0.8)),
+    ("BENCH_disk_streaming.json",
+     lambda d: d.update(disk_over_resident=0.4)),
+    ("BENCH_disk_streaming.json",
+     lambda d: d.update(paged_rows=d["vocab_rows"])),
+    ("BENCH_disk_streaming.json",
+     lambda d: d.update(bitwise_equal_to_resident=False)),
+    ("BENCH_disk_streaming.json",
+     lambda d: d.update(eval_equal_to_resident=False)),
+    ("BENCH_disk_streaming.json", lambda d: d.update(n_shards=4)),
     ("BENCH_warp_sampler.json", lambda d: d.update(warp_over_exact=1.2)),
     ("BENCH_warp_sampler.json",
      lambda d: d.update(host_syncs_in_scanned_region=2)),
@@ -128,6 +138,17 @@ def test_dry_run_schema_only_mode(tmp_path):
     assert check_bench.main(["--dry-run-schema-only", path]) == 0
     doc.pop("cells")                          # but schema rot still fails
     path = _write(tmp_path, "BENCH_serve_lda_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 1
+
+
+def test_disk_streaming_dryrun_alias(tmp_path):
+    doc = copy.deepcopy(_load("BENCH_disk_streaming.json"))
+    doc["dry_run"] = True
+    doc["disk_bytes_ratio"] = 1.1             # would fail the metric gate
+    path = _write(tmp_path, "BENCH_disk_streaming_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 0
+    doc.pop("paged_rows")                     # schema rot still fails
+    path = _write(tmp_path, "BENCH_disk_streaming_dryrun.json", doc)
     assert check_bench.main(["--dry-run-schema-only", path]) == 1
 
 

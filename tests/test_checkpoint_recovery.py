@@ -91,6 +91,31 @@ def test_walk_back_reports_skips_via_log_fn(tmp_path):
     assert all("walking back" in ln for ln in lines)
 
 
+def test_validate_gate_walks_back(tmp_path):
+    """``validate`` rejects intact-but-unusable checkpoints (e.g. a
+    mid-epoch stream payload whose shard grid no longer matches the
+    CorpusStore manifest) the same way corruption does: walk back,
+    report, never crash."""
+    m = CheckpointManager(str(tmp_path), keep_n=5)
+    m.save(1, {"x": np.arange(8), "iteration": np.int64(1)})
+    m.save(2, {"x": np.arange(8), "iteration": np.int64(2),
+               "stream_n_shards": np.int64(8)})
+    lines = []
+
+    def grid_ok(payload):
+        return int(payload.get("stream_n_shards", 4)) == 4
+
+    back = m.restore_latest(log_fn=lines.append, validate=grid_ok)
+    assert int(back["iteration"]) == 1
+    assert len(lines) == 1 and "semantic validation" in lines[0]
+    # a validate that RAISES is treated as a rejection, not a crash
+    def explode(payload):
+        raise KeyError("stream_n_shards")
+    assert m.restore_latest(validate=explode) is None
+    # and with no validate the newest intact payload still wins
+    assert int(m.restore_latest()["iteration"]) == 2
+
+
 def test_save_survives_reopen(tmp_path):
     """save() fsyncs file AND directory; a fresh manager over the same
     directory (a restarted process) sees the same newest payload."""

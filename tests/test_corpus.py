@@ -74,6 +74,22 @@ def test_pad_corpus_keeps_sort_and_mask(skewed_corpus):
     assert mask.sum() == c.n_tokens
 
 
+def test_to_store_from_store_roundtrip(skewed_corpus, tmp_path):
+    """ShardedCorpus -> disk store -> ShardedCorpus is bitwise (the deep
+    format/corruption matrix lives in tests/test_storage.py)."""
+    from repro.lda.corpus import ShardedCorpus, shard_stream
+    sc = shard_stream(skewed_corpus, 5, multiple=64)
+    store = sc.to_store(str(tmp_path / "store"))
+    assert store.n_shards == sc.n_shards
+    back = ShardedCorpus.from_store(str(tmp_path / "store"))
+    assert np.array_equal(back.word_ids, sc.word_ids)
+    assert np.array_equal(back.doc_ids, sc.doc_ids)
+    assert np.array_equal(back.mask, sc.mask)
+    assert np.array_equal(back.first_word, sc.first_word)
+    assert np.array_equal(back.last_word, sc.last_word)
+    back.validate(deep=True)
+
+
 def test_tile_plan_and_imbalance():
     """§V-A: token tiling reaches (near-)perfect balance; block-per-word on a
     power-law corpus does not (the paper's motivating observation)."""

@@ -1,0 +1,233 @@
+"""Disk-native corpus store tests (repro.lda.storage, DESIGN.md SS14).
+
+The load-bearing properties:
+  1. write -> read round-trips BITWISE for arbitrary corpora (hypothesis:
+     empty docs, 0-token words, single-doc shards, max-vocab ids), both
+     shard-by-shard through ``CorpusStore.read_shard`` and wholesale
+     through ``ShardedCorpus.from_store``.
+  2. Every way a store can rot on disk — missing shard file, truncated
+     bytes, flipped bit, wrong-manifest shard, torn manifest, future
+     format version — surfaces as a loud, shard-indexed error instead of
+     silently poisoning counts.
+  3. The manifest is written LAST, so a torn write leaves a directory
+     that refuses to open.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from tests._hyp import given, settings, st
+from repro.lda.corpus import ShardedCorpus, from_documents, shard_stream
+from repro.lda.invariants import ShardCorruptionError
+from repro.lda.storage import (FORMAT_VERSION, MANIFEST_NAME, META_NAME,
+                               CorpusStore)
+
+
+def _docs_strategy():
+    # max_value=29 with n_words=30 exercises the max-vocab-id edge; empty
+    # inner lists give 0-length docs and (typically) 0-token words
+    return st.lists(
+        st.lists(st.integers(min_value=0, max_value=29), min_size=0,
+                 max_size=12),
+        min_size=1, max_size=25)
+
+
+def _store_of(docs, n_shards, tmp_path, multiple=8):
+    corpus = from_documents([np.asarray(d, np.int64) for d in docs], 30)
+    sc = shard_stream(corpus, n_shards, multiple=multiple)
+    return sc, sc.to_store(str(tmp_path / "store"))
+
+
+# ---------------------------------------------------------------------------
+# 1. round-trip (property tests)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(docs=_docs_strategy(), n_shards=st.integers(min_value=1, max_value=6))
+def test_store_roundtrip_bitwise(docs, n_shards, tmp_path_factory):
+    tmp_path = tmp_path_factory.mktemp("store")
+    sc, store = _store_of(docs, n_shards, tmp_path)
+    # manifest metadata mirrors the stream exactly
+    assert (store.n_shards, store.shard_len, store.n_padded,
+            store.n_tokens, store.n_words, store.n_docs) == \
+        (sc.n_shards, sc.shard_len, sc.n_padded, sc.n_tokens,
+         sc.n_words, sc.n_docs)
+    assert np.array_equal(store.first_word, sc.first_word)
+    assert np.array_equal(store.last_word, sc.last_word)
+    assert np.array_equal(store.shard_checksums, sc.shard_checksums)
+    assert np.array_equal(store.real_per_shard, sc.real_per_shard)
+    # shard payloads round-trip bitwise
+    for s in range(sc.n_shards):
+        w, d, m = store.read_shard(s)
+        assert np.array_equal(w, sc.word_ids[s])
+        assert np.array_equal(d, sc.doc_ids[s])
+        assert np.array_equal(m, sc.mask[s])
+    # and wholesale through from_store (validates internally)
+    back = ShardedCorpus.from_store(store)
+    assert np.array_equal(back.word_ids, sc.word_ids)
+    assert np.array_equal(back.doc_ids, sc.doc_ids)
+    assert np.array_equal(back.mask, sc.mask)
+    # corpus-level metadata folds to the true histograms
+    meta = store.corpus_meta()
+    corpus = from_documents([np.asarray(d, np.int64) for d in docs], 30)
+    assert np.array_equal(meta.word_token_counts,
+                          np.asarray(corpus.word_token_counts, np.int64))
+    assert np.array_equal(meta.doc_lengths,
+                          np.asarray(corpus.doc_lengths, np.int64))
+
+
+@pytest.mark.parametrize("seed,n_shards,multiple", [
+    (0, 1, 1), (1, 2, 8), (2, 3, 8), (3, 6, 32), (4, 4, 1),
+])
+def test_store_roundtrip_bitwise_seeded(seed, n_shards, multiple, tmp_path):
+    """Deterministic fallback for the hypothesis round-trip property
+    (runs even without hypothesis installed): random corpora with empty
+    docs, 0-token words, and max-vocab ids, across shard geometries."""
+    rng = np.random.default_rng(seed)
+    docs = [rng.integers(0, 30, size=rng.integers(0, 12)).tolist()
+            for _ in range(rng.integers(1, 25))]
+    docs[0] = docs[0] + [29]                # pin the max-vocab-id edge
+    sc, store = _store_of(docs, n_shards, tmp_path, multiple=multiple)
+    back = ShardedCorpus.from_store(store)
+    assert np.array_equal(back.word_ids, sc.word_ids)
+    assert np.array_equal(back.doc_ids, sc.doc_ids)
+    assert np.array_equal(back.mask, sc.mask)
+    assert np.array_equal(store.shard_checksums, sc.shard_checksums)
+    back.validate(deep=True)
+
+
+def test_store_single_doc_single_shard(tmp_path):
+    """Degenerate geometry: one doc, one shard, vocab id at the max."""
+    sc, store = _store_of([[29, 29, 0]], 1, tmp_path, multiple=1)
+    w, d, m = store.read_shard(0)
+    assert np.array_equal(w[m > 0], np.sort([29, 29, 0]))
+    assert (d[m > 0] == 0).all()
+
+
+def test_store_open_by_path_equals_returned_handle(tmp_path):
+    sc, store = _store_of([[1, 2, 3], [2, 2]], 2, tmp_path)
+    again = CorpusStore.open(store.path)
+    for s in range(sc.n_shards):
+        a, b = store.read_shard(s), again.read_shard(s)
+        assert all(np.array_equal(x, y) for x, y in zip(a, b))
+
+
+# ---------------------------------------------------------------------------
+# 2. corruption surfaces loudly, naming the shard
+# ---------------------------------------------------------------------------
+
+def _good_store(tmp_path):
+    rng = np.random.default_rng(0)
+    docs = [rng.integers(0, 30, size=rng.integers(1, 12)).tolist()
+            for _ in range(20)]
+    return _store_of(docs, 3, tmp_path)
+
+
+def test_missing_shard_file_names_the_shard(tmp_path):
+    sc, store = _good_store(tmp_path)
+    os.remove(os.path.join(store.path, store.shard_files[1]))
+    with pytest.raises(ShardCorruptionError, match="shard 1 is missing"):
+        store.read_shard(1)
+    store.read_shard(0)     # neighbors stay readable
+
+
+def test_truncated_shard_file_names_the_shard(tmp_path):
+    sc, store = _good_store(tmp_path)
+    path = os.path.join(store.path, store.shard_files[2])
+    with open(path, "r+b") as f:
+        f.truncate(os.path.getsize(path) // 2)
+    with pytest.raises(ShardCorruptionError, match="shard 2"):
+        store.read_shard(2)
+
+
+def test_bit_flipped_shard_fails_crc(tmp_path):
+    """A single flipped PAYLOAD bit that still parses as an npz must be
+    caught by the crc32 — the zip container's own checks are not the
+    defense layer."""
+    sc, store = _good_store(tmp_path)
+    w, d, m = store.read_shard(0)
+    w = w.copy()
+    w[0] ^= 1
+    np.savez(os.path.join(store.path, store.shard_files[0]),
+             word_ids=w, doc_ids=d, mask=m)
+    with pytest.raises(ShardCorruptionError, match="shard 0.*crc32"):
+        store.read_shard(0)
+
+
+def test_foreign_shard_fails_shape_or_crc(tmp_path):
+    """A shard file from a different store (wrong length) is rejected."""
+    sc, store = _good_store(tmp_path)
+    np.savez(os.path.join(store.path, store.shard_files[1]),
+             word_ids=np.zeros(4, np.int32), doc_ids=np.zeros(4, np.int32),
+             mask=np.zeros(4, np.int32))
+    with pytest.raises(ShardCorruptionError, match="shard 1"):
+        store.read_shard(1)
+
+
+def test_read_shard_out_of_range(tmp_path):
+    sc, store = _good_store(tmp_path)
+    with pytest.raises(IndexError, match="shard 3 out of range"):
+        store.read_shard(3)
+
+
+def test_from_store_surfaces_corruption(tmp_path):
+    sc, store = _good_store(tmp_path)
+    os.remove(os.path.join(store.path, store.shard_files[0]))
+    with pytest.raises(ShardCorruptionError, match="shard 0"):
+        ShardedCorpus.from_store(store.path)
+
+
+# ---------------------------------------------------------------------------
+# 3. manifest integrity (torn writes refuse to open)
+# ---------------------------------------------------------------------------
+
+def test_missing_manifest_is_not_a_store(tmp_path):
+    with pytest.raises(FileNotFoundError, match="no corpus store"):
+        CorpusStore.open(str(tmp_path / "nowhere"))
+
+
+def test_torn_manifest_refuses_to_open(tmp_path):
+    sc, store = _good_store(tmp_path)
+    path = os.path.join(store.path, MANIFEST_NAME)
+    with open(path, "r+", encoding="utf-8") as f:
+        body = f.read()
+        f.seek(0)
+        f.truncate()
+        f.write(body[:len(body) // 2])      # torn mid-write
+    with pytest.raises(ValueError, match="torn mid-write"):
+        CorpusStore.open(store.path)
+
+
+def test_future_format_version_refuses_to_open(tmp_path):
+    sc, store = _good_store(tmp_path)
+    path = os.path.join(store.path, MANIFEST_NAME)
+    with open(path, encoding="utf-8") as f:
+        manifest = json.load(f)
+    manifest["format_version"] = FORMAT_VERSION + 1
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="format_version"):
+        CorpusStore.open(store.path)
+
+
+def test_inconsistent_manifest_refuses_to_open(tmp_path):
+    sc, store = _good_store(tmp_path)
+    path = os.path.join(store.path, MANIFEST_NAME)
+    with open(path, encoding="utf-8") as f:
+        manifest = json.load(f)
+    manifest["n_shards"] = 99               # disagrees with shard list
+    with open(path, "w", encoding="utf-8") as f:
+        json.dump(manifest, f)
+    with pytest.raises(ValueError, match="inconsistent"):
+        CorpusStore.open(store.path)
+
+
+def test_missing_meta_npz_fails_lazily_with_context(tmp_path):
+    sc, store = _good_store(tmp_path)
+    os.remove(os.path.join(store.path, META_NAME))
+    store2 = CorpusStore.open(store.path)   # opens: meta is lazy
+    with pytest.raises(ValueError, match=META_NAME):
+        store2.corpus_meta()

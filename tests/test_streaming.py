@@ -448,6 +448,231 @@ def test_streamed_distributed_forged_devices():
 # 7. measured memory accounting
 # ---------------------------------------------------------------------------
 
+# ---------------------------------------------------------------------------
+# 8. disk-native training (corpus_residency="disk", DESIGN.md SS14)
+# ---------------------------------------------------------------------------
+
+def _disk_store(corpus, tmp_path, n_shards=4, multiple=512):
+    return shard_stream(corpus, n_shards, multiple=multiple).to_store(
+        str(tmp_path / "store"))
+
+
+def _disk_engine(store, tmp_path=None, **kw):
+    from repro.lda.api import LDAEngine
+    cfg = LDAConfig(corpus_residency="disk", corpus_path=store.path, **kw)
+    ck = {} if tmp_path is None else \
+        {"checkpoint_dir": str(tmp_path / "ck")}
+    return LDAEngine(None, cfg, backend="single", **ck)
+
+
+@pytest.mark.parametrize("fmt,extra", [
+    ("dense", {}),
+    ("hybrid", {}),
+    ("hybrid", {"tail_sampler": "sparse"}),
+    ("dense", {"balance": "tiles"}),
+    ("dense", {"impl": "pallas"}),
+])
+def test_disk_equals_streamed_equals_resident(small_corpus, fmt, extra,
+                                              tmp_path):
+    """The full residency ladder is bitwise ONE training run: resident ==
+    streamed == disk-native (corpus read from shard files, W paged per
+    shard) on topics, key, and the exact LLPT history."""
+    from repro.lda.api import LDAEngine
+    kw = dict(n_topics=16, tile_size=512, eval_every=2, format=fmt, **extra)
+    eng_r = LDAEngine(small_corpus, LDAConfig(**kw), backend="single")
+    hist_r = eng_r.fit(4)
+    store = _disk_store(eng_r.corpus, tmp_path)
+    eng_s = LDAEngine(small_corpus, LDAConfig(
+        corpus_residency="streamed", stream_shards=4, **kw),
+        backend="single")
+    hist_s = eng_s.fit(4)
+    eng_d = _disk_engine(store, **kw)
+    assert eng_d.trainer.residency == "disk"
+    assert eng_d.trainer.fused_pipeline().paged
+    hist_d = eng_d.fit(4)
+    pay_r, pay_s, pay_d = (eng_r.host_payload(), eng_s.host_payload(),
+                           eng_d.host_payload())
+    assert np.array_equal(pay_r["topics_global"], pay_s["topics_global"])
+    assert np.array_equal(pay_r["topics_global"], pay_d["topics_global"])
+    assert np.array_equal(pay_r["key"], pay_d["key"])
+    assert hist_r["llpt"] == hist_s["llpt"] == hist_d["llpt"]
+
+
+def test_disk_eval_equals_resident_eval_exactly(small_corpus, tmp_path):
+    """Paged shard-fold LLPT == resident LLPT bitwise: per-token values
+    through the one same compiled reduce (core/llpt.py split)."""
+    from repro.lda.api import LDAEngine
+    kw = dict(n_topics=16, tile_size=512, eval_every=5)
+    eng_r = LDAEngine(small_corpus, LDAConfig(**kw), backend="single")
+    eng_r.fit(3)
+    store = _disk_store(eng_r.corpus, tmp_path)
+    eng_d = _disk_engine(store, **kw)
+    eng_d.fit(3)
+    assert eng_r.score() == eng_d.score()
+
+
+def test_disk_checkpoints_interchange_with_resident(small_corpus, tmp_path):
+    """A disk engine restores a resident engine's canonical checkpoint
+    and continues bitwise, and vice versa."""
+    from repro.lda.api import LDAEngine
+    kw = dict(n_topics=16, tile_size=512, eval_every=5)
+    eng_r = LDAEngine(small_corpus, LDAConfig(**kw), backend="single")
+    eng_r.fit(2)
+    store = _disk_store(eng_r.corpus, tmp_path)
+    eng_d = _disk_engine(store, **kw).restore(eng_r.host_payload())
+    eng_d.fit(2)
+    eng_r.fit(2)
+    pay_r, pay_d = eng_r.host_payload(), eng_d.host_payload()
+    assert np.array_equal(pay_r["topics_global"], pay_d["topics_global"])
+    # and back: the resident engine restores the disk engine's payload
+    eng_r2 = LDAEngine(small_corpus, LDAConfig(**kw),
+                       backend="single").restore(pay_d)
+    assert eng_r2.iteration == eng_d.iteration
+    assert eng_r2.score() == eng_d.score()
+
+
+def test_disk_mid_epoch_checkpoint_resumes_bitwise(small_corpus, tmp_path):
+    """A mid-epoch disk payload (manifest-relative stream cursor) restores
+    into a FRESH engine and finishes bit-identically."""
+    from repro.lda.api import LDAEngine
+    kw = dict(n_topics=16, tile_size=512, eval_every=5)
+    eng_r = LDAEngine(small_corpus, LDAConfig(**kw), backend="single")
+    eng_r.fit(3)
+    ref = eng_r.host_payload()
+    store = _disk_store(eng_r.corpus, tmp_path)
+
+    eng_d = _disk_engine(store, **kw)
+    eng_d.fit(1)
+    pipe = eng_d.trainer.fused_pipeline()
+    ss = pipe.run_shards(pipe.from_lda_state(eng_d.state), 2)
+    eng_d._state = ss
+    mid = eng_d.host_payload()
+    assert int(mid["stream_cursor"]) == 2
+    assert int(mid["stream_n_shards"]) == store.n_shards
+
+    eng_d2 = _disk_engine(store, **kw).restore(mid)
+    eng_d2.fit(2)               # finish epoch 2 + epoch 3
+    assert np.array_equal(ref["topics_global"],
+                          eng_d2.host_payload()["topics_global"])
+
+
+def test_mid_epoch_payload_rejects_shard_grid_mismatch(small_corpus,
+                                                      tmp_path):
+    """A mid-epoch cursor is only meaningful on the shard grid it was
+    saved against: restoring it into a store with a different n_shards
+    must fail loudly, not resample the wrong shards."""
+    from repro.lda.api import LDAEngine
+    kw = dict(n_topics=16, tile_size=512, eval_every=5)
+    eng_r = LDAEngine(small_corpus, LDAConfig(**kw), backend="single")
+    eng_r.fit(1)
+    store4 = _disk_store(eng_r.corpus, tmp_path)
+    eng_d = _disk_engine(store4, **kw)
+    eng_d.fit(1)
+    pipe = eng_d.trainer.fused_pipeline()
+    ss = pipe.run_shards(pipe.from_lda_state(eng_d.state), 2)
+    eng_d._state = ss
+    mid = eng_d.host_payload()
+    store2 = shard_stream(eng_r.corpus, 2, multiple=512).to_store(
+        str(tmp_path / "store2"))
+    eng_d2 = _disk_engine(store2, **kw)
+    with pytest.raises(ValueError, match="shard grid"):
+        eng_d2.restore(mid)
+
+
+def test_disk_config_validation(tmp_path):
+    with pytest.raises(ValueError, match="corpus_path"):
+        LDAConfig(n_topics=8, corpus_residency="disk")
+    with pytest.raises(ValueError, match="corpus_path"):
+        LDAConfig(n_topics=8, corpus_path="/somewhere")
+    with pytest.raises(ValueError, match="stream_shards"):
+        LDAConfig(n_topics=8, corpus_residency="disk",
+                  corpus_path="/somewhere", stream_shards=4)
+
+
+def test_disk_engine_guards(small_corpus, tmp_path):
+    from repro.lda.api import LDAEngine
+    store = _disk_store(small_corpus, tmp_path)
+    cfg = LDAConfig(n_topics=16, tile_size=512, corpus_residency="disk",
+                    corpus_path=store.path)
+    # a resident corpus alongside a disk config would silently diverge
+    with pytest.raises(ValueError, match="corpus=None"):
+        LDAEngine(small_corpus, cfg, backend="single")
+    # no corpus and no store path is no corpus at all
+    with pytest.raises(ValueError, match="disk"):
+        LDAEngine(None, LDAConfig(n_topics=16), backend="single")
+    # disk is single-backend: the paged pipeline owns the device schedule
+    with pytest.raises(ValueError, match="single"):
+        LDAEngine(None, cfg, backend="distributed")
+    # the stepwise oracle path needs resident tokens
+    eng = LDAEngine(None, cfg, backend="single")
+    eng.fit(1)
+    with pytest.raises(ValueError, match="resident"):
+        eng.trainer.step(eng.state)
+
+
+def test_disk_pages_w_per_shard(small_corpus, tmp_path):
+    """The paged pipeline's device window holds a W ROW BLOCK, not the
+    full matrix: page_rows is the max word-run span, and the epoch's
+    device-byte accounting reflects the paged window."""
+    store = _disk_store(small_corpus, tmp_path, n_shards=8)
+    cfg = LDAConfig(n_topics=16, tile_size=512, corpus_residency="disk",
+                    corpus_path=store.path)
+    tr = LDATrainer(None, cfg, _from_engine=True)
+    pipe = tr.fused_pipeline()
+    assert pipe.paged
+    spans = np.maximum(
+        store.last_word.astype(np.int64) - store.first_word + 1, 1)
+    assert pipe._page_rows == min(max(int(spans.max()), 1), store.n_words)
+    assert pipe._page_rows < store.n_words      # a real window, not all of W
+    ss, _, _ = pipe.run_fused(pipe.from_lda_state(tr.init_state()), 1)
+    assert pipe.last_epoch_device_bytes > 0
+    # serving view at the boundary is the exact at-rest W
+    W, cursor, n_sh = pipe.serving_counts(ss)
+    assert cursor == 0 and n_sh == store.n_shards
+    assert np.array_equal(W, np.asarray(pipe.to_lda_state(ss).W))
+
+
+@pytest.mark.slow
+def test_disk_equals_resident_forged_devices(tmp_path):
+    """disk == resident bitwise with 8 forged CPU devices visible: the
+    single-backend paged pipeline must not be perturbed by a multi-device
+    runtime (and engine backend='auto' must route disk to single)."""
+    import subprocess, sys, textwrap
+    code = f"""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import sys; sys.path.insert(0, "src")
+    import numpy as np, jax
+    from repro.lda.corpus import (synthetic_lda_corpus, relabel_by_frequency,
+                                  shard_stream)
+    from repro.lda.model import LDAConfig
+    from repro.lda.api import LDAEngine
+    corpus = synthetic_lda_corpus(0, n_docs=80, n_words=100, n_topics=8,
+                                  mean_doc_len=50)
+    corpus, _ = relabel_by_frequency(corpus)
+    store = shard_stream(corpus, 3, multiple=512).to_store(
+        {str(tmp_path / "store8")!r})
+    for fmt in ("dense", "hybrid"):
+        kw = dict(n_topics=16, tile_size=512, eval_every=5, format=fmt)
+        eng_r = LDAEngine(corpus, LDAConfig(**kw), backend="single")
+        eng_r.fit(4)
+        eng_d = LDAEngine(None, LDAConfig(
+            corpus_residency="disk", corpus_path=store.path, **kw))
+        assert eng_d.backend_name == "single"       # auto routes to single
+        eng_d.fit(4)
+        pr, pd = eng_r.host_payload(), eng_d.host_payload()
+        assert np.array_equal(pr["topics_global"], pd["topics_global"]), fmt
+        assert np.array_equal(pr["key"], pd["key"]), fmt
+        assert eng_r.score() == eng_d.score(), fmt
+    print("OK")
+    """
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=900, cwd=".")
+    assert proc.returncode == 0, proc.stderr[-4000:]
+    assert "OK" in proc.stdout
+
+
 def test_streamed_device_bytes_below_resident(small_corpus):
     """The streaming window accounting: resident token+state bytes vs
     the streamed steady state (counts + epoch arrays + two shard

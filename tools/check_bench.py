@@ -94,6 +94,19 @@ SCHEMAS: dict[str, dict] = {
         "streamed_bytes_ratio": NUM,
         "bitwise_equal_to_resident": bool,
     },
+    "BENCH_disk_streaming.json": {
+        "dry_run": bool,
+        "corpus": _CORPUS, "n_topics": int, "n_shards": int,
+        "shard_len": int, "paged_rows": int, "vocab_rows": int,
+        "store_bytes": int,
+        "warmup_iters": int, "timed_iters": int, "repeats": int,
+        "resident_tokens_per_sec": NUM, "disk_tokens_per_sec": NUM,
+        "disk_over_resident": NUM,
+        "resident_device_bytes": int, "disk_device_bytes": int,
+        "disk_bytes_ratio": NUM,
+        "bitwise_equal_to_resident": bool,
+        "eval_equal_to_resident": bool,
+    },
     "BENCH_warp_sampler.json": {
         "dry_run": bool,
         "corpus": _CORPUS, "n_topics": int,
@@ -147,6 +160,7 @@ SCHEMAS: dict[str, dict] = {
 
 # smoke artifacts reuse a driver's schema but skip the metric gates
 SCHEMA_ALIASES = {
+    "BENCH_disk_streaming_dryrun.json": "BENCH_disk_streaming.json",
     "BENCH_serve_lda_dryrun.json": "BENCH_serve_lda.json",
     "BENCH_serve_service_dryrun.json": "BENCH_serve_service.json",
     "BENCH_warp_sampler_dryrun.json": "BENCH_warp_sampler.json",
@@ -200,6 +214,19 @@ GATES: dict[str, list] = {
         ("streamed == resident bitwise",
          lambda d: d["bitwise_equal_to_resident"], "==", True, False),
         ("stream shard count", lambda d: d["n_shards"], ">=", 4, False),
+    ],
+    "BENCH_disk_streaming.json": [
+        ("disk/resident device bytes",
+         lambda d: d["disk_bytes_ratio"], "<=", 0.45, True),
+        ("disk/resident throughput",
+         lambda d: d["disk_over_resident"], ">=", 0.7, True),
+        ("W page window a strict vocab slice",
+         lambda d: d["paged_rows"] / d["vocab_rows"], "<=", 0.25, True),
+        ("disk == resident bitwise",
+         lambda d: d["bitwise_equal_to_resident"], "==", True, False),
+        ("paged eval == resident eval",
+         lambda d: d["eval_equal_to_resident"], "==", True, False),
+        ("disk shard count", lambda d: d["n_shards"], ">=", 8, False),
     ],
     "BENCH_warp_sampler.json": [
         ("warp/exact tokens-per-sec at default mh_cycles",
