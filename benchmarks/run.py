@@ -26,11 +26,12 @@ MODULES = [
     "serve_lda",           # FrozenLDAModel fold-in docs/sec
     "recovery",            # supervised-fit overhead + restart recovery cost
     "warp_sampler",        # warp MH vs exact tokens/sec + convergence/sec
+    "ps_scaling",          # PS-sharded W per-host bytes vs replicated
 ]
 
 QUICK_SKIP = {"fig16_scaling", "fig19_streaming", "fig_disk_streaming",
               "fused_step", "serve_lda", "recovery",
-              "warp_sampler"}                               # long warmup
+              "warp_sampler", "ps_scaling"}                 # long warmup
 
 
 def main(argv=None) -> int:

@@ -594,23 +594,44 @@ class _SingleBackend:
 
 
 class _DistBackend:
-    """DistLDATrainer behind the engine surface (shard_map multi-device)."""
+    """The multi-device trainers behind the engine surface.
+
+    ``config.dist.w_sync`` picks the W synchronization strategy —
+    ``"replicate"`` (DistLDATrainer: full replica + delta all-reduce)
+    or ``"ps"`` (PSDistTrainer: word-sharded parameter server with
+    stale-synchronous pulls/pushes). Both speak the same state surface
+    (init/run_fused/host_payload/gather_global), so everything below
+    this constructor is strategy-agnostic.
+    """
 
     name = "distributed"
 
     def __init__(self, corpus: Corpus, config: LDAConfig,
                  manager: CheckpointManager | None, mesh,
                  pad_multiple: int = 1024):
-        from repro.lda.distributed import DistLDATrainer
+        from repro.lda.distributed import DistLDATrainer, PSDistTrainer
+        dc = config.dist
         if mesh is None:
             from repro.runtime.compat import make_mesh
-            mesh = make_mesh((jax.device_count(), 1), ("data", "model"))
+            if dc.mesh_shape:
+                mesh = make_mesh(tuple(int(e) for _, e in dc.mesh_shape),
+                                 tuple(a for a, _ in dc.mesh_shape))
+            else:
+                mesh = make_mesh((jax.device_count(), 1),
+                                 ("data", "model"))
+        elif dc.mesh_shape:
+            raise ValueError(
+                "pass mesh= OR DistConfig.mesh_shape, not both: two mesh "
+                "specifications with different extents would silently "
+                "disagree")
         self.corpus = corpus
         self.config = config
         self.manager = manager
-        self.trainer = DistLDATrainer(corpus, config, mesh,
-                                      pad_multiple=pad_multiple,
-                                      _from_engine=True)
+        self.is_ps = dc.w_sync == "ps"
+        cls = PSDistTrainer if self.is_ps else DistLDATrainer
+        self.trainer = cls(corpus, config, mesh,
+                           pad_multiple=pad_multiple,
+                           _from_engine=True)
 
     def restore_or_init(self):
         if self.manager is not None:
@@ -620,16 +641,22 @@ class _DistBackend:
         return self.trainer.init_state()
 
     def state_from_canonical(self, payload: dict[str, Any]):
-        # the dist trainer's native payload IS the canonical format; the
+        # the dist trainers' native payload IS the canonical format; the
         # stream_* extension keys must ride through so the trainer's
         # mid-epoch guard fires instead of silently resuming from the
-        # epoch start
+        # epoch start, and the ps_* keys so a PS restore rebuilds the
+        # open round (the replicated trainer ignores them — redoing the
+        # round from the cut is bit-identical, the interchange contract)
+        from repro.checkpoint.ps_payload import PS_PAYLOAD_PREFIX
         from repro.train.lda_step import STREAM_PAYLOAD_KEYS
         native = {"topics_global": _canonical_topics(payload,
                                                      self.corpus.n_tokens),
                   "key": payload["key"], "iteration": payload["iteration"]}
         for k in STREAM_PAYLOAD_KEYS:
             if k in payload:
+                native[k] = payload[k]
+        for k in payload:
+            if k.startswith(PS_PAYLOAD_PREFIX):
                 native[k] = payload[k]
         return self.trainer.state_from_payload(native)
 
@@ -712,11 +739,15 @@ class LDAEngine:
     >>> theta = model.transform(new_docs)
 
     Backends: ``"single"`` (LDATrainer — dense or hybrid fused pipeline)
-    and ``"distributed"`` (DistLDATrainer — shard_map over a device mesh);
-    ``"auto"`` picks distributed iff more than one device is visible (or a
-    multi-device mesh is passed). All backends share the canonical
-    checkpoint format, so an engine can restore any engine's checkpoints
-    regardless of backend, live-state format, mesh, or padding.
+    and ``"distributed"`` (shard_map over a device mesh; within it,
+    ``config.dist.w_sync`` picks ``"replicate"`` — DistLDATrainer, full
+    W replica + delta all-reduce — or ``"ps"`` — PSDistTrainer, the
+    word-sharded parameter server with stale-synchronous pulls);
+    ``"auto"`` picks distributed iff more than one device is visible, a
+    mesh (or ``DistConfig.mesh_shape``) is passed, or ``w_sync="ps"`` is
+    requested. All backends share the canonical checkpoint format, so an
+    engine can restore any engine's checkpoints regardless of backend,
+    live-state format, w_sync strategy, mesh, or padding.
     """
 
     def __init__(self, corpus: Corpus | Sequence[Sequence[int]] | None,
@@ -731,9 +762,11 @@ class LDAEngine:
             raise ValueError("pass checkpoint_dir OR checkpoint_manager, "
                              "not both")
         # -- corpus prep (the engine owns it) -------------------------------
-        if config.corpus_residency == "disk":
-            # Disk-native: the CorpusStore at config.corpus_path is the
-            # corpus. It was written from an already-prepped (frequency-
+        from repro.train.lda_step import resolves_to_disk
+        if resolves_to_disk(config):
+            # Disk-native (also "auto" + corpus_path, which resolves to
+            # disk): the CorpusStore at config.corpus_path is the corpus.
+            # It was written from an already-prepped (frequency-
             # relabeled, word-sorted) stream, so re-prepping here would
             # silently disagree with the shard files on disk.
             if corpus is not None:
@@ -786,20 +819,29 @@ class LDAEngine:
         self._serving_seq = 0
 
     def _make_backend(self):
+        from repro.train.lda_step import resolves_to_disk
         backend, mesh = self._backend_arg, self._mesh
+        dc = self.config.dist
         if backend == "auto":
-            # an explicit mesh is an explicit request for shard_map;
-            # disk residency is single-backend by construction, so auto
-            # never routes it to shard_map even on multi-device hosts
-            if self.config.corpus_residency == "disk" and mesh is None:
+            # an explicit mesh, a DistConfig mesh_shape, or w_sync="ps"
+            # is an explicit request for the distributed backends; disk
+            # residency is single-backend by construction, so auto never
+            # routes it to shard_map even on multi-device hosts
+            wants_dist = (mesh is not None or bool(dc.mesh_shape)
+                          or dc.w_sync == "ps")
+            if resolves_to_disk(self.config) and not wants_dist:
                 backend = "single"
             else:
-                backend = "distributed" if (mesh is not None
+                backend = "distributed" if (wants_dist
                                             or jax.device_count() > 1) \
                     else "single"
+        if backend == "single" and dc.w_sync == "ps":
+            raise ValueError(
+                "DistConfig(w_sync='ps') needs the distributed backend: "
+                "the parameter server shards W across data-parallel "
+                "workers (drop backend='single' or w_sync='ps')")
         self.backend_name = backend
-        if self.config.corpus_residency == "disk" \
-                and backend == "distributed":
+        if resolves_to_disk(self.config) and backend == "distributed":
             raise ValueError(
                 "corpus_residency='disk' needs the single backend: the "
                 "paged streaming pipeline owns the device transfer "
@@ -909,15 +951,17 @@ class LDAEngine:
                              "checkpoint_manager: restart recovery is "
                              "restore-from-checkpoint")
         shardwise = policy.checkpoint_shards is not None
-        if shardwise and not (
+        ps_shardwise = shardwise and getattr(self._backend, "is_ps", False)
+        if shardwise and not ps_shardwise and not (
                 self.backend_name == "single"
                 and getattr(self._backend.trainer, "residency", None)
                 in ("streamed", "disk")):
             raise ValueError(
                 "SupervisePolicy.checkpoint_shards needs the single "
                 "streamed or disk backend (corpus_residency='streamed' "
-                "or 'disk'): mid-epoch payloads only exist on the "
-                "streaming pipeline")
+                "or 'disk') or the distributed parameter-server backend "
+                "(DistConfig(w_sync='ps')): mid-epoch payloads only "
+                "exist on the streaming pipelines")
         ckpt_every = checkpoint_every or policy.checkpoint_every
         report = RestartReport(completed_steps=0, restarts=0,
                                resumed_from=[])
@@ -1014,6 +1058,58 @@ class LDAEngine:
                         log_fn(f"iter={it:4d} llpt={merged['llpt'][-1]:+.4f}"
                                f" tok/s={n_tok / dt:,.0f}")
 
+        def attempt_shardwise_ps() -> None:
+            # the PS trainer's mid-epoch surface: lockstep sub-shard
+            # groups (aligned clocks), ps_* extension payloads at every
+            # cut, step keys on the same it*(R+1)+cursor grid as the
+            # single streamed path
+            ensure_state()
+            tr = self._backend.trainer
+            mgr = self.checkpoint_manager
+            R = tr._R
+            k = int(policy.checkpoint_shards)
+            ss = self._state
+            first = not merged["iteration"]
+            denom = float(max(int(tr.sc.mask.sum()), 1))
+            while int(ss.iteration) < target["v"]:
+                it0 = int(ss.iteration)
+                if chaos.armed():
+                    chaos.step_range(it0, 1)
+                ep_t0 = _time.perf_counter()
+                while int(ss.iteration) == it0:
+                    t0 = _time.perf_counter()
+                    ss = tr.run_shards(ss, k)
+                    self._state = ss
+                    dt = _time.perf_counter() - t0
+                    cur = int(ss.cursors.max())
+                    step_key = int(ss.iteration) * (R + 1) + cur
+                    if timer.record(dt / max(min(k, R), 1)):
+                        report.straggler_steps.append(step_key)
+                    if int(ss.iteration) == it0 and cur > 0:
+                        mgr.save(step_key, tr.host_payload(ss))
+                dt = _time.perf_counter() - ep_t0
+                it = int(ss.iteration)
+                mgr.save(it * (R + 1), tr.host_payload(ss))
+                if self._subscribers:   # aligned clock == exact counts
+                    self._notify(self._backend.dense_W(ss), 0, 1, it)
+                _ns, sums = ss.stat_rounds.pop(it0, (0, np.zeros(4)))
+                if it % self.config.eval_every == 0 or first:
+                    first = False
+                    m = np.asarray(sums, np.float64) / denom
+                    n_tok = self.corpus.n_tokens
+                    merge_hist({"iteration": [it],
+                                "llpt": [self._backend.evaluate(ss)],
+                                "tokens_per_sec": [n_tok / dt],
+                                "stats": [{
+                                    "frac_skipped": float(m[0]),
+                                    "frac_m_final": float(m[1]),
+                                    "frac_unchanged": float(m[2]),
+                                    "frac_at_max": float(m[3]),
+                                    "frac_q_branch": 0.0}]})
+                    if log_fn:
+                        log_fn(f"iter={it:4d} llpt={merged['llpt'][-1]:+.4f}"
+                               f" tok/s={n_tok / dt:,.0f}")
+
         def recover(exc: BaseException) -> None:
             self._state = None      # next attempt restores from checkpoint
             if is_oom_error(exc) and not report.degraded_to_streamed \
@@ -1029,8 +1125,11 @@ class LDAEngine:
                 report.degraded_to_streamed = True
             self._rebuild_backend(report)
 
-        supervised_loop(attempt_shardwise if shardwise else attempt_run,
-                        recover, policy, report)
+        attempt = attempt_run
+        if shardwise:
+            attempt = attempt_shardwise_ps if ps_shardwise \
+                else attempt_shardwise
+        supervised_loop(attempt, recover, policy, report)
         if not shardwise and self.iteration % ckpt_every != 0:
             self.checkpoint_manager.save(
                 self.iteration, self._backend.canonical_payload(self._state))

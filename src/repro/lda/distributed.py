@@ -63,7 +63,8 @@ from repro.runtime.compat import shard_map as _shard_map
 from repro.runtime.sharding import batch_axes
 
 __all__ = ["ShardedCorpus", "shard_corpus", "DistLDAState",
-           "DistHybridState", "DistStreamState", "DistLDATrainer"]
+           "DistHybridState", "DistStreamState", "DistLDATrainer",
+           "PSStreamState", "PSDistTrainer"]
 
 
 # ---------------------------------------------------------------------------
@@ -269,15 +270,24 @@ class DistHybridState:
 # ---------------------------------------------------------------------------
 
 def _word_phase(W, *, cfg: LDAConfig, model_axis: str, n_words: int,
-                g: int, kb0, k_local: int):
+                g: int, kb0, k_local: int, colsum=None):
     """Per-word epoch quantities: Ŵ + distributed top-(g+1) + Q'.
 
     Extracted from the iteration step so the streamed path can compute
     them ONCE per epoch (they depend only on W, fixed within an epoch)
     while the resident path keeps calling it per iteration — same ops,
     same collectives, bit-identical results either way.
+
+    ``colsum`` overrides the internally-computed per-topic column sum
+    for callers whose ``W`` is only a row *window* of the global matrix
+    (the parameter-server paged path): the global sum is pulled from the
+    server as exact int32 and converted to f32 — identical bits to the
+    f32-accumulated sum over full W while the total token count stays
+    below 2**24, since every partial sum is an exactly-representable
+    integer (DESIGN.md §15).
     """
-    colsum = jnp.sum(W, axis=0, dtype=jnp.float32)
+    if colsum is None:
+        colsum = jnp.sum(W, axis=0, dtype=jnp.float32)
     W_hat = (W.astype(jnp.float32) + cfg.beta) / (colsum + n_words * cfg.beta)
 
     # --- per-word tops: local top-(g+1) → all_gather over model → re-top
@@ -807,6 +817,25 @@ class _StreamedDistMixin:
 # driver
 # ---------------------------------------------------------------------------
 
+def _host_counts(sc: ShardedCorpus, corpus: Corpus, n_topics: int,
+                 t_np: np.ndarray):
+    """(D, W) host count matrices from per-shard topics (see
+    DistLDATrainer._build_counts for the replication semantics)."""
+    S, K = sc.n_shards, n_topics
+    Dg = np.zeros((corpus.n_docs, K), np.int64)
+    W = np.zeros((corpus.n_words, K), np.int32)
+    for s in range(S):
+        sel = sc.mask[s] > 0
+        gdoc = sc.doc_map[s][sc.doc_ids[s][sel]]
+        np.add.at(Dg, (gdoc, t_np[s][sel]), 1)
+        np.add.at(W, (sc.word_ids[s][sel], t_np[s][sel]), 1)
+    D = np.zeros((S, sc.m_local, K), np.int32)
+    for s in range(S):
+        nd = int(sc.docs_per_shard[s])
+        D[s, :nd] = Dg[sc.doc_map[s][:nd]]
+    return D, W
+
+
 class DistLDATrainer(_StreamedDistMixin):
     """shard_map-based multi-device EZLDA trainer.
 
@@ -814,23 +843,21 @@ class DistLDATrainer(_StreamedDistMixin):
     data-parallel scheme) plus 'data' (and optionally 'pod') axes.
     K must divide the model-axis size; data shards = data-axis extent.
 
-    Deprecated as a PUBLIC entry point: construct through
-    ``repro.lda.api.LDAEngine`` (backend="distributed"), which owns mesh
-    defaulting, the unified checkpoint format, and the serving export.
-    Direct construction still works — it is the engine's internal backend —
-    but emits a DeprecationWarning.
+    Engine-internal: this is the ``backend="distributed"`` backend of
+    ``repro.lda.api.LDAEngine`` (with ``dist.w_sync="replicate"``), which
+    owns mesh defaulting, the unified checkpoint format, and the serving
+    export. Direct construction raises TypeError (it warned for one
+    release; the engine is the only front door now).
     """
 
     def __init__(self, corpus: Corpus, config: LDAConfig, mesh: Mesh,
                  pad_multiple: int = 1024, *, _from_engine: bool = False):
         if not _from_engine:
-            import warnings
-            warnings.warn(
-                "constructing DistLDATrainer directly is deprecated; use "
-                "repro.lda.api.LDAEngine (backend='distributed') as the "
-                "front door — it wraps this trainer with unified "
-                "checkpoints and the serving export path",
-                DeprecationWarning, stacklevel=2)
+            raise TypeError(
+                "DistLDATrainer is an engine-internal backend: construct "
+                "through repro.lda.api.LDAEngine(corpus, config, "
+                "backend='distributed') — it wraps this trainer with "
+                "unified checkpoints and the serving export path")
         if "model" not in mesh.shape:
             raise ValueError(
                 f"mesh axes {tuple(mesh.shape)} lack a 'model' axis: the "
@@ -986,19 +1013,7 @@ class DistLDATrainer(_StreamedDistMixin):
         shard), and the required full-row replica for docs dissected
         across shards under balance="tiles".
         """
-        S, K = self.sc.n_shards, self.cfg.n_topics
-        Dg = np.zeros((self.corpus.n_docs, K), np.int64)
-        W = np.zeros((self.corpus.n_words, K), np.int32)
-        for s in range(S):
-            sel = self.sc.mask[s] > 0
-            gdoc = self.sc.doc_map[s][self.sc.doc_ids[s][sel]]
-            np.add.at(Dg, (gdoc, t_np[s][sel]), 1)
-            np.add.at(W, (self.sc.word_ids[s][sel], t_np[s][sel]), 1)
-        D = np.zeros((S, self.sc.m_local, K), np.int32)
-        for s in range(S):
-            nd = int(self.sc.docs_per_shard[s])
-            D[s, :nd] = Dg[self.sc.doc_map[s][:nd]]
-        return D, W
+        return _host_counts(self.sc, self.corpus, self.cfg.n_topics, t_np)
 
     def init_state(self):
         cfg = self.cfg
@@ -1169,3 +1184,621 @@ class DistLDATrainer(_StreamedDistMixin):
             where=f"distributed chunk boundary (iteration "
                   f"{int(state.iteration)})")
 
+
+# ---------------------------------------------------------------------------
+# parameter-server w_sync (config.dist.w_sync == "ps", DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class _PSEpochCarry:
+    """One worker's open-round state: the epoch uniforms (host-staged),
+    the epoch-start word stats inputs (global colsum pulled once from the
+    server), the accumulated device D delta, and the epoch-start topics
+    (the canonical cut a mid-epoch checkpoint restores from)."""
+    u_host: np.ndarray             # (R·L,) f32
+    len_tot: jax.Array             # (M_loc,) f32 — epoch-start doc lengths
+    colsum: jax.Array              # (K,) f32 — exact int colsum from server
+    dD: jax.Array                  # (M_loc, K) int32 accumulator
+    start_topics: np.ndarray       # (R·L,) int32 epoch-start copy
+    n_surv: float = 0.0
+    stat_sums: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.zeros(4, np.float64))
+
+
+@dataclasses.dataclass
+class PSStreamState:
+    """Training state under ``w_sync="ps"``: token topics host-staged per
+    worker, per-worker device D blocks, and W living ONLY in the
+    word-sharded parameter server (``repro.lda.ps``) — no worker ever
+    holds more than one page of W rows.
+
+    ``clocks[w]`` counts rounds (epochs) worker ``w`` has finished; the
+    state's ``iteration`` is the slowest worker's clock, which equals the
+    server's committed round.
+    """
+    host_topics: np.ndarray        # (S, R·L) int32
+    d_blocks: list                 # per-worker (M_loc, K) dense or (M_loc, L) packed
+    server: Any                    # ps.ParameterServer (owns committed W)
+    clients: list                  # ps.PSClient per worker (owns the journal)
+    key: jax.Array
+    clocks: np.ndarray             # (S,) int64 — rounds finished per worker
+    cursors: np.ndarray            # (S,) int64 — sub-shard cursor of open round
+    epochs: list                   # per-worker _PSEpochCarry | None
+    overflow: int = 0              # hybrid repack drop tripwire (global)
+    stat_rounds: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def iteration(self) -> int:
+        return int(self.clocks.min())
+
+    @property
+    def topics(self) -> np.ndarray:
+        return self.host_topics
+
+
+class PSDistTrainer:
+    """Word-sharded parameter-server EZLDA trainer (``w_sync="ps"``).
+
+    Same corpus chunking and per-token math as ``DistLDATrainer``, but W
+    is never replicated: ``repro.lda.ps.ParameterServer`` owns contiguous
+    word-range shards, each worker pulls only the page of rows its
+    current token sub-shard touches (plus the global per-topic column
+    sum), pushes int32 delta blocks back, and a stale-synchronous clock
+    (``config.dist.staleness``) bounds worker skew.
+
+    Bitwise parity at ``staleness=0`` is by construction, not by luck:
+    each worker's sweep runs the SAME ``_word_phase`` / ``_token_sweep``
+    the replicated path runs, inside a shard_map over a trivial
+    one-device mesh (size-1 collectives are identities), with the worker's
+    mesh coordinates folded into the key exactly as the replicated step
+    folds ``axis_index``; and the server's round-commit rule (a round
+    applies only when EVERY worker finished it) means a round-``c`` pull
+    observes precisely the state the §V-B sum+broadcast would have
+    delivered. Pinned by tests/test_ps.py. Restrictions: model mesh axis
+    must be size 1 (pages are row windows; topic-block sharding of a
+    window recreates the replication PS removes) and
+    ``balance="none"`` (tiles' shared-row psum couples shards within an
+    iteration, which contradicts independent worker progress).
+
+    Mid-epoch checkpoints (the distributed carry-over): ``host_payload``
+    on a state with open rounds emits the canonical epoch-start topics
+    (the consistent cut) plus ``ps_*`` extension keys — per-worker delta
+    cursors, done-sub-shard topics, and the per-owner committed W row
+    blocks. Restores rebuild the open rounds' device deltas and re-queue
+    the partial-round pushes from the done topics (counts are derived
+    state), so recovery replays unacked pushes without a wire log.
+    """
+
+    def __init__(self, corpus: Corpus, config: LDAConfig, mesh: Mesh,
+                 pad_multiple: int = 1024, *, _from_engine: bool = False):
+        from repro.lda import ps as ps_mod
+        if not _from_engine:
+            raise TypeError(
+                "PSDistTrainer is an engine-internal backend: construct "
+                "through repro.lda.api.LDAEngine with "
+                "LDAConfig(dist=DistConfig(w_sync='ps', ...))")
+        if "model" not in mesh.shape:
+            raise ValueError(
+                f"mesh axes {tuple(mesh.shape)} lack a 'model' axis")
+        if mesh.shape["model"] != 1:
+            raise ValueError(
+                "w_sync='ps' needs a model mesh axis of size 1: W pages "
+                "are row windows of the global matrix, and topic-block "
+                "sharding a window would re-replicate the columns the "
+                "parameter server exists to shard. Use topic-axis model "
+                "parallelism with w_sync='replicate'")
+        if config.balance != "none":
+            raise ValueError(
+                "w_sync='ps' requires balance='none': tiles replicate "
+                "dissected documents' D rows and glue them with a "
+                "per-iteration cross-shard psum, which contradicts "
+                "independent worker progress under a staleness bound")
+        if config.sampler == "warp":
+            raise ValueError(
+                "sampler='warp' is single-backend only (see "
+                "DistLDATrainer); w_sync='ps' uses the three-branch sweep")
+        if config.corpus_residency == "disk" or (
+                config.corpus_residency == "auto"
+                and config.corpus_path is not None):
+            raise ValueError(
+                "w_sync='ps' streams host-staged token shards; the "
+                "disk-native corpus store is not yet plumbed through the "
+                "PS epoch loop (use w_sync='replicate' for "
+                "corpus_residency='disk')")
+        self.cfg = config
+        self.dist_cfg = config.dist
+        self.mesh = mesh
+        self.corpus = corpus
+        self.data_axes = batch_axes(mesh)
+        S = int(np.prod([mesh.shape[a] for a in self.data_axes]))
+        self.sc = shard_corpus(corpus, S, pad_multiple, balance="none")
+        self.layout = None
+        if config.format == "hybrid":
+            self.layout = HybridLayout.build(corpus, config)
+
+        # -- sub-shard geometry (the _DistStream tiling, host-side) --------
+        from repro.train.lda_step import resolve_residency
+        self.residency, n_stream = resolve_residency(
+            config, int(self.sc.word_ids.shape[1]))
+        n_loc = int(self.sc.word_ids.shape[1])
+        R = max(int(n_stream), 2) if self.residency == "streamed" \
+            else max(int(config.stream_shards or 4), 2)
+        L = -(-n_loc // R)
+        total = R * L
+        V = corpus.n_words
+        pad_word = V - 1
+        self._R, self._L, self._n_loc = R, L, n_loc
+        self._st_word = _extend_cols(self.sc.word_ids, total, pad_word)
+        self._st_doc = _extend_cols(self.sc.doc_ids, total, 0)
+        self._st_mask = _extend_cols(self.sc.mask, total, 0)
+
+        # per-(worker, sub-shard) word runs → one uniform page geometry:
+        # the page is the max run span so a single compiled sub fn serves
+        # every (worker, sub-shard) pair; bases clamp into [0, V - P]
+        spans = np.ones((S, R), np.int64)
+        lows = np.zeros((S, R), np.int64)
+        for w in range(S):
+            for r in range(R):
+                cols = slice(r * L, (r + 1) * L)
+                m = self._st_mask[w, cols] > 0
+                if m.any():
+                    wr = self._st_word[w, cols][m]
+                    lows[w, r] = int(wr[0])          # word-sorted blocks
+                    spans[w, r] = int(wr[-1]) - int(wr[0]) + 1
+        P_rows = int(min(max(int(spans.max()), 1), V))
+        self._page_rows = P_rows
+        self._bases = np.minimum(lows, V - P_rows).astype(np.int64)
+        self._word_rel = np.empty_like(self._st_word)
+        for w in range(S):
+            for r in range(R):
+                cols = slice(r * L, (r + 1) * L)
+                self._word_rel[w, cols] = np.clip(
+                    self._st_word[w, cols] - self._bases[w, r],
+                    0, P_rows - 1).astype(np.int32)
+
+        # -- ownership --------------------------------------------------------
+        dc = self.dist_cfg
+        n_owners = dc.n_owners if dc.n_owners is not None else S
+        row_mass = None
+        if dc.owner_layout == "mass":
+            row_mass = np.bincount(corpus.word_ids, minlength=V)
+        self.owner_layout = ps_mod.OwnerLayout.build(
+            V, n_owners, layout=dc.owner_layout, row_mass=row_mass)
+        self._ps_mod = ps_mod
+
+        # -- the trivial one-device mesh the per-worker sweeps run under ----
+        dev0 = np.asarray(mesh.devices).reshape(-1)[:1].reshape(1, 1)
+        self._tmesh = Mesh(dev0, ("data", "model"))
+        self._coords = [
+            jnp.asarray(np.unravel_index(
+                w, [mesh.shape[a] for a in self.data_axes]), jnp.int32)
+            for w in range(S)]
+        self._begin_fn = None
+        self._sub_fn = None
+        self._close_fn = None
+
+    # -- compiled per-worker pieces -----------------------------------------
+
+    def _get_begin(self):
+        if self._begin_fn is not None:
+            return self._begin_fn
+        lay, n_loc, n_daxes = self.layout, self._n_loc, len(self.data_axes)
+
+        def begin(d_block, key, iteration, coords):
+            if lay is None:
+                len_rows = jnp.sum(d_block, axis=-1, dtype=jnp.float32)
+            else:
+                len_rows = jnp.sum(sparse.unpack_pairs(d_block)[1],
+                                   axis=-1).astype(jnp.float32)
+            len_tot = jax.lax.psum(len_rows, "model")
+            # the replicated begin's exact key discipline: fold the
+            # iteration, then this worker's coordinate along each data
+            # axis (axis_index over there == unravel_index here)
+            k = jax.random.fold_in(key, iteration)
+            for i in range(n_daxes):
+                k = jax.random.fold_in(k, coords[i])
+            u = jax.random.uniform(k, (n_loc,), dtype=jnp.float32)
+            return u, len_tot
+
+        sm = _shard_map(begin, mesh=self._tmesh,
+                        in_specs=(P(), P(), P(), P()),
+                        out_specs=(P(), P()), check_vma=False)
+        self._begin_fn = jax.jit(sm)
+        return self._begin_fn
+
+    def _get_sub(self):
+        if self._sub_fn is not None:
+            return self._sub_fn
+        cfg, lay, g = self.cfg, self.layout, self.cfg.g
+        V, K = self.corpus.n_words, self.cfg.n_topics
+        P_rows = self._page_rows
+
+        def sub(u_r, word_rel, doc_r, mask_r, topics, d_block, page,
+                colsum, len_tot, dD):
+            my = jax.lax.axis_index("model")
+            kb0 = my * K
+            W_hat, g_vals, g_idx, q_prime = _word_phase(
+                page, cfg=cfg, model_axis="model", n_words=V, g=g,
+                kb0=kb0, k_local=K, colsum=colsum)
+            if lay is None:
+                d_tok = d_block[doc_r]
+            else:
+                d_tok = sparse.densify_rows(d_block[doc_r], K)
+            new_topics, skip, in_m, k1 = _token_sweep(
+                u_r, word_rel, doc_r, d_tok, len_tot, W_hat, g_vals,
+                g_idx, q_prime, alpha=cfg.alpha_, g=g, kb0=kb0,
+                k_local=K, my=my, model_axis="model")
+            wgt = mask_r.astype(jnp.int32)
+
+            def _blk(t):
+                rel = t - kb0
+                in_blk = (rel >= 0) & (rel < K)
+                return jnp.clip(rel, 0, K - 1), jnp.where(in_blk, wgt, 0)
+
+            old_rel, w_old = _blk(topics)
+            t_rel, w_new = _blk(new_topics)
+            dD_new = dD.at[doc_r, old_rel].add(-w_old) \
+                       .at[doc_r, t_rel].add(w_new)
+            dw_page = jnp.zeros((P_rows, K), jnp.int32) \
+                .at[word_rel, old_rel].add(-w_old) \
+                .at[word_rel, t_rel].add(w_new)
+            fmask = mask_r.astype(jnp.float32)
+            sums = jnp.stack([
+                jnp.sum(skip.astype(jnp.float32) * fmask),
+                jnp.sum((skip | in_m).astype(jnp.float32) * fmask),
+                jnp.sum((new_topics == topics).astype(jnp.float32) * fmask),
+                jnp.sum((new_topics == k1).astype(jnp.float32) * fmask)])
+            n_surv = jnp.sum((~skip).astype(jnp.float32) * fmask)
+            return new_topics, dD_new, dw_page, n_surv, sums
+
+        sm = _shard_map(sub, mesh=self._tmesh,
+                        in_specs=tuple(P() for _ in range(10)),
+                        out_specs=tuple(P() for _ in range(5)),
+                        check_vma=False)
+        self._sub_fn = jax.jit(sm, donate_argnums=(4, 9))
+        return self._sub_fn
+
+    def _get_close(self):
+        if self._close_fn is not None:
+            return self._close_fn
+        lay, K = self.layout, self.cfg.n_topics
+        if lay is None:
+            def close(d_block, dD):
+                return d_block + dD
+        else:
+            def close(d_block, dD):
+                d_dense = sparse.densify_rows(d_block, K)
+                d_repacked, ov = sparse.pack_rows_sorted(
+                    d_dense + dD, lay.d_capacity)
+                return d_repacked, ov
+        self._close_fn = jax.jit(close, donate_argnums=(0,))
+        return self._close_fn
+
+    # -- state construction --------------------------------------------------
+
+    def _pack_d(self, D_s: np.ndarray):
+        if self.layout is None:
+            return jnp.asarray(D_s)
+        return sparse.build_sparse_rows(
+            jnp.asarray(D_s), self.layout.d_capacity)
+
+    def _make_state(self, topics_nloc: np.ndarray, D, W, key,
+                    clock: int) -> PSStreamState:
+        S = self.sc.n_shards
+        host = _extend_cols(np.asarray(topics_nloc, np.int32),
+                            self._R * self._L, 0)
+        server = self._ps_mod.ParameterServer(
+            self.owner_layout, self.cfg.n_topics, S,
+            staleness=self.dist_cfg.staleness)
+        server.load_global(W)
+        server.committed = int(clock)
+        server.ckpt_clock = int(clock)
+        clients = []
+        for w in range(S):
+            c = self._ps_mod.PSClient(server, w)
+            c.clock = int(clock)
+            clients.append(c)
+        return PSStreamState(
+            host_topics=host,
+            d_blocks=[self._pack_d(D[w]) for w in range(S)],
+            server=server, clients=clients, key=key,
+            clocks=np.full(S, int(clock), np.int64),
+            cursors=np.zeros(S, np.int64),
+            epochs=[None] * S)
+
+    def init_state(self) -> PSStreamState:
+        cfg = self.cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        topics = jax.random.randint(
+            jax.random.fold_in(key, 7), self.sc.word_ids.shape, 0,
+            cfg.n_topics, dtype=jnp.int32)
+        D, W = _host_counts(self.sc, self.corpus, cfg.n_topics,
+                            np.asarray(topics))
+        return self._make_state(np.asarray(topics), D, W, key, 0)
+
+    # -- the per-worker round ------------------------------------------------
+
+    def _open_round(self, ss: PSStreamState, w: int) -> _PSEpochCarry:
+        clock = int(ss.clocks[w])
+        u_dev, len_tot = self._get_begin()(
+            ss.d_blocks[w], ss.key, jnp.int32(clock), self._coords[w])
+        u_host = np.zeros(self._R * self._L, np.float32)
+        u_host[:self._n_loc] = np.asarray(u_dev)
+        colsum = jnp.asarray(
+            ss.clients[w].pull_colsum().astype(np.float32))
+        ep = _PSEpochCarry(
+            u_host=u_host, len_tot=len_tot, colsum=colsum,
+            dD=jnp.zeros((self.sc.m_local, self.cfg.n_topics), jnp.int32),
+            start_topics=ss.host_topics[w].copy())
+        ss.epochs[w] = ep
+        return ep
+
+    def _advance_worker(self, ss: PSStreamState, w: int,
+                        max_subs: int | None = None) -> bool:
+        """Run worker ``w`` forward by up to ``max_subs`` sub-shards
+        (None = to the round close). Returns True iff the round closed."""
+        R, L = self._R, self._L
+        clock = int(ss.clocks[w])
+        client = ss.clients[w]
+        ep = ss.epochs[w] or self._open_round(ss, w)
+        sub = self._get_sub()
+        n_done = 0
+        while int(ss.cursors[w]) < R and \
+                (max_subs is None or n_done < max_subs):
+            r = int(ss.cursors[w])
+            if chaos.armed():
+                chaos.shard_event(clock, w * R + r)
+            cols = slice(r * L, (r + 1) * L)
+            base = int(self._bases[w, r])
+            page = jnp.asarray(
+                client.pull_page(base, base + self._page_rows))
+            new_t, ep.dD, dw_page, n_surv, sums = sub(
+                jnp.asarray(ep.u_host[cols]),
+                jnp.asarray(self._word_rel[w, cols]),
+                jnp.asarray(self._st_doc[w, cols]),
+                jnp.asarray(self._st_mask[w, cols]),
+                jnp.asarray(ss.host_topics[w, cols]),
+                ss.d_blocks[w], page, ep.colsum, ep.len_tot, ep.dD)
+            client.push_page(base, base + self._page_rows,
+                             np.asarray(dw_page))
+            ss.host_topics[w, cols] = np.asarray(new_t)
+            ep.n_surv += float(n_surv)
+            ep.stat_sums += np.asarray(sums, np.float64)
+            ss.cursors[w] = r + 1
+            n_done += 1
+        if int(ss.cursors[w]) < R:
+            return False
+        # -- round close: fold the D delta, declare the round finished ----
+        if self.layout is None:
+            ss.d_blocks[w] = self._get_close()(ss.d_blocks[w], ep.dD)
+        else:
+            ss.d_blocks[w], ov = self._get_close()(ss.d_blocks[w], ep.dD)
+            ss.overflow += int(ov)
+        acc = ss.stat_rounds.setdefault(
+            clock, [0.0, np.zeros(4, np.float64)])
+        acc[0] += ep.n_surv
+        acc[1] = acc[1] + ep.stat_sums
+        ss.epochs[w] = None
+        ss.cursors[w] = 0
+        ss.clocks[w] = clock + 1
+        client.finish_round()        # may commit the round
+        self._poll_owner_chaos(ss)
+        return True
+
+    def _poll_owner_chaos(self, ss: PSStreamState) -> None:
+        """The owner-kill drill: wipe a planned owner at its planned
+        committed round, then recover through the snapshot + journal
+        replay path — the trajectory must come out bitwise unchanged."""
+        if not chaos.armed():
+            return
+        srv = ss.server
+        for o in range(srv.layout.n_owners):
+            if chaos.ps_owner_event(o, srv.committed):
+                srv.kill_owner(o)
+                srv.revive_owner(o, [c.journal for c in ss.clients])
+
+    # -- drivers -------------------------------------------------------------
+
+    def step(self, state):
+        raise ValueError(
+            "the parameter-server trainer advances by whole rounds "
+            "(epochs): use run_fused(state, n_iters)")
+
+    def run_fused(self, ss: PSStreamState, n_iters: int):
+        """Advance every worker ``n_iters`` rounds under the SSP clock.
+
+        The scheduler picks, among workers behind the target whose pull
+        the staleness gate admits, the one with the lowest
+        ``clock + chaos bias``; each pick runs one whole round, so every
+        pull within a round observes a single committed version. The
+        slowest worker is always admissible (its clock equals the
+        committed round), so progress is guaranteed; a chaos
+        ``ps_slow_workers`` bias skews the order, forcing the fast
+        workers through genuinely stale (but admissible) pulls.
+        """
+        if chaos.armed():
+            chaos.step_range(int(ss.iteration), int(n_iters))
+        start = int(ss.iteration)
+        target = start + int(n_iters)
+        fplan = chaos.plan()
+        bias = dict(fplan.ps_slow_workers) if fplan is not None else {}
+        S = self.sc.n_shards
+        while int(ss.clocks.min()) < target:
+            cand = [w for w in range(S)
+                    if int(ss.clocks[w]) < target
+                    and ss.clients[w].can_advance()]
+            w = min(cand, key=lambda i: (int(ss.clocks[i]) + bias.get(i, 0),
+                                         i))
+            self._advance_worker(ss, w)
+        denom = float(max(int(self.sc.mask.sum()), 1))
+        rows = []
+        for c in range(start, target):
+            _n_surv, sums = ss.stat_rounds.pop(c)
+            rows.append(sums / denom)
+        for c in [c for c in ss.stat_rounds if c < target]:
+            del ss.stat_rounds[c]          # rounds reported by run_shards
+        m = np.asarray(rows, np.float32).reshape(-1, 4)
+        stats = three_branch.ThreeBranchStats(
+            frac_skipped=m[:, 0], frac_m_final=m[:, 1],
+            frac_unchanged=m[:, 2], frac_at_max=m[:, 3],
+            frac_q_branch=np.zeros(len(rows), np.float32))
+        return ss, stats
+
+    def run_shards(self, ss: PSStreamState, n_shards: int = 1):
+        """Advance every worker ``n_shards`` sub-shards in lockstep — the
+        mid-epoch stepping surface behind ``checkpoint_shards``. Lockstep
+        keeps the clocks aligned, which is what makes the mid-epoch
+        payload's cut canonical (host_payload refuses skewed clocks)."""
+        S = self.sc.n_shards
+        for _ in range(max(int(n_shards), 0)):
+            for w in range(S):
+                self._advance_worker(ss, w, max_subs=1)
+        return ss
+
+    # -- checkpointing -------------------------------------------------------
+
+    def host_payload(self, ss: PSStreamState) -> dict:
+        from repro.checkpoint.ps_payload import pack_ps_payload
+        clocks = ss.clocks
+        if int(clocks.max()) != int(clocks.min()):
+            raise ValueError(
+                "PS payloads cut at an aligned clock, but worker clocks "
+                f"are skewed ({clocks.tolist()}): finish the round "
+                "(run_fused) or step in lockstep (run_shards) first")
+        cut = int(clocks[0])
+        t_cut = np.empty_like(ss.host_topics)
+        for w in range(self.sc.n_shards):
+            ep = ss.epochs[w]
+            t_cut[w] = ep.start_topics if ep is not None \
+                else ss.host_topics[w]
+        out = np.zeros(self.corpus.n_tokens, np.int32)
+        for s in range(self.sc.n_shards):
+            sel = self.sc.mask[s] > 0
+            out[self.sc.global_pos[s][sel]] = \
+                t_cut[s][:self._n_loc][sel]
+        payload = {"topics_global": out,
+                   "key": np.asarray(jax.random.key_data(ss.key)),
+                   "iteration": cut}
+        if ss.cursors.any():
+            payload.update(pack_ps_payload(
+                server=ss.server, cursors=ss.cursors,
+                done_topics=np.concatenate(
+                    [ss.host_topics[w, :int(ss.cursors[w]) * self._L]
+                     for w in range(self.sc.n_shards)]
+                    or [np.zeros(0, np.int32)]),
+                epochs=ss.epochs))
+        # a durable checkpoint now covers everything committed: snapshot
+        # the owner rows as the revive base and trim the client journals
+        ss.server.note_checkpoint(
+            ss.server.committed, journals=[c.journal for c in ss.clients])
+        return payload
+
+    def state_from_payload(self, payload: dict) -> PSStreamState:
+        from repro.checkpoint.ps_payload import unpack_ps_payload
+        if int(np.asarray(payload.get("stream_cursor", 0))) > 0:
+            raise ValueError(
+                "mid-epoch single-host streaming checkpoints restore on "
+                "the single-host backend only; the PS trainer resumes "
+                "its own ps_* payloads or epoch-boundary payloads")
+        tg = np.asarray(payload["topics_global"], np.int32)
+        if tg.shape[0] != self.corpus.n_tokens:
+            raise ValueError(
+                f"checkpoint topics_global has {tg.shape[0]} entries but "
+                f"the corpus holds {self.corpus.n_tokens} tokens: the "
+                "checkpoint belongs to a different corpus")
+        S = self.sc.n_shards
+        topics = np.zeros_like(self.sc.word_ids)
+        for s in range(S):
+            sel = self.sc.mask[s] > 0
+            topics[s][sel] = tg[self.sc.global_pos[s][sel]]
+        D, W = _host_counts(self.sc, self.corpus, self.cfg.n_topics,
+                            topics)
+        key = jax.random.wrap_key_data(jnp.asarray(payload["key"]))
+        cut = int(payload["iteration"])
+        ss = self._make_state(topics, D, W, key, cut)
+        ext = unpack_ps_payload(payload)
+        if ext is None or not ext.cursors.any():
+            return ss
+        # -- reopen the cut's partial round ---------------------------------
+        # The payload's per-owner rows are the committed state at the cut;
+        # they MUST equal the counts derived from the canonical topics
+        # (counts are derived state) — a mismatch means a corrupt payload.
+        W_stored = ext.gather_w()
+        if not np.array_equal(W_stored, W):
+            raise ValueError(
+                "ps_* payload owner rows disagree with the counts "
+                "derived from topics_global: corrupt checkpoint")
+        L = self._L
+        off = 0
+        for w in range(S):
+            cur = int(ext.cursors[w])
+            if cur == 0:
+                continue
+            ep = self._open_round(ss, w)   # same key folds → same u bits
+            done = ext.done_topics[off:off + cur * L]
+            off += cur * L
+            ss.host_topics[w, :cur * L] = done
+            ss.cursors[w] = cur
+            # rebuild the device D delta and the partial-round pushes
+            # from the (start, done) topic hist-diff — exact int ops, so
+            # the resumed trajectory is bit-identical to the uninterrupted
+            # one (pinned in tests/test_ps.py)
+            dD_np = np.zeros((self.sc.m_local, self.cfg.n_topics),
+                             np.int32)
+            client = ss.clients[w]
+            for r in range(cur):
+                cols = slice(r * L, (r + 1) * L)
+                m = self._st_mask[w, cols] > 0
+                old = ep.start_topics[cols][m]
+                new = done[cols][m]
+                doc = self._st_doc[w, cols][m]
+                wrel = self._word_rel[w, cols][m]
+                np.add.at(dD_np, (doc, old), -1)
+                np.add.at(dD_np, (doc, new), 1)
+                dw = np.zeros((self._page_rows, self.cfg.n_topics),
+                              np.int32)
+                np.add.at(dw, (wrel, old), -1)
+                np.add.at(dw, (wrel, new), 1)
+                base = int(self._bases[w, r])
+                client.push_page(base, base + self._page_rows, dw)
+            ep.dD = ep.dD + jnp.asarray(dD_np)
+            if ext.stat_sums is not None:
+                ep.stat_sums = ext.stat_sums[w].copy()
+                ep.n_surv = float(ext.n_surv[w])
+        if off != ext.done_topics.shape[0]:
+            raise ValueError(
+                "ps_done_topics length disagrees with ps_cursors: "
+                "corrupt checkpoint")
+        return ss
+
+    # -- introspection -------------------------------------------------------
+
+    def gather_global(self, ss: PSStreamState):
+        """Global (D, W) count matrices at the committed cut."""
+        if self.layout is None:
+            D_sh = np.stack([np.asarray(b) for b in ss.d_blocks])
+        else:
+            lay = self.layout
+            flat = jnp.stack(list(ss.d_blocks)).reshape(
+                self.sc.n_shards * self.sc.m_local, -1)
+            D_sh = np.asarray(sparse.densify_rows(flat, lay.n_topics)) \
+                .reshape(self.sc.n_shards, self.sc.m_local, lay.n_topics)
+        K = self.cfg.n_topics
+        D = np.zeros((self.corpus.n_docs, K), np.int64)
+        for s in range(self.sc.n_shards):
+            nd = int(self.sc.docs_per_shard[s])
+            D[self.sc.doc_map[s][:nd]] += D_sh[s][:nd]
+        return D, ss.server.gather_global()
+
+    def state_nbytes(self, ss: PSStreamState) -> int:
+        """Per-host live count bytes: this worker's D block plus the
+        LARGEST W owner shard (a host is at most one worker + one owner;
+        no host ever holds the full W — the point of the PS design)."""
+        d_bytes = max(int(np.asarray(b).nbytes) for b in ss.d_blocks)
+        return d_bytes + ss.server.max_owner_nbytes()
+
+    def selfcheck(self, ss: PSStreamState) -> None:
+        D, W = self.gather_global(ss)
+        invariants.check_dense_counts(
+            D, W, n_tokens=self.corpus.n_tokens,
+            where=f"ps round boundary (iteration {ss.iteration})")

@@ -11,8 +11,8 @@ import numpy as np
 
 from repro.core import sparse
 
-__all__ = ["LDAConfig", "LDAState", "SparseLDAState", "HybridLayout",
-           "head_rows_for_coverage"]
+__all__ = ["DistConfig", "LDAConfig", "LDAState", "SparseLDAState",
+           "HybridLayout", "head_rows_for_coverage"]
 
 
 def head_rows_for_coverage(row_mass, coverage: float = 0.9) -> int:
@@ -34,6 +34,98 @@ def head_rows_for_coverage(row_mass, coverage: float = 0.9) -> int:
         return 1
     cum = np.cumsum(m)
     return int(np.searchsorted(cum, coverage * total, side="left")) + 1
+
+
+@dataclasses.dataclass(frozen=True)
+class DistConfig:
+    """Grouped distributed-training knobs (``LDAConfig.dist``).
+
+    One field instead of loose top-level knobs scattered over LDAConfig:
+    everything that only matters when training spans more than one
+    device lives here, and ``__post_init__`` is its one validation
+    point (the same discipline LDAConfig follows for the single-host
+    knobs). The legacy top-level ``balance`` knob keeps working for one
+    release through a mapping shim in ``LDAConfig.__post_init__`` that
+    warns once per process.
+
+    ``w_sync`` picks how the word-topic matrix W is kept in sync across
+    data shards:
+
+      * ``"replicate"`` — the paper's §V-B scheme: every shard holds a
+        full W replica, rebuilt each iteration by one delta all-reduce
+        (``psum``). Model size is capped by one host's memory.
+      * ``"ps"`` — word-sharded parameter server (DESIGN.md SS15): each
+        owner holds one contiguous word-range of W; workers pull the
+        page of rows their current token sub-shard touches, push int32
+        delta blocks back, and a stale-synchronous clock bounds how far
+        any worker may run ahead. ``staleness=0`` is bitwise-equal to
+        the replicated path.
+    """
+
+    mesh_shape: tuple = ()        # (("data", 4), ("model", 2)); () = engine
+                                  # default (all devices on the data axis)
+    balance: str = "none"         # "none" | "tiles" (paper §V-A at shard
+                                  # granularity)
+    w_sync: str = "replicate"     # "replicate" | "ps"
+    staleness: int = 0            # SSP bound: how many rounds a worker may
+                                  # run ahead of the slowest (w_sync="ps")
+    owner_layout: str = "rows"    # owner word-ranges: "rows" (equal row
+                                  # counts) | "mass" (equal token mass)
+    n_owners: int | None = None   # None = one owner per data shard
+
+    def __post_init__(self) -> None:
+        if self.w_sync not in ("replicate", "ps"):
+            raise ValueError(
+                f"unknown w_sync {self.w_sync!r}: expected 'replicate' "
+                "(the paper's §V-B full-replica delta all-reduce) or 'ps' "
+                "(word-sharded parameter server, DESIGN.md SS15)")
+        if self.balance not in ("none", "tiles"):
+            raise ValueError(
+                f"unknown balance {self.balance!r}: valid options are "
+                "'none' or 'tiles' (hierarchical tile-scheduled workload "
+                "balancing, paper SSV-A / DESIGN.md SS9)")
+        if self.staleness < 0:
+            raise ValueError(
+                f"staleness={self.staleness} must be >= 0: it bounds how "
+                "many commit rounds a worker may run ahead (0 = bulk-"
+                "synchronous, bitwise-equal to w_sync='replicate')")
+        if self.staleness > 0 and self.w_sync != "ps":
+            raise ValueError(
+                f"staleness={self.staleness} needs w_sync='ps': the "
+                "replicated path is bulk-synchronous by construction "
+                "(every iteration ends in one all-reduce)")
+        if self.owner_layout not in ("rows", "mass"):
+            raise ValueError(
+                f"unknown owner_layout {self.owner_layout!r}: expected "
+                "'rows' (equal word-row counts per owner) or 'mass' "
+                "(equal token mass per owner)")
+        if self.n_owners is not None and self.n_owners < 1:
+            raise ValueError(
+                f"n_owners={self.n_owners} must be >= 1 (or None for one "
+                "owner per data shard)")
+        if self.w_sync != "ps" and self.n_owners is not None:
+            raise ValueError(
+                f"n_owners={self.n_owners} is only consumed by "
+                "w_sync='ps' (owner word-ranges exist only on the "
+                "parameter-server path)")
+        if self.mesh_shape:
+            for entry in self.mesh_shape:
+                if (not isinstance(entry, tuple) or len(entry) != 2
+                        or not isinstance(entry[0], str)
+                        or int(entry[1]) < 1):
+                    raise ValueError(
+                        f"mesh_shape entry {entry!r} must be an "
+                        "(axis_name, extent>=1) pair, e.g. "
+                        "(('data', 4), ('model', 1))")
+            names = [a for a, _ in self.mesh_shape]
+            if "model" not in names:
+                raise ValueError(
+                    f"mesh_shape axes {names} lack a 'model' axis: the "
+                    "distributed trainer needs one (size 1 reproduces "
+                    "the paper's pure data-parallel scheme)")
+
+
+_LOOSE_DIST_KNOB_WARNED = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -61,12 +153,44 @@ class LDAConfig:
     stream_watchdog_seconds: float | None = None  # prefetch deadline; None=off
     seed: int = 0
     eval_every: int = 10
+    dist: DistConfig | None = None   # grouped distributed knobs; None =
+                                     # synthesized from the loose top-level
+                                     # knobs (deprecated, warns once)
 
     def __post_init__(self) -> None:
         # The ONE validation point for every knob (DESIGN.md SS7): trainers,
         # pipelines, and the engine all consume an already-validated config,
         # so a bad knob fails here — at construction, with the full menu —
         # never deep inside a backend __init__ or a traced function.
+        # -- grouped-dist shim: `dist` is authoritative; the loose top-level
+        # `balance` knob maps into it for one release (warns once), and the
+        # top-level field is kept in sync so existing readers stay correct.
+        if self.dist is None:
+            if self.balance != "none":
+                global _LOOSE_DIST_KNOB_WARNED
+                if not _LOOSE_DIST_KNOB_WARNED:
+                    _LOOSE_DIST_KNOB_WARNED = True
+                    import warnings
+                    warnings.warn(
+                        "the top-level LDAConfig.balance knob is moving "
+                        "into the grouped LDAConfig.dist field: pass "
+                        "dist=DistConfig(balance=...) instead (the loose "
+                        "knob keeps working for one release)",
+                        DeprecationWarning, stacklevel=3)
+            object.__setattr__(self, "dist",
+                               DistConfig(balance=self.balance))
+        else:
+            if not isinstance(self.dist, DistConfig):
+                raise ValueError(
+                    f"dist={self.dist!r} must be a DistConfig (or None "
+                    "to synthesize one from the loose top-level knobs)")
+            if self.balance != "none" and self.balance != self.dist.balance:
+                raise ValueError(
+                    f"balance={self.balance!r} conflicts with "
+                    f"dist.balance={self.dist.balance!r}: set it in "
+                    "DistConfig only (the top-level knob is a deprecated "
+                    "alias)")
+            object.__setattr__(self, "balance", self.dist.balance)
         if self.n_topics < 1:
             raise ValueError(f"n_topics={self.n_topics} must be >= 1")
         if self.sampler not in ("two_branch", "three_branch", "warp"):
@@ -126,24 +250,25 @@ class LDAConfig:
                 "CorpusStore directory (write one with "
                 "ShardedCorpus.to_store(path))")
         if self.corpus_path is not None \
-                and self.corpus_residency != "disk":
+                and self.corpus_residency not in ("disk", "auto"):
             raise ValueError(
                 f"corpus_path={self.corpus_path!r} is only consumed by "
-                "corpus_residency='disk' (got "
-                f"{self.corpus_residency!r}): set both or neither, so a "
-                "config never silently trains from a different corpus "
-                "than the one named")
+                "corpus_residency='disk' (or 'auto', which resolves to "
+                "'disk' when a path is set — docs/API.md residency "
+                f"table), got {self.corpus_residency!r}: set both or "
+                "neither, so a config never silently trains from a "
+                "different corpus than the one named")
         if self.stream_shards is not None and self.stream_shards < 2:
             raise ValueError(
                 f"stream_shards={self.stream_shards} must be >= 2 (or None "
                 "for the budget-derived count): streaming needs at least "
                 "a resident shard and a prefetched shard")
-        if self.corpus_residency == "disk" and self.stream_shards is not None:
+        if self.corpus_path is not None and self.stream_shards is not None:
             raise ValueError(
                 f"stream_shards={self.stream_shards} conflicts with "
-                "corpus_residency='disk': the shard grid is fixed by the "
-                "CorpusStore manifest — leave stream_shards None (re-shard "
-                "by rewriting the store)")
+                "disk-native residency (corpus_path set): the shard grid "
+                "is fixed by the CorpusStore manifest — leave "
+                "stream_shards None (re-shard by rewriting the store)")
         if self.stream_watchdog_seconds is not None \
                 and self.stream_watchdog_seconds <= 0:
             raise ValueError(

@@ -16,7 +16,6 @@ Two execution modes share one state/checkpoint format:
 from __future__ import annotations
 
 import time
-import warnings
 from typing import Any, Callable
 
 import jax
@@ -111,27 +110,27 @@ def run_boundary_chunked(n_iters: int, start_iter: int, *, n_tokens: int,
 class LDATrainer:
     """Owns device arrays for one corpus and jit-compiled step functions.
 
-    Deprecated as a PUBLIC entry point: construct through
-    ``repro.lda.api.LDAEngine`` (backend="single"), which owns corpus prep,
-    backend selection, and the unified checkpoint format. Direct
-    construction still works — it is the engine's internal backend — but
-    emits a DeprecationWarning.
+    Engine-internal: this is the ``backend="single"`` backend of
+    ``repro.lda.api.LDAEngine``, which owns corpus prep, backend
+    selection, and the unified checkpoint format. Direct construction
+    raises TypeError (it warned for one release; the engine is the only
+    front door now).
     """
 
     def __init__(self, corpus: Corpus | None, config: LDAConfig,
                  checkpoint_manager: Any | None = None, *,
                  _from_engine: bool = False):
         if not _from_engine:
-            warnings.warn(
-                "constructing LDATrainer directly is deprecated; use "
-                "repro.lda.api.LDAEngine (backend='single') as the front "
-                "door — it wraps this trainer with unified checkpoints "
-                "and the serving export path",
-                DeprecationWarning, stacklevel=2)
+            raise TypeError(
+                "LDATrainer is an engine-internal backend: construct "
+                "through repro.lda.api.LDAEngine(corpus, config, "
+                "backend='single') — it wraps this trainer with unified "
+                "checkpoints and the serving export path")
         self.config = config
         self.checkpoint_manager = checkpoint_manager
         self._fused_pipeline = None
-        if config.corpus_residency == "disk":
+        from repro.train.lda_step import resolves_to_disk
+        if resolves_to_disk(config):
             # Disk-native residency (DESIGN.md SS14): the CorpusStore's
             # shard files ARE the corpus — tokens never materialize in
             # host RAM as one array, and W pages per shard. The trainer

@@ -23,6 +23,13 @@ Hook sites (all behind ``armed()``):
     between the ``np.load`` and the crc32 verify). Injected I/O errors
     exercise the prefetcher's retry/backoff; injected bit flips exercise
     the shard crc32 self-check (``ShardCorruptionError`` on disk reads).
+  * ``ps_owner_event(owner, clock)`` / ``ps_push_lost(worker, clock)`` —
+    the parameter-server drills (``repro.lda.ps``): a planned owner kill
+    wipes one W shard's committed rows (recovery = snapshot restore +
+    client journal replay), a planned lost push drops one delta block on
+    the wire (recovery = un-acked resend from the client's push journal).
+    ``ps_slow_workers`` is read by the PS scheduler via ``plan()`` as a
+    standing clock bias, forcing stale-but-admissible pulls.
   * ``replica_event(rid)`` — the serving tier's worker loop
     (``repro.serve.service``) polls it once per picked-up batch:
     ``kill_replicas`` makes the worker die holding a batch (exercising
@@ -50,8 +57,9 @@ import time
 from typing import Callable, Mapping
 
 __all__ = ["FaultPlan", "InjectedFault", "SimulatedOOM", "active", "armed",
-           "clear", "corrupt_arrays", "install", "io_fault",
-           "replica_event", "shard_event", "step_range"]
+           "clear", "corrupt_arrays", "install", "io_fault", "plan",
+           "ps_owner_event", "ps_push_lost", "replica_event", "shard_event",
+           "step_range"]
 
 
 class InjectedFault(RuntimeError):
@@ -88,6 +96,10 @@ class FaultPlan:
     kill_replicas: tuple = ()          # serving replica ids to kill
     slow_replicas: Mapping[int, float] = \
         dataclasses.field(default_factory=dict)   # rid -> extra seconds
+    ps_kill_owners: tuple = ()         # (owner, clock): wipe a W owner shard
+    ps_lose_pushes: tuple = ()         # (worker, clock): drop one delta push
+    ps_slow_workers: Mapping[int, int] = \
+        dataclasses.field(default_factory=dict)   # worker -> clock bias
     repeat: bool = False               # re-fire after a restart?
     exc_factory: Callable[[str], Exception] = InjectedFault
 
@@ -195,6 +207,39 @@ def replica_event(rid: int) -> str | None:
             and plan._should_fire(("kill_replica", r)):
         return "kill"
     return None
+
+
+def plan() -> FaultPlan | None:
+    """The installed plan, if any — for hooks that need to *read* plan
+    fields rather than fire a fault (the PS scheduler's ``ps_slow_workers``
+    clock bias is a standing schedule perturbation, not a one-shot)."""
+    return _PLAN
+
+
+def ps_owner_event(owner: int, clock: int) -> bool:
+    """True once per plan if W owner ``owner`` should die at ``clock``.
+
+    The parameter server polls this before serving a round commit; a True
+    return wipes that owner's committed rows, forcing the caller through
+    the snapshot-restore + journal-replay recovery path
+    (``repro.lda.ps.ParameterServer.revive_owner``).
+    """
+    p = _PLAN
+    if p is None:
+        return False
+    key = (int(owner), int(clock))
+    return key in p.ps_kill_owners and p._should_fire(("ps_kill", key))
+
+
+def ps_push_lost(worker: int, clock: int) -> bool:
+    """True once per plan if worker ``worker``'s next delta push at round
+    ``clock`` should be dropped on the wire (server never applies it; the
+    client sees no ack and must resend from its push journal)."""
+    p = _PLAN
+    if p is None:
+        return False
+    key = (int(worker), int(clock))
+    return key in p.ps_lose_pushes and p._should_fire(("ps_lose", key))
 
 
 def io_fault(shard: int) -> None:

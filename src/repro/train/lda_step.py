@@ -1064,6 +1064,17 @@ def plan_stream_shards(n_padded_tokens: int, budget_bytes: int | None, *,
 _MEMSTATS_WARNED = False
 
 
+def resolves_to_disk(config) -> bool:
+    """True iff ``config`` trains disk-native: residency "disk", or
+    "auto" with a ``corpus_path`` (which resolves to "disk" before any
+    budget probe — resolution table: docs/API.md). The shared predicate
+    for the entry points that must pick the CorpusStore code path
+    BEFORE a corpus exists to measure."""
+    return config.corpus_residency == "disk" or (
+        config.corpus_residency == "auto"
+        and config.corpus_path is not None)
+
+
 def resolve_residency(config, n_padded_tokens: int,
                       device=None) -> tuple[str, int]:
     """(residency, n_shards) for one (config, corpus) pair.
@@ -1075,6 +1086,10 @@ def resolve_residency(config, n_padded_tokens: int,
     signal and the corpus stays resident (CPU backends report no limit).
     """
     mode = config.corpus_residency
+    if mode == "auto" and config.corpus_path is not None:
+        # a corpus_path names a disk-native store; "auto" resolves to it
+        # before any budget probe runs (resolution table: docs/API.md)
+        mode = "disk"
     if mode == "disk":
         # disk-native: the CorpusStore's manifest fixes the shard count,
         # so there is nothing for the budget probe to plan (DESIGN.md SS14)
@@ -1253,12 +1268,52 @@ class StreamState:
     # (d_packed, colsum, overflow) (hybrid) and the device never holds
     # more than the active shard's W row window
     w_host: np.ndarray | None = None
+    # paged-W mode only: the page endpoint the epoch loop pulls W row
+    # windows from and pushes delta blocks to (lazily a HostPages over
+    # this state; the PS trainer speaks the same verbs to owner shards)
+    pages: "HostPages | None" = None
 
     @property
     def topics(self):
         """Host-side per-shard topics view (duck-types the device states
         for consumers that only read/block on .topics)."""
         return self.shard_topics
+
+
+class HostPages:
+    """The paged pipeline's W traffic, spoken as wire verbs.
+
+    ``pull_page(lo, hi)`` yields the row window a shard samples
+    against, ``push_page(lo, hi, delta)`` lands the shard's int32 delta
+    block on the round accumulator, and ``finish_round()`` applies the
+    accumulated round at the epoch close.  These are exactly the verbs
+    the parameter-server client exposes (``repro.lda.ps.PSClient``), so
+    the epoch loop never assumes W is resident — it speaks one
+    pull/push/commit discipline whether the rows live in this process
+    (here: ``StreamState.w_host`` plus the open epoch's ``dw_host``
+    accumulator) or across sharded owners on a server.
+
+    Pulls deliberately see only ROUND-START rows — pushes accumulate in
+    ``dw_host`` and land at ``finish_round()`` — matching the server's
+    committed-rows semantics; that deferral is what keeps streamed ==
+    resident bit-equal.  Arrays are resolved through the state object at
+    call time (not captured) because mid-epoch restores rebind
+    ``w_host``/``dw_host`` wholesale.
+    """
+
+    def __init__(self, ss: StreamState):
+        self._ss = ss
+
+    def pull_page(self, lo: int, hi: int) -> np.ndarray:
+        return self._ss.w_host[lo:hi]
+
+    def push_page(self, lo: int, hi: int, delta: np.ndarray) -> None:
+        self._ss.epoch.dw_host[lo:hi] += delta
+
+    def finish_round(self) -> None:
+        # int32 adds are exact and commutative, so this equals the
+        # device-resident apply row for row
+        self._ss.w_host += self._ss.epoch.dw_host
 
 
 class StreamingPipeline(FusedPipeline):
@@ -1612,7 +1667,15 @@ class StreamingPipeline(FusedPipeline):
                     "newest checkpoint")
         return arrays
 
-    def _put_shard(self, s: int, topics_host, u_host, w_host=None):
+    def _pages(self, ss: StreamState) -> HostPages:
+        """The state's W page endpoint (paged mode only), created lazily
+        so every StreamState construction site — init, boundary restore,
+        mid-epoch restore — gets one without ceremony."""
+        if ss.pages is None:
+            ss.pages = HostPages(ss)
+        return ss.pages
+
+    def _put_shard(self, s: int, topics_host, u_host, pages=None):
         word_s, doc_s, mask_s = self._load_shard_slices(s)
         L = self.stream.shard_len
         out = (jnp.asarray(word_s), jnp.asarray(doc_s),
@@ -1623,7 +1686,8 @@ class StreamingPipeline(FusedPipeline):
             # as the token buffers: the device only ever holds the
             # active + prefetched windows, never the full (V, K) matrix
             b = int(self._page_base[s])
-            out = out + (jnp.asarray(w_host[b:b + self._page_rows]),)
+            out = out + (jnp.asarray(
+                pages.pull_page(b, b + self._page_rows)),)
         return out
 
     def _open_epoch(self, ss: StreamState) -> StreamState:
@@ -1638,26 +1702,25 @@ class StreamingPipeline(FusedPipeline):
                 (self.n_words, self.config.n_topics), np.int32)
         return ss
 
-    def _drain_dw(self, ep: _EpochCarry) -> None:
-        """Realize deferred per-shard dW window readbacks into the
-        host-side full-vocabulary accumulator (paged mode only)."""
+    def _drain_dw(self, ss: StreamState) -> None:
+        """Push deferred per-shard dW window readbacks through the page
+        endpoint onto the round accumulator (paged mode only)."""
+        ep, pages = ss.epoch, self._pages(ss)
         while ep.pending_dw:
             b, dw = ep.pending_dw.pop(0)
-            ep.dw_host[b:b + self._page_rows] += np.asarray(dw)
+            pages.push_page(b, b + self._page_rows, np.asarray(dw))
 
     def _close_epoch(self, ss: StreamState) -> StreamState:
         ep = ss.epoch
         if self.paged:
-            self._drain_dw(ep)
+            self._drain_dw(ss)
         if getattr(self.config, "selfcheck", False):
             self._selfcheck_deltas(ep.deltas, ss.iteration,
                                    dw_host=ep.dw_host)
         ss.counts = self._apply_epoch(ss.counts, ep.derived, ep.deltas)
         if self.paged:
-            # the epoch's W moves land host-side: int32 adds are exact
-            # and commutative, so this equals the device-resident apply
-            # row for row
-            ss.w_host += ep.dw_host
+            # the epoch's queued W moves commit through the page endpoint
+            self._pages(ss).finish_round()
         ss.key = ep.key_next
         ss.iteration += 1
         ss.cursor = 0
@@ -1714,10 +1777,11 @@ class StreamingPipeline(FusedPipeline):
         if ss.cursor >= stop:
             return ss
         ep = ss.epoch
+        pages = self._pages(ss) if self.paged else None
         fn = self._get_shard_fn(self.capacity, self.win_words)
         self._prefetch.take()       # drop any stale prefetch
         current = self._put_shard(ss.cursor, ss.shard_topics[ss.cursor],
-                                  ep.u_host, ss.w_host)
+                                  ep.u_host, pages)
         while ss.cursor < stop:
             s = ss.cursor
             if chaos.armed():
@@ -1725,7 +1789,7 @@ class StreamingPipeline(FusedPipeline):
             if s + 1 < stop:
                 self._prefetch.submit(self._put_shard, s + 1,
                                       ss.shard_topics[s + 1], ep.u_host,
-                                      ss.w_host)
+                                      pages)
             if self.paged:
                 word_s, doc_s, mask_s, topics_s, u_s, w_win = current
                 new_t, ep.deltas, dw_win, n_surv, span, sums = fn(
@@ -1738,8 +1802,8 @@ class StreamingPipeline(FusedPipeline):
                 ep.pending_dw.append((int(self._page_base[s]), dw_win))
                 if len(ep.pending_dw) > 1:
                     b_prev, dw_prev = ep.pending_dw.pop(0)
-                    ep.dw_host[b_prev:b_prev + self._page_rows] += \
-                        np.asarray(dw_prev)
+                    pages.push_page(b_prev, b_prev + self._page_rows,
+                                    np.asarray(dw_prev))
             else:
                 word_s, doc_s, mask_s, topics_s, u_s = current
                 w_win = dw_win = None
@@ -1769,7 +1833,7 @@ class StreamingPipeline(FusedPipeline):
             s_prev, t_prev = ep.pending_topics.pop(0)
             ss.shard_topics[s_prev] = np.asarray(t_prev)
         if self.paged:
-            self._drain_dw(ep)
+            self._drain_dw(ss)
         return ss
 
     def note_survivors(self, n_surv, decay: float = 0.7) -> None:
@@ -2051,7 +2115,8 @@ class StreamingPipeline(FusedPipeline):
             if self.paged:
                 w_s, d_s, _m = st.read_shard(s)
                 b = int(self._page_base[s])
-                w_win = jnp.asarray(ss.w_host[b:b + self._page_rows])
+                w_win = jnp.asarray(self._pages(ss).pull_page(
+                    b, b + self._page_rows))
                 v = jnp.asarray(
                     np.clip(w_s - b, 0, self._page_rows - 1)
                     .astype(np.int32))

@@ -85,10 +85,20 @@ def test_engine_single_rejects_mesh(corpus):
 # 2. deprecation shims
 # ---------------------------------------------------------------------------
 
-def test_direct_trainer_construction_warns(corpus):
+def test_direct_trainer_construction_raises(corpus):
     from repro.lda.trainer import LDATrainer
-    with pytest.warns(DeprecationWarning, match="LDAEngine"):
+    with pytest.raises(TypeError, match="LDAEngine"):
         LDATrainer(corpus, _cfg())
+
+
+def test_direct_dist_trainer_construction_raises(corpus):
+    from repro.lda.distributed import DistLDATrainer, PSDistTrainer
+    from repro.runtime.compat import make_mesh
+    mesh = make_mesh((1, 1), ("data", "model"))
+    with pytest.raises(TypeError, match="LDAEngine"):
+        DistLDATrainer(corpus, _cfg(), mesh)
+    with pytest.raises(TypeError, match="LDAEngine"):
+        PSDistTrainer(corpus, _cfg(), mesh)
 
 
 def test_engine_path_does_not_warn(corpus):
@@ -201,9 +211,7 @@ def test_trainer_payload_shape_error_is_valueerror(corpus):
     """The finished bare-assert sweep: a wrong-shape checkpoint raises an
     actionable ValueError, not AssertionError."""
     from repro.lda.trainer import LDATrainer
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        tr = LDATrainer(corpus, _cfg())
+    tr = LDATrainer(corpus, _cfg(), _from_engine=True)
     key = np.asarray(jax.random.key_data(jax.random.PRNGKey(0)))
     with pytest.raises(ValueError, match="padded corpus"):
         tr.state_from_payload({"topics": np.zeros(7, np.int32),

@@ -172,10 +172,7 @@ def test_sample_sparse_tiled_bit_equal():
 # ---------------------------------------------------------------------------
 
 def _pipeline_trajectory(corpus, cfg, n_iters=6, force_window=None):
-    import warnings
-    with warnings.catch_warnings():
-        warnings.simplefilter("ignore", DeprecationWarning)
-        tr = LDATrainer(corpus, cfg)
+    tr = LDATrainer(corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     if force_window is not None:
         # engage the word-window path even on a tiny test vocabulary

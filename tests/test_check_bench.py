@@ -84,6 +84,10 @@ def test_every_committed_file_has_schema_and_gates():
      lambda d: d["completion"].update(rate=0.97)),
     ("BENCH_serve_service.json",
      lambda d: d["quality"].update(delta_bits=0.4)),
+    ("BENCH_ps_scaling.json", lambda d: d.update(owner_frac_at_max=0.5)),
+    ("BENCH_ps_scaling.json",
+     lambda d: d.update(staleness0_bitwise=False)),
+    ("BENCH_ps_scaling.json", lambda d: d.update(max_workers=4)),
 ])
 def test_injected_regression_fails(tmp_path, name, mutate):
     doc = copy.deepcopy(_load(name))
@@ -149,6 +153,18 @@ def test_disk_streaming_dryrun_alias(tmp_path):
     assert check_bench.main(["--dry-run-schema-only", path]) == 0
     doc.pop("paged_rows")                     # schema rot still fails
     path = _write(tmp_path, "BENCH_disk_streaming_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 1
+
+
+def test_ps_scaling_dryrun_alias(tmp_path):
+    doc = copy.deepcopy(_load("BENCH_ps_scaling.json"))
+    doc["dry_run"] = True
+    doc["owner_frac_at_max"] = 0.9            # would fail the metric gate
+    doc["max_workers"] = 2                    # dry runs stop at 2 workers
+    path = _write(tmp_path, "BENCH_ps_scaling_dryrun.json", doc)
+    assert check_bench.main(["--dry-run-schema-only", path]) == 0
+    doc["cells"][0].pop("owner_frac")         # schema rot still fails
+    path = _write(tmp_path, "BENCH_ps_scaling_dryrun.json", doc)
     assert check_bench.main(["--dry-run-schema-only", path]) == 1
 
 

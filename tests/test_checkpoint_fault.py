@@ -63,7 +63,7 @@ def test_run_with_restarts_resumes(tmp_path):
     cfg = LDAConfig(n_topics=8, tile_size=256, seed=11)
 
     def make_trainer():
-        return LDATrainer(corpus, cfg)
+        return LDATrainer(corpus, cfg, _from_engine=True)
 
     failures = {7, 13}
     seen = set()
@@ -82,7 +82,7 @@ def test_run_with_restarts_resumes(tmp_path):
     assert report.resumed_from == [5, 10]
 
     # uninterrupted reference
-    tr = LDATrainer(corpus, cfg)
+    tr = LDATrainer(corpus, cfg, _from_engine=True)
     ref = tr.init_state()
     for _ in range(20):
         ref, _ = tr.step(ref)

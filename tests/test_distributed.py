@@ -43,7 +43,7 @@ def _run(body: str):
 def test_dist_converges_and_conserves_tokens():
     out = _run("""
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256)
+    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256, _from_engine=True)
     state = tr.init_state()
     ll0 = global_llpt(tr, state)
     for _ in range(12):
@@ -65,7 +65,7 @@ def test_run_fused_matches_stepwise():
     of tests/test_fused_step.py's scan-vs-stepwise pin."""
     out = _run("""
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256)
+    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256, _from_engine=True)
     s_step = tr.init_state()
     for _ in range(4):
         s_step, last_stats = tr.step(s_step)
@@ -88,7 +88,7 @@ def test_multipod_mesh_axes():
     """(pod, data, model) mesh — the multi-pod collective path lowers+runs."""
     out = _run("""
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256)
+    tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256, _from_engine=True)
     state = tr.init_state()
     for _ in range(4):
         state, stats = tr.step(state)
@@ -109,7 +109,7 @@ def test_model_axis_parity():
     for shape, names in (((4, 1), ("data", "model")),
                          ((2, 2), ("data", "model"))):
         mesh = jax.make_mesh(shape, names)
-        tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256)
+        tr = DistLDATrainer(corpus, cfg, mesh, pad_multiple=256, _from_engine=True)
         state = tr.init_state()
         for _ in range(15):
             state, _ = tr.step(state)
@@ -128,7 +128,7 @@ def test_elastic_restore_across_mesh_sizes():
     rebuilt for the new chunking and training continues (elastic scaling)."""
     out = _run("""
     mesh4 = jax.make_mesh((4, 2), ("data", "model"))
-    tr4 = DistLDATrainer(corpus, cfg, mesh4, pad_multiple=256)
+    tr4 = DistLDATrainer(corpus, cfg, mesh4, pad_multiple=256, _from_engine=True)
     s4 = tr4.init_state()
     for _ in range(5):
         s4, _ = tr4.step(s4)
@@ -136,7 +136,7 @@ def test_elastic_restore_across_mesh_sizes():
     D4, W4 = tr4.gather_global(s4)
 
     mesh2 = jax.make_mesh((2, 4), ("data", "model"))
-    tr2 = DistLDATrainer(corpus, cfg, mesh2, pad_multiple=256)
+    tr2 = DistLDATrainer(corpus, cfg, mesh2, pad_multiple=256, _from_engine=True)
     s2 = tr2.state_from_payload(payload)
     D2, W2 = tr2.gather_global(s2)
     # same global counts, different layout
@@ -168,7 +168,7 @@ def test_token_balanced_sharding_with_dissection():
     assert sc.shared_rows is not None                 # docs were dissected
 
     mesh = jax.make_mesh((4, 2), ("data", "model"))
-    tr = DistLDATrainer(corpus, cfg_t, mesh, pad_multiple=256)
+    tr = DistLDATrainer(corpus, cfg_t, mesh, pad_multiple=256, _from_engine=True)
     state = tr.init_state()
     ll0 = global_llpt(tr, state)
     for _ in range(12):
@@ -193,7 +193,7 @@ def test_token_balanced_sharding_with_dissection():
     assert np.array_equal(np.asarray(s_scan.D), np.asarray(s_step.D))
     # elastic restore onto a doc-chunked trainer: same global counts
     tr2 = DistLDATrainer(corpus, cfg, jax.make_mesh((2, 1),
-                         ("data", "model")), pad_multiple=256)
+                         ("data", "model")), pad_multiple=256, _from_engine=True)
     s2 = tr2.state_from_payload(payload)
     D2, W2 = tr2.gather_global(s2)
     assert np.array_equal(D2, D) and np.array_equal(W2, W)
@@ -203,7 +203,7 @@ def test_token_balanced_sharding_with_dissection():
         DistLDATrainer(corpus, LDAConfig(n_topics=16, format="hybrid",
                        balance="tiles"),
                        jax.make_mesh((4, 1), ("data", "model")),
-                       pad_multiple=256)
+                       pad_multiple=256, _from_engine=True)
         raise AssertionError("hybrid+tiles should be rejected")
     except ValueError as e:
         assert "tiles" in str(e)

@@ -68,7 +68,7 @@ def test_delta_update_matches_rebuild_oracle(seed):
 # ---------------------------------------------------------------------------
 
 def _reference_trajectory(corpus, cfg, n_iters):
-    tr = LDATrainer(corpus, cfg)
+    tr = LDATrainer(corpus, cfg, _from_engine=True)
     state = tr.init_state()
     traj = []
     for _ in range(n_iters):
@@ -86,7 +86,7 @@ def test_fused_step_matches_trainer_bitwise(small_corpus, impl):
     _, traj = _reference_trajectory(
         small_corpus, LDAConfig(n_topics=16, tile_size=512,
                                 sampler="three_branch"), 5)
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     fs = pipe.from_lda_state(tr.init_state())
     for i, (t_ref, d_ref, w_ref) in enumerate(traj):
@@ -100,7 +100,7 @@ def test_fused_step_matches_trainer_bitwise(small_corpus, impl):
 
 def test_run_fused_scan_equals_stepwise(small_corpus):
     cfg = LDAConfig(n_topics=16, tile_size=512, sampler="three_branch")
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     fs_scan, stats, n_surv = pipe.run_fused(
         pipe.from_lda_state(tr.init_state()), 5)
@@ -122,7 +122,7 @@ def test_capacity_is_a_pure_perf_knob(small_corpus):
     for cap in (64, 300, 10 ** 6):
         tr = LDATrainer(small_corpus, LDAConfig(
             n_topics=16, tile_size=512, sampler="three_branch",
-            survivor_capacity=cap))
+            survivor_capacity=cap), _from_engine=True)
         pipe = tr.fused_pipeline()
         fs, _, _ = pipe.run_fused(pipe.from_lda_state(tr.init_state()), 3,
                                   replan=False)
@@ -136,14 +136,14 @@ def test_trainer_run_fused_end_to_end(small_corpus):
     the fused history matches the reference run's final state bitwise."""
     cfg = LDAConfig(n_topics=16, tile_size=512, sampler="three_branch",
                     eval_every=5)
-    tr_ref = LDATrainer(small_corpus, cfg)
+    tr_ref = LDATrainer(small_corpus, cfg, _from_engine=True)
     s_ref = tr_ref.init_state()
     for _ in range(10):
         s_ref, _ = tr_ref.step(s_ref)
 
     tr_f = LDATrainer(small_corpus, LDAConfig(
         n_topics=16, tile_size=512, sampler="three_branch",
-        eval_every=5, fused=True))
+        eval_every=5, fused=True), _from_engine=True)
     s_f, hist = tr_f.run(10)
     assert np.array_equal(np.asarray(s_f.topics), np.asarray(s_ref.topics))
     assert np.array_equal(np.asarray(s_f.D), np.asarray(s_ref.D))
@@ -156,7 +156,7 @@ def test_run_fused_resume_hits_absolute_boundaries(small_corpus):
     n_iters) must still eval at the same ABSOLUTE iterations as run()."""
     cfg = LDAConfig(n_topics=16, tile_size=512, sampler="three_branch",
                     eval_every=5, fused=True)
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     for _ in range(3):                       # land on iteration 3
         state, _ = tr.step(state)

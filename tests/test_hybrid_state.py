@@ -34,7 +34,7 @@ jax.config.update("jax_platform_name", "cpu")
 
 
 def _reference_trajectory(corpus, cfg, n_iters):
-    tr = LDATrainer(corpus, cfg)
+    tr = LDATrainer(corpus, cfg, _from_engine=True)
     state = tr.init_state()
     traj = []
     for _ in range(n_iters):
@@ -55,7 +55,7 @@ def test_hybrid_fused_matches_dense_reference_bitwise(small_corpus, impl):
                                 sampler="three_branch"), 5)
     tr = LDATrainer(small_corpus, LDAConfig(
         n_topics=16, tile_size=512, sampler="three_branch",
-        format="hybrid", impl=impl))
+        format="hybrid", impl=impl), _from_engine=True)
     pipe = tr.fused_pipeline()
     hs = pipe.from_lda_state(tr.init_state())
     for i, (t_ref, d_ref, w_ref) in enumerate(traj):
@@ -71,7 +71,7 @@ def test_hybrid_fused_matches_dense_reference_bitwise(small_corpus, impl):
 
 def test_hybrid_run_fused_scan_equals_stepwise(small_corpus):
     cfg = LDAConfig(n_topics=16, tile_size=512, format="hybrid")
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     hs_scan, stats, n_surv = pipe.run_fused(
         pipe.from_lda_state(tr.init_state()), 5)
@@ -90,13 +90,13 @@ def test_trainer_run_hybrid_end_to_end(small_corpus):
     """config.format='hybrid' routes run() through the hybrid pipeline and
     matches the dense reference run bitwise; LLPT still rises."""
     tr_ref = LDATrainer(small_corpus, LDAConfig(
-        n_topics=16, tile_size=512, eval_every=5))
+        n_topics=16, tile_size=512, eval_every=5), _from_engine=True)
     s_ref = tr_ref.init_state()
     for _ in range(10):
         s_ref, _ = tr_ref.step(s_ref)
 
     tr_h = LDATrainer(small_corpus, LDAConfig(
-        n_topics=16, tile_size=512, eval_every=5, format="hybrid"))
+        n_topics=16, tile_size=512, eval_every=5, format="hybrid"), _from_engine=True)
     s_h, hist = tr_h.run(10)
     assert np.array_equal(np.asarray(s_h.topics), np.asarray(s_ref.topics))
     assert np.array_equal(np.asarray(s_h.D), np.asarray(s_ref.D))
@@ -113,7 +113,7 @@ def test_pinned_d_capacity_below_bound_raises(small_corpus):
     cfg = LDAConfig(n_topics=16, tile_size=512, format="hybrid",
                     d_capacity=2)
     with pytest.raises(ValueError, match="d_capacity"):
-        LDATrainer(small_corpus, cfg).fused_pipeline()
+        LDATrainer(small_corpus, cfg, _from_engine=True).fused_pipeline()
 
 
 def test_unrelabeled_corpus_raises():
@@ -127,10 +127,10 @@ def test_unrelabeled_corpus_raises():
 
 def test_format_knob_validation(small_corpus):
     with pytest.raises(ValueError, match="format"):
-        LDATrainer(small_corpus, LDAConfig(n_topics=8, format="csr"))
+        LDATrainer(small_corpus, LDAConfig(n_topics=8, format="csr"), _from_engine=True)
     with pytest.raises(ValueError, match="tail_sampler"):
         LDATrainer(small_corpus, LDAConfig(n_topics=8,
-                                           tail_sampler="magic"))
+                                           tail_sampler="magic"), _from_engine=True)
 
 
 # ---------------------------------------------------------------------------
@@ -139,7 +139,7 @@ def test_format_knob_validation(small_corpus):
 
 def test_conversion_roundtrip(small_corpus):
     cfg = LDAConfig(n_topics=16, tile_size=512, format="hybrid")
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     state = tr.init_state()
     back = pipe.to_lda_state(pipe.from_lda_state(state))
@@ -152,7 +152,7 @@ def test_hybrid_live_state_smaller_than_dense_on_zipf(skewed_corpus):
     """The Table-I direction on MEASURED buffers, not byte models."""
     k = 64
     cfg = LDAConfig(n_topics=k, tile_size=512, format="hybrid")
-    tr = LDATrainer(skewed_corpus, cfg)
+    tr = LDATrainer(skewed_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     hybrid_bytes = tr.live_state_nbytes(state)
     dense_bytes = state.nbytes()
@@ -166,7 +166,7 @@ def test_hybrid_live_state_smaller_than_dense_on_zipf(skewed_corpus):
 def test_sparse_tail_sampler_counts_consistent_and_converges(small_corpus):
     tr = LDATrainer(small_corpus, LDAConfig(
         n_topics=16, tile_size=512, format="hybrid",
-        tail_sampler="sparse", eval_every=5))
+        tail_sampler="sparse", eval_every=5), _from_engine=True)
     state, hist = tr.run(15)
     D_o, W_o = esca.update_counts(
         tr.word_ids, tr.doc_ids, state.topics, tr.mask,
@@ -182,7 +182,7 @@ def test_sparse_tail_sampler_counts_consistent_and_converges(small_corpus):
 
 def test_checkpoint_payload_restores_into_either_format(small_corpus):
     cfg_h = LDAConfig(n_topics=16, tile_size=512, format="hybrid")
-    tr_h = LDATrainer(small_corpus, cfg_h)
+    tr_h = LDATrainer(small_corpus, cfg_h, _from_engine=True)
     pipe = tr_h.fused_pipeline()
     hs = pipe.from_lda_state(tr_h.init_state())
     for _ in range(3):
@@ -191,7 +191,7 @@ def test_checkpoint_payload_restores_into_either_format(small_corpus):
     assert set(payload) == {"topics", "key", "iteration"}  # still topics+rng
 
     # dense trainer restores and rebuilds dense counts
-    tr_d = LDATrainer(small_corpus, LDAConfig(n_topics=16, tile_size=512))
+    tr_d = LDATrainer(small_corpus, LDAConfig(n_topics=16, tile_size=512), _from_engine=True)
     s_d = tr_d.state_from_payload(payload)
     ref = pipe.to_lda_state(hs)
     assert np.array_equal(np.asarray(s_d.D), np.asarray(ref.D))
@@ -224,10 +224,10 @@ def test_dist_hybrid_matches_dist_dense_bitwise():
         corpus, _ = relabel_by_frequency(corpus)
         mesh = jax.make_mesh((4, 1), ("data", "model"))
         trd = DistLDATrainer(corpus, LDAConfig(n_topics=16, tile_size=512),
-                             mesh, pad_multiple=256)
+                             mesh, pad_multiple=256, _from_engine=True)
         trh = DistLDATrainer(corpus, LDAConfig(n_topics=16, tile_size=512,
                                                format="hybrid"),
-                             mesh, pad_multiple=256)
+                             mesh, pad_multiple=256, _from_engine=True)
         sd, sh = trd.init_state(), trh.init_state()
         for i in range(5):
             sd, _ = trd.step(sd)
@@ -245,7 +245,7 @@ def test_dist_hybrid_matches_dist_dense_bitwise():
         # hybrid needs model axis 1
         try:
             DistLDATrainer(corpus, LDAConfig(n_topics=16, format="hybrid"),
-                           jax.make_mesh((2, 2), ("data", "model")))
+                           jax.make_mesh((2, 2), ("data", "model")), _from_engine=True)
             raise SystemExit("expected ValueError")
         except ValueError:
             pass

@@ -123,7 +123,7 @@ def test_pallas_trainer_e2e(small_corpus):
     from repro.lda.model import LDAConfig
     from repro.lda.trainer import LDATrainer
     cfg = LDAConfig(n_topics=16, tile_size=512, impl="pallas")
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     llpt0 = tr.evaluate(state)
     for _ in range(8):
@@ -145,7 +145,7 @@ def test_sparse_d_sampling_path_matches_reference(small_corpus):
     from repro.lda.trainer import LDATrainer
 
     cfg = LDAConfig(n_topics=16, tile_size=512)
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     for _ in range(5):
         state, _ = tr.step(state)

@@ -122,7 +122,7 @@ def test_three_branch_matches_two_branch_distribution():
 
 def test_compacted_path_equals_reference(small_corpus, small_config):
     cfg = small_config
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     for _ in range(3):
         state, _ = tr.step(state)
@@ -144,7 +144,7 @@ def test_llpt_rises_and_skip_grows(small_corpus):
     """End-to-end: LLPT increases; skip fraction grows as tokens converge
     (paper Figs 3 & 12b)."""
     cfg = LDAConfig(n_topics=16, tile_size=512, eval_every=5)
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     llpt0 = tr.evaluate(state)
     skips = []
@@ -160,7 +160,7 @@ def test_llpt_rises_and_skip_grows(small_corpus):
 def test_skip_fraction_increases_with_g(small_corpus):
     """Paper §III-B: larger g ⇒ tighter S_est ⇒ more skips."""
     cfg = LDAConfig(n_topics=16, tile_size=512)
-    tr = LDATrainer(small_corpus, cfg)
+    tr = LDATrainer(small_corpus, cfg, _from_engine=True)
     state = tr.init_state()
     for _ in range(10):
         state, _ = tr.step(state)
@@ -179,7 +179,7 @@ def test_two_and_three_branch_converge_to_same_llpt(small_corpus):
     res = {}
     for sampler in ("two_branch", "three_branch"):
         cfg = LDAConfig(n_topics=16, tile_size=512, sampler=sampler, seed=4)
-        tr = LDATrainer(small_corpus, cfg)
+        tr = LDATrainer(small_corpus, cfg, _from_engine=True)
         state = tr.init_state()
         for _ in range(25):
             state, _ = tr.step(state)

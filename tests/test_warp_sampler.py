@@ -172,7 +172,7 @@ def test_mh_chain_matches_float64_oracle():
 def _final_llpt(corpus, sampler, seed):
     cfg = LDAConfig(n_topics=16, tile_size=512, eval_every=100,
                     sampler=sampler, fused=True, seed=seed)
-    tr = LDATrainer(corpus, cfg)
+    tr = LDATrainer(corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     fs = pipe.from_lda_state(tr.init_state())
     init = tr.evaluate(pipe.to_lda_state(fs))
@@ -198,8 +198,8 @@ def test_warp_stationary_distribution_matches_exact(small_corpus):
 # ---------------------------------------------------------------------------
 
 def test_fused_warp_equals_stepwise_bitwise(small_corpus):
-    tr_s = LDATrainer(small_corpus, LDAConfig(**BASE))
-    tr_f = LDATrainer(small_corpus, LDAConfig(**BASE, fused=True))
+    tr_s = LDATrainer(small_corpus, LDAConfig(**BASE), _from_engine=True)
+    tr_f = LDATrainer(small_corpus, LDAConfig(**BASE, fused=True), _from_engine=True)
     pipe = tr_f.fused_pipeline()
     fs = pipe.from_lda_state(tr_f.init_state())
     st_ref = tr_s.init_state()
@@ -222,7 +222,7 @@ def wide_corpus():
 
 def _run5(corpus, **over):
     cfg = LDAConfig(**{**BASE, "fused": True, **over})
-    tr = LDATrainer(corpus, cfg)
+    tr = LDATrainer(corpus, cfg, _from_engine=True)
     pipe = tr.fused_pipeline()
     fs = pipe.from_lda_state(tr.init_state())
     fs, stats, _ = pipe.run_fused(fs, 5)
@@ -266,7 +266,7 @@ def test_warp_selfcheck_runs_alias_invariants(small_corpus):
 # ---------------------------------------------------------------------------
 
 def test_warp_stats_surface(small_corpus):
-    tr = LDATrainer(small_corpus, LDAConfig(**BASE, mh_cycles=3))
+    tr = LDATrainer(small_corpus, LDAConfig(**BASE, mh_cycles=3), _from_engine=True)
     state = tr.init_state()
     state, stats = tr.step(state)
     assert stats["n_proposals"] == pytest.approx(6.0)
@@ -295,7 +295,7 @@ def test_config_rejects_nonpositive_mh_cycles():
 
 def test_streamed_rejects_warp(small_corpus):
     tr = LDATrainer(small_corpus, LDAConfig(
-        **BASE, fused=True, corpus_residency="streamed", stream_shards=2))
+        **BASE, fused=True, corpus_residency="streamed", stream_shards=2), _from_engine=True)
     with pytest.raises(ValueError, match="streamed"):
         tr.fused_pipeline()
 
@@ -304,4 +304,4 @@ def test_distributed_rejects_warp(small_corpus):
     from repro.lda.distributed import DistLDATrainer
     mesh = jax.make_mesh((1, 1), ("data", "model"))
     with pytest.raises(ValueError, match="single-backend|backend='single'"):
-        DistLDATrainer(small_corpus, LDAConfig(**BASE), mesh)
+        DistLDATrainer(small_corpus, LDAConfig(**BASE), mesh, _from_engine=True)

@@ -146,6 +146,22 @@ SCHEMAS: dict[str, dict] = {
         "quality": {"llpt_serve": NUM, "llpt_batch5": NUM,
                     "delta_bits": NUM},
     },
+    "BENCH_ps_scaling.json": {
+        "dry_run": bool,
+        "corpus": _CORPUS, "n_topics": int,
+        "warmup_iters": int, "timed_iters": int, "repeats": int,
+        "cells": [{"n_workers": int, "n_owners": int,
+                   "replicated_w_bytes": int, "max_owner_bytes": int,
+                   "owner_frac": NUM,
+                   "per_host_state_bytes": int,
+                   "replicated_state_bytes": int, "state_frac": NUM,
+                   "replicated_tokens_per_sec": NUM,
+                   "ps_tokens_per_sec": NUM, "ps_over_replicated": NUM,
+                   "bitwise_equal_to_replicated": bool}],
+        "max_workers": int,
+        "owner_frac_at_max": NUM,
+        "staleness0_bitwise": bool,
+    },
     "BENCH_recovery.json": {
         "corpus": _CORPUS, "n_topics": int,
         "n_iters": int, "checkpoint_every": int, "repeats": int,
@@ -161,6 +177,7 @@ SCHEMAS: dict[str, dict] = {
 # smoke artifacts reuse a driver's schema but skip the metric gates
 SCHEMA_ALIASES = {
     "BENCH_disk_streaming_dryrun.json": "BENCH_disk_streaming.json",
+    "BENCH_ps_scaling_dryrun.json": "BENCH_ps_scaling.json",
     "BENCH_serve_lda_dryrun.json": "BENCH_serve_lda.json",
     "BENCH_serve_service_dryrun.json": "BENCH_serve_service.json",
     "BENCH_warp_sampler_dryrun.json": "BENCH_warp_sampler.json",
@@ -249,6 +266,14 @@ GATES: dict[str, list] = {
          lambda d: d["completion"]["rate"], "==", 1.0, False),
         ("serve-vs-batch LLPT gap (bits)",
          lambda d: d["quality"]["delta_bits"], "<=", 0.1, True),
+    ],
+    "BENCH_ps_scaling.json": [
+        ("per-host W-owner bytes vs one replicated W copy",
+         lambda d: d["owner_frac_at_max"], "<=", 0.35, True),
+        ("staleness=0 PS == replicated bitwise (every worker count)",
+         lambda d: d["staleness0_bitwise"], "==", True, False),
+        ("measured out to >= 8 workers", lambda d: d["max_workers"],
+         ">=", 8, False),
     ],
     "BENCH_recovery.json": [
         ("supervised/unsupervised throughput",
